@@ -1,0 +1,16 @@
+//! Render the paper's figures (Figures 1-10) as ASCII diagrams
+//! (DESIGN.md experiments E3-E9).
+//!
+//!     cargo run --example figures            # all figures
+//!     cargo run --example figures -- fig9    # one figure
+
+use meshreduce::figures::all_figures;
+
+fn main() {
+    let wanted: Vec<String> = std::env::args().skip(1).collect();
+    for (name, body) in all_figures() {
+        if wanted.is_empty() || wanted.iter().any(|w| w == name) {
+            println!("==== {name} ====\n{body}");
+        }
+    }
+}

@@ -1,0 +1,123 @@
+"""AOT exporter: lowers the L2/L1 computations to HLO **text** artifacts
+that the Rust coordinator loads via the PJRT C API.
+
+Interchange format is HLO text, not serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Artifacts per model config <cfg>:
+  artifacts/train_step.<cfg>.hlo.txt   (flat_params, tokens) -> (loss, flat_grads)
+  artifacts/sgd_update.<cfg>.hlo.txt   (params, grads, velocity) -> (params', velocity')
+  artifacts/init_params.<cfg>.bin      f32 LE initial flat parameters
+  artifacts/model.<cfg>.meta           key/value lines (shapes, hyperparams)
+Plus the standalone paper-hot-spot kernel:
+  artifacts/combine.hlo.txt            (a, b) -> a + b   (Pallas, 2^16 elems)
+  artifacts/combine.meta
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--configs tiny,small]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.combine import combine
+from .model import CONFIGS, init_params, param_count, sgd_step, train_step
+
+COMBINE_ELEMS = 1 << 16
+
+
+def to_hlo_text(fn, *specs) -> str:
+    """Lower a jittable fn at the given ShapeDtypeStructs to HLO text."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_config(cfg_name: str, out_dir: str) -> dict:
+    cfg = CONFIGS[cfg_name]
+    pcount = param_count(cfg)
+    fp = jax.ShapeDtypeStruct((pcount,), jnp.float32)
+    toks = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+
+    paths = {}
+
+    step_hlo = to_hlo_text(train_step(cfg), fp, toks)
+    paths["train_step"] = _write(out_dir, f"train_step.{cfg_name}.hlo.txt", step_hlo)
+
+    sgd_hlo = to_hlo_text(sgd_step(cfg), fp, fp, fp)
+    paths["sgd_update"] = _write(out_dir, f"sgd_update.{cfg_name}.hlo.txt", sgd_hlo)
+
+    init = np.asarray(init_params(cfg, seed=0), dtype=np.float32)
+    init_path = os.path.join(out_dir, f"init_params.{cfg_name}.bin")
+    init.tofile(init_path)
+    paths["init_params"] = init_path
+
+    meta = {
+        "config": cfg_name,
+        "param_count": pcount,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "use_pallas": int(cfg.use_pallas),
+        "lr": cfg.lr,
+        "momentum": cfg.momentum,
+    }
+    meta_text = "".join(f"{k} {v}\n" for k, v in meta.items())
+    paths["meta"] = _write(out_dir, f"model.{cfg_name}.meta", meta_text)
+    return paths
+
+
+def export_combine(out_dir: str) -> dict:
+    spec = jax.ShapeDtypeStruct((COMBINE_ELEMS,), jnp.float32)
+    hlo = to_hlo_text(lambda a, b: combine(a, b), spec, spec)
+    p1 = _write(out_dir, "combine.hlo.txt", hlo)
+    p2 = _write(out_dir, "combine.meta", f"elems {COMBINE_ELEMS}\n")
+    return {"combine": p1, "combine_meta": p2}
+
+
+def _write(out_dir: str, name: str, text: str) -> str:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    all_paths = export_combine(args.out_dir)
+    for cfg_name in args.configs.split(","):
+        cfg_name = cfg_name.strip()
+        if cfg_name not in CONFIGS:
+            raise SystemExit(f"unknown config {cfg_name!r}; have {sorted(CONFIGS)}")
+        print(f"[aot] exporting config {cfg_name} "
+              f"({param_count(CONFIGS[cfg_name]):,} params)...")
+        all_paths.update(
+            {f"{cfg_name}.{k}": v for k, v in export_config(cfg_name, args.out_dir).items()}
+        )
+
+    manifest = "".join(f"{k} {os.path.basename(v)}\n" for k, v in sorted(all_paths.items()))
+    _write(args.out_dir, "MANIFEST", manifest)
+    for k, v in sorted(all_paths.items()):
+        size = os.path.getsize(v)
+        print(f"[aot] {k:24s} -> {v} ({size:,} B)")
+
+
+if __name__ == "__main__":
+    main()

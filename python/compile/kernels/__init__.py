@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (interpret-mode for CPU-PJRT portability) and
+their pure-jnp oracles."""
+
+from .combine import combine, scaled_combine
+from .matmul import matmul
+from .sgd import sgd_update
+
+__all__ = ["combine", "scaled_combine", "matmul", "sgd_update"]

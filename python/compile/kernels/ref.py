@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; the
+pytest suite asserts allclose between kernel and oracle across shape and
+dtype sweeps. These oracles are also what the L2 model uses when
+``use_pallas=False``.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """f32-accumulating matmul oracle."""
+    return jnp.dot(
+        x.astype(jnp.float32), y.astype(jnp.float32), preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def combine_ref(a, b):
+    """Gradient shard combine oracle: elementwise sum."""
+    return a + b
+
+
+def scaled_combine_ref(a, b, scale):
+    """Combine then scale (ring-average step)."""
+    return (a + b) * scale
+
+
+def sgd_ref(params, grads, velocity, lr, momentum):
+    """Momentum-SGD oracle: v' = mu*v + g ; p' = p - lr*v'."""
+    v = momentum * velocity + grads
+    return params - lr * v, v

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: fused momentum-SGD weight update.
+
+The paper's future-work section (§4) plans weight-update sharding [22]:
+computing the optimizer update on the reduce-scattered shards. This
+kernel is the per-shard update — fused v' = mu*v + g; p' = p - lr*v' in
+one pass over (8, 128) blocks, so it can run on a shard directly after
+the reduce-scatter phase (see rust `trainer::optimizer` for the
+L3-native twin used on the hot path).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _sgd_kernel(lr, momentum, p_ref, g_ref, v_ref, po_ref, vo_ref):
+    v = momentum * v_ref[...] + g_ref[...]
+    vo_ref[...] = v
+    po_ref[...] = p_ref[...] - lr * v
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lr", "momentum", "rows_per_block", "interpret")
+)
+def sgd_update(params, grads, velocity, *, lr, momentum, rows_per_block=8, interpret=True):
+    """Fused momentum SGD over flat f32 vectors.
+
+    Returns ``(new_params, new_velocity)``.
+    """
+    assert params.shape == grads.shape == velocity.shape and params.ndim == 1
+    n = params.shape[0]
+    block = rows_per_block * LANES
+    npad = (n + block - 1) // block * block
+
+    def prep(x):
+        return jnp.pad(x, (0, npad - n)).reshape(-1, LANES)
+
+    pp, gp, vp = prep(params), prep(grads), prep(velocity)
+    rows = pp.shape[0]
+    spec = pl.BlockSpec((rows_per_block, LANES), lambda i: (i, 0))
+    kernel = functools.partial(_sgd_kernel, lr, momentum)
+    po, vo = pl.pallas_call(
+        kernel,
+        grid=(rows // rows_per_block,),
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), params.dtype),
+            jax.ShapeDtypeStruct((rows, LANES), params.dtype),
+        ],
+        interpret=interpret,
+    )(pp, gp, vp)
+    return po.reshape(-1)[:n], vo.reshape(-1)[:n]

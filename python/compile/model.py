@@ -1,0 +1,210 @@
+"""L2: JAX transformer language model — the data-parallel training
+workload whose gradients the L3 coordinator allreduces.
+
+The paper trains ResNet-50 and BERT; the reproduction's end-to-end
+driver trains this decoder-only transformer (BERT-scale configs are
+provided; the perf model covers the paper-scale payloads). The model is
+deliberately written over *flat* parameter vectors at the AOT boundary:
+``train_step(flat_params, tokens) -> (loss, flat_grads)`` so the Rust
+side can treat gradients as the single contiguous payload the allreduce
+schedules shard (exactly how the paper's gradient summation sees them).
+
+MLP matmuls route through the L1 Pallas matmul kernel when
+``config.use_pallas`` — this is the L1-in-L2 composition that makes the
+Pallas kernel part of the exported HLO artifact.
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul as pallas_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    batch: int
+    use_pallas: bool
+    lr: float = 0.05
+    momentum: float = 0.9
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+#: Exported configurations. `tiny` routes its MLP through the Pallas
+#: matmul kernel (slow under interpret mode, but proves the L1->L2->L3
+#: composition end to end); `small` is the end-to-end training example;
+#: `base` is a ~100M-parameter GPT-2-small-scale config for paper-scale
+#: experiments (export it with `python -m compile.aot --configs base`).
+CONFIGS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig("tiny", vocab=256, d_model=64, n_layers=2, n_heads=2,
+                        seq_len=32, batch=4, use_pallas=True),
+    "small": ModelConfig("small", vocab=1024, d_model=256, n_layers=4, n_heads=4,
+                         seq_len=64, batch=4, use_pallas=False),
+    "base": ModelConfig("base", vocab=8192, d_model=768, n_layers=12, n_heads=12,
+                        seq_len=128, batch=2, use_pallas=False),
+}
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat packing layout."""
+    d, f = cfg.d_model, cfg.d_ff
+    spec = [("embed", (cfg.vocab, d)), ("pos", (cfg.seq_len, d))]
+    for i in range(cfg.n_layers):
+        spec += [
+            (f"l{i}.ln1_scale", (d,)),
+            (f"l{i}.ln1_bias", (d,)),
+            (f"l{i}.wq", (d, d)),
+            (f"l{i}.wk", (d, d)),
+            (f"l{i}.wv", (d, d)),
+            (f"l{i}.wo", (d, d)),
+            (f"l{i}.ln2_scale", (d,)),
+            (f"l{i}.ln2_bias", (d,)),
+            (f"l{i}.w1", (d, f)),
+            (f"l{i}.b1", (f,)),
+            (f"l{i}.w2", (f, d)),
+            (f"l{i}.b2", (d,)),
+        ]
+    spec += [("lnf_scale", (d,)), ("lnf_bias", (d,))]
+    return spec
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_spec(cfg))
+
+
+def unpack(cfg: ModelConfig, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Flat f32 vector -> named parameter dict (zero-copy reshapes)."""
+    params = {}
+    off = 0
+    for name, shape in param_spec(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = flat[off : off + n].reshape(shape)
+        off += n
+    assert off == flat.shape[0], f"flat size {flat.shape[0]} != spec {off}"
+    return params
+
+
+def pack(cfg: ModelConfig, params: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Named parameter dict -> flat f32 vector."""
+    return jnp.concatenate([params[name].reshape(-1) for name, _ in param_spec(cfg)])
+
+
+def init_params(cfg: ModelConfig, seed: int) -> jnp.ndarray:
+    """Scaled-normal initialisation, returned flat."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_scale",)):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_bias", ".b1", ".b2")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 0.02 if name in ("embed", "pos") else 1.0 / jnp.sqrt(fan_in)
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return pack(cfg, params)
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _mm(cfg: ModelConfig, a2d, w):
+    """2-D matmul through the Pallas kernel or jnp (the oracle)."""
+    if cfg.use_pallas:
+        return pallas_matmul(a2d, w)
+    return a2d @ w
+
+
+def _attention(cfg: ModelConfig, p, i, x):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def proj(w):
+        return (x.reshape(b * s, d) @ w).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+    q = proj(p[f"l{i}.wq"])
+    k = proj(p[f"l{i}.wk"])
+    v = proj(p[f"l{i}.wv"])
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(hd).astype(x.dtype)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask, logits, -1e9)
+    att = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b * s, d)
+    return (out @ p[f"l{i}.wo"]).reshape(b, s, d)
+
+
+def _mlp(cfg: ModelConfig, p, i, x):
+    b, s, d = x.shape
+    h = _mm(cfg, x.reshape(b * s, d), p[f"l{i}.w1"]) + p[f"l{i}.b1"]
+    h = jax.nn.gelu(h)
+    out = _mm(cfg, h, p[f"l{i}.w2"]) + p[f"l{i}.b2"]
+    return out.reshape(b, s, d)
+
+
+def forward(cfg: ModelConfig, params: Dict[str, jnp.ndarray], tokens: jnp.ndarray):
+    """tokens [B, S] int32 -> logits [B, S, V]."""
+    p = params
+    x = p["embed"][tokens] + p["pos"][None, :, :]
+    for i in range(cfg.n_layers):
+        x = x + _attention(cfg, p, i, _layer_norm(x, p[f"l{i}.ln1_scale"], p[f"l{i}.ln1_bias"]))
+        x = x + _mlp(cfg, p, i, _layer_norm(x, p[f"l{i}.ln2_scale"], p[f"l{i}.ln2_bias"]))
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    b, s, d = x.shape
+    return (x.reshape(b * s, d) @ p["embed"].T).reshape(b, s, cfg.vocab)
+
+
+def loss_fn(cfg: ModelConfig, flat_params: jnp.ndarray, tokens: jnp.ndarray):
+    """Next-token cross-entropy over [B, S] int32 tokens."""
+    params = unpack(cfg, flat_params)
+    logits = forward(cfg, params, tokens)
+    targets = tokens[:, 1:]
+    preds = logits[:, :-1, :]
+    logp = jax.nn.log_softmax(preds, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1).squeeze(-1)
+    return nll.mean()
+
+
+def train_step(cfg: ModelConfig):
+    """Returns fn(flat_params, tokens) -> (loss, flat_grads)."""
+
+    def step(flat_params, tokens):
+        loss, grads = jax.value_and_grad(lambda fp: loss_fn(cfg, fp, tokens))(flat_params)
+        return loss, grads
+
+    return step
+
+
+def sgd_step(cfg: ModelConfig):
+    """Returns fn(flat_params, flat_grads, velocity) ->
+    (new_params, new_velocity), using the L1 fused kernel."""
+    from .kernels.sgd import sgd_update
+
+    def step(flat_params, flat_grads, velocity):
+        return sgd_update(
+            flat_params, flat_grads, velocity, lr=cfg.lr, momentum=cfg.momentum
+        )
+
+    return step

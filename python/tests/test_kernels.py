@@ -1,0 +1,136 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is
+the core correctness signal for everything the AOT artifacts contain.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.combine import combine, scaled_combine
+from compile.kernels.matmul import matmul
+from compile.kernels.ref import combine_ref, matmul_ref, scaled_combine_ref, sgd_ref
+from compile.kernels.sgd import sgd_update
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rnd(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(8, 8, 128), (128, 128, 128), (256, 128, 384), (100, 70, 50), (1, 1, 1), (17, 129, 33)],
+)
+def test_matmul_matches_ref_shapes(m, k, n):
+    x = rnd(1, (m, k))
+    y = rnd(2, (k, n))
+    np.testing.assert_allclose(matmul(x, y), matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    x = rnd(3, (64, 64), dtype)
+    y = rnd(4, (64, 64), dtype)
+    got = matmul(x, y)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        got.astype(jnp.float32),
+        matmul_ref(x, y).astype(jnp.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+        atol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_hypothesis_sweep(m, k, n, seed):
+    x = rnd(seed, (m, k))
+    y = rnd(seed + 1, (k, n))
+    np.testing.assert_allclose(matmul(x, y), matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_small_blocks():
+    # Explicit non-default tiling exercises the K-loop accumulation.
+    x = rnd(5, (64, 96))
+    y = rnd(6, (96, 48))
+    got = matmul(x, y, block_m=16, block_n=16, block_k=32)
+    np.testing.assert_allclose(got, matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------- combine
+
+
+@pytest.mark.parametrize("n", [1, 5, 1024, 1023, 8 * 128, 8 * 128 + 1, 1 << 16])
+def test_combine_matches_ref(n):
+    a = rnd(7, (n,))
+    b = rnd(8, (n,))
+    np.testing.assert_allclose(combine(a, b), combine_ref(a, b), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 5000), seed=st.integers(0, 2**31))
+def test_combine_hypothesis_sweep(n, seed):
+    a = rnd(seed, (n,))
+    b = rnd(seed + 1, (n,))
+    np.testing.assert_allclose(combine(a, b), combine_ref(a, b), rtol=1e-6)
+
+
+def test_scaled_combine():
+    a = rnd(9, (1000,))
+    b = rnd(10, (1000,))
+    np.testing.assert_allclose(
+        scaled_combine(a, b, scale=0.25), scaled_combine_ref(a, b, 0.25), rtol=1e-6
+    )
+
+
+# ------------------------------------------------------------------ sgd
+
+
+@pytest.mark.parametrize("n", [1, 100, 8 * 128, 5000])
+def test_sgd_matches_ref(n):
+    p = rnd(11, (n,))
+    g = rnd(12, (n,))
+    v = rnd(13, (n,))
+    got_p, got_v = sgd_update(p, g, v, lr=0.1, momentum=0.9)
+    ref_p, ref_v = sgd_ref(p, g, v, 0.1, 0.9)
+    np.testing.assert_allclose(got_p, ref_p, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_v, ref_v, rtol=1e-5, atol=1e-6)
+
+
+def test_sgd_zero_momentum_is_plain_sgd():
+    p = rnd(14, (512,))
+    g = rnd(15, (512,))
+    v = jnp.zeros(512)
+    got_p, got_v = sgd_update(p, g, v, lr=0.5, momentum=0.0)
+    np.testing.assert_allclose(got_p, p - 0.5 * g, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_v, g, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 3000),
+    lr=st.floats(1e-4, 1.0),
+    mu=st.floats(0.0, 0.99),
+    seed=st.integers(0, 2**31),
+)
+def test_sgd_hypothesis_sweep(n, lr, mu, seed):
+    p = rnd(seed, (n,))
+    g = rnd(seed + 1, (n,))
+    v = rnd(seed + 2, (n,))
+    got_p, got_v = sgd_update(p, g, v, lr=lr, momentum=mu)
+    ref_p, ref_v = sgd_ref(p, g, v, lr, mu)
+    np.testing.assert_allclose(got_p, ref_p, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_v, ref_v, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,58 @@
+//! Bench: the numeric allreduce executor — the trainer's hot path —
+//! across schemes and topologies (supports DESIGN.md experiment E13 and
+//! the §Perf L3 target: ≥1 GB/s effective reduction bandwidth per
+//! worker).
+
+use meshreduce::collective::{build_schedule, execute, ExecutorArena, NodeBuffers, Scheme};
+use meshreduce::mesh::{FailedRegion, Topology};
+use meshreduce::util::bench::{bench, quick_mode};
+
+fn bench_scheme(topo: &Topology, scheme: Scheme, payload: usize, iters: usize) {
+    let Ok(sched) = build_schedule(scheme, topo, payload) else {
+        return;
+    };
+    let mut arena = ExecutorArena::new();
+    let nodes = topo.live_nodes();
+    let mut bufs = NodeBuffers::new(topo.mesh);
+    for &n in &nodes {
+        bufs.insert(n, vec![1.0f32; payload]);
+    }
+    let r = bench(
+        &format!(
+            "{} on {}x{}{} payload={}K",
+            scheme.name(),
+            topo.mesh.nx,
+            topo.mesh.ny,
+            if topo.has_failures() { " (failed 4x2)" } else { "" },
+            payload / 1024
+        ),
+        1,
+        iters,
+        || {
+            execute(&sched, &mut bufs, &mut arena).expect("execute");
+        },
+    );
+    // Bytes reduced per run: every live worker contributes its payload.
+    r.report_throughput(4 * payload as u64 * nodes.len() as u64);
+}
+
+fn main() {
+    let iters = if quick_mode() { 3 } else { 10 };
+    let payload = 1 << 20; // 4 MiB per worker
+
+    println!("numeric allreduce executor throughput (global reduced bytes / time):\n");
+    let full = Topology::full(8, 8);
+    let failed = Topology::with_failure(8, 8, FailedRegion::host(2, 2));
+    for scheme in Scheme::ALL {
+        bench_scheme(&full, scheme, payload, iters);
+    }
+    println!();
+    for scheme in [Scheme::OneD, Scheme::FaultTolerant] {
+        bench_scheme(&failed, scheme, payload, iters);
+    }
+
+    // Trainer-shaped case: 4x4 mesh, `small`-model payload.
+    println!();
+    let trainer_topo = Topology::full(4, 4);
+    bench_scheme(&trainer_topo, Scheme::FaultTolerant, 3_433_984, iters.min(5));
+}

@@ -1,0 +1,51 @@
+//! Bench: the §2.1 latency analysis — 1-D O(N^2) vs 2-D O(N) schemes
+//! across payload sizes (DESIGN.md experiment E10). Regenerates the
+//! scheme-crossover series on 8x8, 16x16 and 32x32 meshes.
+
+use meshreduce::mesh::Topology;
+use meshreduce::perfmodel::tables::payload_sweep;
+use meshreduce::simnet::LinkModel;
+use meshreduce::util::fmt::{format_bytes, format_duration_s};
+
+fn main() {
+    let link = LinkModel::tpu_v3();
+    let quick = meshreduce::util::bench::quick_mode();
+    let meshes: &[(usize, usize)] = if quick { &[(8, 8)] } else { &[(8, 8), (16, 16), (32, 32)] };
+
+    for &(nx, ny) in meshes {
+        let topo = Topology::full(nx, ny);
+        let payloads: Vec<usize> = (10..=24).step_by(2).map(|p| 1usize << p).collect();
+        println!("\n=== payload sweep on {nx}x{ny} full mesh ===");
+        println!(
+            "{:>10} {:>12} {:>12} {:>12}   winner",
+            "payload", "1d-ring", "2d-basic", "pair-rows"
+        );
+        let points = payload_sweep(&topo, &link, &payloads).expect("sweep");
+        for p in &points {
+            let best = [("1d-ring", p.one_d_s), ("2d-basic", p.two_d_s), ("pair-rows", p.pair_rows_s)]
+                .into_iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            println!(
+                "{:>10} {:>12} {:>12} {:>12}   {}",
+                format_bytes(p.payload_bytes),
+                format_duration_s(p.one_d_s),
+                format_duration_s(p.two_d_s),
+                format_duration_s(p.pair_rows_s),
+                best.0
+            );
+        }
+        // The paper's claim (§2.1): the 1-D scheme's O(N^2) store-forward
+        // latency "may be significant for short and medium sized
+        // transfers" — the 2-D schemes must win those clearly — while at
+        // very large payloads all ring schemes converge to the ~2B/link
+        // bandwidth bound (the 2-colour scheme halves it).
+        let small = &points[0];
+        let mid = &points[points.len() / 2];
+        assert!(small.pair_rows_s < 0.7 * small.one_d_s, "{nx}x{ny} small: pair-rows must win");
+        assert!(mid.pair_rows_s < 0.8 * mid.one_d_s, "{nx}x{ny} medium: pair-rows must win");
+        let big = points.last().unwrap();
+        assert!(big.pair_rows_s < 1.15 * big.one_d_s, "{nx}x{ny}: pair-rows ~bandwidth-bound");
+        assert!(big.two_d_s < big.one_d_s, "{nx}x{ny}: two-colour scheme wins big payloads");
+    }
+}

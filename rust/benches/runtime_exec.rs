@@ -1,0 +1,62 @@
+//! Bench: PJRT execution latency of the AOT artifacts — the per-worker
+//! compute cost in the end-to-end driver (§Perf: L3 coordinator
+//! overhead must be small next to this).
+
+use meshreduce::runtime::{artifact::default_dir, ArtifactSet, CombineExec, Runtime, SgdExec, TrainStepExec};
+use meshreduce::util::bench::{bench, quick_mode};
+
+fn main() {
+    let dir = default_dir();
+    if !dir.join("model.tiny.meta").is_file() {
+        eprintln!("artifacts not built (run `make artifacts`); skipping runtime bench");
+        return;
+    }
+    let rt = Runtime::cpu().expect("PJRT cpu client");
+    let iters = if quick_mode() { 3 } else { 10 };
+
+    for cfg in ["tiny", "small"] {
+        let Ok(set) = ArtifactSet::locate(&dir, cfg) else {
+            continue;
+        };
+        let exec = TrainStepExec::load(&rt, &set).expect("load train_step");
+        let params = set.load_init_params().expect("init params");
+        let tokens: Vec<i32> =
+            (0..set.meta.tokens_per_batch()).map(|i| (i % set.meta.vocab) as i32).collect();
+        let r = bench(
+            &format!("train_step.{cfg} ({} params)", set.meta.param_count),
+            1,
+            iters,
+            || {
+                exec.run(&params, &tokens).expect("train step");
+            },
+        );
+        r.report();
+
+        // The interpret-mode Pallas SGD costs ~10 ms on tiny but ~30 s
+        // on small (3354 interpreted grid blocks) — which is exactly why
+        // the trainer uses the rust-native optimizer twin on the hot
+        // path. Bench it on tiny only.
+        if cfg == "tiny" {
+            let sgd = SgdExec::load(&rt, &set).expect("load sgd");
+            let grads = vec![0.01f32; set.meta.param_count];
+            let vel = vec![0.0f32; set.meta.param_count];
+            let r = bench(&format!("sgd_update.{cfg} (pallas kernel)"), 1, iters, || {
+                sgd.run(&params, &grads, &vel).expect("sgd");
+            });
+            r.report();
+        }
+    }
+
+    let combine = CombineExec::load(&rt, &dir).expect("load combine");
+    let a = vec![1.0f32; combine.elems];
+    let b = vec![2.0f32; combine.elems];
+    let r = bench(
+        &format!("combine ({} elems, pallas kernel via PJRT)", combine.elems),
+        1,
+        iters,
+        || {
+            combine.run(&a, &b).expect("combine");
+        },
+    );
+    r.report_throughput(12 * combine.elems as u64);
+}

@@ -1,0 +1,33 @@
+//! Bench: DES throughput — schedule-simulation speed on paper-scale
+//! meshes (§Perf L3 target: 32x32 sweeps in seconds).
+
+use meshreduce::collective::{build_schedule, Scheme};
+use meshreduce::mesh::{FailedRegion, Topology};
+use meshreduce::simnet::{simulate, LinkModel};
+use meshreduce::util::bench::{bench, quick_mode};
+
+fn main() {
+    let link = LinkModel::tpu_v3();
+    let iters = if quick_mode() { 2 } else { 5 };
+
+    for (nx, ny, payload) in [(16usize, 16usize, 1usize << 22), (32, 32, 1 << 24)] {
+        let full = Topology::full(nx, ny);
+        let ft = Topology::with_failure(nx, ny, FailedRegion::host(nx / 2, ny / 2));
+        for (label, topo) in [("full", &full), ("failed", &ft)] {
+            let sched = build_schedule(Scheme::FaultTolerant, topo, payload).expect("schedule");
+            let transfers = sched.num_transfers();
+            let r = bench(
+                &format!("simulate {nx}x{ny} {label} ({transfers} transfers)"),
+                1,
+                iters,
+                || {
+                    simulate(&sched, topo, &link).expect("simulate");
+                },
+            );
+            println!(
+                "    -> {:.2} M transfers/s",
+                transfers as f64 / r.mean_s() / 1e6
+            );
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerate paper **Table 1** — MLPerf-v0.7 end-to-end
+//! benchmark time on full vs fault-tolerant meshes, with relative
+//! efficiency (DESIGN.md experiment E1).
+//!
+//! The full-mesh column is calibrated from the paper's Table-2 overhead
+//! (we have no TPU pod); the fault-tolerant column is a *prediction* of
+//! the simulated FT allreduce + compute-inflation model. Matching the
+//! paper's FT numbers is the reproduction.
+
+use meshreduce::perfmodel::tables::{predict_all, render_table1};
+use meshreduce::simnet::LinkModel;
+use meshreduce::util::Summary;
+
+fn main() {
+    let link = LinkModel::tpu_v3();
+    let t0 = std::time::Instant::now();
+    let preds = predict_all(&link).expect("prediction");
+    let sim_s = t0.elapsed().as_secs_f64();
+
+    println!("\nTable 1 — end-to-end benchmark time, full vs fault-tolerant mesh");
+    println!("(paper values vs model predictions; full-mesh column calibrated)\n");
+    println!("{}", render_table1(&preds));
+
+    // Accuracy summary: |predicted - paper| for the FT column.
+    let mut err = Summary::new();
+    for p in &preds {
+        let rel = (p.predicted_t1_ft_min() - p.row.t1_ft_min).abs() / p.row.t1_ft_min;
+        err.add(rel);
+    }
+    println!(
+        "FT-time prediction error vs paper: mean {:.1}%, max {:.1}%  (4 sims in {:.1}s)",
+        100.0 * err.mean(),
+        100.0 * err.max(),
+        sim_s
+    );
+    assert!(err.max() < 0.10, "FT predictions should land within 10% of the paper");
+}

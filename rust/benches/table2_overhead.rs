@@ -1,0 +1,42 @@
+//! Bench: regenerate paper **Table 2** — allreduce overhead % of device
+//! step time (DESIGN.md experiment E2).
+//!
+//! Full-mesh overheads are calibrated (they pin the compute model); the
+//! fault-tolerant overheads are predictions from the simulated FT
+//! schedules on the degraded meshes.
+
+use meshreduce::perfmodel::tables::{predict_all, render_table2};
+use meshreduce::simnet::LinkModel;
+
+fn main() {
+    let link = LinkModel::tpu_v3();
+    let preds = predict_all(&link).expect("prediction");
+
+    println!("\nTable 2 — allreduce overhead % of device step time");
+    println!("(paper values vs model; full-mesh column calibrated by construction)\n");
+    println!("{}", render_table2(&preds));
+
+    // Shape assertions — the qualitative claims of the paper:
+    for p in &preds {
+        // FT overhead strictly above full-mesh overhead.
+        assert!(
+            p.predicted_overhead_ft() > p.full.overhead_frac(),
+            "{} {}: FT must cost more",
+            p.row.benchmark,
+            p.row.chips_full
+        );
+        // ... but bounded: under 2x the full-mesh overhead.
+        assert!(
+            p.predicted_overhead_ft() < 2.0 * p.full.overhead_frac(),
+            "{} {}: FT overhead should stay bounded",
+            p.row.benchmark,
+            p.row.chips_full
+        );
+    }
+    // Overhead grows with mesh size (512 -> 1024) for both benchmarks.
+    for bench in ["ResNet-50", "BERT"] {
+        let rows: Vec<_> = preds.iter().filter(|p| p.row.benchmark == bench).collect();
+        assert!(rows[1].predicted_overhead_ft() > rows[0].predicted_overhead_ft());
+    }
+    println!("shape checks passed: FT > full, bounded, growing with scale.");
+}

@@ -1,0 +1,26 @@
+//! Dev diagnostic: step-time breakdown of full vs fault-tolerant
+//! schedules at paper scale (32x32, ResNet payload). Used for the
+//! EXPERIMENTS.md §Perf iteration log.
+use meshreduce::collective::{build_schedule, Scheme};
+use meshreduce::mesh::{FailedRegion, Topology};
+use meshreduce::simnet::{simulate, LinkModel};
+
+fn main() {
+    let link = LinkModel::tpu_v3();
+    let payload = 25_560_000usize;
+    let full = Topology::full(32, 32);
+    let ft = Topology::with_failure(32, 32, FailedRegion::host(16, 16));
+    for (name, topo) in [("full", &full), ("ft", &ft)] {
+        let s = build_schedule(Scheme::FaultTolerant, topo, payload).unwrap();
+        let t0 = std::time::Instant::now();
+        let r = simulate(&s, topo, &link).unwrap();
+        // top 10 step durations
+        let mut st: Vec<(usize, f64)> = r.step_times_s.iter().copied().enumerate().collect();
+        st.sort_by(|a,b| b.1.partial_cmp(&a.1).unwrap());
+        println!("{name}: steps={} transfers={} makespan={:.3}ms bottleneck_util={:.2} sim_wall={:.1}s",
+            s.num_steps(), s.num_transfers(), r.makespan_s*1e3, r.bottleneck_utilization, t0.elapsed().as_secs_f64());
+        println!("  top steps: {:?}", &st[..8.min(st.len())].iter().map(|(i,t)| (*i, (t*1e6) as u64)).collect::<Vec<_>>());
+        let total_top: f64 = st.iter().take(50).map(|x| x.1).sum();
+        println!("  sum top50 = {:.3}ms", total_top*1e3);
+    }
+}

@@ -1,0 +1,344 @@
+//! Scheme-level allreduce schedule builders (paper §2.1–§2.2).
+//!
+//! [`Scheme`] enumerates the four algorithms the paper discusses;
+//! [`build_schedule`] compiles a scheme + topology + payload size into
+//! the transfer-level [`Schedule`] consumed by the numeric executor and
+//! the DES.
+
+use super::schedule::{
+    concat, merge_parallel, owned_chunk, ring_all_gather, ring_allreduce, ring_reduce_scatter,
+    ChunkRange, OpKind, Schedule, Step, StepSeq, Transfer,
+};
+use crate::mesh::Topology;
+use crate::rings::fault_tolerant::{ft_plan, FtPlan, FtPlanError};
+use crate::rings::hamiltonian::{hamiltonian_ring, HamiltonianError};
+use crate::rings::pairrows::strip_position;
+use crate::rings::twod::{two_d_plan, TwoDError};
+use thiserror::Error;
+
+/// Allreduce algorithm selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// 1-D Hamiltonian-circuit ring (Figure 3 / Figure 8). O(N^2)
+    /// latency on an N x N mesh.
+    OneD,
+    /// Basic 2-D algorithm with two concurrent colour flips
+    /// (Figures 4–5). Full mesh only.
+    TwoD,
+    /// Pair-row scheme (Figures 6–7) — via the fault-tolerant planner,
+    /// of which it is the zero-failure special case.
+    PairRows,
+    /// Fault-tolerant pair-row scheme (Figures 9–10). Also valid on a
+    /// full mesh, where it coincides with `PairRows`.
+    FaultTolerant,
+}
+
+impl Scheme {
+    pub const ALL: [Scheme; 4] =
+        [Scheme::OneD, Scheme::TwoD, Scheme::PairRows, Scheme::FaultTolerant];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::OneD => "1d-ring",
+            Scheme::TwoD => "2d-basic",
+            Scheme::PairRows => "pair-rows",
+            Scheme::FaultTolerant => "fault-tolerant",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scheme> {
+        Scheme::ALL.into_iter().find(|x| x.name() == s)
+    }
+}
+
+#[derive(Debug, Error)]
+pub enum BuildError {
+    #[error("1-D scheme: {0}")]
+    OneD(#[from] HamiltonianError),
+    #[error("2-D scheme: {0}")]
+    TwoD(#[from] TwoDError),
+    #[error("fault-tolerant scheme: {0}")]
+    Ft(#[from] FtPlanError),
+    #[error("payload of {0} elements too small to schedule")]
+    PayloadTooSmall(usize),
+}
+
+/// Compile `scheme` on `topo` for a payload of `payload` f32 elements.
+pub fn build_schedule(
+    scheme: Scheme,
+    topo: &Topology,
+    payload: usize,
+) -> Result<Schedule, BuildError> {
+    if payload == 0 {
+        return Err(BuildError::PayloadTooSmall(payload));
+    }
+    let full = ChunkRange::new(0, payload);
+    let mut sched = Schedule::new(payload);
+    match scheme {
+        Scheme::OneD => {
+            let ring = hamiltonian_ring(topo)?;
+            sched.then(ring_allreduce(&ring, full));
+        }
+        Scheme::TwoD => {
+            let plan = two_d_plan(topo)?;
+            // Two concurrent colour flips over half the payload each:
+            // colour 0 goes X then Y, colour 1 goes Y then X, doubling
+            // throughput (paper §2.1).
+            let half0 = full.chunk(0, 2);
+            let half1 = full.chunk(1, 2);
+            let c0 = two_d_color(&plan.rows, &plan.cols, half0);
+            let c1 = two_d_color(&plan.cols, &plan.rows, half1);
+            sched.then(merge_parallel(vec![c0, c1]));
+        }
+        Scheme::PairRows | Scheme::FaultTolerant => {
+            let plan = ft_plan(topo)?;
+            // With a failed region the yellow and blue phase-1 rings are
+            // link-disjoint, so the schedule is software-pipelined over
+            // payload sub-ranges: sub-range i+1's yellow reduce-scatter
+            // runs while sub-range i's blue rings are already reducing.
+            // This hides the yellow stage almost entirely (the paper's
+            // figure-10 forwarding is naturally pipelined on the real
+            // system). The pipeline depth is payload-aware: each blue
+            // ring transfer should still stream >= ~64 KiB so the extra
+            // steps do not turn a bandwidth-bound schedule latency-bound.
+            let k = if plan.yellow.is_empty() {
+                1
+            } else {
+                let blue_p = plan.blue.first().map(|r| r.len()).unwrap_or(2);
+                (4 * payload / (blue_p * (64 << 10))).clamp(1, 6)
+            };
+            sched.then(ft_schedule_pipelined(&plan, full, k));
+        }
+    }
+    Ok(sched)
+}
+
+/// One colour of the basic 2-D algorithm: reduce-scatter along the
+/// `first` rings, then RS+AG of each owned chunk along the `second`
+/// rings, then all-gather along `first`.
+fn two_d_color(
+    first: &[crate::rings::Ring],
+    second: &[crate::rings::Ring],
+    range: ChunkRange,
+) -> StepSeq {
+    // Phase 1: RS along every `first` ring concurrently.
+    let rs1 = merge_parallel(first.iter().map(|r| ring_reduce_scatter(r, range)).collect());
+
+    // Phase 2: each `second` ring handles the chunk owned by its
+    // members. Membership: node at position p of its first-ring owns
+    // chunk owned_chunk(p). All first rings share the same geometric
+    // layout, so the chunk index is consistent along each second ring:
+    // it is determined by the node's position in *its own* first ring.
+    // We look it up through the first ring that contains the node.
+    let chunk_of = |c: crate::mesh::Coord| -> usize {
+        let fr = first
+            .iter()
+            .find(|r| r.position_of(c).is_some())
+            .expect("node belongs to a first-phase ring");
+        owned_chunk(fr.position_of(c).unwrap(), fr.len())
+    };
+    let p1 = first.first().map(|r| r.len()).unwrap_or(1);
+    let mid: Vec<StepSeq> = second
+        .iter()
+        .map(|r| {
+            let c = chunk_of(r.nodes()[0]);
+            debug_assert!(r.nodes().iter().all(|&n| chunk_of(n) == c));
+            ring_allreduce(r, range.chunk(c, p1))
+        })
+        .collect();
+    let mid = merge_parallel(mid);
+
+    // Phase 3: AG along every first ring.
+    let ag1 = merge_parallel(first.iter().map(|r| ring_all_gather(r, range)).collect());
+
+    concat(vec![rs1, mid, ag1])
+}
+
+/// The fault-tolerant schedule (also the plain pair-row schedule when
+/// the plan has no yellow blocks). See module docs of
+/// [`crate::rings::fault_tolerant`] for the stage list.
+pub fn ft_schedule(plan: &FtPlan, range: ChunkRange) -> StepSeq {
+    let nx = plan.blue.first().map(|r| r.len() / 2).unwrap_or(0);
+    let blue_p = 2 * nx;
+
+    // Stage A: yellow segment rings reduce-scatter.
+    let a = merge_parallel(
+        plan.yellow.iter().map(|y| ring_reduce_scatter(&y.ring, range)).collect(),
+    );
+
+    // Stage B: forward owned chunks into blue inputs (one step).
+    let mut fwd = Step::default();
+    for yb in &plan.yellow {
+        let p = yb.ring.len();
+        for (i, fp) in yb.forwards.iter().enumerate() {
+            debug_assert_eq!(yb.ring.nodes()[i], fp.yellow);
+            let chunk = range.chunk(owned_chunk(i, p), p);
+            if !chunk.is_empty() {
+                fwd.transfers.push(Transfer {
+                    src: fp.yellow,
+                    dst: fp.blue,
+                    range: chunk,
+                    op: OpKind::Add,
+                });
+            }
+        }
+    }
+    let b = if fwd.is_empty() { Vec::new() } else { vec![fwd.clone()] };
+
+    // Stage C: blue rings reduce-scatter.
+    let c = merge_parallel(plan.blue.iter().map(|r| ring_reduce_scatter(r, range)).collect());
+
+    // Stage D: phase-2 rings allreduce their blue chunk.
+    let d = merge_parallel(
+        plan.phase2
+            .iter()
+            .map(|r| {
+                let node = r.nodes()[0];
+                let pos = strip_position(0, nx, node, node.y - node.y % 2);
+                let chunk = range.chunk(owned_chunk(pos, blue_p), blue_p);
+                ring_allreduce(r, chunk)
+            })
+            .collect(),
+    );
+
+    // Stage E: blue rings all-gather.
+    let e = merge_parallel(plan.blue.iter().map(|r| ring_all_gather(r, range)).collect());
+
+    // Stage F: return the (now globally reduced) chunks to the yellow
+    // nodes (one step; Copy because blue already holds the final value).
+    let f = if b.is_empty() {
+        Vec::new()
+    } else {
+        vec![Step {
+            transfers: fwd
+                .transfers
+                .iter()
+                .map(|t| Transfer { src: t.dst, dst: t.src, range: t.range, op: OpKind::Copy })
+                .collect(),
+        }]
+    };
+
+    // Stage G: yellow rings all-gather to rebuild the full payload.
+    let g = merge_parallel(plan.yellow.iter().map(|y| ring_all_gather(&y.ring, range)).collect());
+
+    concat(vec![a, b, c, d, e, f, g])
+}
+
+/// Prepend `n` empty steps (a pipeline shift).
+fn shift(mut seq: StepSeq, n: usize) -> StepSeq {
+    let mut out: StepSeq = (0..n).map(|_| Step::default()).collect();
+    out.append(&mut seq);
+    out
+}
+
+/// Software-pipelined fault-tolerant schedule: split `range` into `k`
+/// sub-ranges and overlap their stage sequences, offset so that
+/// sub-range `i+1` starts its (yellow) phase while sub-range `i` is in
+/// its (blue) phase. Transfers of different sub-ranges touch disjoint
+/// payload regions, so any step-alignment is numerically safe; the
+/// within-sub-range stage order (reduce -> forward -> blue reduce ->
+/// ...) is preserved by construction.
+pub fn ft_schedule_pipelined(plan: &FtPlan, range: ChunkRange, k: usize) -> StepSeq {
+    if k <= 1 {
+        return ft_schedule(plan, range);
+    }
+    // Offset = the yellow reduce-scatter depth + the forward step, so
+    // the blue stage of sub-range i overlaps the yellow stage of i+1.
+    let yellow_depth =
+        plan.yellow.iter().map(|y| y.ring.len().saturating_sub(1)).max().unwrap_or(0) + 1;
+    let seqs: Vec<StepSeq> = (0..k)
+        .map(|i| shift(ft_schedule(plan, range.chunk(i, k)), i * yellow_depth))
+        .collect();
+    merge_parallel(seqs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::FailedRegion;
+
+    #[test]
+    fn scheme_names_roundtrip() {
+        for s in Scheme::ALL {
+            assert_eq!(Scheme::parse(s.name()), Some(s));
+        }
+        assert_eq!(Scheme::parse("nope"), None);
+    }
+
+    #[test]
+    fn one_d_full_mesh_step_count() {
+        let topo = Topology::full(4, 4);
+        let s = build_schedule(Scheme::OneD, &topo, 1024).unwrap();
+        // P = 16 nodes: RS 15 + AG 15 steps.
+        assert_eq!(s.num_steps(), 30);
+        assert_eq!(s.participants().len(), 16);
+    }
+
+    #[test]
+    fn two_d_runs_both_colors() {
+        let topo = Topology::full(4, 4);
+        let s = build_schedule(Scheme::TwoD, &topo, 1024).unwrap();
+        assert!(s.num_steps() > 0);
+        assert_eq!(s.participants().len(), 16);
+        // Colours are merged, so the first step contains transfers from
+        // both row rings (colour 0) and column rings (colour 1).
+        let first = &s.steps[0];
+        let has_row_send = first.transfers.iter().any(|t| t.src.y == t.dst.y);
+        let has_col_send = first.transfers.iter().any(|t| t.src.x == t.dst.x);
+        assert!(has_row_send && has_col_send);
+    }
+
+    #[test]
+    fn ft_full_mesh_equals_pair_rows() {
+        let topo = Topology::full(8, 8);
+        let a = build_schedule(Scheme::PairRows, &topo, 4096).unwrap();
+        let b = build_schedule(Scheme::FaultTolerant, &topo, 4096).unwrap();
+        assert_eq!(a.num_steps(), b.num_steps());
+        assert_eq!(a.total_bytes(), b.total_bytes());
+    }
+
+    #[test]
+    fn ft_with_failure_has_forward_and_return() {
+        let topo = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        let s = build_schedule(Scheme::FaultTolerant, &topo, 4096).unwrap();
+        let copies_back: usize = s
+            .steps
+            .iter()
+            .flat_map(|st| &st.transfers)
+            .filter(|t| t.op == OpKind::Copy && t.src.manhattan(&t.dst) == 1 && t.src.x == t.dst.x)
+            .count();
+        assert!(copies_back > 0, "must return results to yellow nodes");
+        // All 60 live chips participate.
+        assert_eq!(s.participants().len(), 60);
+    }
+
+    #[test]
+    fn two_d_rejects_failures() {
+        let topo = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        assert!(build_schedule(Scheme::TwoD, &topo, 1024).is_err());
+    }
+
+    #[test]
+    fn zero_payload_rejected() {
+        let topo = Topology::full(4, 4);
+        assert!(build_schedule(Scheme::OneD, &topo, 0).is_err());
+    }
+
+    #[test]
+    fn ft_phase2_payload_is_small() {
+        // The paper: phase 2 carries 1/(2 nx) of the payload per ring.
+        let topo = Topology::full(8, 8);
+        let s = build_schedule(Scheme::FaultTolerant, &topo, 1 << 16).unwrap();
+        // Max transfer size in phase-2 steps must be payload/(2*nx)/num_blue
+        // or smaller; just sanity-check the largest single transfer is the
+        // phase-1 chunk size.
+        let max_len = s
+            .steps
+            .iter()
+            .flat_map(|st| &st.transfers)
+            .map(|t| t.range.len())
+            .max()
+            .unwrap();
+        assert_eq!(max_len, (1 << 16) / 16); // payload / (2 * nx)
+    }
+}

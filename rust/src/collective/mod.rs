@@ -1,0 +1,19 @@
+//! Collective operations: schedules, schemes, the numeric executor and
+//! the correctness verifier (paper §2).
+//!
+//! - [`schedule`] — the transfer-level IR shared by the executor and
+//!   the DES, plus ring reduce-scatter / all-gather builders;
+//! - [`allreduce`] — per-scheme schedule compilation ([`Scheme`]);
+//! - [`executor`] — numeric execution over per-node buffers (the
+//!   trainer's allreduce);
+//! - [`verify`] — exact-sum correctness checks and the CDG
+//!   deadlock-freedom certificate.
+
+pub mod allreduce;
+pub mod executor;
+pub mod schedule;
+pub mod verify;
+
+pub use allreduce::{build_schedule, Scheme};
+pub use executor::{execute, execute_once, ExecutorArena, NodeBuffers};
+pub use schedule::{ChunkRange, OpKind, Schedule, Step, Transfer};

@@ -1,0 +1,309 @@
+//! Schedule IR: the single source of truth consumed by both the numeric
+//! executor (the trainer's allreduce hot path) and the discrete-event
+//! network simulator (the performance model).
+//!
+//! A [`Schedule`] is an ordered list of [`Step`]s; all [`Transfer`]s in
+//! one step are concurrent. Steps of a ring reduce-scatter/all-gather
+//! follow the textbook rotation (paper §2.1, citing [5]): `P - 1` steps
+//! over `P` chunks.
+
+use crate::mesh::Coord;
+use crate::rings::Ring;
+
+/// Half-open element range within the flat payload vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkRange {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl ChunkRange {
+    pub fn new(lo: usize, hi: usize) -> Self {
+        debug_assert!(lo <= hi);
+        Self { lo, hi }
+    }
+
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+
+    /// Balanced `c`-th of `p` sub-chunks of this range.
+    pub fn chunk(&self, c: usize, p: usize) -> ChunkRange {
+        debug_assert!(c < p);
+        let n = self.len();
+        ChunkRange::new(self.lo + c * n / p, self.lo + (c + 1) * n / p)
+    }
+
+    pub fn overlaps(&self, other: &ChunkRange) -> bool {
+        self.lo < other.hi && other.lo < self.hi
+    }
+}
+
+/// What the receiver does with an arriving chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Overwrite the destination range (all-gather, result return).
+    Copy,
+    /// Accumulate into the destination range (reduce-scatter, forward).
+    Add,
+}
+
+/// One point-to-point chunk movement. `src` and `dst` need not be mesh
+/// neighbours; the DES resolves the hop route, the executor does not
+/// care.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transfer {
+    pub src: Coord,
+    pub dst: Coord,
+    pub range: ChunkRange,
+    pub op: OpKind,
+}
+
+/// A set of concurrent transfers.
+#[derive(Debug, Clone, Default)]
+pub struct Step {
+    pub transfers: Vec<Transfer>,
+}
+
+impl Step {
+    pub fn is_empty(&self) -> bool {
+        self.transfers.is_empty()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.transfers.iter().map(|t| 4 * t.range.len() as u64).sum()
+    }
+}
+
+/// A complete collective schedule over a payload of `payload` f32
+/// elements.
+#[derive(Debug, Clone, Default)]
+pub struct Schedule {
+    pub steps: Vec<Step>,
+    pub payload: usize,
+}
+
+impl Schedule {
+    pub fn new(payload: usize) -> Self {
+        Self { steps: Vec::new(), payload }
+    }
+
+    pub fn num_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn num_transfers(&self) -> usize {
+        self.steps.iter().map(|s| s.transfers.len()).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.bytes()).sum()
+    }
+
+    /// All distinct nodes appearing as src or dst.
+    pub fn participants(&self) -> Vec<Coord> {
+        let mut set = std::collections::BTreeSet::new();
+        for s in &self.steps {
+            for t in &s.transfers {
+                set.insert(t.src);
+                set.insert(t.dst);
+            }
+        }
+        set.into_iter().collect()
+    }
+
+    /// Append another schedule's steps after this one (barrier between).
+    pub fn then(&mut self, other: StepSeq) {
+        self.steps.extend(other);
+    }
+}
+
+/// A raw sequence of steps (building block before assembly).
+pub type StepSeq = Vec<Step>;
+
+/// Merge step sequences so they run concurrently: step `i` of the
+/// result is the union of step `i` of every input. Sequences of
+/// different lengths simply finish at different times.
+pub fn merge_parallel(seqs: Vec<StepSeq>) -> StepSeq {
+    let max_len = seqs.iter().map(|s| s.len()).max().unwrap_or(0);
+    let mut out: StepSeq = (0..max_len).map(|_| Step::default()).collect();
+    for seq in seqs {
+        for (i, step) in seq.into_iter().enumerate() {
+            out[i].transfers.extend(step.transfers);
+        }
+    }
+    out
+}
+
+/// Concatenate step sequences with a barrier between them.
+pub fn concat(seqs: Vec<StepSeq>) -> StepSeq {
+    seqs.into_iter().flatten().collect()
+}
+
+/// Position that owns chunk `c` after a `p`-ring reduce-scatter.
+pub fn rs_owner(c: usize, p: usize) -> usize {
+    (c + p - 1) % p
+}
+
+/// Chunk owned by position `i` after a `p`-ring reduce-scatter.
+pub fn owned_chunk(i: usize, p: usize) -> usize {
+    (i + 1) % p
+}
+
+/// Ring reduce-scatter of `range` over `ring`: after the `P - 1`
+/// returned steps, ring position `i` holds chunk [`owned_chunk(i, P)`]
+/// fully reduced over all ring members.
+pub fn ring_reduce_scatter(ring: &Ring, range: ChunkRange) -> StepSeq {
+    let p = ring.len();
+    if p < 2 || range.is_empty() {
+        return Vec::new();
+    }
+    (0..p - 1)
+        .map(|s| Step {
+            transfers: (0..p)
+                .map(|i| Transfer {
+                    src: ring.nodes()[i],
+                    dst: ring.downstream(i),
+                    range: range.chunk((i + p - s % p) % p, p),
+                    op: OpKind::Add,
+                })
+                .filter(|t| !t.range.is_empty())
+                .collect(),
+        })
+        .collect()
+}
+
+/// Ring all-gather of `range` over `ring`, assuming the reduce-scatter
+/// ownership layout: position `i` starts holding chunk
+/// [`owned_chunk(i, P)`] and after `P - 1` steps every position holds
+/// all of `range`.
+pub fn ring_all_gather(ring: &Ring, range: ChunkRange) -> StepSeq {
+    let p = ring.len();
+    if p < 2 || range.is_empty() {
+        return Vec::new();
+    }
+    (0..p - 1)
+        .map(|s| Step {
+            transfers: (0..p)
+                .map(|i| Transfer {
+                    src: ring.nodes()[i],
+                    dst: ring.downstream(i),
+                    range: range.chunk((i + 1 + p - s % p) % p, p),
+                    op: OpKind::Copy,
+                })
+                .filter(|t| !t.range.is_empty())
+                .collect(),
+        })
+        .collect()
+}
+
+/// Ring allreduce = reduce-scatter then all-gather.
+pub fn ring_allreduce(ring: &Ring, range: ChunkRange) -> StepSeq {
+    concat(vec![ring_reduce_scatter(ring, range), ring_all_gather(ring, range)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::Coord;
+
+    fn ring4() -> Ring {
+        Ring::new(vec![
+            Coord::new(0, 0),
+            Coord::new(1, 0),
+            Coord::new(1, 1),
+            Coord::new(0, 1),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn chunk_ranges_partition() {
+        let r = ChunkRange::new(0, 10);
+        let chunks: Vec<ChunkRange> = (0..3).map(|c| r.chunk(c, 3)).collect();
+        assert_eq!(chunks[0], ChunkRange::new(0, 3));
+        assert_eq!(chunks[1], ChunkRange::new(3, 6));
+        assert_eq!(chunks[2], ChunkRange::new(6, 10));
+        let total: usize = chunks.iter().map(|c| c.len()).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn chunk_smaller_than_ring_leaves_empties() {
+        let r = ChunkRange::new(0, 2);
+        let lens: Vec<usize> = (0..4).map(|c| r.chunk(c, 4).len()).collect();
+        assert_eq!(lens.iter().sum::<usize>(), 2);
+    }
+
+    #[test]
+    fn rs_step_count_and_shape() {
+        let ring = ring4();
+        let seq = ring_reduce_scatter(&ring, ChunkRange::new(0, 16));
+        assert_eq!(seq.len(), 3);
+        for step in &seq {
+            assert_eq!(step.transfers.len(), 4);
+            // Every node sends exactly once and receives exactly once.
+            let mut srcs = std::collections::HashSet::new();
+            let mut dsts = std::collections::HashSet::new();
+            for t in &step.transfers {
+                assert!(srcs.insert(t.src));
+                assert!(dsts.insert(t.dst));
+                assert_eq!(t.op, OpKind::Add);
+                assert_eq!(t.range.len(), 4);
+            }
+        }
+    }
+
+    #[test]
+    fn owners_consistent() {
+        let p = 5;
+        for c in 0..p {
+            assert_eq!(owned_chunk(rs_owner(c, p), p), c);
+        }
+    }
+
+    #[test]
+    fn ag_step_count() {
+        let ring = ring4();
+        let seq = ring_all_gather(&ring, ChunkRange::new(0, 16));
+        assert_eq!(seq.len(), 3);
+        for step in &seq {
+            for t in &step.transfers {
+                assert_eq!(t.op, OpKind::Copy);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_parallel_unions_steps() {
+        let ring = ring4();
+        let a = ring_reduce_scatter(&ring, ChunkRange::new(0, 8));
+        let b = ring_reduce_scatter(&ring, ChunkRange::new(8, 16));
+        let merged = merge_parallel(vec![a, b]);
+        assert_eq!(merged.len(), 3);
+        assert_eq!(merged[0].transfers.len(), 8);
+    }
+
+    #[test]
+    fn schedule_accounting() {
+        let ring = ring4();
+        let mut sched = Schedule::new(16);
+        sched.then(ring_allreduce(&ring, ChunkRange::new(0, 16)));
+        assert_eq!(sched.num_steps(), 6);
+        assert_eq!(sched.num_transfers(), 24);
+        // RS+AG moves 2 * (P-1)/P * payload * 4 bytes per node pair sum:
+        // each step moves 16 elements (4 transfers x 4 elements) = 64 B.
+        assert_eq!(sched.total_bytes(), 6 * 64);
+        assert_eq!(sched.participants().len(), 4);
+    }
+
+    #[test]
+    fn empty_range_produces_no_steps() {
+        let ring = ring4();
+        assert!(ring_reduce_scatter(&ring, ChunkRange::new(3, 3)).is_empty());
+    }
+}

@@ -1,0 +1,203 @@
+//! Allreduce correctness verification.
+//!
+//! The key invariant behind every scheme in the paper: **after the
+//! schedule runs, every live chip holds the elementwise sum of all live
+//! chips' inputs** — regardless of failures, forwarding or route-around.
+//!
+//! Verification strategy: fill each node's buffer with small random
+//! integers (stored as f32). Integer sums are exact in f32 at these
+//! magnitudes, so the check is independent of floating-point reduction
+//! order and can use strict equality.
+
+use super::allreduce::{build_schedule, Scheme};
+use super::executor::{execute_once, NodeBuffers};
+use super::schedule::Schedule;
+use crate::mesh::{route, vc, Coord, Topology};
+use crate::util::SplitMix64;
+
+/// Deterministic small-integer buffer for a node.
+pub fn int_buffer(node: Coord, payload: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed ^ ((node.x as u64) << 32) ^ node.y as u64);
+    (0..payload).map(|_| (rng.next_below(17) as i64 - 8) as f32).collect()
+}
+
+/// Expected elementwise sum over all live nodes.
+pub fn expected_sum(topo: &Topology, payload: usize, seed: u64) -> Vec<f32> {
+    let mut sum = vec![0.0f32; payload];
+    for node in topo.live_nodes() {
+        for (s, v) in sum.iter_mut().zip(int_buffer(node, payload, seed)) {
+            *s += v;
+        }
+    }
+    sum
+}
+
+/// Run a schedule and check the allreduce invariant. Returns the list
+/// of nodes whose buffers deviate (empty = correct).
+pub fn check_allreduce(schedule: &Schedule, topo: &Topology, seed: u64) -> Vec<Coord> {
+    let payload = schedule.payload;
+    let mut bufs = NodeBuffers::new(topo.mesh);
+    for node in topo.live_nodes() {
+        bufs.insert(node, int_buffer(node, payload, seed));
+    }
+    execute_once(schedule, &mut bufs).expect("schedule must execute");
+    let expected = expected_sum(topo, payload, seed);
+    topo.live_nodes()
+        .into_iter()
+        .filter(|&n| bufs.get(n).expect("live node has buffer") != expected.as_slice())
+        .collect()
+}
+
+/// Build + run + check a scheme in one call.
+pub fn verify_scheme(scheme: Scheme, topo: &Topology, payload: usize, seed: u64) -> bool {
+    match build_schedule(scheme, topo, payload) {
+        Ok(s) => check_allreduce(&s, topo, seed).is_empty(),
+        Err(_) => false,
+    }
+}
+
+/// The deadlock-freedom certificate for a schedule: the channel
+/// dependency graph of all hop routes used by any step is acyclic
+/// (paper §2's virtual-channel argument, scoped to this traffic class).
+pub fn schedule_cdg_acyclic(schedule: &Schedule, topo: &Topology) -> bool {
+    let mut routes = Vec::new();
+    for step in &schedule.steps {
+        for t in &step.transfers {
+            if let Ok(path) = route(topo, t.src, t.dst) {
+                routes.push(path);
+            }
+        }
+    }
+    vc::traffic_acyclic(&routes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::FailedRegion;
+    use crate::util::prop::{prop_check, Config};
+
+    #[test]
+    fn all_schemes_correct_on_full_mesh() {
+        let topo = Topology::full(4, 4);
+        for scheme in Scheme::ALL {
+            assert!(verify_scheme(scheme, &topo, 1 << 10, 7), "{}", scheme.name());
+        }
+    }
+
+    #[test]
+    fn ft_and_one_d_correct_with_board_failure() {
+        let topo = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        assert!(verify_scheme(Scheme::FaultTolerant, &topo, 1 << 12, 3));
+        assert!(verify_scheme(Scheme::OneD, &topo, 1 << 12, 3));
+    }
+
+    #[test]
+    fn ft_correct_with_host_failure() {
+        // The evaluation's 4x2 region.
+        let topo = Topology::with_failure(8, 8, FailedRegion::host(2, 2));
+        assert!(verify_scheme(Scheme::FaultTolerant, &topo, 1 << 12, 5));
+    }
+
+    #[test]
+    fn ft_correct_with_tall_failure() {
+        let topo = Topology::with_failure(8, 8, FailedRegion::new(4, 2, 2, 4));
+        assert!(verify_scheme(Scheme::FaultTolerant, &topo, 1 << 12, 11));
+    }
+
+    #[test]
+    fn ft_correct_on_paper_scale_mesh() {
+        // 16x32 (512 chips) with the 4x2 failed host — Table 1's
+        // fault-tolerant configuration, small payload to keep the test
+        // quick.
+        let topo = Topology::with_failure(16, 32, FailedRegion::host(4, 10));
+        assert!(verify_scheme(Scheme::FaultTolerant, &topo, 1 << 12, 13));
+    }
+
+    #[test]
+    fn payload_not_divisible_by_ring_sizes() {
+        // Odd payloads exercise the balanced-chunk edge cases.
+        let topo = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        for payload in [1, 2, 3, 17, 61, 1000, 1 << 10] {
+            assert!(
+                verify_scheme(Scheme::FaultTolerant, &topo, payload, 17),
+                "payload {payload}"
+            );
+        }
+    }
+
+    #[test]
+    fn tiny_payload_one_d() {
+        let topo = Topology::full(4, 4);
+        assert!(verify_scheme(Scheme::OneD, &topo, 3, 23));
+    }
+
+    #[test]
+    fn schedule_cdg_acyclic_for_ft_with_failures() {
+        // The paper's no-extra-VC claim, verified end-to-end on the
+        // exact traffic the FT schedule generates.
+        for region in [FailedRegion::board(2, 2), FailedRegion::host(2, 4)] {
+            let topo = Topology::with_failure(8, 8, region);
+            let s = build_schedule(Scheme::FaultTolerant, &topo, 4096).unwrap();
+            assert!(schedule_cdg_acyclic(&s, &topo));
+        }
+    }
+
+    #[test]
+    fn schedule_cdg_acyclic_one_d() {
+        let topo = Topology::with_failure(8, 8, FailedRegion::board(4, 4));
+        let s = build_schedule(Scheme::OneD, &topo, 1024).unwrap();
+        assert!(schedule_cdg_acyclic(&s, &topo));
+    }
+
+    #[test]
+    fn prop_ft_allreduce_correct_on_random_failed_meshes() {
+        // The headline property: fault-tolerant allreduce computes the
+        // exact global sum on every valid failed topology.
+        prop_check("ft allreduce correct", Config { cases: 24, ..Config::default() }, |rng| {
+            let nx = 2 * rng.usize_in(2, 7);
+            let ny = 2 * rng.usize_in(2, 7);
+            let (w, h) = *rng.choose(&[(2, 2), (4, 2), (2, 4)]);
+            if w + 2 > nx || h + 2 > ny {
+                return;
+            }
+            let x0 = 2 * rng.usize_in(0, (nx - w) / 2 + 1);
+            let y0 = 2 * rng.usize_in(0, (ny - h) / 2 + 1);
+            if x0 + w > nx || y0 + h > ny {
+                return;
+            }
+            let topo = Topology::with_failure(nx, ny, FailedRegion::new(x0, y0, w, h));
+            if !topo.is_connected() {
+                return;
+            }
+            let payload = rng.usize_in(64, 2048);
+            let seed = rng.next_u64();
+            assert!(
+                verify_scheme(Scheme::FaultTolerant, &topo, payload, seed),
+                "{nx}x{ny} {w}x{h}@({x0},{y0}) payload={payload}"
+            );
+        });
+    }
+
+    #[test]
+    fn prop_one_d_allreduce_correct() {
+        prop_check("1d allreduce correct", Config { cases: 16, ..Config::default() }, |rng| {
+            let nx = 2 * rng.usize_in(1, 5);
+            let ny = 2 * rng.usize_in(1, 5);
+            let topo = Topology::full(nx, ny);
+            let payload = rng.usize_in(16, 512);
+            assert!(verify_scheme(Scheme::OneD, &topo, payload, rng.next_u64()));
+        });
+    }
+
+    #[test]
+    fn prop_two_d_allreduce_correct() {
+        prop_check("2d allreduce correct", Config { cases: 16, ..Config::default() }, |rng| {
+            let nx = rng.usize_in(2, 9);
+            let ny = rng.usize_in(2, 9);
+            let topo = Topology::full(nx, ny);
+            let payload = rng.usize_in(64, 1024);
+            assert!(verify_scheme(Scheme::TwoD, &topo, payload, rng.next_u64()));
+        });
+    }
+}

@@ -1,0 +1,175 @@
+//! Configuration system: a small TOML-subset parser (offline build —
+//! no serde) plus the typed job configuration the CLI consumes.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (quoted), integer, float and boolean values, `#` comments.
+
+pub mod parse;
+
+use crate::collective::Scheme;
+use crate::coordinator::policy::RecoveryPolicy;
+use crate::coordinator::{FailureEvent, JobConfig};
+use crate::mesh::FailedRegion;
+use crate::trainer::TrainerConfig;
+use parse::{Document, ParseError};
+use std::path::PathBuf;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum ConfigError {
+    #[error("parse: {0}")]
+    Parse(#[from] ParseError),
+    #[error("[{0}] {1}: {2}")]
+    Bad(String, String, String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Load a training job configuration from a TOML-subset file.
+///
+/// ```toml
+/// [mesh]
+/// nx = 8
+/// ny = 8
+///
+/// [model]
+/// config = "tiny"
+///
+/// [train]
+/// steps = 100
+/// scheme = "fault-tolerant"   # 1d-ring | 2d-basic | pair-rows | fault-tolerant
+/// seed = 0
+/// verify_allreduce = false
+/// log_every = 10
+/// checkpoint_every = 50
+/// checkpoint_path = "run.ckpt"
+/// policy = "fault-tolerant"   # fault-tolerant | sub-mesh | stop
+///
+/// [failure]                    # optional scripted failure
+/// at_step = 50
+/// x0 = 2
+/// y0 = 2
+/// w = 4
+/// h = 2
+/// ```
+pub fn load_job(path: &std::path::Path) -> Result<JobConfig, ConfigError> {
+    let text = std::fs::read_to_string(path)?;
+    job_from_str(&text)
+}
+
+pub fn job_from_str(text: &str) -> Result<JobConfig, ConfigError> {
+    let doc = Document::parse(text)?;
+    let bad = |sec: &str, key: &str, why: &str| {
+        ConfigError::Bad(sec.to_string(), key.to_string(), why.to_string())
+    };
+
+    let nx = doc.get_int("mesh", "nx").unwrap_or(4) as usize;
+    let ny = doc.get_int("mesh", "ny").unwrap_or(4) as usize;
+    let model = doc.get_str("model", "config").unwrap_or_else(|| "tiny".to_string());
+
+    let mut tcfg = TrainerConfig::new(&model, nx, ny);
+    if let Some(dir) = doc.get_str("model", "artifacts_dir") {
+        tcfg.artifacts_dir = PathBuf::from(dir);
+    }
+    if let Some(s) = doc.get_str("train", "scheme") {
+        tcfg.scheme =
+            Scheme::parse(&s).ok_or_else(|| bad("train", "scheme", "unknown scheme"))?;
+    }
+    if let Some(seed) = doc.get_int("train", "seed") {
+        tcfg.seed = seed as u64;
+    }
+    if let Some(v) = doc.get_bool("train", "verify_allreduce") {
+        tcfg.verify_allreduce = v;
+    }
+
+    let steps = doc.get_int("train", "steps").unwrap_or(10) as u64;
+    let mut job = JobConfig::new(tcfg, steps);
+    if let Some(every) = doc.get_int("train", "log_every") {
+        job.log_every = every as u64;
+    }
+    if let Some(every) = doc.get_int("train", "checkpoint_every") {
+        job.checkpoint_every = Some(every as u64);
+    }
+    if let Some(p) = doc.get_str("train", "checkpoint_path") {
+        job.checkpoint_path = Some(PathBuf::from(p));
+    }
+    if let Some(p) = doc.get_str("train", "policy") {
+        job.policy =
+            RecoveryPolicy::parse(&p).ok_or_else(|| bad("train", "policy", "unknown policy"))?;
+    }
+
+    if doc.has_section("failure") {
+        let g = |k: &str| -> Result<usize, ConfigError> {
+            doc.get_int("failure", k)
+                .map(|v| v as usize)
+                .ok_or_else(|| bad("failure", k, "missing"))
+        };
+        job.failures.push(FailureEvent {
+            at_step: g("at_step")? as u64,
+            region: FailedRegion::new(g("x0")?, g("y0")?, g("w")?, g("h")?),
+        });
+    }
+    Ok(job)
+}
+
+pub use parse::Document as RawConfig;
+pub use parse::Value as ConfigValue;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# sample job
+[mesh]
+nx = 8
+ny = 8
+
+[model]
+config = "tiny"
+
+[train]
+steps = 20
+scheme = "fault-tolerant"
+seed = 7
+verify_allreduce = true
+log_every = 5
+policy = "sub-mesh"
+
+[failure]
+at_step = 10
+x0 = 2
+y0 = 2
+w = 4
+h = 2
+"#;
+
+    #[test]
+    fn full_job_parses() {
+        let job = job_from_str(SAMPLE).unwrap();
+        assert_eq!(job.steps, 20);
+        assert_eq!(job.trainer.nx, 8);
+        assert_eq!(job.trainer.model, "tiny");
+        assert_eq!(job.trainer.seed, 7);
+        assert!(job.trainer.verify_allreduce);
+        assert_eq!(job.policy, RecoveryPolicy::SubMesh);
+        assert_eq!(job.failures.len(), 1);
+        assert_eq!(job.failures[0].at_step, 10);
+        assert_eq!(job.failures[0].region, FailedRegion::host(2, 2));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let job = job_from_str("[train]\nsteps = 3\n").unwrap();
+        assert_eq!(job.trainer.nx, 4);
+        assert_eq!(job.trainer.model, "tiny");
+        assert!(job.failures.is_empty());
+        assert_eq!(job.policy, RecoveryPolicy::FaultTolerant);
+    }
+
+    #[test]
+    fn bad_scheme_rejected() {
+        let err = job_from_str("[train]\nscheme = \"warp-drive\"\n").unwrap_err();
+        assert!(err.to_string().contains("scheme"));
+    }
+}

@@ -1,0 +1,193 @@
+//! Minimal TOML-subset parser.
+
+use std::collections::HashMap;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum ParseError {
+    #[error("line {0}: expected `key = value`, got {1:?}")]
+    BadLine(usize, String),
+    #[error("line {0}: unterminated string")]
+    BadString(usize),
+    #[error("line {0}: bad section header {1:?}")]
+    BadSection(usize, String),
+}
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+/// Parsed document: section -> key -> value. Keys outside any section
+/// land in the "" section.
+#[derive(Debug, Default)]
+pub struct Document {
+    sections: HashMap<String, HashMap<String, Value>>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    return Err(ParseError::BadSection(ln + 1, line.to_string()));
+                };
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(ParseError::BadLine(ln + 1, line.to_string()));
+            };
+            let key = key.trim().to_string();
+            if key.is_empty() {
+                return Err(ParseError::BadLine(ln + 1, line.to_string()));
+            }
+            let value = parse_value(value.trim(), ln + 1)?;
+            doc.sections.entry(section.clone()).or_default().insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn has_section(&self, section: &str) -> bool {
+        self.sections.contains_key(section)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<String> {
+        match self.get(section, key)? {
+            Value::Str(s) => Some(s.clone()),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key)? {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key)? {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, ln: usize) -> Result<Value, ParseError> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            return Err(ParseError::BadString(ln));
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ParseError::BadLine(ln, s.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_value_kinds() {
+        let doc = Document::parse(
+            "a = 1\nb = 2.5\nc = \"hi\"\nd = true\n[s]\ne = false  # comment\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_int("", "a"), Some(1));
+        assert_eq!(doc.get_float("", "b"), Some(2.5));
+        assert_eq!(doc.get_str("", "c"), Some("hi".to_string()));
+        assert_eq!(doc.get_bool("", "d"), Some(true));
+        assert_eq!(doc.get_bool("s", "e"), Some(false));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = Document::parse("x = 3\n").unwrap();
+        assert_eq!(doc.get_float("", "x"), Some(3.0));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let doc = Document::parse("# hi\n\n  # indented comment\nx = 1\n").unwrap();
+        assert_eq!(doc.get_int("", "x"), Some(1));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = Document::parse("x = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get_str("", "x"), Some("a#b".to_string()));
+    }
+
+    #[test]
+    fn errors_reported_with_line() {
+        assert_eq!(
+            Document::parse("x = 1\njunk\n").unwrap_err(),
+            ParseError::BadLine(2, "junk".to_string())
+        );
+        assert_eq!(
+            Document::parse("[oops\n").unwrap_err(),
+            ParseError::BadSection(1, "[oops".to_string())
+        );
+        assert_eq!(
+            Document::parse("x = \"unterminated\n").unwrap_err(),
+            ParseError::BadString(1)
+        );
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let doc = Document::parse("[a]\nx = 1\n").unwrap();
+        assert!(doc.get("a", "y").is_none());
+        assert!(doc.get("b", "x").is_none());
+        assert!(doc.has_section("a"));
+        assert!(!doc.has_section("b"));
+    }
+}

@@ -1,0 +1,262 @@
+//! Training coordinator (leader): owns the job lifecycle — scheme
+//! selection, the step loop, periodic checkpointing, failure injection
+//! and recovery policy.
+//!
+//! This is the availability story of the paper's introduction made
+//! executable. On a failure event the coordinator applies one of three
+//! policies:
+//!
+//! - [`RecoveryPolicy::FaultTolerant`] (the paper's contribution):
+//!   rebuild the fault-tolerant rings on the degraded mesh and keep
+//!   training — no restart, no spare;
+//! - [`RecoveryPolicy::SubMesh`]: restart from the last checkpoint on
+//!   the largest full sub-mesh that avoids the failed region (the
+//!   paper's "sub-mesh jobs" alternative);
+//! - [`RecoveryPolicy::Stop`]: halt (the "wait for the fire fighter"
+//!   baseline).
+
+pub mod policy;
+
+use crate::mesh::FailedRegion;
+use crate::trainer::checkpoint::Checkpoint;
+use crate::trainer::{DataParallelTrainer, TrainError, TrainerConfig};
+use crate::runtime::Runtime;
+use policy::{largest_submesh, RecoveryPolicy};
+use std::path::PathBuf;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum CoordError {
+    #[error("train: {0}")]
+    Train(#[from] TrainError),
+    #[error("checkpoint io: {0}")]
+    Ckpt(#[from] crate::trainer::checkpoint::CheckpointError),
+    #[error("job stopped by policy after failure at step {0}")]
+    Stopped(u64),
+}
+
+/// A scripted failure, for experiments ("at step K, host (x, y) dies").
+#[derive(Debug, Clone, Copy)]
+pub struct FailureEvent {
+    pub at_step: u64,
+    pub region: FailedRegion,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    pub trainer: TrainerConfig,
+    pub steps: u64,
+    pub failures: Vec<FailureEvent>,
+    pub policy: RecoveryPolicy,
+    pub checkpoint_every: Option<u64>,
+    pub checkpoint_path: Option<PathBuf>,
+    /// Print a progress line every N steps (0 = quiet).
+    pub log_every: u64,
+}
+
+impl JobConfig {
+    pub fn new(trainer: TrainerConfig, steps: u64) -> Self {
+        Self {
+            trainer,
+            steps,
+            failures: Vec::new(),
+            policy: RecoveryPolicy::FaultTolerant,
+            checkpoint_every: None,
+            checkpoint_path: None,
+            log_every: 0,
+        }
+    }
+}
+
+/// End-of-job summary.
+#[derive(Debug)]
+pub struct RunSummary {
+    pub steps_run: u64,
+    pub final_loss: f32,
+    pub tail_loss: f32,
+    pub allreduce_overhead: f64,
+    pub final_workers: usize,
+    pub wall_s: f64,
+    pub events: Vec<(u64, String)>,
+}
+
+/// The leader. Drives the trainer to `steps`, applying failure events
+/// and the recovery policy along the way.
+pub struct Coordinator {
+    cfg: JobConfig,
+    pub trainer: DataParallelTrainer,
+    last_checkpoint: Option<Checkpoint>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: JobConfig, runtime: &Runtime) -> Result<Self, CoordError> {
+        let trainer = DataParallelTrainer::new(cfg.trainer.clone(), runtime)?;
+        Ok(Self { cfg, trainer, last_checkpoint: None })
+    }
+
+    fn maybe_checkpoint(&mut self) -> Result<(), CoordError> {
+        if let Some(every) = self.cfg.checkpoint_every {
+            if self.trainer.step > 0 && self.trainer.step % every == 0 {
+                let ck = self.trainer.checkpoint();
+                if let Some(path) = &self.cfg.checkpoint_path {
+                    ck.save(path)?;
+                }
+                self.last_checkpoint = Some(ck);
+            }
+        }
+        Ok(())
+    }
+
+    fn handle_failure(&mut self, ev: FailureEvent) -> Result<(), CoordError> {
+        match self.cfg.policy {
+            RecoveryPolicy::FaultTolerant => {
+                // The paper's scheme: rebuild rings, keep going.
+                let rebuild_s = self.trainer.inject_failure(ev.region)?;
+                self.trainer
+                    .metrics
+                    .annotate(self.trainer.step, format!("rings rebuilt in {rebuild_s:.4}s"));
+                Ok(())
+            }
+            RecoveryPolicy::SubMesh => {
+                // Restart from the last checkpoint on the largest full
+                // sub-mesh avoiding the region.
+                let mesh = self.trainer.topology().mesh;
+                let sub = largest_submesh(mesh.nx, mesh.ny, &ev.region);
+                let restored = self.last_checkpoint.clone();
+                let lost = restored.as_ref().map(|c| self.trainer.step - c.step);
+                let mut tcfg = self.cfg.trainer.clone();
+                tcfg.nx = sub.2;
+                tcfg.ny = sub.3;
+                let runtime = Runtime::cpu().map_err(TrainError::Runtime)?;
+                let mut new_trainer = DataParallelTrainer::new(tcfg, &runtime)?;
+                // Carry metrics over so the loss curve shows the restart.
+                std::mem::swap(&mut new_trainer.metrics, &mut self.trainer.metrics);
+                if let Some(ck) = restored {
+                    new_trainer.restore(ck);
+                } else {
+                    new_trainer.metrics.annotate(0, "no checkpoint: restart from scratch");
+                }
+                new_trainer.metrics.annotate(
+                    new_trainer.step,
+                    format!(
+                        "sub-mesh restart on {}x{} ({} chips, lost {} steps)",
+                        sub.2,
+                        sub.3,
+                        sub.2 * sub.3,
+                        lost.unwrap_or(0),
+                    ),
+                );
+                self.trainer = new_trainer;
+                Ok(())
+            }
+            RecoveryPolicy::Stop => Err(CoordError::Stopped(self.trainer.step)),
+        }
+    }
+
+    /// Run the job to completion.
+    pub fn run(&mut self) -> Result<RunSummary, CoordError> {
+        let t0 = std::time::Instant::now();
+        let mut failures = self.cfg.failures.clone();
+        failures.sort_by_key(|f| f.at_step);
+        let mut fidx = 0;
+        let target = self.cfg.steps;
+        while self.trainer.step < target {
+            while fidx < failures.len() && failures[fidx].at_step <= self.trainer.step {
+                let ev = failures[fidx];
+                fidx += 1;
+                self.handle_failure(ev)?;
+            }
+            let rec = self.trainer.train_step()?;
+            if self.cfg.log_every > 0 && rec.step % self.cfg.log_every == 0 {
+                eprintln!(
+                    "[step {:>5}] loss {:.4}  workers {}  compute {:.3}s  allreduce {:.4}s",
+                    rec.step, rec.loss, rec.workers, rec.compute_s, rec.allreduce_s
+                );
+            }
+            self.maybe_checkpoint()?;
+        }
+        let m = &self.trainer.metrics;
+        Ok(RunSummary {
+            steps_run: self.trainer.step,
+            final_loss: m.last_loss().unwrap_or(f32::NAN),
+            tail_loss: m.mean_loss_tail(10),
+            allreduce_overhead: m.allreduce_overhead(),
+            final_workers: self.trainer.num_workers(),
+            wall_s: t0.elapsed().as_secs_f64(),
+            events: m.events.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        crate::runtime::artifact::default_dir().join("model.tiny.meta").is_file()
+    }
+
+    fn job(nx: usize, ny: usize, steps: u64) -> JobConfig {
+        JobConfig::new(TrainerConfig::new("tiny", nx, ny), steps)
+    }
+
+    #[test]
+    fn plain_run_completes() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let mut c = Coordinator::new(job(2, 2, 4), &rt).unwrap();
+        let s = c.run().unwrap();
+        assert_eq!(s.steps_run, 4);
+        assert!(s.final_loss.is_finite());
+        assert_eq!(s.final_workers, 4);
+    }
+
+    #[test]
+    fn fault_tolerant_policy_survives_failure() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let mut cfg = job(4, 4, 6);
+        cfg.failures = vec![FailureEvent { at_step: 3, region: FailedRegion::board(2, 0) }];
+        let mut c = Coordinator::new(cfg, &rt).unwrap();
+        let s = c.run().unwrap();
+        assert_eq!(s.steps_run, 6);
+        assert_eq!(s.final_workers, 12);
+        assert!(s.events.iter().any(|(_, e)| e.contains("failure injected")));
+    }
+
+    #[test]
+    fn stop_policy_halts() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let mut cfg = job(4, 4, 6);
+        cfg.policy = RecoveryPolicy::Stop;
+        cfg.failures = vec![FailureEvent { at_step: 2, region: FailedRegion::board(0, 0) }];
+        let mut c = Coordinator::new(cfg, &rt).unwrap();
+        assert!(matches!(c.run(), Err(CoordError::Stopped(2))));
+    }
+
+    #[test]
+    fn submesh_policy_restarts_smaller() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let mut cfg = job(4, 4, 6);
+        cfg.policy = RecoveryPolicy::SubMesh;
+        cfg.checkpoint_every = Some(2);
+        cfg.failures = vec![FailureEvent { at_step: 3, region: FailedRegion::board(0, 0) }];
+        let mut c = Coordinator::new(cfg, &rt).unwrap();
+        let s = c.run().unwrap();
+        assert_eq!(s.steps_run, 6);
+        // Largest sub-mesh avoiding a corner board on 4x4 is 4x2 or 2x4.
+        assert_eq!(s.final_workers, 8);
+        assert!(s.events.iter().any(|(_, e)| e.contains("sub-mesh restart")));
+    }
+}

@@ -1,0 +1,104 @@
+//! Recovery policies — the four options the paper's introduction lists
+//! for surviving a failure on a mesh, minus the fire-fighter robot.
+
+use crate::mesh::FailedRegion;
+
+/// What the coordinator does when chips fail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// Rebuild fault-tolerant rings and continue (the paper's scheme).
+    FaultTolerant,
+    /// Restart from checkpoint on the largest clean sub-mesh.
+    SubMesh,
+    /// Halt the job.
+    Stop,
+}
+
+impl RecoveryPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoveryPolicy::FaultTolerant => "fault-tolerant",
+            RecoveryPolicy::SubMesh => "sub-mesh",
+            RecoveryPolicy::Stop => "stop",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        [Self::FaultTolerant, Self::SubMesh, Self::Stop].into_iter().find(|p| p.name() == s)
+    }
+}
+
+/// Largest axis-aligned full sub-mesh of `nx x ny` avoiding `region`,
+/// as `(x0, y0, w, h)`. The candidates are the four maximal slabs
+/// beside the region (left/right/below/above); ties prefer more chips,
+/// then wider shapes.
+pub fn largest_submesh(nx: usize, ny: usize, region: &FailedRegion) -> (usize, usize, usize, usize) {
+    let candidates = [
+        (0, 0, region.x0, ny),                                // left slab
+        (region.x1(), 0, nx.saturating_sub(region.x1()), ny), // right slab
+        (0, 0, nx, region.y0),                                // bottom slab
+        (0, region.y1(), nx, ny.saturating_sub(region.y1())), // top slab
+    ];
+    candidates
+        .into_iter()
+        .filter(|&(_, _, w, h)| w > 0 && h > 0)
+        .max_by_key(|&(_, _, w, h)| (w * h, w))
+        .unwrap_or((0, 0, 0, 0))
+}
+
+/// Chip cost of the hot-spare alternative (paper intro, citing the
+/// Cerebras approach [7]): one spare row and one spare column per mesh
+/// lets the network be rebuilt around any single failed board. Returns
+/// the spare-chip overhead fraction.
+pub fn spare_overhead(nx: usize, ny: usize) -> f64 {
+    let spares = nx + ny + 1; // a spare column + a spare row (shared corner)
+    spares as f64 / (nx * ny) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [RecoveryPolicy::FaultTolerant, RecoveryPolicy::SubMesh, RecoveryPolicy::Stop] {
+            assert_eq!(RecoveryPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(RecoveryPolicy::parse("??"), None);
+    }
+
+    #[test]
+    fn submesh_interior_region() {
+        // 8x8 with a central 2x2 at (4,4): best slab is the left 4x8 =
+        // 32 chips or bottom 8x4 = 32; tie prefers wider (8x4).
+        let (x0, y0, w, h) = largest_submesh(8, 8, &FailedRegion::board(4, 4));
+        assert_eq!(w * h, 32);
+        assert_eq!((x0, y0, w, h), (0, 0, 8, 4));
+    }
+
+    #[test]
+    fn submesh_corner_region() {
+        // Corner 2x2 at (0,0): right slab 6x8 = 48 beats top 8x6 = 48?
+        // Equal chips; wider wins -> top slab 8x6.
+        let (_, _, w, h) = largest_submesh(8, 8, &FailedRegion::board(0, 0));
+        assert_eq!(w * h, 48);
+        assert_eq!((w, h), (8, 6));
+    }
+
+    #[test]
+    fn submesh_host_region_paper_scale() {
+        // 32x16 with a 4x2 host at (16, 8): the paper's sub-mesh
+        // alternative would run on at most half-ish of the mesh.
+        let (_, _, w, h) = largest_submesh(32, 16, &FailedRegion::host(16, 8));
+        let frac = (w * h) as f64 / 512.0;
+        assert!(frac <= 0.55, "sub-mesh keeps only ~half: {frac}");
+        assert!(frac >= 0.45);
+    }
+
+    #[test]
+    fn spare_overhead_paper_scale() {
+        // ~9.6% extra chips on 16x32 — the cost the FT scheme avoids.
+        let o = spare_overhead(32, 16);
+        assert!(o > 0.08 && o < 0.11, "{o}");
+    }
+}

@@ -1,0 +1,332 @@
+//! ASCII regeneration of the paper's figures (Figures 1–10).
+//!
+//! Each `figN` function renders the corresponding construction on a
+//! small mesh, exactly as the paper's diagrams do. The `figures`
+//! example prints them; the tests pin their structural properties, so
+//! the diagrams double as golden checks of the underlying algorithms.
+
+use crate::collective::schedule::OpKind;
+use crate::collective::{build_schedule, Scheme};
+use crate::mesh::{route, route_dor, Coord, FailedRegion, Topology};
+use crate::rings::fault_tolerant::ft_plan;
+use crate::rings::hamiltonian::hamiltonian_ring;
+use crate::rings::pairrows::pair_rows_plan;
+use crate::rings::twod::two_d_plan;
+use crate::rings::Ring;
+
+/// Character grid with mesh orientation (row 0 printed last).
+pub struct Grid {
+    nx: usize,
+    ny: usize,
+    cells: Vec<char>,
+}
+
+impl Grid {
+    pub fn new(topo: &Topology) -> Self {
+        let (nx, ny) = (topo.mesh.nx, topo.mesh.ny);
+        let mut cells = vec!['.'; nx * ny];
+        for r in topo.failed_regions() {
+            for c in r.coords() {
+                cells[c.y * nx + c.x] = 'X';
+            }
+        }
+        Self { nx, ny, cells }
+    }
+
+    pub fn set(&mut self, c: Coord, ch: char) {
+        self.cells[c.y * self.nx + c.x] = ch;
+    }
+
+    pub fn get(&self, c: Coord) -> char {
+        self.cells[c.y * self.nx + c.x]
+    }
+
+    /// Mark a node path with direction glyphs (`> < ^ v`), keeping
+    /// endpoints as `S`/`D`.
+    pub fn mark_route(&mut self, path: &[Coord]) {
+        for w in path.windows(2) {
+            let ch = match (w[1].x as i64 - w[0].x as i64, w[1].y as i64 - w[0].y as i64) {
+                (1, 0) => '>',
+                (-1, 0) => '<',
+                (0, 1) => '^',
+                _ => 'v',
+            };
+            self.set(w[0], ch);
+        }
+        if let (Some(&s), Some(&d)) = (path.first(), path.last()) {
+            self.set(s, 'S');
+            self.set(d, 'D');
+        }
+    }
+
+    /// Mark a near-neighbour ring with direction glyphs.
+    pub fn mark_ring_arrows(&mut self, ring: &Ring) {
+        let n = ring.len();
+        for i in 0..n {
+            let a = ring.nodes()[i];
+            let b = ring.downstream(i);
+            let ch = match (b.x as i64 - a.x as i64, b.y as i64 - a.y as i64) {
+                (1, 0) => '>',
+                (-1, 0) => '<',
+                (0, 1) => '^',
+                (0, -1) => 'v',
+                _ => '+', // non-adjacent hop (skip / route-around)
+            };
+            self.set(a, ch);
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for y in (0..self.ny).rev() {
+            for x in 0..self.nx {
+                out.push(self.cells[y * self.nx + x]);
+                out.push(' ');
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Figure 1: dimension-order routing on a 2-D mesh.
+pub fn fig1() -> String {
+    let topo = Topology::full(8, 8);
+    let mut g = Grid::new(&topo);
+    g.mark_route(&route_dor(Coord::new(1, 1), Coord::new(6, 5)));
+    format!(
+        "Figure 1: dimension-order (X then Y) routing, (1,1) -> (6,5)\n\n{}",
+        g.render()
+    )
+}
+
+/// Figure 2: non-minimal routing around a 2x2 failed region.
+pub fn fig2() -> String {
+    let topo = Topology::with_failure(8, 8, FailedRegion::board(3, 2));
+    let mut g = Grid::new(&topo);
+    let path = route(&topo, Coord::new(0, 2), Coord::new(7, 2)).expect("route exists");
+    g.mark_route(&path);
+    format!(
+        "Figure 2: non-minimal route around a 2x2 failed region (X), (0,2) -> (7,2)\n\n{}",
+        g.render()
+    )
+}
+
+/// Figure 3: 1-D near-neighbour Hamiltonian ring on a full mesh.
+pub fn fig3() -> String {
+    let topo = Topology::full(8, 8);
+    let ring = hamiltonian_ring(&topo).expect("full mesh has a circuit");
+    let mut g = Grid::new(&topo);
+    g.mark_ring_arrows(&ring);
+    format!(
+        "Figure 3: 1-D algorithm — near-neighbour Hamiltonian ring ({} nodes)\n\n{}",
+        ring.len(),
+        g.render()
+    )
+}
+
+/// Figures 4–5: the basic 2-D algorithm's two concurrent colour flips.
+pub fn fig4() -> String {
+    let topo = Topology::full(8, 8);
+    let plan = two_d_plan(&topo).expect("plan");
+    let mut out = String::from(
+        "Figure 4/5: 2-D algorithm — colour 0 (red) rings along X, colour 1 (blue)\n\
+         along Y, each over half the payload; phases RS-X, RS-Y, AG-Y, AG-X.\n\n",
+    );
+    out.push_str("Row ring 0 order (dilation-2 line embedding): ");
+    for c in plan.rows[0].nodes() {
+        out.push_str(&format!("{} ", c.x));
+    }
+    out.push_str("\nColumn ring 0 order: ");
+    for c in plan.cols[0].nodes() {
+        out.push_str(&format!("{} ", c.y));
+    }
+    out.push('\n');
+    out
+}
+
+/// Figure 6: pair-row strip rings (phase 1 of the alternate scheme).
+pub fn fig6() -> String {
+    let topo = Topology::full(8, 8);
+    let plan = pair_rows_plan(&topo).expect("plan");
+    let mut g = Grid::new(&topo);
+    for ring in &plan.strips {
+        g.mark_ring_arrows(ring);
+    }
+    format!(
+        "Figure 6: alternate 2-D scheme phase 1 — one physical ring per row pair\n\
+         (no two rings share a link)\n\n{}",
+        g.render()
+    )
+}
+
+/// Figure 7: phase-2 rings over alternate rows.
+pub fn fig7() -> String {
+    let topo = Topology::full(8, 8);
+    let plan = pair_rows_plan(&topo).expect("plan");
+    let mut out = String::from(
+        "Figure 7: alternate 2-D scheme phase 2 — nodes in alternate rows of each\n\
+         column form a ring (payload 1/(2 nx) of phase 1)\n\n",
+    );
+    let r = &plan.phase2[0];
+    out.push_str("Ring for column 0, parity 0 visits rows: ");
+    for c in r.nodes() {
+        out.push_str(&format!("{} ", c.y));
+    }
+    out.push('\n');
+    out
+}
+
+/// Figure 8: 1-D fault-tolerant Hamiltonian ring around a 2x2 region.
+pub fn fig8() -> String {
+    let topo = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+    let ring = hamiltonian_ring(&topo).expect("FT circuit");
+    let mut g = Grid::new(&topo);
+    g.mark_ring_arrows(&ring);
+    format!(
+        "Figure 8: 1-D scheme around a 2x2 failed region (X = failed, {} live nodes)\n\n{}",
+        ring.len(),
+        g.render()
+    )
+}
+
+/// Figure 9: fault-tolerant 2-D rings — blue strips, yellow segments.
+pub fn fig9() -> String {
+    let topo = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+    let plan = ft_plan(&topo).expect("ft plan");
+    let mut g = Grid::new(&topo);
+    for (i, ring) in plan.blue.iter().enumerate() {
+        let ch = (b'A' + (i % 26) as u8) as char;
+        for &c in ring.nodes() {
+            g.set(c, ch);
+        }
+    }
+    for (i, yb) in plan.yellow.iter().enumerate() {
+        let ch = (b'a' + (i % 26) as u8) as char;
+        for &c in yb.ring.nodes() {
+            g.set(c, ch);
+        }
+    }
+    format!(
+        "Figure 9: fault-tolerant rings — upper-case letters are full blue strip\n\
+         rings, lower-case are yellow segment rings beside the failed region (X)\n\n{}",
+        g.render()
+    )
+}
+
+/// Figure 10: the forwarding steps of the fault-tolerant scheme.
+pub fn fig10() -> String {
+    let topo = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+    let plan = ft_plan(&topo).expect("ft plan");
+    let mut out = String::from(
+        "Figure 10: forwarding steps — after the yellow ring reduce-scatter, each\n\
+         yellow node forwards its summed chunk to its blue neighbour (Add); after\n\
+         the blue all-gather the chunk returns (Copy) and yellow rings all-gather.\n\n",
+    );
+    for yb in &plan.yellow {
+        for fp in &yb.forwards {
+            out.push_str(&format!("  {} --forward--> {}\n", fp.yellow, fp.blue));
+        }
+    }
+    // Show the stage structure from the compiled schedule.
+    let sched = build_schedule(Scheme::FaultTolerant, &topo, 1 << 12).expect("schedule");
+    let forwards: usize = sched
+        .steps
+        .iter()
+        .flat_map(|s| &s.transfers)
+        .filter(|t| t.op == OpKind::Add && t.src.x == t.dst.x && t.src.manhattan(&t.dst) == 1)
+        .count();
+    out.push_str(&format!(
+        "\nCompiled schedule: {} steps, {} transfers ({} vertical forward/return hops)\n",
+        sched.num_steps(),
+        sched.num_transfers(),
+        forwards,
+    ));
+    out
+}
+
+/// All figures in order, for the `figures` example / CLI.
+pub fn all_figures() -> Vec<(&'static str, String)> {
+    vec![
+        ("fig1", fig1()),
+        ("fig2", fig2()),
+        ("fig3", fig3()),
+        ("fig4", fig4()),
+        ("fig6", fig6()),
+        ("fig7", fig7()),
+        ("fig8", fig8()),
+        ("fig9", fig9()),
+        ("fig10", fig10()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_is_pure_dor() {
+        let s = fig1();
+        let grid = s.splitn(2, "\n\n").nth(1).unwrap();
+        assert!(grid.contains('S') && grid.contains('D'));
+        assert!(!grid.contains('X'));
+        // X-then-Y: exactly one turn, so both '>' and '^' appear.
+        assert!(grid.contains('>') && grid.contains('^'));
+    }
+
+    #[test]
+    fn fig2_detours() {
+        let s = fig2();
+        let grid = s.splitn(2, "\n\n").nth(1).unwrap();
+        assert_eq!(grid.matches('X').count(), 4);
+        assert!(grid.contains('^') || grid.contains('v'), "must leave the blocked row");
+    }
+
+    #[test]
+    fn fig3_and_fig8_are_full_cycles() {
+        // Every live cell carries a direction glyph (no '.').
+        for (s, fails) in [(fig3(), 0), (fig8(), 4)] {
+            let grid: String = s.splitn(2, "\n\n").nth(1).unwrap().to_string();
+            let dots = grid.matches('.').count();
+            assert_eq!(dots, 0, "unvisited cells in\n{s}");
+            assert_eq!(grid.matches('X').count(), fails);
+        }
+    }
+
+    #[test]
+    fn fig6_all_cells_in_rings() {
+        let s = fig6();
+        let grid: String = s.splitn(2, "\n\n").nth(1).unwrap().to_string();
+        assert_eq!(grid.matches('.').count(), 0);
+        assert_eq!(grid.matches('X').count(), 0);
+    }
+
+    #[test]
+    fn fig7_rows_skip() {
+        let s = fig7();
+        assert!(s.contains("0 2 4 6"), "{s}");
+    }
+
+    #[test]
+    fn fig9_labels_blue_and_yellow() {
+        let s = fig9();
+        assert!(s.contains('A') && s.contains('a') && s.contains('b'));
+        assert_eq!(s.matches('X').count(), 4 + 1); // 4 failed cells + the 'X' in prose
+    }
+
+    #[test]
+    fn fig10_lists_forwards() {
+        let s = fig10();
+        assert!(s.matches("--forward-->").count() >= 8, "{s}");
+        assert!(s.contains("Compiled schedule"));
+    }
+
+    #[test]
+    fn all_figures_nonempty() {
+        let figs = all_figures();
+        assert_eq!(figs.len(), 9);
+        for (name, body) in figs {
+            assert!(!body.is_empty(), "{name}");
+        }
+    }
+}

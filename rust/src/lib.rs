@@ -1,0 +1,30 @@
+//! # meshreduce
+//!
+//! Reproduction of **"Highly Available Data Parallel ML training on Mesh
+//! Networks"** (Kumar & Jouppi, 2020): fault-tolerant gradient-summation
+//! allreduce on 2-D mesh networks, built as a three-layer stack —
+//!
+//! - **L3 (this crate)** — mesh model, routing, ring construction, the
+//!   collective schedules and their numeric executor, a discrete-event
+//!   network simulator + TPU-v3 performance model, and the data-parallel
+//!   training coordinator;
+//! - **L2 (`python/compile/model.py`)** — JAX transformer fwd/bwd lowered
+//!   once to HLO text artifacts;
+//! - **L1 (`python/compile/kernels/`)** — Pallas matmul / gradient-combine
+//!   kernels inside the L2 graph.
+//!
+//! The Rust binary is self-contained after `make artifacts`; Python never
+//! runs on the training path. See `DESIGN.md` for the full inventory and
+//! `EXPERIMENTS.md` for the paper-vs-measured record.
+
+pub mod collective;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod mesh;
+pub mod perfmodel;
+pub mod simnet;
+pub mod rings;
+pub mod runtime;
+pub mod trainer;
+pub mod util;

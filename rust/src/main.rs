@@ -1,0 +1,308 @@
+//! meshreduce CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   train    run a data-parallel training job (optionally from a TOML
+//!            job file, with scripted failure injection)
+//!   table1   regenerate paper Table 1 (end-to-end times + rel. efficiency)
+//!   table2   regenerate paper Table 2 (allreduce overhead %)
+//!   sweep    payload sweep of 1-D vs 2-D vs pair-row schemes (§2.1)
+//!   figures  render the paper's figures (Figures 1-10) as ASCII
+//!   verify   numeric allreduce correctness check on a chosen topology
+//!   info     artifact + runtime environment info
+
+use meshreduce::collective::verify::{check_allreduce, schedule_cdg_acyclic};
+use meshreduce::collective::{build_schedule, Scheme};
+use meshreduce::config::load_job;
+use meshreduce::coordinator::policy::RecoveryPolicy;
+use meshreduce::coordinator::{Coordinator, FailureEvent, JobConfig};
+use meshreduce::figures::all_figures;
+use meshreduce::mesh::{FailedRegion, Topology};
+use meshreduce::perfmodel::tables::{payload_sweep, predict_all, render_table1, render_table2};
+use meshreduce::runtime::{artifact::default_dir, ArtifactSet, Runtime};
+use meshreduce::simnet::LinkModel;
+use meshreduce::trainer::TrainerConfig;
+use meshreduce::util::fmt::{format_bytes, format_duration_s};
+use std::path::PathBuf;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("train") => cmd_train(&args[1..]),
+        Some("table1") => cmd_tables(true),
+        Some("table2") => cmd_tables(false),
+        Some("sweep") => cmd_sweep(&args[1..]),
+        Some("figures") => cmd_figures(&args[1..]),
+        Some("verify") => cmd_verify(&args[1..]),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: meshreduce <train|table1|table2|sweep|figures|verify|info> [options]\n\
+                 \n\
+                 train   --config job.toml | [--model tiny] [--mesh 4x4] [--steps 10]\n\
+                 \x20       [--scheme fault-tolerant] [--fail-at N --fail-region X0,Y0,WxH]\n\
+                 \x20       [--policy fault-tolerant|sub-mesh|stop] [--log-every N]\n\
+                 \x20       [--csv out.csv] [--verify-allreduce] [--seed N]\n\
+                 sweep   [--mesh 8x8]\n\
+                 figures [fig1 fig2 fig3 fig4 fig6 fig7 fig8 fig9 fig10]\n\
+                 verify  [--mesh 8x8] [--region X0,Y0,WxH] [--payload 4096]"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Tiny flag parser: `--key value` pairs plus bare flags.
+struct Flags<'a> {
+    args: &'a [String],
+}
+
+impl<'a> Flags<'a> {
+    fn get(&self, key: &str) -> Option<&'a str> {
+        self.args
+            .iter()
+            .position(|a| a == key)
+            .and_then(|i| self.args.get(i + 1))
+            .map(String::as_str)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.args.iter().any(|a| a == key)
+    }
+}
+
+fn parse_mesh(s: &str) -> Option<(usize, usize)> {
+    let (a, b) = s.split_once('x')?;
+    Some((a.parse().ok()?, b.parse().ok()?))
+}
+
+fn parse_region(s: &str) -> Option<FailedRegion> {
+    // X0,Y0,WxH
+    let mut parts = s.split(',');
+    let x0 = parts.next()?.parse().ok()?;
+    let y0 = parts.next()?.parse().ok()?;
+    let (w, h) = parse_mesh(parts.next()?)?;
+    Some(FailedRegion::new(x0, y0, w, h))
+}
+
+fn cmd_train(rest: &[String]) -> i32 {
+    let f = Flags { args: rest };
+    let job: JobConfig = if let Some(path) = f.get("--config") {
+        match load_job(&PathBuf::from(path)) {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 1;
+            }
+        }
+    } else {
+        let (nx, ny) = f.get("--mesh").and_then(parse_mesh).unwrap_or((4, 4));
+        let model = f.get("--model").unwrap_or("tiny");
+        let mut tcfg = TrainerConfig::new(model, nx, ny);
+        if let Some(s) = f.get("--scheme") {
+            match Scheme::parse(s) {
+                Some(sch) => tcfg.scheme = sch,
+                None => {
+                    eprintln!("unknown scheme {s}");
+                    return 1;
+                }
+            }
+        }
+        if let Some(s) = f.get("--seed") {
+            tcfg.seed = s.parse().unwrap_or(0);
+        }
+        tcfg.verify_allreduce = f.has("--verify-allreduce");
+        let steps = f.get("--steps").and_then(|s| s.parse().ok()).unwrap_or(10);
+        let mut job = JobConfig::new(tcfg, steps);
+        if let (Some(at), Some(region)) = (
+            f.get("--fail-at").and_then(|s| s.parse().ok()),
+            f.get("--fail-region").and_then(parse_region),
+        ) {
+            job.failures.push(FailureEvent { at_step: at, region });
+        }
+        if let Some(p) = f.get("--policy") {
+            match RecoveryPolicy::parse(p) {
+                Some(pol) => job.policy = pol,
+                None => {
+                    eprintln!("unknown policy {p}");
+                    return 1;
+                }
+            }
+        }
+        job.log_every = f.get("--log-every").and_then(|s| s.parse().ok()).unwrap_or(1);
+        job
+    };
+
+    let runtime = match Runtime::cpu() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("PJRT init failed: {e}");
+            return 1;
+        }
+    };
+    let mut coord = match Coordinator::new(job, &runtime) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("setup failed: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "training on {}x{} mesh ({} workers)",
+        coord.trainer.topology().mesh.nx,
+        coord.trainer.topology().mesh.ny,
+        coord.trainer.num_workers()
+    );
+    match coord.run() {
+        Ok(summary) => {
+            println!(
+                "\ndone: {} steps, final loss {:.4} (tail mean {:.4}), workers {}, \
+                 allreduce overhead {:.1}%, wall {}",
+                summary.steps_run,
+                summary.final_loss,
+                summary.tail_loss,
+                summary.final_workers,
+                100.0 * summary.allreduce_overhead,
+                format_duration_s(summary.wall_s),
+            );
+            for (step, e) in &summary.events {
+                println!("  event @step {step}: {e}");
+            }
+            if let Some(csv) = f.get("--csv") {
+                if let Err(e) = coord.trainer.metrics.write_csv(&PathBuf::from(csv)) {
+                    eprintln!("csv write failed: {e}");
+                }
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("run failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_tables(table1: bool) -> i32 {
+    eprintln!("simulating all four paper configurations (payloads up to 1.3 GB on 32x32)...");
+    let link = LinkModel::tpu_v3();
+    match predict_all(&link) {
+        Ok(preds) => {
+            if table1 {
+                println!(
+                    "\nTable 1 — MLPerf-v0.7 end-to-end benchmark time, full vs fault-tolerant mesh\n"
+                );
+                println!("{}", render_table1(&preds));
+            } else {
+                println!("\nTable 2 — allreduce overhead % of device step time\n");
+                println!("{}", render_table2(&preds));
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("prediction failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_sweep(rest: &[String]) -> i32 {
+    let f = Flags { args: rest };
+    let (nx, ny) = f.get("--mesh").and_then(parse_mesh).unwrap_or((8, 8));
+    let topo = Topology::full(nx, ny);
+    let link = LinkModel::tpu_v3();
+    let payloads: Vec<usize> = (12..=26).step_by(2).map(|p| 1usize << p).collect();
+    println!("payload sweep on {nx}x{ny} full mesh (f32 elements):\n");
+    println!("{:>12} {:>12} {:>12} {:>12}", "payload", "1d-ring", "2d-basic", "pair-rows");
+    match payload_sweep(&topo, &link, &payloads) {
+        Ok(points) => {
+            for p in points {
+                println!(
+                    "{:>12} {:>12} {:>12} {:>12}",
+                    format_bytes(p.payload_bytes),
+                    format_duration_s(p.one_d_s),
+                    format_duration_s(p.two_d_s),
+                    format_duration_s(p.pair_rows_s),
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("sweep failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_figures(rest: &[String]) -> i32 {
+    let wanted: Vec<&str> = rest.iter().map(String::as_str).collect();
+    for (name, body) in all_figures() {
+        if wanted.is_empty() || wanted.contains(&name) {
+            println!("==== {name} ====\n{body}");
+        }
+    }
+    0
+}
+
+fn cmd_verify(rest: &[String]) -> i32 {
+    let f = Flags { args: rest };
+    let (nx, ny) = f.get("--mesh").and_then(parse_mesh).unwrap_or((8, 8));
+    let payload = f.get("--payload").and_then(|s| s.parse().ok()).unwrap_or(4096);
+    let topo = match f.get("--region").and_then(parse_region) {
+        Some(r) => Topology::with_failure(nx, ny, r),
+        None => Topology::full(nx, ny),
+    };
+    println!(
+        "verifying allreduce schemes on {nx}x{ny} ({} live chips), payload {payload} f32\n",
+        topo.live_count()
+    );
+    let mut failures = 0;
+    for scheme in Scheme::ALL {
+        match build_schedule(scheme, &topo, payload) {
+            Ok(sched) => {
+                let bad = check_allreduce(&sched, &topo, 42);
+                let cdg = schedule_cdg_acyclic(&sched, &topo);
+                let ok = bad.is_empty() && cdg;
+                if !ok {
+                    failures += 1;
+                }
+                println!(
+                    "  {:15} {}  ({} steps, {} transfers, CDG {})",
+                    scheme.name(),
+                    if ok { "OK " } else { "FAIL" },
+                    sched.num_steps(),
+                    sched.num_transfers(),
+                    if cdg { "acyclic" } else { "CYCLIC" },
+                );
+            }
+            Err(e) => println!("  {:15} n/a ({e})", scheme.name()),
+        }
+    }
+    if failures == 0 {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_info() -> i32 {
+    match Runtime::cpu() {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    let dir = default_dir();
+    println!("artifacts dir: {}", dir.display());
+    for cfg in ["tiny", "small", "base"] {
+        match ArtifactSet::locate(&dir, cfg) {
+            Ok(set) => println!(
+                "  model '{cfg}': {} params, batch {} x seq {}, vocab {}, pallas={}",
+                set.meta.param_count,
+                set.meta.batch,
+                set.meta.seq_len,
+                set.meta.vocab,
+                set.meta.use_pallas,
+            ),
+            Err(_) => println!("  model '{cfg}': not exported"),
+        }
+    }
+    0
+}

@@ -1,0 +1,295 @@
+//! Coordinates, directions and links on a 2-D mesh.
+
+use std::fmt;
+
+/// A chip position on the mesh. `x` grows East, `y` grows North.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Coord {
+    pub x: usize,
+    pub y: usize,
+}
+
+impl Coord {
+    pub const fn new(x: usize, y: usize) -> Self {
+        Self { x, y }
+    }
+
+    /// Manhattan distance.
+    pub fn manhattan(&self, other: &Coord) -> usize {
+        self.x.abs_diff(other.x) + self.y.abs_diff(other.y)
+    }
+
+    /// Are the two coordinates mesh neighbours (distance 1)?
+    pub fn adjacent(&self, other: &Coord) -> bool {
+        self.manhattan(other) == 1
+    }
+}
+
+impl fmt::Display for Coord {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({},{})", self.x, self.y)
+    }
+}
+
+/// Link direction leaving a chip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dir {
+    /// +x
+    East,
+    /// -x
+    West,
+    /// +y
+    North,
+    /// -y
+    South,
+}
+
+impl Dir {
+    pub const ALL: [Dir; 4] = [Dir::East, Dir::West, Dir::North, Dir::South];
+
+    pub fn index(self) -> usize {
+        match self {
+            Dir::East => 0,
+            Dir::West => 1,
+            Dir::North => 2,
+            Dir::South => 3,
+        }
+    }
+
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::East => Dir::West,
+            Dir::West => Dir::East,
+            Dir::North => Dir::South,
+            Dir::South => Dir::North,
+        }
+    }
+
+    /// Direction of the unit step from `a` to adjacent `b`.
+    pub fn between(a: Coord, b: Coord) -> Option<Dir> {
+        if !a.adjacent(&b) {
+            return None;
+        }
+        Some(if b.x == a.x + 1 {
+            Dir::East
+        } else if a.x == b.x + 1 {
+            Dir::West
+        } else if b.y == a.y + 1 {
+            Dir::North
+        } else {
+            Dir::South
+        })
+    }
+}
+
+/// A *unidirectional* physical link between two adjacent chips. The two
+/// directions of a cable are independent channels (as on TPU ICI), so
+/// `a->b` and `b->a` are distinct `Link`s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Link {
+    pub from: Coord,
+    pub to: Coord,
+}
+
+impl Link {
+    pub fn new(from: Coord, to: Coord) -> Self {
+        debug_assert!(from.adjacent(&to), "link must join neighbours: {from} -> {to}");
+        Self { from, to }
+    }
+
+    pub fn dir(&self) -> Dir {
+        Dir::between(self.from, self.to).expect("link joins neighbours")
+    }
+
+    pub fn reversed(&self) -> Link {
+        Link { from: self.to, to: self.from }
+    }
+}
+
+impl fmt::Display for Link {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}->{}", self.from, self.to)
+    }
+}
+
+/// Mesh dimensions. `nx` columns (X), `ny` rows (Y); `nx * ny` chips.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mesh {
+    pub nx: usize,
+    pub ny: usize,
+}
+
+impl Mesh {
+    pub fn new(nx: usize, ny: usize) -> Self {
+        assert!(nx >= 1 && ny >= 1, "degenerate mesh {nx}x{ny}");
+        Self { nx, ny }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nx * self.ny
+    }
+
+    pub fn contains(&self, c: Coord) -> bool {
+        c.x < self.nx && c.y < self.ny
+    }
+
+    /// Dense node index (row-major).
+    pub fn node_index(&self, c: Coord) -> usize {
+        debug_assert!(self.contains(c));
+        c.y * self.nx + c.x
+    }
+
+    pub fn coord_of(&self, index: usize) -> Coord {
+        debug_assert!(index < self.num_nodes());
+        Coord::new(index % self.nx, index / self.nx)
+    }
+
+    /// Neighbour of `c` in direction `d`, if on the mesh.
+    pub fn step(&self, c: Coord, d: Dir) -> Option<Coord> {
+        let n = match d {
+            Dir::East if c.x + 1 < self.nx => Coord::new(c.x + 1, c.y),
+            Dir::West if c.x > 0 => Coord::new(c.x - 1, c.y),
+            Dir::North if c.y + 1 < self.ny => Coord::new(c.x, c.y + 1),
+            Dir::South if c.y > 0 => Coord::new(c.x, c.y - 1),
+            _ => return None,
+        };
+        Some(n)
+    }
+
+    /// All mesh neighbours of `c`.
+    pub fn neighbors(&self, c: Coord) -> Vec<Coord> {
+        Dir::ALL.iter().filter_map(|&d| self.step(c, d)).collect()
+    }
+
+    /// Iterator over all coordinates, row-major.
+    pub fn coords(&self) -> impl Iterator<Item = Coord> + '_ {
+        (0..self.num_nodes()).map(|i| self.coord_of(i))
+    }
+
+    /// Dense per-direction link index in `[0, 4 * num_nodes)`; slots for
+    /// off-mesh links are simply never used. Used by the DES for O(1)
+    /// link-state lookup.
+    pub fn link_index(&self, link: Link) -> usize {
+        self.node_index(link.from) * 4 + link.dir().index()
+    }
+
+    pub fn num_link_slots(&self) -> usize {
+        self.num_nodes() * 4
+    }
+
+    /// All unidirectional links on the mesh.
+    pub fn links(&self) -> Vec<Link> {
+        let mut out = Vec::new();
+        for c in self.coords() {
+            for d in Dir::ALL {
+                if let Some(n) = self.step(c, d) {
+                    out.push(Link::new(c, n));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop;
+
+    #[test]
+    fn manhattan_and_adjacency() {
+        let a = Coord::new(1, 2);
+        let b = Coord::new(3, 1);
+        assert_eq!(a.manhattan(&b), 3);
+        assert!(!a.adjacent(&b));
+        assert!(a.adjacent(&Coord::new(1, 3)));
+        assert!(a.adjacent(&Coord::new(0, 2)));
+        assert!(!a.adjacent(&a));
+    }
+
+    #[test]
+    fn dir_between() {
+        let c = Coord::new(2, 2);
+        assert_eq!(Dir::between(c, Coord::new(3, 2)), Some(Dir::East));
+        assert_eq!(Dir::between(c, Coord::new(1, 2)), Some(Dir::West));
+        assert_eq!(Dir::between(c, Coord::new(2, 3)), Some(Dir::North));
+        assert_eq!(Dir::between(c, Coord::new(2, 1)), Some(Dir::South));
+        assert_eq!(Dir::between(c, Coord::new(3, 3)), None);
+    }
+
+    #[test]
+    fn dir_opposites() {
+        for d in Dir::ALL {
+            assert_eq!(d.opposite().opposite(), d);
+            assert_ne!(d.opposite(), d);
+        }
+    }
+
+    #[test]
+    fn node_index_roundtrip() {
+        let m = Mesh::new(5, 3);
+        for i in 0..m.num_nodes() {
+            assert_eq!(m.node_index(m.coord_of(i)), i);
+        }
+    }
+
+    #[test]
+    fn step_edges() {
+        let m = Mesh::new(4, 4);
+        assert_eq!(m.step(Coord::new(0, 0), Dir::West), None);
+        assert_eq!(m.step(Coord::new(0, 0), Dir::South), None);
+        assert_eq!(m.step(Coord::new(3, 3), Dir::East), None);
+        assert_eq!(m.step(Coord::new(3, 3), Dir::North), None);
+        assert_eq!(m.step(Coord::new(1, 1), Dir::East), Some(Coord::new(2, 1)));
+    }
+
+    #[test]
+    fn corner_and_interior_neighbor_counts() {
+        let m = Mesh::new(4, 4);
+        assert_eq!(m.neighbors(Coord::new(0, 0)).len(), 2);
+        assert_eq!(m.neighbors(Coord::new(1, 0)).len(), 3);
+        assert_eq!(m.neighbors(Coord::new(1, 1)).len(), 4);
+    }
+
+    #[test]
+    fn link_count_matches_formula() {
+        // Unidirectional links: 2 * (nx-1)*ny + 2 * nx*(ny-1).
+        let m = Mesh::new(6, 4);
+        let expected = 2 * (6 - 1) * 4 + 2 * 6 * (4 - 1);
+        assert_eq!(m.links().len(), expected);
+    }
+
+    #[test]
+    fn link_indices_unique() {
+        let m = Mesh::new(5, 5);
+        let mut seen = std::collections::HashSet::new();
+        for l in m.links() {
+            assert!(seen.insert(m.link_index(l)), "duplicate index for {l}");
+            assert!(m.link_index(l) < m.num_link_slots());
+        }
+    }
+
+    #[test]
+    fn prop_step_is_reversible() {
+        prop("step reversible", |rng| {
+            let m = Mesh::new(rng.usize_in(1, 10), rng.usize_in(1, 10));
+            let c = m.coord_of(rng.usize_in(0, m.num_nodes()));
+            for d in Dir::ALL {
+                if let Some(n) = m.step(c, d) {
+                    assert_eq!(m.step(n, d.opposite()), Some(c));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_links_are_adjacent_pairs() {
+        prop("links adjacent", |rng| {
+            let m = Mesh::new(rng.usize_in(1, 8), rng.usize_in(1, 8));
+            for l in m.links() {
+                assert!(l.from.adjacent(&l.to));
+                assert!(m.contains(l.from) && m.contains(l.to));
+            }
+        });
+    }
+}

@@ -1,0 +1,218 @@
+//! Contiguous failed regions of chips (paper §2).
+//!
+//! TPU-v3 packages four chips per board (a 2x2 mesh tile) and two boards
+//! per host (4x2). A hardware failure therefore takes out a *contiguous,
+//! even-aligned rectangle* of chips; the paper's fault-tolerant schemes
+//! are specified for 2x2 and 2k x 2 / 2 x 2k regions that start on even
+//! rows and columns.
+
+use super::coords::{Coord, Mesh};
+
+/// An axis-aligned rectangle of failed chips: `w x h` chips with the
+/// lower-left corner at `(x0, y0)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FailedRegion {
+    pub x0: usize,
+    pub y0: usize,
+    pub w: usize,
+    pub h: usize,
+}
+
+/// Classification of a failed region, deciding which fault-tolerant
+/// scheme applies (paper §2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegionShape {
+    /// 2x2: one TPU board.
+    Board2x2,
+    /// 2k x 2 (k >= 1), wider than tall: row-pair rings can absorb it.
+    WideEven,
+    /// 2 x 2k (k >= 1), taller than wide.
+    TallEven,
+    /// Even-sized, even-aligned but not 2-thin (e.g. 4x4).
+    EvenBlock,
+    /// Anything else (odd size or odd alignment); only generic
+    /// route-around applies.
+    Irregular,
+}
+
+impl FailedRegion {
+    pub fn new(x0: usize, y0: usize, w: usize, h: usize) -> Self {
+        assert!(w >= 1 && h >= 1, "degenerate region {w}x{h}");
+        Self { x0, y0, w, h }
+    }
+
+    /// Single TPU-v3 board at board coordinates (even-aligned 2x2).
+    pub fn board(x0: usize, y0: usize) -> Self {
+        Self::new(x0, y0, 2, 2)
+    }
+
+    /// Single TPU-v3 host: two boards, 4x2 (the shape used in the
+    /// paper's evaluation, 8 chips).
+    pub fn host(x0: usize, y0: usize) -> Self {
+        Self::new(x0, y0, 4, 2)
+    }
+
+    pub fn num_chips(&self) -> usize {
+        self.w * self.h
+    }
+
+    pub fn contains(&self, c: Coord) -> bool {
+        c.x >= self.x0 && c.x < self.x0 + self.w && c.y >= self.y0 && c.y < self.y0 + self.h
+    }
+
+    /// Exclusive upper corner.
+    pub fn x1(&self) -> usize {
+        self.x0 + self.w
+    }
+
+    pub fn y1(&self) -> usize {
+        self.y0 + self.h
+    }
+
+    pub fn coords(&self) -> impl Iterator<Item = Coord> + '_ {
+        (self.y0..self.y1()).flat_map(move |y| (self.x0..self.x1()).map(move |x| Coord::new(x, y)))
+    }
+
+    /// Fully inside the mesh?
+    pub fn fits(&self, mesh: &Mesh) -> bool {
+        self.x1() <= mesh.nx && self.y1() <= mesh.ny
+    }
+
+    /// Starts on even rows/columns and spans an even number of each —
+    /// the precondition for the 1-D fault-tolerant Hamiltonian circuit
+    /// (paper Fig 8: "the failed chips form a contiguous region that is
+    /// of even size and starts on even rows and columns").
+    pub fn is_even_aligned(&self) -> bool {
+        self.x0 % 2 == 0 && self.y0 % 2 == 0 && self.w % 2 == 0 && self.h % 2 == 0
+    }
+
+    /// Does this region overlap another?
+    pub fn overlaps(&self, other: &FailedRegion) -> bool {
+        self.x0 < other.x1() && other.x0 < self.x1() && self.y0 < other.y1() && other.y0 < self.y1()
+    }
+
+    pub fn shape(&self) -> RegionShape {
+        if !self.is_even_aligned() {
+            return RegionShape::Irregular;
+        }
+        match (self.w, self.h) {
+            (2, 2) => RegionShape::Board2x2,
+            (w, 2) if w % 2 == 0 => RegionShape::WideEven,
+            (2, h) if h % 2 == 0 => RegionShape::TallEven,
+            _ => RegionShape::EvenBlock,
+        }
+    }
+
+    /// Chips adjacent to the region (the paper's "yellow" nodes in
+    /// Figure 9: peers of failed chips that forward partial sums).
+    pub fn boundary_neighbors(&self, mesh: &Mesh) -> Vec<Coord> {
+        let mut out = Vec::new();
+        for c in mesh.coords() {
+            if self.contains(c) {
+                continue;
+            }
+            if mesh.neighbors(c).iter().any(|n| self.contains(*n)) {
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop;
+
+    #[test]
+    fn board_and_host_shapes() {
+        assert_eq!(FailedRegion::board(2, 4).shape(), RegionShape::Board2x2);
+        assert_eq!(FailedRegion::host(2, 4).shape(), RegionShape::WideEven);
+        assert_eq!(FailedRegion::new(2, 4, 2, 6).shape(), RegionShape::TallEven);
+        assert_eq!(FailedRegion::new(0, 0, 4, 4).shape(), RegionShape::EvenBlock);
+        assert_eq!(FailedRegion::new(1, 0, 2, 2).shape(), RegionShape::Irregular);
+        assert_eq!(FailedRegion::new(0, 0, 3, 2).shape(), RegionShape::Irregular);
+    }
+
+    #[test]
+    fn contains_and_coords() {
+        let r = FailedRegion::host(4, 2);
+        assert_eq!(r.num_chips(), 8);
+        assert_eq!(r.coords().count(), 8);
+        assert!(r.contains(Coord::new(4, 2)));
+        assert!(r.contains(Coord::new(7, 3)));
+        assert!(!r.contains(Coord::new(8, 2)));
+        assert!(!r.contains(Coord::new(4, 4)));
+        for c in r.coords() {
+            assert!(r.contains(c));
+        }
+    }
+
+    #[test]
+    fn fits_mesh() {
+        let m = Mesh::new(8, 8);
+        assert!(FailedRegion::host(4, 6).fits(&m));
+        assert!(!FailedRegion::host(6, 6).fits(&m)); // 6+4 > 8
+    }
+
+    #[test]
+    fn even_alignment() {
+        assert!(FailedRegion::board(0, 0).is_even_aligned());
+        assert!(FailedRegion::board(2, 6).is_even_aligned());
+        assert!(!FailedRegion::board(1, 2).is_even_aligned());
+        assert!(!FailedRegion::new(2, 2, 3, 2).is_even_aligned());
+    }
+
+    #[test]
+    fn overlap() {
+        let a = FailedRegion::board(2, 2);
+        assert!(a.overlaps(&FailedRegion::board(2, 2)));
+        assert!(a.overlaps(&FailedRegion::new(3, 3, 2, 2)));
+        assert!(!a.overlaps(&FailedRegion::board(4, 2)));
+        assert!(!a.overlaps(&FailedRegion::board(0, 4)));
+    }
+
+    #[test]
+    fn boundary_neighbors_of_interior_board() {
+        let m = Mesh::new(8, 8);
+        let r = FailedRegion::board(2, 2);
+        let b = r.boundary_neighbors(&m);
+        // A 2x2 interior region has 8 orthogonal boundary neighbours.
+        assert_eq!(b.len(), 8);
+        for c in &b {
+            assert!(!r.contains(*c));
+            assert!(m.neighbors(*c).iter().any(|n| r.contains(*n)));
+        }
+    }
+
+    #[test]
+    fn boundary_neighbors_at_mesh_edge() {
+        let m = Mesh::new(8, 8);
+        let r = FailedRegion::board(0, 0); // corner board
+        let b = r.boundary_neighbors(&m);
+        assert_eq!(b.len(), 4); // (2,0),(2,1),(0,2),(1,2)
+    }
+
+    #[test]
+    fn prop_boundary_neighbors_touch_region() {
+        prop("boundary touches region", |rng| {
+            let m = Mesh::new(rng.usize_in(4, 12), rng.usize_in(4, 12));
+            let w = 2 * rng.usize_in(1, 3);
+            let h = 2 * rng.usize_in(1, 3);
+            if w >= m.nx || h >= m.ny {
+                return;
+            }
+            let x0 = 2 * rng.usize_in(0, (m.nx - w) / 2 + 1).min((m.nx - w) / 2);
+            let y0 = 2 * rng.usize_in(0, (m.ny - h) / 2 + 1).min((m.ny - h) / 2);
+            let r = FailedRegion::new(x0.min(m.nx - w), y0.min(m.ny - h), w, h);
+            assert!(r.fits(&m));
+            for c in r.boundary_neighbors(&m) {
+                assert!(!r.contains(c));
+                assert_eq!(
+                    m.neighbors(c).iter().filter(|n| r.contains(**n)).count() >= 1,
+                    true
+                );
+            }
+        });
+    }
+}

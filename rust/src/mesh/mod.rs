@@ -1,0 +1,27 @@
+//! 2-D mesh network model (paper §1–§2, Figures 1–2).
+//!
+//! The TPU-v3 inter-chip interconnect is modelled as an `nx x ny` 2-D
+//! mesh: every chip has bidirectional links to its X/Y nearest
+//! neighbours (no wraparound — the paper's algorithms are stated for
+//! meshes; torus wraparound is an explicit non-goal of the reproduction
+//! and is discussed in DESIGN.md).
+//!
+//! Sub-modules:
+//! - [`coords`]  — coordinates, directions, links;
+//! - [`topology`] — the mesh + failed regions = the *live* topology;
+//! - [`failure`] — contiguous failed regions (2x2 board, 4x2 host, ...);
+//! - [`routing`] — dimension-order routing and the non-minimal
+//!   route-around used when a failed region blocks a DOR path (Fig 2);
+//! - [`vc`] — channel-dependency-graph cycle check backing the paper's
+//!   "no additional virtual channels needed" claim.
+
+pub mod coords;
+pub mod failure;
+pub mod routing;
+pub mod topology;
+pub mod vc;
+
+pub use coords::{Coord, Dir, Link, Mesh};
+pub use failure::{FailedRegion, RegionShape};
+pub use routing::{route, route_dor, RouteError};
+pub use topology::Topology;

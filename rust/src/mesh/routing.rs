@@ -1,0 +1,383 @@
+//! Packet routing: dimension-order routing (Figure 1) and the
+//! non-minimal route-around used when a contiguous failed region blocks
+//! a DOR path (Figure 2).
+//!
+//! The route-around rule is deterministic: a packet travelling along a
+//! dimension that would enter a failed region detours around the nearer
+//! usable side of the region's bounding box in the orthogonal dimension,
+//! clears the region, and then resumes dimension-order routing. On a
+//! single contiguous region this produces exactly the minimal "hug the
+//! box" detours shown in Figure 2, and the resulting channel-dependency
+//! graph stays acyclic (checked by [`super::vc`] and its tests), which
+//! is the paper's justification for not spending extra virtual channels.
+
+use super::coords::{Coord, Dir, Link};
+use super::failure::FailedRegion;
+use super::topology::Topology;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum RouteError {
+    #[error("source {0:?} is not alive")]
+    DeadSource(Coord),
+    #[error("destination {0:?} is not alive")]
+    DeadDestination(Coord),
+    #[error("no live path from {0:?} to {1:?}")]
+    Disconnected(Coord, Coord),
+}
+
+/// Pure dimension-order (X then Y) route on the *full* mesh, ignoring
+/// failures. Returns the node sequence, `src` first, `dst` last.
+pub fn route_dor(src: Coord, dst: Coord) -> Vec<Coord> {
+    let mut path = vec![src];
+    let mut c = src;
+    while c.x != dst.x {
+        c.x = if dst.x > c.x { c.x + 1 } else { c.x - 1 };
+        path.push(c);
+    }
+    while c.y != dst.y {
+        c.y = if dst.y > c.y { c.y + 1 } else { c.y - 1 };
+        path.push(c);
+    }
+    path
+}
+
+/// Fault-tolerant route: DOR when unobstructed, deterministic
+/// route-around otherwise, BFS fallback for pathological multi-region
+/// layouts.
+pub fn route(topo: &Topology, src: Coord, dst: Coord) -> Result<Vec<Coord>, RouteError> {
+    if !topo.is_alive(src) {
+        return Err(RouteError::DeadSource(src));
+    }
+    if !topo.is_alive(dst) {
+        return Err(RouteError::DeadDestination(dst));
+    }
+    if src == dst {
+        return Ok(vec![src]);
+    }
+    if !topo.has_failures() {
+        return Ok(route_dor(src, dst));
+    }
+    let dor = route_dor(src, dst);
+    if dor.iter().all(|&c| topo.is_alive(c)) {
+        return Ok(dor);
+    }
+    if let Some(path) = route_around(topo, src, dst) {
+        debug_assert!(path.iter().all(|&c| topo.is_alive(c)));
+        return Ok(path);
+    }
+    bfs_route(topo, src, dst).ok_or(RouteError::Disconnected(src, dst))
+}
+
+/// Deterministic route-around for rectangular failed regions.
+///
+/// Walk dimension-order; whenever the next hop along the current
+/// dimension is inside a failed region, detour around the region's
+/// bounding box on the side chosen by `detour_side`, then resume.
+/// Returns `None` if the walk gets stuck (e.g. regions touching the
+/// mesh edge in both detour directions), in which case the caller falls
+/// back to BFS.
+fn route_around(topo: &Topology, src: Coord, dst: Coord) -> Option<Vec<Coord>> {
+    let mesh = &topo.mesh;
+    let mut path = vec![src];
+    let mut c = src;
+    // Generous bound: every step either reduces DOR distance or walks a
+    // region perimeter; 8 * mesh size is unreachable unless stuck.
+    let mut fuel = 8 * mesh.num_nodes();
+
+    // Phase X, then phase Y.
+    while c != dst {
+        fuel = fuel.checked_sub(1)?;
+        let step_dir = if c.x != dst.x {
+            if dst.x > c.x {
+                Dir::East
+            } else {
+                Dir::West
+            }
+        } else if dst.y > c.y {
+            Dir::North
+        } else {
+            Dir::South
+        };
+        let next = mesh.step(c, step_dir)?;
+        if topo.is_alive(next) {
+            c = next;
+            path.push(c);
+            continue;
+        }
+        // Blocked: find the region and walk around it.
+        let region = *topo.failed_regions().iter().find(|r| r.contains(next))?;
+        let detour = plan_detour(topo, &region, c, dst, step_dir)?;
+        for &d in &detour {
+            if !topo.is_alive(d) {
+                return None;
+            }
+            path.push(d);
+        }
+        c = *path.last().unwrap();
+    }
+    Some(path)
+}
+
+/// Plan the hop sequence that takes a packet at `c`, blocked entering
+/// `region` while moving `dir`, around the region so DOR can resume.
+///
+/// The detour side is *fixed per region* (X-blocked traffic detours
+/// North when the region does not touch the North edge, Y-blocked
+/// traffic detours East likewise) rather than chosen per-packet. The
+/// single rotation sense keeps the turn set small, which is what keeps
+/// the channel-dependency graph of the allreduce traffic acyclic (see
+/// `mesh::vc`). A per-lane balanced variant (left-half lanes West,
+/// right-half East) halves contention on the first live column beside
+/// the region but introduces CDG cycles in the combined traffic class,
+/// so it is deliberately not used — see EXPERIMENTS.md §Perf for the
+/// measured trade-off.
+fn plan_detour(
+    topo: &Topology,
+    region: &FailedRegion,
+    c: Coord,
+    _dst: Coord,
+    dir: Dir,
+) -> Option<Vec<Coord>> {
+    let mesh = &topo.mesh;
+    let mut hops = Vec::new();
+    match dir {
+        Dir::East | Dir::West => {
+            // Detour in Y to a clear row, cross the region in X, and stop
+            // (DOR resumes from there).
+            let north_row = region.y1(); // first clear row above
+            let south_row = region.y0.checked_sub(1); // first clear row below
+            let north_ok = north_row < mesh.ny;
+            let south_ok = south_row.is_some();
+            let go_north = match (north_ok, south_ok) {
+                (true, false) => true,
+                (false, true) => false,
+                (true, true) => true, // fixed side: North
+                (false, false) => return None,
+            };
+            let target_row = if go_north { north_row } else { south_row.unwrap() };
+            let mut cur = c;
+            while cur.y != target_row {
+                cur.y = if target_row > cur.y { cur.y + 1 } else { cur.y - 1 };
+                hops.push(cur);
+            }
+            // Cross the region in X to the first clear column past it.
+            let target_col = if dir == Dir::East { region.x1() } else { region.x0.checked_sub(1)? };
+            if dir == Dir::East && target_col >= mesh.nx {
+                return None;
+            }
+            while cur.x != target_col {
+                cur.x = if target_col > cur.x { cur.x + 1 } else { cur.x - 1 };
+                hops.push(cur);
+            }
+        }
+        Dir::North | Dir::South => {
+            // Symmetric: detour in X, cross in Y.
+            let east_col = region.x1();
+            let west_col = region.x0.checked_sub(1);
+            let east_ok = east_col < mesh.nx;
+            let west_ok = west_col.is_some();
+            let go_east = match (east_ok, west_ok) {
+                (true, false) => true,
+                (false, true) => false,
+                (true, true) => true, // fixed side: East
+                (false, false) => return None,
+            };
+            let target_col = if go_east { east_col } else { west_col.unwrap() };
+            let mut cur = c;
+            while cur.x != target_col {
+                cur.x = if target_col > cur.x { cur.x + 1 } else { cur.x - 1 };
+                hops.push(cur);
+            }
+            let target_row = if dir == Dir::North { region.y1() } else { region.y0.checked_sub(1)? };
+            if dir == Dir::North && target_row >= mesh.ny {
+                return None;
+            }
+            while cur.y != target_row {
+                cur.y = if target_row > cur.y { cur.y + 1 } else { cur.y - 1 };
+                hops.push(cur);
+            }
+        }
+    }
+    Some(hops)
+}
+
+/// Shortest live path by BFS with deterministic (E,W,N,S) expansion.
+/// Fallback only; DOR/route-around is the production path.
+fn bfs_route(topo: &Topology, src: Coord, dst: Coord) -> Option<Vec<Coord>> {
+    let mesh = &topo.mesh;
+    let mut prev: Vec<Option<Coord>> = vec![None; mesh.num_nodes()];
+    let mut seen = vec![false; mesh.num_nodes()];
+    let mut queue = std::collections::VecDeque::new();
+    seen[mesh.node_index(src)] = true;
+    queue.push_back(src);
+    while let Some(c) = queue.pop_front() {
+        if c == dst {
+            let mut path = vec![dst];
+            let mut cur = dst;
+            while cur != src {
+                cur = prev[mesh.node_index(cur)].unwrap();
+                path.push(cur);
+            }
+            path.reverse();
+            return Some(path);
+        }
+        for d in Dir::ALL {
+            if let Some(n) = topo.step_alive(c, d) {
+                let i = mesh.node_index(n);
+                if !seen[i] {
+                    seen[i] = true;
+                    prev[i] = Some(c);
+                    queue.push_back(n);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Links used by a node path.
+pub fn path_links(path: &[Coord]) -> Vec<Link> {
+    path.windows(2).map(|w| Link::new(w[0], w[1])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop;
+
+    #[test]
+    fn dor_is_x_then_y() {
+        let p = route_dor(Coord::new(0, 0), Coord::new(3, 2));
+        assert_eq!(
+            p,
+            vec![
+                Coord::new(0, 0),
+                Coord::new(1, 0),
+                Coord::new(2, 0),
+                Coord::new(3, 0),
+                Coord::new(3, 1),
+                Coord::new(3, 2),
+            ]
+        );
+    }
+
+    #[test]
+    fn dor_handles_west_south() {
+        let p = route_dor(Coord::new(3, 2), Coord::new(1, 0));
+        assert_eq!(p.first(), Some(&Coord::new(3, 2)));
+        assert_eq!(p.last(), Some(&Coord::new(1, 0)));
+        assert_eq!(p.len(), 5);
+    }
+
+    #[test]
+    fn full_mesh_route_is_dor() {
+        let t = Topology::full(8, 8);
+        let p = route(&t, Coord::new(1, 1), Coord::new(6, 5)).unwrap();
+        assert_eq!(p, route_dor(Coord::new(1, 1), Coord::new(6, 5)));
+    }
+
+    #[test]
+    fn route_detours_around_board() {
+        // 8x8 mesh, 2x2 region at (3,2); route from (0,2) to (7,2) must
+        // leave row 2/3 to get past columns 3-4.
+        let t = Topology::with_failure(8, 8, FailedRegion::board(3, 2));
+        let p = route(&t, Coord::new(0, 2), Coord::new(7, 2)).unwrap();
+        assert_eq!(p.first(), Some(&Coord::new(0, 2)));
+        assert_eq!(p.last(), Some(&Coord::new(7, 2)));
+        for c in &p {
+            assert!(t.is_alive(*c), "path enters failed chip {c}");
+        }
+        for w in p.windows(2) {
+            assert!(w[0].adjacent(&w[1]), "non-adjacent hop {} -> {}", w[0], w[1]);
+        }
+        // Minimal detour around a 2-row region costs 4 extra hops.
+        assert_eq!(p.len(), 8 + 4);
+    }
+
+    #[test]
+    fn route_detours_vertically_blocked() {
+        let t = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        // Straight-up Y path along column 2 from (2,0) to (2,7) blocked
+        // at rows 2-3 (src column equals dst column -> pure Y route).
+        let p = route(&t, Coord::new(2, 0), Coord::new(2, 7)).unwrap();
+        for c in &p {
+            assert!(t.is_alive(*c));
+        }
+        assert_eq!(p.first(), Some(&Coord::new(2, 0)));
+        assert_eq!(p.last(), Some(&Coord::new(2, 7)));
+        assert_eq!(p.len(), 8 + 4);
+    }
+
+    #[test]
+    fn route_around_region_at_edge() {
+        // Region touching the north edge: detour must go south.
+        let t = Topology::with_failure(8, 8, FailedRegion::board(3, 6));
+        let p = route(&t, Coord::new(0, 7), Coord::new(7, 7)).unwrap();
+        for c in &p {
+            assert!(t.is_alive(*c));
+        }
+        assert_eq!(p.last(), Some(&Coord::new(7, 7)));
+    }
+
+    #[test]
+    fn dead_endpoints_error() {
+        let t = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        assert_eq!(
+            route(&t, Coord::new(2, 2), Coord::new(0, 0)),
+            Err(RouteError::DeadSource(Coord::new(2, 2)))
+        );
+        assert_eq!(
+            route(&t, Coord::new(0, 0), Coord::new(3, 3)),
+            Err(RouteError::DeadDestination(Coord::new(3, 3)))
+        );
+    }
+
+    #[test]
+    fn self_route_is_single_node() {
+        let t = Topology::full(4, 4);
+        assert_eq!(route(&t, Coord::new(1, 1), Coord::new(1, 1)).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn path_links_pairs() {
+        let p = route_dor(Coord::new(0, 0), Coord::new(2, 0));
+        let links = path_links(&p);
+        assert_eq!(links.len(), 2);
+        assert_eq!(links[0], Link::new(Coord::new(0, 0), Coord::new(1, 0)));
+    }
+
+    #[test]
+    fn prop_routes_valid_on_failed_meshes() {
+        prop("routes valid", |rng| {
+            let nx = 2 * rng.usize_in(3, 9);
+            let ny = 2 * rng.usize_in(3, 9);
+            let (w, h) = *rng.choose(&[(2, 2), (4, 2), (2, 4)]);
+            if w >= nx || h >= ny {
+                return;
+            }
+            let x0 = 2 * rng.usize_in(0, (nx - w) / 2);
+            let y0 = 2 * rng.usize_in(0, (ny - h) / 2);
+            let t = Topology::with_failure(nx, ny, FailedRegion::new(x0, y0, w, h));
+            let live = t.live_nodes();
+            for _ in 0..10 {
+                let src = *rng.choose(&live);
+                let dst = *rng.choose(&live);
+                let p = route(&t, src, dst).expect("route must exist");
+                assert_eq!(p.first(), Some(&src));
+                assert_eq!(p.last(), Some(&dst));
+                for c in &p {
+                    assert!(t.is_alive(*c));
+                }
+                for win in p.windows(2) {
+                    assert!(win[0].adjacent(&win[1]));
+                }
+                // Non-minimality is bounded: the fixed-side detour around
+                // a single rectangular region adds at most 2*(w+h) hops
+                // per blocked dimension (the fixed side may be the far
+                // one), and both dimensions can be blocked.
+                assert!(p.len() <= src.manhattan(&dst) + 1 + 4 * (w + h));
+            }
+        });
+    }
+}

@@ -1,0 +1,186 @@
+//! Live topology = mesh minus failed regions.
+
+use super::coords::{Coord, Dir, Link, Mesh};
+use super::failure::FailedRegion;
+
+/// A mesh together with its (possibly empty) set of failed regions.
+/// All ring builders, routers and the DES operate on a `Topology`.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub mesh: Mesh,
+    failed: Vec<FailedRegion>,
+}
+
+impl Topology {
+    /// Healthy full mesh.
+    pub fn full(nx: usize, ny: usize) -> Self {
+        Self { mesh: Mesh::new(nx, ny), failed: Vec::new() }
+    }
+
+    /// Mesh with failed regions. Regions must fit and be disjoint.
+    pub fn with_failures(nx: usize, ny: usize, failed: Vec<FailedRegion>) -> Self {
+        let mesh = Mesh::new(nx, ny);
+        for (i, r) in failed.iter().enumerate() {
+            assert!(r.fits(&mesh), "failed region {r:?} outside {nx}x{ny} mesh");
+            for other in &failed[i + 1..] {
+                assert!(!r.overlaps(other), "overlapping failed regions {r:?} and {other:?}");
+            }
+        }
+        Self { mesh, failed }
+    }
+
+    /// Convenience: one failed region.
+    pub fn with_failure(nx: usize, ny: usize, region: FailedRegion) -> Self {
+        Self::with_failures(nx, ny, vec![region])
+    }
+
+    pub fn failed_regions(&self) -> &[FailedRegion] {
+        &self.failed
+    }
+
+    /// The single failed region, if there is exactly one (the paper's
+    /// fault-tolerant ring schemes are specified for one contiguous
+    /// region).
+    pub fn single_failure(&self) -> Option<&FailedRegion> {
+        match self.failed.as_slice() {
+            [one] => Some(one),
+            _ => None,
+        }
+    }
+
+    pub fn has_failures(&self) -> bool {
+        !self.failed.is_empty()
+    }
+
+    pub fn is_alive(&self, c: Coord) -> bool {
+        self.mesh.contains(c) && !self.failed.iter().any(|r| r.contains(c))
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.mesh.num_nodes() - self.failed.iter().map(|r| r.num_chips()).sum::<usize>()
+    }
+
+    /// All live coordinates, row-major.
+    pub fn live_nodes(&self) -> Vec<Coord> {
+        self.mesh.coords().filter(|&c| self.is_alive(c)).collect()
+    }
+
+    /// Step to a live neighbour.
+    pub fn step_alive(&self, c: Coord, d: Dir) -> Option<Coord> {
+        self.mesh.step(c, d).filter(|&n| self.is_alive(n))
+    }
+
+    /// Live neighbours of a live node.
+    pub fn live_neighbors(&self, c: Coord) -> Vec<Coord> {
+        Dir::ALL.iter().filter_map(|&d| self.step_alive(c, d)).collect()
+    }
+
+    /// All links with both endpoints alive (a link touching a failed
+    /// chip is unusable).
+    pub fn live_links(&self) -> Vec<Link> {
+        self.mesh
+            .links()
+            .into_iter()
+            .filter(|l| self.is_alive(l.from) && self.is_alive(l.to))
+            .collect()
+    }
+
+    /// Is the live node set connected? (Sanity gate before building
+    /// rings: a failed region never disconnects an interior of a 2-D
+    /// mesh, but e.g. a full-width failed stripe would.)
+    pub fn is_connected(&self) -> bool {
+        let nodes = self.live_nodes();
+        let Some(&start) = nodes.first() else { return true };
+        let mut seen = vec![false; self.mesh.num_nodes()];
+        let mut stack = vec![start];
+        seen[self.mesh.node_index(start)] = true;
+        let mut count = 0usize;
+        while let Some(c) = stack.pop() {
+            count += 1;
+            for n in self.live_neighbors(c) {
+                let i = self.mesh.node_index(n);
+                if !seen[i] {
+                    seen[i] = true;
+                    stack.push(n);
+                }
+            }
+        }
+        count == nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop;
+
+    #[test]
+    fn full_mesh_all_alive() {
+        let t = Topology::full(4, 4);
+        assert_eq!(t.live_count(), 16);
+        assert!(t.mesh.coords().all(|c| t.is_alive(c)));
+        assert!(t.is_connected());
+        assert!(!t.has_failures());
+    }
+
+    #[test]
+    fn failure_kills_chips() {
+        let t = Topology::with_failure(8, 8, FailedRegion::host(2, 2));
+        assert_eq!(t.live_count(), 56);
+        assert!(!t.is_alive(Coord::new(2, 2)));
+        assert!(!t.is_alive(Coord::new(5, 3)));
+        assert!(t.is_alive(Coord::new(6, 2)));
+        assert!(t.is_connected());
+    }
+
+    #[test]
+    fn live_links_avoid_failed() {
+        let t = Topology::with_failure(4, 4, FailedRegion::board(0, 0));
+        for l in t.live_links() {
+            assert!(t.is_alive(l.from) && t.is_alive(l.to));
+        }
+        // Full 4x4 has 2*3*4*2 = 48 directed links; the 2x2 corner board
+        // removes its 4 internal bidirectional links (8 directed) and its
+        // 4 boundary cables (8 directed).
+        assert_eq!(t.live_links().len(), 48 - 16);
+    }
+
+    #[test]
+    fn full_width_stripe_disconnects() {
+        let t = Topology::with_failure(8, 8, FailedRegion::new(0, 4, 8, 2));
+        assert!(!t.is_connected());
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping")]
+    fn overlapping_regions_rejected() {
+        Topology::with_failures(8, 8, vec![FailedRegion::board(2, 2), FailedRegion::board(3, 3)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn out_of_bounds_region_rejected() {
+        Topology::with_failure(4, 4, FailedRegion::host(2, 2));
+    }
+
+    #[test]
+    fn single_failure_accessor() {
+        let t = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        assert!(t.single_failure().is_some());
+        let t2 = Topology::full(8, 8);
+        assert!(t2.single_failure().is_none());
+    }
+
+    #[test]
+    fn prop_interior_board_failure_stays_connected() {
+        prop("interior failure connected", |rng| {
+            let nx = 2 * rng.usize_in(3, 9);
+            let ny = 2 * rng.usize_in(3, 9);
+            let x0 = 2 * rng.usize_in(0, nx / 2 - 1);
+            let y0 = 2 * rng.usize_in(0, ny / 2 - 1);
+            let t = Topology::with_failure(nx, ny, FailedRegion::board(x0, y0));
+            assert!(t.is_connected(), "{nx}x{ny} board at ({x0},{y0})");
+            assert_eq!(t.live_count(), nx * ny - 4);
+        });
+    }
+}

@@ -1,0 +1,139 @@
+//! MLPerf-v0.7 workload specifications and the paper's published
+//! numbers (Tables 1–2), used for calibration and comparison.
+
+/// One benchmark workload: the gradient payload its data-parallel
+/// training allreduces every step.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub name: &'static str,
+    /// Trainable parameter count.
+    pub params: u64,
+    /// Bytes per gradient element on the wire (f32 = 4).
+    pub bytes_per_elem: u64,
+}
+
+impl Workload {
+    pub const fn resnet50() -> Self {
+        // ResNet-50 v1.5: 25.56M trainable parameters.
+        Workload { name: "ResNet-50", params: 25_560_000, bytes_per_elem: 4 }
+    }
+
+    pub const fn bert() -> Self {
+        // MLPerf v0.7 BERT-Large pre-training: ~334M parameters.
+        Workload { name: "BERT", params: 334_000_000, bytes_per_elem: 4 }
+    }
+
+    pub fn grad_bytes(&self) -> u64 {
+        self.params * self.bytes_per_elem
+    }
+
+    /// Payload in f32 elements (the schedule unit).
+    pub fn payload_elems(&self) -> usize {
+        (self.grad_bytes() / 4) as usize
+    }
+}
+
+/// One Table-1/Table-2 configuration from the paper.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperRow {
+    pub benchmark: &'static str,
+    /// Full-mesh chip count (512 or 1024).
+    pub chips_full: usize,
+    /// Fault-tolerant chip count (504 or 1016).
+    pub chips_ft: usize,
+    /// Mesh shape (nx, ny).
+    pub mesh: (usize, usize),
+    /// Table 1: end-to-end benchmark minutes, full mesh.
+    pub t1_full_min: f64,
+    /// Table 1: end-to-end benchmark minutes, fault-tolerant mesh.
+    pub t1_ft_min: f64,
+    /// Table 1: relative efficiency as printed.
+    pub t1_rel_eff: f64,
+    /// Table 2: allreduce overhead fraction of device step time, full.
+    pub t2_overhead_full: f64,
+    /// Table 2: allreduce overhead fraction, fault tolerant.
+    pub t2_overhead_ft: f64,
+}
+
+/// All four evaluation configurations of the paper.
+///
+/// Mesh shapes: the paper states 512 chips = 16x32 and 1024 = 32x32.
+/// The failed region is 4x2 (one host, 8 chips).
+pub fn paper_rows() -> Vec<PaperRow> {
+    vec![
+        PaperRow {
+            benchmark: "ResNet-50",
+            chips_full: 512,
+            chips_ft: 504,
+            mesh: (32, 16),
+            t1_full_min: 1.80,
+            t1_ft_min: 1.84,
+            t1_rel_eff: 0.99,
+            t2_overhead_full: 0.042,
+            t2_overhead_ft: 0.064,
+        },
+        PaperRow {
+            benchmark: "ResNet-50",
+            chips_full: 1024,
+            chips_ft: 1016,
+            mesh: (32, 32),
+            t1_full_min: 1.08,
+            t1_ft_min: 1.15,
+            t1_rel_eff: 0.946,
+            t2_overhead_full: 0.088,
+            t2_overhead_ft: 0.11,
+        },
+        PaperRow {
+            benchmark: "BERT",
+            chips_full: 512,
+            chips_ft: 504,
+            mesh: (32, 16),
+            t1_full_min: 1.90,
+            t1_ft_min: 1.92,
+            t1_rel_eff: 1.02,
+            t2_overhead_full: 0.037,
+            t2_overhead_ft: 0.047,
+        },
+        PaperRow {
+            benchmark: "BERT",
+            chips_full: 1024,
+            chips_ft: 1016,
+            mesh: (32, 32),
+            t1_full_min: 1.16,
+            t1_ft_min: 1.19,
+            t1_rel_eff: 0.986,
+            t2_overhead_full: 0.060,
+            t2_overhead_ft: 0.078,
+        },
+    ]
+}
+
+pub fn workload_by_name(name: &str) -> Option<Workload> {
+    match name {
+        "ResNet-50" => Some(Workload::resnet50()),
+        "BERT" => Some(Workload::bert()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_sizes() {
+        assert_eq!(Workload::resnet50().grad_bytes(), 102_240_000);
+        assert!(Workload::bert().grad_bytes() > 1_300_000_000);
+    }
+
+    #[test]
+    fn rows_consistent() {
+        for row in paper_rows() {
+            assert_eq!(row.mesh.0 * row.mesh.1, row.chips_full);
+            assert_eq!(row.chips_full - 8, row.chips_ft);
+            assert!(row.t2_overhead_ft > row.t2_overhead_full);
+            assert!(row.t1_ft_min >= row.t1_full_min);
+            assert!(workload_by_name(row.benchmark).is_some());
+        }
+    }
+}

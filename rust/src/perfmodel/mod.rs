@@ -1,0 +1,15 @@
+//! Performance model regenerating the paper's evaluation (§3).
+//!
+//! - [`mlperf`] — workload specs (ResNet-50, BERT) and the paper's
+//!   published Table-1/Table-2 numbers;
+//! - [`steptime`] — simulated-allreduce + calibrated-compute step-time
+//!   model producing the Table-1/Table-2 predictions;
+//! - [`tables`] — formatted regeneration of both tables plus the
+//!   payload-sweep series (the §2.1 latency-crossover analysis).
+
+pub mod mlperf;
+pub mod steptime;
+pub mod tables;
+
+pub use mlperf::{paper_rows, PaperRow, Workload};
+pub use steptime::{allreduce_time_s, predict_row, RowPrediction, StepModel};

@@ -1,0 +1,147 @@
+//! Formatted regeneration of the paper's tables and figure-series.
+
+use super::mlperf::paper_rows;
+use super::steptime::{predict_row, ModelError, RowPrediction};
+use crate::collective::{build_schedule, Scheme};
+use crate::mesh::Topology;
+use crate::simnet::{simulate, LinkModel};
+use crate::util::fmt::pad;
+
+/// Compute predictions for every paper row.
+pub fn predict_all(link: &LinkModel) -> Result<Vec<RowPrediction>, ModelError> {
+    paper_rows().iter().map(|r| predict_row(r, link)).collect()
+}
+
+/// Render Table 1 (end-to-end benchmark times + relative efficiency),
+/// paper values side by side with the model's predictions.
+pub fn render_table1(preds: &[RowPrediction]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{} {} {} {} {} {} {}\n",
+        pad("Benchmark", 10),
+        pad("Chips", 11),
+        pad("Paper full", 11),
+        pad("Paper FT", 9),
+        pad("Model FT", 9),
+        pad("Paper eff", 10),
+        pad("Model eff", 10),
+    ));
+    for p in preds {
+        out.push_str(&format!(
+            "{} {} {} {} {} {} {}\n",
+            pad(p.row.benchmark, 10),
+            pad(&format!("{}->{}", p.row.chips_full, p.row.chips_ft), 11),
+            pad(&format!("{:.2} min", p.row.t1_full_min), 11),
+            pad(&format!("{:.2} min", p.row.t1_ft_min), 9),
+            pad(&format!("{:.2} min", p.predicted_t1_ft_min()), 9),
+            pad(&format!("{:.3}", p.row.t1_rel_eff), 10),
+            pad(&format!("{:.3}", p.predicted_rel_eff()), 10),
+        ));
+    }
+    out
+}
+
+/// Render Table 2 (allreduce overhead % of device step time).
+pub fn render_table2(preds: &[RowPrediction]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{} {} {} {} {} {}\n",
+        pad("Benchmark", 10),
+        pad("Chips", 11),
+        pad("Paper full%", 12),
+        pad("Model full%", 12),
+        pad("Paper FT%", 10),
+        pad("Model FT%", 10),
+    ));
+    for p in preds {
+        out.push_str(&format!(
+            "{} {} {} {} {} {}\n",
+            pad(p.row.benchmark, 10),
+            pad(&format!("{}->{}", p.row.chips_full, p.row.chips_ft), 11),
+            pad(&format!("{:.1}", 100.0 * p.row.t2_overhead_full), 12),
+            pad(&format!("{:.1}", 100.0 * p.full.overhead_frac()), 12),
+            pad(&format!("{:.1}", 100.0 * p.row.t2_overhead_ft), 10),
+            pad(&format!("{:.1}", 100.0 * p.predicted_overhead_ft()), 10),
+        ));
+    }
+    out
+}
+
+/// One point of the payload sweep (the §2.1 1-D vs 2-D latency
+/// analysis).
+#[derive(Debug, Clone, Copy)]
+pub struct SweepPoint {
+    pub payload_bytes: u64,
+    pub one_d_s: f64,
+    pub pair_rows_s: f64,
+    pub two_d_s: f64,
+}
+
+/// Sweep allreduce time over payload sizes on a full mesh for the 1-D,
+/// basic 2-D and pair-row schemes.
+pub fn payload_sweep(
+    topo: &Topology,
+    link: &LinkModel,
+    payload_elems: &[usize],
+) -> Result<Vec<SweepPoint>, ModelError> {
+    payload_elems
+        .iter()
+        .map(|&p| {
+            let t = |scheme| -> Result<f64, ModelError> {
+                let s = build_schedule(scheme, topo, p)?;
+                Ok(simulate(&s, topo, link)?.makespan_s)
+            };
+            Ok(SweepPoint {
+                payload_bytes: 4 * p as u64,
+                one_d_s: t(Scheme::OneD)?,
+                pair_rows_s: t(Scheme::PairRows)?,
+                two_d_s: t(Scheme::TwoD)?,
+            })
+        })
+        .collect()
+}
+
+pub use super::steptime::ModelError as TablesError;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_orders_schemes() {
+        let topo = Topology::full(8, 8);
+        let link = LinkModel::tpu_v3();
+        let pts = payload_sweep(&topo, &link, &[1 << 10, 1 << 20]).unwrap();
+        assert_eq!(pts.len(), 2);
+        // Large payload: both 2-D variants beat 1-D.
+        let big = pts[1];
+        assert!(big.pair_rows_s < big.one_d_s);
+        assert!(big.two_d_s < big.one_d_s);
+        // Times grow with payload.
+        assert!(pts[1].one_d_s > pts[0].one_d_s);
+    }
+
+    #[test]
+    fn table_rendering_contains_rows() {
+        // Use a cheap fake: tiny payloads via a scaled-down link model
+        // would still exercise the full 32x32 sim; instead just check the
+        // renderer formatting on synthetic predictions.
+        use crate::perfmodel::mlperf::paper_rows;
+        use crate::perfmodel::steptime::StepModel;
+        let preds: Vec<RowPrediction> = paper_rows()
+            .into_iter()
+            .map(|row| RowPrediction {
+                row,
+                full: StepModel { allreduce_s: 1e-3, compute_s: 20e-3 },
+                ft: StepModel { allreduce_s: 1.3e-3, compute_s: 20.3e-3 },
+            })
+            .collect();
+        let t1 = render_table1(&preds);
+        let t2 = render_table2(&preds);
+        assert!(t1.contains("ResNet-50"));
+        assert!(t1.contains("BERT"));
+        assert_eq!(t1.lines().count(), 5);
+        assert!(t2.contains("Model FT%"));
+        assert_eq!(t2.lines().count(), 5);
+    }
+}

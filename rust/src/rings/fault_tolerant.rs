@@ -1,0 +1,400 @@
+//! Fault-tolerant 2-D allreduce rings (paper §2.2, Figures 9–10) — the
+//! headline contribution.
+//!
+//! Geometry: rows are paired into strips (as in the pair-row scheme,
+//! Figures 6–7). A strip untouched by the failed region keeps its full
+//! `2 x nx` physical ring ("blue"). A strip broken by the region
+//! shatters into its maximal live `2 x k` column segments; each segment
+//! forms its own small physical ring ("yellow" — the peers of the
+//! failed chips).
+//!
+//! Phase 1 (reduce-scatter along X):
+//!   1. every yellow ring reduce-scatters its payload within the segment;
+//!   2. every yellow node **forwards** its reduced chunk to its nearest
+//!      blue node straight up/down its column (Figure 10) where it is
+//!      accumulated into the blue node's input — so the subsequent blue
+//!      ring reduce-scatter absorbs the yellow contribution;
+//!   3. blue rings reduce-scatter. No two phase-1 rings share a link, so
+//!      phase 1 runs at full link throughput (the paper's key property).
+//!
+//! Phase 2 (reduce-scatter + all-gather along Y): one ring per
+//! (column, row-parity) over the *blue* strips only; rings whose column
+//! crosses the failed region use the non-minimal route-around of
+//! Figure 2 ("for simplicity, we just use the route around scheme ...
+//! in the second phase"), which is cheap because phase 2 carries
+//! `1/(2 nx)` of the payload.
+//!
+//! Phase 3 (all-gather along X): blue rings all-gather; each blue
+//! forward target **returns** the final chunk to its yellow node, and
+//! yellow rings all-gather to reconstruct the full summed payload.
+//!
+//! The builder also handles the degenerate full-mesh case (no yellow
+//! rings), which makes it the single planner used by the trainer for
+//! both Table-1 columns.
+
+use super::pairrows::strip_ring_order;
+use super::{Ring, RingError};
+use crate::mesh::{Coord, Topology};
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum FtPlanError {
+    #[error("fault-tolerant scheme needs nx >= 2 and even ny >= 2, got {0}x{1}")]
+    BadMesh(usize, usize),
+    #[error("failed regions must be even-aligned for the fault-tolerant scheme")]
+    UnalignedFailure,
+    #[error("live mesh is disconnected")]
+    Disconnected,
+    #[error("no live (blue) strip remains; the scheme needs at least one full row pair")]
+    NoBlueStrip,
+    #[error("yellow node {0} has no blue node in its column to forward to")]
+    NoForwardTarget(Coord),
+    #[error("internal ring construction error: {0}")]
+    BadRing(RingError),
+}
+
+/// A yellow segment ring plus the per-node forwarding assignments.
+#[derive(Debug, Clone)]
+pub struct YellowBlock {
+    /// Physical ring over the `2 x k` live segment of a broken strip.
+    pub ring: Ring,
+    /// `forwards[i]` pairs ring position `i`'s node with the blue node
+    /// that absorbs (and later returns) its chunk.
+    pub forwards: Vec<ForwardPair>,
+}
+
+/// One yellow -> blue forwarding assignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ForwardPair {
+    pub yellow: Coord,
+    pub blue: Coord,
+}
+
+/// The complete fault-tolerant ring plan.
+#[derive(Debug, Clone)]
+pub struct FtPlan {
+    /// Full `2 x nx` rings of unbroken strips, bottom-to-top.
+    pub blue: Vec<Ring>,
+    /// Segment rings of broken strips with forwarding assignments.
+    pub yellow: Vec<YellowBlock>,
+    /// Phase-2 rings, one per (x, parity) with >= 2 blue strips.
+    pub phase2: Vec<Ring>,
+}
+
+impl FtPlan {
+    /// All rings that carry phase-1 traffic (blue + yellow).
+    pub fn phase1_rings(&self) -> impl Iterator<Item = &Ring> {
+        self.blue.iter().chain(self.yellow.iter().map(|y| &y.ring))
+    }
+
+    /// Total number of participating (live) chips.
+    pub fn num_chips(&self) -> usize {
+        self.phase1_rings().map(|r| r.len()).sum()
+    }
+}
+
+/// Is strip `s` (rows `2s`, `2s+1`) fully live?
+fn strip_is_blue(topo: &Topology, s: usize) -> bool {
+    (0..topo.mesh.nx)
+        .all(|x| topo.is_alive(Coord::new(x, 2 * s)) && topo.is_alive(Coord::new(x, 2 * s + 1)))
+}
+
+/// Build the fault-tolerant plan.
+pub fn ft_plan(topo: &Topology) -> Result<FtPlan, FtPlanError> {
+    let (nx, ny) = (topo.mesh.nx, topo.mesh.ny);
+    if nx < 2 || ny < 2 || ny % 2 != 0 {
+        return Err(FtPlanError::BadMesh(nx, ny));
+    }
+    for r in topo.failed_regions() {
+        if !r.is_even_aligned() {
+            return Err(FtPlanError::UnalignedFailure);
+        }
+    }
+    if !topo.is_connected() {
+        return Err(FtPlanError::Disconnected);
+    }
+
+    let num_strips = ny / 2;
+    let blue_strips: Vec<usize> = (0..num_strips).filter(|&s| strip_is_blue(topo, s)).collect();
+    if blue_strips.is_empty() {
+        return Err(FtPlanError::NoBlueStrip);
+    }
+    let is_blue = |s: usize| blue_strips.binary_search(&s).is_ok();
+
+    // Blue rings.
+    let blue = blue_strips
+        .iter()
+        .map(|&s| Ring::new(strip_ring_order(0, nx, 2 * s)).map_err(FtPlanError::BadRing))
+        .collect::<Result<Vec<_>, _>>()?;
+
+    // Yellow segment rings for broken strips.
+    let mut yellow = Vec::new();
+    for s in 0..num_strips {
+        if is_blue(s) {
+            continue;
+        }
+        let y0 = 2 * s;
+        let mut x = 0;
+        while x < nx {
+            while x < nx && !topo.is_alive(Coord::new(x, y0)) {
+                x += 1;
+            }
+            let start = x;
+            while x < nx && topo.is_alive(Coord::new(x, y0)) {
+                x += 1;
+            }
+            if x > start {
+                let ring =
+                    Ring::new(strip_ring_order(start, x, y0)).map_err(FtPlanError::BadRing)?;
+                let forwards = ring
+                    .nodes()
+                    .iter()
+                    .map(|&n| {
+                        forward_target(topo, &blue_strips, n)
+                            .map(|blue| ForwardPair { yellow: n, blue })
+                            .ok_or(FtPlanError::NoForwardTarget(n))
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+                yellow.push(YellowBlock { ring, forwards });
+            }
+        }
+    }
+
+    // Phase-2 rings over blue strips.
+    let mut phase2 = Vec::new();
+    if blue_strips.len() >= 2 {
+        for x in 0..nx {
+            for parity in 0..2 {
+                let nodes: Vec<Coord> = blue_strips
+                    .iter()
+                    .map(|&s| Coord::new(x, 2 * s + parity))
+                    .collect();
+                phase2.push(Ring::new(nodes).map_err(FtPlanError::BadRing)?);
+            }
+        }
+    }
+
+    Ok(FtPlan { blue, yellow, phase2 })
+}
+
+/// Nearest blue-strip node straight up/down the column of `n`
+/// (ties go down). This is the Figure-10 forwarding peer.
+fn forward_target(topo: &Topology, blue_strips: &[usize], n: Coord) -> Option<Coord> {
+    let mut best: Option<(usize, Coord)> = None;
+    for &s in blue_strips {
+        for row in [2 * s, 2 * s + 1] {
+            let c = Coord::new(n.x, row);
+            if !topo.is_alive(c) {
+                continue;
+            }
+            let dist = n.y.abs_diff(row);
+            match best {
+                Some((d, b)) if d < dist || (d == dist && b.y < c.y) => {}
+                _ => best = Some((dist, c)),
+            }
+        }
+    }
+    best.map(|(_, c)| c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::{FailedRegion, Link};
+    use crate::rings::rings_cover_exactly;
+    use crate::util::prop::prop;
+
+    fn check_plan(topo: &Topology) -> FtPlan {
+        let plan = ft_plan(topo).expect("plan must build");
+        // Every live chip appears in exactly one phase-1 ring.
+        let phase1: Vec<Ring> = plan.phase1_rings().cloned().collect();
+        assert!(rings_cover_exactly(&phase1, topo));
+        for r in &phase1 {
+            r.validate(topo).unwrap();
+            assert!(r.is_near_neighbor(), "phase-1 rings are physical");
+        }
+        for r in &plan.phase2 {
+            r.validate(topo).unwrap();
+        }
+        // Forward pairs: yellow nodes map to live blue nodes in the same
+        // column.
+        for yb in &plan.yellow {
+            for fp in &yb.forwards {
+                assert_eq!(fp.yellow.x, fp.blue.x);
+                assert!(topo.is_alive(fp.blue));
+            }
+        }
+        plan
+    }
+
+    #[test]
+    fn figure9_board_failure_8x8() {
+        let topo = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        let plan = check_plan(&topo);
+        assert_eq!(plan.blue.len(), 3); // strips 0, 2, 3
+        assert_eq!(plan.yellow.len(), 2); // cols [0,2) and [4,8) of strip 1
+        assert_eq!(plan.yellow[0].ring.len(), 4);
+        assert_eq!(plan.yellow[1].ring.len(), 8);
+        assert_eq!(plan.phase2.len(), 16); // 8 columns x 2 parities
+        for p2 in &plan.phase2 {
+            assert_eq!(p2.len(), 3);
+        }
+        assert_eq!(plan.num_chips(), 60);
+    }
+
+    #[test]
+    fn evaluation_host_failure_16x32() {
+        // Table 1's 512-chip topology: 16x32 mesh, 4x2 failed host.
+        let topo = Topology::with_failure(16, 32, FailedRegion::host(4, 10));
+        let plan = check_plan(&topo);
+        assert_eq!(plan.blue.len(), 15);
+        assert_eq!(plan.yellow.len(), 2);
+        assert_eq!(plan.num_chips(), 504);
+    }
+
+    #[test]
+    fn phase1_rings_link_disjoint_including_yellow() {
+        // "In the first phase of the allreduce, the blue rings do not
+        // share network links" — neither blue/blue, blue/yellow, nor
+        // yellow/yellow.
+        let topo = Topology::with_failure(8, 8, FailedRegion::host(2, 2));
+        let plan = check_plan(&topo);
+        let mut seen = std::collections::HashSet::<Link>::new();
+        for r in plan.phase1_rings() {
+            for l in r.links(&topo).unwrap() {
+                assert!(seen.insert(l), "phase-1 link {l} shared");
+            }
+        }
+    }
+
+    #[test]
+    fn forwards_use_nearest_blue_and_avoid_phase1_links() {
+        let topo = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        let plan = check_plan(&topo);
+        // Region rows 2-3 (strip 1). Yellow row 2 forwards down to row 1,
+        // yellow row 3 forwards up to row 4.
+        for yb in &plan.yellow {
+            for fp in &yb.forwards {
+                if fp.yellow.y == 2 {
+                    assert_eq!(fp.blue.y, 1);
+                } else {
+                    assert_eq!(fp.yellow.y, 3);
+                    assert_eq!(fp.blue.y, 4);
+                }
+                assert_eq!(fp.yellow.manhattan(&fp.blue), 1);
+            }
+        }
+        // Forward links are vertical inter-strip links, disjoint from all
+        // phase-1 ring links.
+        let mut phase1_links = std::collections::HashSet::<Link>::new();
+        for r in plan.phase1_rings() {
+            phase1_links.extend(r.links(&topo).unwrap());
+        }
+        for yb in &plan.yellow {
+            for fp in &yb.forwards {
+                assert!(!phase1_links.contains(&Link::new(fp.yellow, fp.blue)));
+            }
+        }
+    }
+
+    #[test]
+    fn tall_region_forwards_cross_yellow_rows() {
+        // 2x4 region spans strips 1 and 2; strip-1 yellow nodes at row 3
+        // must forward down to row 1 or up to row... nearest blue is
+        // strips 0 and 3.
+        let topo = Topology::with_failure(8, 8, FailedRegion::new(4, 2, 2, 4));
+        let plan = check_plan(&topo);
+        assert_eq!(plan.blue.len(), 2); // strips 0 and 3
+        assert_eq!(plan.yellow.len(), 4); // two segments per broken strip
+        for yb in &plan.yellow {
+            for fp in &yb.forwards {
+                assert!(fp.blue.y == 1 || fp.blue.y == 6, "nearest blue row, got {}", fp.blue);
+            }
+        }
+    }
+
+    #[test]
+    fn full_mesh_degenerates_to_pair_rows() {
+        let topo = Topology::full(8, 8);
+        let plan = check_plan(&topo);
+        assert_eq!(plan.blue.len(), 4);
+        assert!(plan.yellow.is_empty());
+        assert_eq!(plan.phase2.len(), 16);
+    }
+
+    #[test]
+    fn phase2_crossing_region_uses_route_around() {
+        let topo = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        let plan = ft_plan(&topo).unwrap();
+        // Column 2 crosses the failed region; its phase-2 ring hops must
+        // route around (dilation > straight distance).
+        let p2 = plan
+            .phase2
+            .iter()
+            .find(|r| r.nodes()[0].x == 2)
+            .unwrap();
+        // Ring exists and is routable despite crossing the region.
+        p2.validate(&topo).unwrap();
+        let paths = p2.hop_paths(&topo).unwrap();
+        let detoured = paths.iter().any(|p| {
+            p.len() > 1 + p.first().unwrap().manhattan(p.last().unwrap())
+        });
+        assert!(detoured, "at least one hop must take a non-minimal route");
+    }
+
+    #[test]
+    fn region_at_bottom_edge() {
+        let topo = Topology::with_failure(8, 8, FailedRegion::host(2, 0));
+        let plan = check_plan(&topo);
+        // Yellow rows 0 and 1 must both forward UP (no strip below).
+        for yb in &plan.yellow {
+            for fp in &yb.forwards {
+                assert_eq!(fp.blue.y, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_unaligned_and_tiny() {
+        let topo = Topology::with_failure(8, 8, FailedRegion::new(1, 2, 2, 2));
+        assert!(matches!(ft_plan(&topo), Err(FtPlanError::UnalignedFailure)));
+        assert!(matches!(ft_plan(&Topology::full(8, 1)), Err(FtPlanError::BadMesh(8, 1))));
+        // A failure on a single-strip mesh spans the full height and
+        // disconnects it.
+        let topo2 = Topology::with_failure(8, 2, FailedRegion::board(2, 0));
+        assert!(matches!(ft_plan(&topo2), Err(FtPlanError::Disconnected)));
+    }
+
+    #[test]
+    fn single_strip_mesh_degenerates_to_one_ring() {
+        let topo = Topology::full(4, 2);
+        let plan = ft_plan(&topo).unwrap();
+        assert_eq!(plan.blue.len(), 1);
+        assert!(plan.yellow.is_empty());
+        assert!(plan.phase2.is_empty());
+        assert_eq!(plan.num_chips(), 8);
+    }
+
+    #[test]
+    fn prop_ft_plan_on_random_failures() {
+        prop("ft plan valid", |rng| {
+            let nx = 2 * rng.usize_in(2, 9);
+            let ny = 2 * rng.usize_in(2, 9);
+            let (w, h) = *rng.choose(&[(2, 2), (4, 2), (2, 4), (6, 2)]);
+            if w + 2 > nx || h + 2 > ny {
+                return;
+            }
+            let x0 = 2 * rng.usize_in(0, (nx - w) / 2 + 1);
+            let y0 = 2 * rng.usize_in(0, (ny - h) / 2 + 1);
+            if x0 + w > nx || y0 + h > ny {
+                return;
+            }
+            let topo = Topology::with_failure(nx, ny, FailedRegion::new(x0, y0, w, h));
+            if !topo.is_connected() {
+                return;
+            }
+            let plan = check_plan(&topo);
+            assert_eq!(plan.num_chips(), topo.live_count());
+        });
+    }
+}

@@ -1,0 +1,327 @@
+//! 1-D algorithm: near-neighbour Hamiltonian circuits on 2-D meshes
+//! (paper Figure 3), including circuits around even-aligned failed
+//! regions (Figure 8).
+//!
+//! Construction ("strip merge"): pair the rows into `ny/2` horizontal
+//! strips. Every maximal live `2 x k` segment of a strip has a trivial
+//! Hamiltonian cycle (east along the bottom row, west along the top).
+//! Two vertically adjacent cycles can be merged into one by an edge
+//! swap: remove the top-row edge of the lower strip and the bottom-row
+//! edge of the upper strip over the same column pair, and connect them
+//! with the two vertical edges instead. Union-find over cycles + one
+//! sweep of every strip boundary merges everything into a single
+//! circuit.
+//!
+//! This yields a Hamiltonian circuit for any `nx >= 2`, even `ny`, and
+//! any set of disjoint even-aligned rectangular failed regions that
+//! leaves the mesh connected — which covers the paper's 2x2 board and
+//! 4x2 host failures (and more, e.g. several failed boards at once).
+
+use super::{Ring, RingError};
+use crate::mesh::{Coord, Topology};
+use std::collections::HashMap;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum HamiltonianError {
+    #[error("mesh must have nx >= 2 and even ny, got {0}x{1}")]
+    BadMesh(usize, usize),
+    #[error("failed region must be even-aligned (even origin and size) for the 1-D scheme")]
+    UnalignedFailure,
+    #[error("live mesh is disconnected; no Hamiltonian circuit exists")]
+    Disconnected,
+    #[error("strip segments could not be merged into one circuit (region layout too aggressive)")]
+    Unmergeable,
+    #[error("internal: produced an invalid ring: {0}")]
+    BadRing(RingError),
+}
+
+/// 2-regular adjacency map (each node has exactly two cycle neighbours).
+#[derive(Debug, Default)]
+struct CycleSet {
+    adj: HashMap<Coord, [Coord; 2]>,
+    /// Union-find over cycle membership.
+    parent: HashMap<Coord, Coord>,
+}
+
+impl CycleSet {
+    fn find(&mut self, c: Coord) -> Coord {
+        let p = self.parent[&c];
+        if p == c {
+            return c;
+        }
+        let root = self.find(p);
+        self.parent.insert(c, root);
+        root
+    }
+
+    fn union(&mut self, a: Coord, b: Coord) {
+        let ra = self.find(a);
+        let rb = self.find(b);
+        if ra != rb {
+            self.parent.insert(ra, rb);
+        }
+    }
+
+    /// Insert a fresh cycle given its node order.
+    fn add_cycle(&mut self, nodes: &[Coord]) {
+        let n = nodes.len();
+        debug_assert!(n >= 4, "strip segment cycles have >= 4 nodes");
+        for (i, &c) in nodes.iter().enumerate() {
+            let prev = nodes[(i + n - 1) % n];
+            let next = nodes[(i + 1) % n];
+            self.adj.insert(c, [prev, next]);
+            self.parent.insert(c, c);
+        }
+        for &c in &nodes[1..] {
+            self.union(nodes[0], c);
+        }
+    }
+
+    fn has_edge(&self, a: Coord, b: Coord) -> bool {
+        self.adj.get(&a).is_some_and(|ns| ns.contains(&b))
+    }
+
+    fn replace_neighbor(&mut self, node: Coord, old: Coord, new: Coord) {
+        let ns = self.adj.get_mut(&node).expect("node in cycle set");
+        if ns[0] == old {
+            ns[0] = new;
+        } else {
+            debug_assert_eq!(ns[1], old);
+            ns[1] = new;
+        }
+    }
+
+    /// Edge swap merging the cycles containing edges (a,b) and (c,d):
+    /// remove both, add (a,c) and (b,d). Caller guarantees a-c and b-d
+    /// are mesh-adjacent and the two edges are in different cycles.
+    fn swap_edges(&mut self, a: Coord, b: Coord, c: Coord, d: Coord) {
+        self.replace_neighbor(a, b, c);
+        self.replace_neighbor(b, a, d);
+        self.replace_neighbor(c, d, a);
+        self.replace_neighbor(d, c, b);
+        self.union(a, c);
+    }
+
+    /// Walk the (single) cycle into a node order.
+    fn into_ring_order(self) -> Vec<Coord> {
+        let &start = self.adj.keys().min().expect("non-empty cycle set");
+        let mut order = vec![start];
+        let mut prev = start;
+        let mut cur = self.adj[&start][1];
+        while cur != start {
+            order.push(cur);
+            let [a, b] = self.adj[&cur];
+            let next = if a == prev { b } else { a };
+            prev = cur;
+            cur = next;
+        }
+        order
+    }
+
+    fn num_components(&mut self) -> usize {
+        let nodes: Vec<Coord> = self.adj.keys().copied().collect();
+        let mut roots = std::collections::HashSet::new();
+        for n in nodes {
+            let r = self.find(n);
+            roots.insert(r);
+        }
+        roots.len()
+    }
+}
+
+/// Build a near-neighbour Hamiltonian circuit over all live chips.
+///
+/// Requirements: `nx >= 2`, `ny` even, all failed regions even-aligned,
+/// live mesh connected.
+pub fn hamiltonian_ring(topo: &Topology) -> Result<Ring, HamiltonianError> {
+    let (nx, ny) = (topo.mesh.nx, topo.mesh.ny);
+    if nx < 2 || ny % 2 != 0 || ny == 0 {
+        return Err(HamiltonianError::BadMesh(nx, ny));
+    }
+    for r in topo.failed_regions() {
+        if !r.is_even_aligned() {
+            return Err(HamiltonianError::UnalignedFailure);
+        }
+    }
+    if !topo.is_connected() {
+        return Err(HamiltonianError::Disconnected);
+    }
+
+    let mut cycles = CycleSet::default();
+
+    // 1. Per-strip segment cycles.
+    for strip in 0..ny / 2 {
+        let (y0, y1) = (2 * strip, 2 * strip + 1);
+        let mut x = 0;
+        while x < nx {
+            // Find the next maximal run of live columns in this strip.
+            while x < nx && !topo.is_alive(Coord::new(x, y0)) {
+                x += 1;
+            }
+            let start = x;
+            while x < nx && topo.is_alive(Coord::new(x, y0)) {
+                // Even alignment makes liveness uniform within the strip
+                // columns; assert both rows agree.
+                debug_assert_eq!(
+                    topo.is_alive(Coord::new(x, y0)),
+                    topo.is_alive(Coord::new(x, y1)),
+                    "even-aligned regions cover whole strips"
+                );
+                x += 1;
+            }
+            if x > start {
+                if x - start < 2 {
+                    // A width-1 segment (odd nx beside a failed region)
+                    // has no horizontal edges to merge through.
+                    return Err(HamiltonianError::Unmergeable);
+                }
+                // Segment columns [start, x): bottom row east, top row west.
+                let mut nodes: Vec<Coord> = (start..x).map(|c| Coord::new(c, y0)).collect();
+                nodes.extend((start..x).rev().map(|c| Coord::new(c, y1)));
+                cycles.add_cycle(&nodes);
+            }
+        }
+    }
+
+    if cycles.adj.is_empty() {
+        return Err(HamiltonianError::Disconnected);
+    }
+
+    // 2. Merge across strip boundaries wherever two vertically adjacent
+    //    horizontal edges belong to different cycles.
+    for strip in 0..ny / 2 - 1 {
+        let (top, bot) = (2 * strip + 1, 2 * strip + 2);
+        for c in 0..nx - 1 {
+            let a = Coord::new(c, top);
+            let b = Coord::new(c + 1, top);
+            let d = Coord::new(c, bot);
+            let e = Coord::new(c + 1, bot);
+            if cycles.has_edge(a, b)
+                && cycles.has_edge(d, e)
+                && cycles.find(a) != cycles.find(d)
+            {
+                cycles.swap_edges(a, b, d, e);
+            }
+        }
+    }
+
+    if cycles.num_components() != 1 {
+        return Err(HamiltonianError::Unmergeable);
+    }
+
+    let order = cycles.into_ring_order();
+    let ring = Ring::new(order).map_err(HamiltonianError::BadRing)?;
+    debug_assert_eq!(ring.len(), topo.live_count());
+    Ok(ring)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::FailedRegion;
+    use crate::rings::rings_cover_exactly;
+    use crate::util::prop::prop;
+
+    fn assert_hamiltonian(topo: &Topology) {
+        let ring = hamiltonian_ring(topo).expect("ring must exist");
+        assert_eq!(ring.len(), topo.live_count(), "must visit every live chip once");
+        ring.validate(topo).unwrap();
+        assert!(
+            ring.is_near_neighbor(),
+            "1-D scheme rings are near-neighbour circuits"
+        );
+        assert!(rings_cover_exactly(&[ring], topo));
+    }
+
+    #[test]
+    fn full_meshes() {
+        for (nx, ny) in [(2, 2), (4, 4), (8, 8), (3, 4), (5, 6), (16, 8)] {
+            assert_hamiltonian(&Topology::full(nx, ny));
+        }
+    }
+
+    #[test]
+    fn figure8_board_failure() {
+        // Figure 8: 2x2 failed region on an 8x8 mesh.
+        assert_hamiltonian(&Topology::with_failure(8, 8, FailedRegion::board(2, 2)));
+    }
+
+    #[test]
+    fn host_failure_4x2() {
+        // The evaluation's 4x2 region.
+        assert_hamiltonian(&Topology::with_failure(8, 8, FailedRegion::host(2, 2)));
+    }
+
+    #[test]
+    fn tall_failure_2x4() {
+        assert_hamiltonian(&Topology::with_failure(8, 8, FailedRegion::new(4, 2, 2, 4)));
+    }
+
+    #[test]
+    fn corner_and_edge_failures() {
+        assert_hamiltonian(&Topology::with_failure(8, 8, FailedRegion::board(0, 0)));
+        assert_hamiltonian(&Topology::with_failure(8, 8, FailedRegion::board(6, 6)));
+        assert_hamiltonian(&Topology::with_failure(8, 8, FailedRegion::board(0, 4)));
+        assert_hamiltonian(&Topology::with_failure(8, 8, FailedRegion::host(4, 0)));
+    }
+
+    #[test]
+    fn multiple_failed_boards() {
+        // Beyond the paper: two separate failed boards.
+        let topo = Topology::with_failures(
+            12,
+            8,
+            vec![FailedRegion::board(2, 2), FailedRegion::board(8, 4)],
+        );
+        assert_hamiltonian(&topo);
+    }
+
+    #[test]
+    fn odd_ny_rejected() {
+        assert_eq!(
+            hamiltonian_ring(&Topology::full(4, 5)).unwrap_err(),
+            HamiltonianError::BadMesh(4, 5)
+        );
+    }
+
+    #[test]
+    fn unaligned_region_rejected() {
+        let topo = Topology::with_failure(8, 8, FailedRegion::new(1, 2, 2, 2));
+        assert_eq!(hamiltonian_ring(&topo).unwrap_err(), HamiltonianError::UnalignedFailure);
+    }
+
+    #[test]
+    fn disconnected_rejected() {
+        let topo = Topology::with_failure(8, 8, FailedRegion::new(0, 2, 8, 2));
+        assert_eq!(hamiltonian_ring(&topo).unwrap_err(), HamiltonianError::Disconnected);
+    }
+
+    #[test]
+    fn paper_scale_16x32_with_host_failure() {
+        // The 512-chip evaluation topology.
+        assert_hamiltonian(&Topology::with_failure(16, 32, FailedRegion::host(4, 10)));
+    }
+
+    #[test]
+    fn prop_hamiltonian_on_random_failed_meshes() {
+        prop("hamiltonian everywhere", |rng| {
+            let nx = 2 * rng.usize_in(2, 9);
+            let ny = 2 * rng.usize_in(2, 9);
+            let (w, h) = *rng.choose(&[(2, 2), (4, 2), (2, 4), (4, 4)]);
+            if w + 2 > nx || h + 2 > ny {
+                return;
+            }
+            let x0 = 2 * rng.usize_in(0, (nx - w) / 2 + 1);
+            let y0 = 2 * rng.usize_in(0, (ny - h) / 2 + 1);
+            if x0 + w > nx || y0 + h > ny {
+                return;
+            }
+            let topo = Topology::with_failure(nx, ny, FailedRegion::new(x0, y0, w, h));
+            if !topo.is_connected() {
+                return;
+            }
+            assert_hamiltonian(&topo);
+        });
+    }
+}

@@ -1,0 +1,268 @@
+//! Ring construction on (possibly degraded) 2-D meshes — the paper's
+//! §2 algorithms.
+//!
+//! Every allreduce scheme in the paper is built out of *rings*: cyclic
+//! orderings of live chips such that consecutive chips can exchange
+//! data. This module provides the ring data type plus one builder per
+//! scheme:
+//!
+//! - [`hamiltonian`] — the 1-D algorithm: a single near-neighbour
+//!   Hamiltonian circuit over the whole mesh (Figure 3), including the
+//!   fault-tolerant variant around even-aligned failed regions
+//!   (Figure 8);
+//! - [`twod`] — the 2-D algorithm (Figures 4–5): per-row and per-column
+//!   rings with two concurrent colour flips;
+//! - [`pairrows`] — the alternate scheme (Figures 6–7): physical rings
+//!   over pairs of rows (phase 1 link-disjoint), alternate-row rings in
+//!   phase 2;
+//! - [`fault_tolerant`] — the headline contribution (Figures 9–10):
+//!   full-length "blue" rings on unaffected row pairs, small "yellow"
+//!   segment rings beside the failed region, forwarding of partial sums
+//!   into the blue rings, and route-around phase-2 rings.
+
+pub mod fault_tolerant;
+pub mod hamiltonian;
+pub mod pairrows;
+pub mod twod;
+
+use crate::mesh::{route, Coord, Link, Topology};
+use thiserror::Error;
+
+/// A ring: distinct live chips in cyclic order. Position `i` exchanges
+/// with position `(i + 1) % len` (downstream) and `(i + len - 1) % len`
+/// (upstream). Consecutive chips need not be mesh-adjacent — the hop
+/// route between them is materialised by [`Ring::hop_paths`] (e.g. the
+/// phase-2 rings of the fault-tolerant scheme skip over the failed
+/// region via non-minimal routes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Ring {
+    nodes: Vec<Coord>,
+}
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum RingError {
+    #[error("ring needs at least 2 nodes, got {0}")]
+    TooSmall(usize),
+    #[error("ring visits {0} twice")]
+    Duplicate(Coord),
+    #[error("ring contains dead node {0}")]
+    DeadNode(Coord),
+    #[error("no route between consecutive ring nodes {0} and {1}")]
+    NoRoute(Coord, Coord),
+}
+
+impl Ring {
+    /// Build a ring from a cyclic node order, validating distinctness.
+    pub fn new(nodes: Vec<Coord>) -> Result<Self, RingError> {
+        if nodes.len() < 2 {
+            return Err(RingError::TooSmall(nodes.len()));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for &n in &nodes {
+            if !seen.insert(n) {
+                return Err(RingError::Duplicate(n));
+            }
+        }
+        Ok(Self { nodes })
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn nodes(&self) -> &[Coord] {
+        &self.nodes
+    }
+
+    pub fn position_of(&self, c: Coord) -> Option<usize> {
+        self.nodes.iter().position(|&n| n == c)
+    }
+
+    pub fn downstream(&self, i: usize) -> Coord {
+        self.nodes[(i + 1) % self.nodes.len()]
+    }
+
+    pub fn upstream(&self, i: usize) -> Coord {
+        self.nodes[(i + self.nodes.len() - 1) % self.nodes.len()]
+    }
+
+    /// Validate against a topology: all nodes alive and every
+    /// consecutive pair routable.
+    pub fn validate(&self, topo: &Topology) -> Result<(), RingError> {
+        for &n in &self.nodes {
+            if !topo.is_alive(n) {
+                return Err(RingError::DeadNode(n));
+            }
+        }
+        for i in 0..self.nodes.len() {
+            let a = self.nodes[i];
+            let b = self.downstream(i);
+            if route(topo, a, b).is_err() {
+                return Err(RingError::NoRoute(a, b));
+            }
+        }
+        Ok(())
+    }
+
+    /// Are all consecutive pairs mesh-adjacent (a *physical* ring, like
+    /// the pair-row rings of Figure 6)?
+    pub fn is_near_neighbor(&self) -> bool {
+        (0..self.nodes.len()).all(|i| self.nodes[i].adjacent(&self.downstream(i)))
+    }
+
+    /// Hop routes between consecutive ring nodes (position `i` ->
+    /// position `i+1`), resolved on the given topology.
+    pub fn hop_paths(&self, topo: &Topology) -> Result<Vec<Vec<Coord>>, RingError> {
+        (0..self.nodes.len())
+            .map(|i| {
+                let a = self.nodes[i];
+                let b = self.downstream(i);
+                route(topo, a, b).map_err(|_| RingError::NoRoute(a, b))
+            })
+            .collect()
+    }
+
+    /// All directed links used by downstream traffic on this ring.
+    pub fn links(&self, topo: &Topology) -> Result<Vec<Link>, RingError> {
+        let mut out = Vec::new();
+        for path in self.hop_paths(topo)? {
+            for w in path.windows(2) {
+                out.push(Link::new(w[0], w[1]));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Maximum hop distance between consecutive ring nodes (dilation of
+    /// the ring embedding; 1 for physical rings, 2 for line embeddings).
+    pub fn dilation(&self, topo: &Topology) -> Result<usize, RingError> {
+        Ok(self
+            .hop_paths(topo)?
+            .iter()
+            .map(|p| p.len().saturating_sub(1))
+            .max()
+            .unwrap_or(0))
+    }
+}
+
+/// Embed a ring into a *line* of nodes with dilation 2: visit even
+/// indices ascending, then odd indices descending. Consecutive ring
+/// positions are at most 2 hops apart on the line and the wrap edge is
+/// 1 hop; every directed link of the line carries at most one chunk per
+/// allreduce step. This is how the basic 2-D algorithm (Figure 4) runs
+/// "rings" along the rows/columns of a mesh with no wraparound links.
+pub fn line_ring_order(line: &[Coord]) -> Vec<Coord> {
+    let mut order: Vec<Coord> = line.iter().copied().step_by(2).collect();
+    let odd: Vec<Coord> = line.iter().copied().skip(1).step_by(2).collect();
+    order.extend(odd.into_iter().rev());
+    order
+}
+
+/// Check a set of rings covers exactly the live nodes of a topology,
+/// each once.
+pub fn rings_cover_exactly(rings: &[Ring], topo: &Topology) -> bool {
+    let mut seen = std::collections::HashSet::new();
+    for r in rings {
+        for &n in r.nodes() {
+            if !seen.insert(n) {
+                return false;
+            }
+        }
+    }
+    seen.len() == topo.live_count() && topo.live_nodes().iter().all(|n| seen.contains(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::FailedRegion;
+
+    #[test]
+    fn ring_basics() {
+        let r = Ring::new(vec![Coord::new(0, 0), Coord::new(1, 0), Coord::new(1, 1), Coord::new(0, 1)])
+            .unwrap();
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.downstream(3), Coord::new(0, 0));
+        assert_eq!(r.upstream(0), Coord::new(0, 1));
+        assert!(r.is_near_neighbor());
+        assert_eq!(r.position_of(Coord::new(1, 1)), Some(2));
+    }
+
+    #[test]
+    fn rejects_tiny_and_duplicates() {
+        assert_eq!(Ring::new(vec![Coord::new(0, 0)]), Err(RingError::TooSmall(1)));
+        assert_eq!(
+            Ring::new(vec![Coord::new(0, 0), Coord::new(1, 0), Coord::new(0, 0)]),
+            Err(RingError::Duplicate(Coord::new(0, 0)))
+        );
+    }
+
+    #[test]
+    fn validate_flags_dead_nodes() {
+        let topo = Topology::with_failure(4, 4, FailedRegion::board(0, 0));
+        let r = Ring::new(vec![Coord::new(0, 0), Coord::new(1, 0)]).unwrap();
+        assert_eq!(r.validate(&topo), Err(RingError::DeadNode(Coord::new(0, 0))));
+    }
+
+    #[test]
+    fn line_ring_order_dilation_two() {
+        let line: Vec<Coord> = (0..6).map(|x| Coord::new(x, 0)).collect();
+        let order = line_ring_order(&line);
+        // 0,2,4 then 5,3,1
+        assert_eq!(
+            order.iter().map(|c| c.x).collect::<Vec<_>>(),
+            vec![0, 2, 4, 5, 3, 1]
+        );
+        let topo = Topology::full(6, 1);
+        let ring = Ring::new(order).unwrap();
+        ring.validate(&topo).unwrap();
+        assert_eq!(ring.dilation(&topo).unwrap(), 2);
+    }
+
+    #[test]
+    fn line_ring_order_odd_length() {
+        let line: Vec<Coord> = (0..5).map(|x| Coord::new(x, 0)).collect();
+        let order = line_ring_order(&line);
+        assert_eq!(
+            order.iter().map(|c| c.x).collect::<Vec<_>>(),
+            vec![0, 2, 4, 3, 1]
+        );
+        let topo = Topology::full(5, 1);
+        Ring::new(order).unwrap().validate(&topo).unwrap();
+    }
+
+    #[test]
+    fn line_ring_link_usage_at_most_one_per_direction() {
+        // The point of the dilation-2 embedding: each directed link is
+        // used by at most one consecutive-pair route.
+        let topo = Topology::full(8, 1);
+        let line: Vec<Coord> = (0..8).map(|x| Coord::new(x, 0)).collect();
+        let ring = Ring::new(line_ring_order(&line)).unwrap();
+        let links = ring.links(&topo).unwrap();
+        let mut counts = std::collections::HashMap::new();
+        for l in links {
+            *counts.entry(l).or_insert(0u32) += 1;
+        }
+        assert!(counts.values().all(|&c| c == 1), "{counts:?}");
+    }
+
+    #[test]
+    fn cover_check() {
+        let topo = Topology::full(2, 2);
+        let all = Ring::new(vec![
+            Coord::new(0, 0),
+            Coord::new(1, 0),
+            Coord::new(1, 1),
+            Coord::new(0, 1),
+        ])
+        .unwrap();
+        assert!(rings_cover_exactly(&[all.clone()], &topo));
+        assert!(!rings_cover_exactly(&[], &topo));
+        let partial = Ring::new(vec![Coord::new(0, 0), Coord::new(1, 0)]).unwrap();
+        assert!(!rings_cover_exactly(&[partial], &topo));
+    }
+}

@@ -1,0 +1,112 @@
+//! Basic 2-D allreduce algorithm (paper Figures 4–5, after Jain &
+//! Sabharwal [14]).
+//!
+//! Rings run along every row (X dimension) and every column (Y
+//! dimension) of the mesh. Because mesh rows have no wraparound link,
+//! the ring is embedded in the row with dilation 2 (even columns
+//! ascending, odd descending — [`super::line_ring_order`]): each
+//! directed link still carries at most one chunk per step.
+//!
+//! Full throughput uses **two concurrent colour flips** over half the
+//! payload each (paper §2.1): colour 0 reduces rows first then columns,
+//! colour 1 columns first then rows. The two colours share links — the
+//! contention the paper notes as the scheme's downside, and which the
+//! pair-row scheme (Figures 6–7) removes.
+
+use super::{line_ring_order, Ring, RingError};
+use crate::mesh::{Coord, Topology};
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum TwoDError {
+    #[error("2-D scheme needs nx >= 2 and ny >= 2, got {0}x{1}")]
+    BadMesh(usize, usize),
+    #[error("basic 2-D scheme does not handle failures (use rings::fault_tolerant)")]
+    HasFailures,
+    #[error("internal ring construction error: {0}")]
+    BadRing(RingError),
+}
+
+/// The basic 2-D plan: one ring per row and one per column.
+#[derive(Debug, Clone)]
+pub struct TwoDPlan {
+    /// Ring along each row, indexed by y.
+    pub rows: Vec<Ring>,
+    /// Ring along each column, indexed by x.
+    pub cols: Vec<Ring>,
+}
+
+/// Build the basic 2-D plan on a full mesh.
+pub fn two_d_plan(topo: &Topology) -> Result<TwoDPlan, TwoDError> {
+    let (nx, ny) = (topo.mesh.nx, topo.mesh.ny);
+    if nx < 2 || ny < 2 {
+        return Err(TwoDError::BadMesh(nx, ny));
+    }
+    if topo.has_failures() {
+        return Err(TwoDError::HasFailures);
+    }
+    let rows = (0..ny)
+        .map(|y| {
+            let line: Vec<Coord> = (0..nx).map(|x| Coord::new(x, y)).collect();
+            Ring::new(line_ring_order(&line)).map_err(TwoDError::BadRing)
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    let cols = (0..nx)
+        .map(|x| {
+            let line: Vec<Coord> = (0..ny).map(|y| Coord::new(x, y)).collect();
+            Ring::new(line_ring_order(&line)).map_err(TwoDError::BadRing)
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(TwoDPlan { rows, cols })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rings::rings_cover_exactly;
+
+    #[test]
+    fn rows_and_cols_cover() {
+        let topo = Topology::full(6, 4);
+        let plan = two_d_plan(&topo).unwrap();
+        assert_eq!(plan.rows.len(), 4);
+        assert_eq!(plan.cols.len(), 6);
+        assert!(rings_cover_exactly(&plan.rows, &topo));
+        assert!(rings_cover_exactly(&plan.cols, &topo));
+        for r in plan.rows.iter().chain(&plan.cols) {
+            r.validate(&topo).unwrap();
+            assert!(r.dilation(&topo).unwrap() <= 2, "line embedding has dilation <= 2");
+        }
+    }
+
+    #[test]
+    fn row_ring_stays_in_row() {
+        let topo = Topology::full(8, 3);
+        let plan = two_d_plan(&topo).unwrap();
+        for (y, r) in plan.rows.iter().enumerate() {
+            assert!(r.nodes().iter().all(|c| c.y == y));
+            assert_eq!(r.len(), 8);
+        }
+    }
+
+    #[test]
+    fn per_row_link_usage_at_most_one() {
+        // Within one ring, each directed link carries at most one
+        // consecutive-pair route (the dilation-2 embedding property).
+        let topo = Topology::full(9, 2);
+        let plan = two_d_plan(&topo).unwrap();
+        for r in &plan.rows {
+            let mut seen = std::collections::HashSet::new();
+            for l in r.links(&topo).unwrap() {
+                assert!(seen.insert(l), "link {l} reused within a row ring");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_failures_and_bad_mesh() {
+        let topo = Topology::with_failure(8, 8, crate::mesh::FailedRegion::board(2, 2));
+        assert!(matches!(two_d_plan(&topo), Err(TwoDError::HasFailures)));
+        assert!(matches!(two_d_plan(&Topology::full(1, 8)), Err(TwoDError::BadMesh(1, 8))));
+    }
+}

@@ -1,0 +1,184 @@
+//! Artifact discovery and metadata.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum ArtifactError {
+    #[error("artifact directory {0} not found (run `make artifacts`)")]
+    MissingDir(PathBuf),
+    #[error("missing artifact {0} (run `make artifacts`)")]
+    MissingFile(PathBuf),
+    #[error("meta file {0}: missing key {1}")]
+    MissingKey(PathBuf, &'static str),
+    #[error("meta file {0}: bad value for {1}")]
+    BadValue(PathBuf, &'static str),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Parsed `model.<cfg>.meta`.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub config: String,
+    pub param_count: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub use_pallas: bool,
+    pub lr: f32,
+    pub momentum: f32,
+}
+
+impl ModelMeta {
+    pub fn parse(path: &Path) -> Result<Self, ArtifactError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|_| ArtifactError::MissingFile(path.to_path_buf()))?;
+        let map: HashMap<&str, &str> = text
+            .lines()
+            .filter_map(|l| {
+                let mut it = l.splitn(2, ' ');
+                Some((it.next()?, it.next()?.trim()))
+            })
+            .collect();
+        let get = |k: &'static str| -> Result<&str, ArtifactError> {
+            map.get(k).copied().ok_or(ArtifactError::MissingKey(path.to_path_buf(), k))
+        };
+        let num = |k: &'static str| -> Result<usize, ArtifactError> {
+            get(k)?.parse().map_err(|_| ArtifactError::BadValue(path.to_path_buf(), k))
+        };
+        let fnum = |k: &'static str| -> Result<f32, ArtifactError> {
+            get(k)?.parse().map_err(|_| ArtifactError::BadValue(path.to_path_buf(), k))
+        };
+        Ok(ModelMeta {
+            config: get("config")?.to_string(),
+            param_count: num("param_count")?,
+            vocab: num("vocab")?,
+            d_model: num("d_model")?,
+            n_layers: num("n_layers")?,
+            n_heads: num("n_heads")?,
+            seq_len: num("seq_len")?,
+            batch: num("batch")?,
+            use_pallas: num("use_pallas")? != 0,
+            lr: fnum("lr")?,
+            momentum: fnum("momentum")?,
+        })
+    }
+
+    /// Tokens per worker batch (the train-step artifact's input shape).
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch * self.seq_len
+    }
+}
+
+/// Paths of one model config's artifacts.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub meta: ModelMeta,
+    pub train_step_hlo: PathBuf,
+    pub sgd_update_hlo: PathBuf,
+    pub init_params_bin: PathBuf,
+}
+
+impl ArtifactSet {
+    /// Locate the artifacts for `config` under `dir`.
+    pub fn locate(dir: &Path, config: &str) -> Result<Self, ArtifactError> {
+        if !dir.is_dir() {
+            return Err(ArtifactError::MissingDir(dir.to_path_buf()));
+        }
+        let meta_path = dir.join(format!("model.{config}.meta"));
+        let meta = ModelMeta::parse(&meta_path)?;
+        let need = |name: String| -> Result<PathBuf, ArtifactError> {
+            let p = dir.join(name);
+            if p.is_file() {
+                Ok(p)
+            } else {
+                Err(ArtifactError::MissingFile(p))
+            }
+        };
+        Ok(ArtifactSet {
+            dir: dir.to_path_buf(),
+            train_step_hlo: need(format!("train_step.{config}.hlo.txt"))?,
+            sgd_update_hlo: need(format!("sgd_update.{config}.hlo.txt"))?,
+            init_params_bin: need(format!("init_params.{config}.bin"))?,
+            meta,
+        })
+    }
+
+    /// Load the initial flat parameter vector (f32 little-endian).
+    pub fn load_init_params(&self) -> Result<Vec<f32>, ArtifactError> {
+        let bytes = std::fs::read(&self.init_params_bin)?;
+        if bytes.len() != 4 * self.meta.param_count {
+            return Err(ArtifactError::BadValue(
+                self.init_params_bin.clone(),
+                "param_count vs file size",
+            ));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+/// Default artifact directory: `$MESHREDUCE_ARTIFACTS` or `artifacts/`
+/// relative to the workspace.
+pub fn default_dir() -> PathBuf {
+    std::env::var("MESHREDUCE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        default_dir().join("model.tiny.meta").is_file()
+    }
+
+    #[test]
+    fn parse_meta_roundtrip() {
+        let dir = std::env::temp_dir().join("meshreduce_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.x.meta");
+        std::fs::write(
+            &p,
+            "config x\nparam_count 10\nvocab 256\nd_model 64\nn_layers 2\nn_heads 2\n\
+             seq_len 32\nbatch 4\nuse_pallas 1\nlr 0.05\nmomentum 0.9\n",
+        )
+        .unwrap();
+        let m = ModelMeta::parse(&p).unwrap();
+        assert_eq!(m.param_count, 10);
+        assert!(m.use_pallas);
+        assert_eq!(m.tokens_per_batch(), 128);
+        assert!((m.lr - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn missing_key_reported() {
+        let dir = std::env::temp_dir().join("meshreduce_meta_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.y.meta");
+        std::fs::write(&p, "config y\n").unwrap();
+        assert!(matches!(ModelMeta::parse(&p), Err(ArtifactError::MissingKey(_, "param_count"))));
+    }
+
+    #[test]
+    fn locate_real_artifacts() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let set = ArtifactSet::locate(&default_dir(), "tiny").unwrap();
+        assert_eq!(set.meta.config, "tiny");
+        let params = set.load_init_params().unwrap();
+        assert_eq!(params.len(), set.meta.param_count);
+        assert!(params.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the training hot path.
+//!
+//! - [`artifact`] — artifact discovery, model metadata, initial-params
+//!   loading;
+//! - [`pjrt`] — the `xla`-crate client wrapper and typed executable
+//!   wrappers ([`pjrt::TrainStepExec`], [`pjrt::SgdExec`],
+//!   [`pjrt::CombineExec`]).
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): the
+//! xla_extension 0.5.1 backing the published `xla` crate rejects
+//! jax>=0.5 serialized protos (64-bit instruction ids), while the text
+//! parser reassigns ids — see /opt/xla-example/README.md.
+
+pub mod artifact;
+pub mod pjrt;
+
+pub use artifact::{ArtifactSet, ModelMeta};
+pub use pjrt::{CombineExec, Runtime, SgdExec, TrainStepExec};

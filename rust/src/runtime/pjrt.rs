@@ -1,0 +1,246 @@
+//! PJRT client wrapper and typed executable wrappers.
+
+use super::artifact::ArtifactSet;
+use std::path::Path;
+use std::sync::Arc;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum RuntimeError {
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("artifact: {0}")]
+    Artifact(#[from] super::artifact::ArtifactError),
+    #[error("shape mismatch: expected {expected} {what}, got {got}")]
+    Shape { what: &'static str, expected: usize, got: usize },
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// The PJRT CPU client plus compiled-executable loading. Cheap to
+/// clone (`Arc` inside); thread-safe — worker threads share one client.
+#[derive(Clone)]
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self, RuntimeError> {
+        Ok(Self { client: Arc::new(xla::PjRtClient::cpu()?) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable, RuntimeError> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("artifact path is valid UTF-8"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+}
+
+/// Typed wrapper over the `train_step.<cfg>` artifact:
+/// `(flat_params f32[P], tokens i32[B,S]) -> (loss f32[], grads f32[P])`.
+pub struct TrainStepExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub param_count: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl TrainStepExec {
+    pub fn load(rt: &Runtime, set: &ArtifactSet) -> Result<Self, RuntimeError> {
+        Ok(Self {
+            exe: rt.load_hlo_text(&set.train_step_hlo)?,
+            param_count: set.meta.param_count,
+            batch: set.meta.batch,
+            seq_len: set.meta.seq_len,
+        })
+    }
+
+    /// Run one forward+backward: returns (loss, flat gradients).
+    pub fn run(&self, flat_params: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>), RuntimeError> {
+        if flat_params.len() != self.param_count {
+            return Err(RuntimeError::Shape {
+                what: "params",
+                expected: self.param_count,
+                got: flat_params.len(),
+            });
+        }
+        if tokens.len() != self.batch * self.seq_len {
+            return Err(RuntimeError::Shape {
+                what: "tokens",
+                expected: self.batch * self.seq_len,
+                got: tokens.len(),
+            });
+        }
+        let p = xla::Literal::vec1(flat_params);
+        let t = xla::Literal::vec1(tokens).reshape(&[self.batch as i64, self.seq_len as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[p, t])?[0][0].to_literal_sync()?;
+        let (loss_lit, grads_lit) = result.to_tuple2()?;
+        let loss = loss_lit.to_vec::<f32>()?[0];
+        let grads = grads_lit.to_vec::<f32>()?;
+        if grads.len() != self.param_count {
+            return Err(RuntimeError::Shape {
+                what: "grads",
+                expected: self.param_count,
+                got: grads.len(),
+            });
+        }
+        Ok((loss, grads))
+    }
+}
+
+/// Typed wrapper over the `sgd_update.<cfg>` artifact:
+/// `(params, grads, velocity) -> (params', velocity')` — the L1 fused
+/// Pallas momentum-SGD kernel, exercised from Rust. (The trainer's hot
+/// path uses the native `trainer::optimizer` twin; this artifact proves
+/// the L1 kernel composes through the AOT boundary and provides the
+/// cross-check.)
+pub struct SgdExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub param_count: usize,
+}
+
+impl SgdExec {
+    pub fn load(rt: &Runtime, set: &ArtifactSet) -> Result<Self, RuntimeError> {
+        Ok(Self { exe: rt.load_hlo_text(&set.sgd_update_hlo)?, param_count: set.meta.param_count })
+    }
+
+    pub fn run(
+        &self,
+        params: &[f32],
+        grads: &[f32],
+        velocity: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>), RuntimeError> {
+        for (what, v) in [("params", params), ("grads", grads), ("velocity", velocity)] {
+            if v.len() != self.param_count {
+                return Err(RuntimeError::Shape {
+                    what,
+                    expected: self.param_count,
+                    got: v.len(),
+                });
+            }
+        }
+        let args =
+            [xla::Literal::vec1(params), xla::Literal::vec1(grads), xla::Literal::vec1(velocity)];
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (p, v) = result.to_tuple2()?;
+        Ok((p.to_vec::<f32>()?, v.to_vec::<f32>()?))
+    }
+}
+
+/// Typed wrapper over the standalone `combine` artifact — the paper's
+/// gradient-summation hot-spot as a Pallas kernel: `(a, b) -> a + b`
+/// over `elems` f32.
+pub struct CombineExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub elems: usize,
+}
+
+impl CombineExec {
+    pub fn load(rt: &Runtime, dir: &Path) -> Result<Self, RuntimeError> {
+        let meta = std::fs::read_to_string(dir.join("combine.meta"))
+            .map_err(super::artifact::ArtifactError::Io)?;
+        let elems = meta
+            .lines()
+            .find_map(|l| l.strip_prefix("elems "))
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(1 << 16);
+        Ok(Self { exe: rt.load_hlo_text(&dir.join("combine.hlo.txt"))?, elems })
+    }
+
+    pub fn run(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>, RuntimeError> {
+        if a.len() != self.elems || b.len() != self.elems {
+            return Err(RuntimeError::Shape { what: "combine", expected: self.elems, got: a.len() });
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[xla::Literal::vec1(a), xla::Literal::vec1(b)])?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::default_dir;
+
+    fn runtime_or_skip() -> Option<(Runtime, ArtifactSet)> {
+        let dir = default_dir();
+        if !dir.join("model.tiny.meta").is_file() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let rt = Runtime::cpu().expect("cpu client");
+        let set = ArtifactSet::locate(&dir, "tiny").expect("tiny artifacts");
+        Some((rt, set))
+    }
+
+    #[test]
+    fn train_step_runs_and_is_deterministic() {
+        let Some((rt, set)) = runtime_or_skip() else { return };
+        let exec = TrainStepExec::load(&rt, &set).unwrap();
+        let params = set.load_init_params().unwrap();
+        let tokens: Vec<i32> =
+            (0..set.meta.tokens_per_batch()).map(|i| (i % set.meta.vocab) as i32).collect();
+        let (loss1, grads1) = exec.run(&params, &tokens).unwrap();
+        let (loss2, grads2) = exec.run(&params, &tokens).unwrap();
+        assert!(loss1.is_finite());
+        // Untrained loss ~ ln(vocab).
+        assert!((loss1 - (set.meta.vocab as f32).ln()).abs() < 1.5, "loss {loss1}");
+        assert_eq!(loss1, loss2);
+        assert_eq!(grads1, grads2);
+        assert!(grads1.iter().any(|&g| g != 0.0));
+    }
+
+    #[test]
+    fn sgd_exec_matches_native_formula() {
+        let Some((rt, set)) = runtime_or_skip() else { return };
+        let exec = SgdExec::load(&rt, &set).unwrap();
+        let n = set.meta.param_count;
+        let params: Vec<f32> = (0..n).map(|i| (i % 13) as f32 * 0.1).collect();
+        let grads: Vec<f32> = (0..n).map(|i| (i % 7) as f32 * 0.01).collect();
+        let velocity = vec![0.5f32; n];
+        let (p2, v2) = exec.run(&params, &grads, &velocity).unwrap();
+        let (lr, mu) = (set.meta.lr, set.meta.momentum);
+        for i in (0..n).step_by(n / 17 + 1) {
+            let v_want = mu * velocity[i] + grads[i];
+            let p_want = params[i] - lr * v_want;
+            assert!((v2[i] - v_want).abs() < 1e-5, "v[{i}]");
+            assert!((p2[i] - p_want).abs() < 1e-5, "p[{i}]");
+        }
+    }
+
+    #[test]
+    fn combine_exec_sums() {
+        let Some((rt, _)) = runtime_or_skip() else { return };
+        let exec = CombineExec::load(&rt, &default_dir()).unwrap();
+        let a: Vec<f32> = (0..exec.elems).map(|i| i as f32).collect();
+        let b = vec![1.5f32; exec.elems];
+        let out = exec.run(&a, &b).unwrap();
+        assert_eq!(out.len(), exec.elems);
+        for i in (0..exec.elems).step_by(1001) {
+            assert_eq!(out[i], a[i] + 1.5);
+        }
+    }
+
+    #[test]
+    fn shape_errors_detected() {
+        let Some((rt, set)) = runtime_or_skip() else { return };
+        let exec = TrainStepExec::load(&rt, &set).unwrap();
+        let bad = vec![0f32; 3];
+        let toks = vec![0i32; set.meta.tokens_per_batch()];
+        assert!(matches!(exec.run(&bad, &toks), Err(RuntimeError::Shape { .. })));
+    }
+}

@@ -1,0 +1,56 @@
+//! Link timing parameters.
+
+/// Per-link, per-direction timing model (the alpha-beta model with
+/// cut-through routing).
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// Sustained bandwidth per direction, bytes/second.
+    pub bandwidth_bps: f64,
+    /// Per-hop latency (router + wire), seconds.
+    pub hop_latency_s: f64,
+    /// Fixed per-transfer software/DMA overhead, seconds.
+    pub msg_overhead_s: f64,
+}
+
+impl LinkModel {
+    /// TPU-v3 inter-chip interconnect estimate. Public figures put a
+    /// TPU-v3 chip's aggregate ICI bandwidth at ~656 Gb/s over 4 links
+    /// (≈ 20.5 GB/s per link per direction); hop latency on the order
+    /// of a microsecond. These constants set the *scale* of simulated
+    /// times; the paper-reproduction comparisons are ratios, which are
+    /// insensitive to the exact values.
+    pub fn tpu_v3() -> Self {
+        Self { bandwidth_bps: 20.5e9, hop_latency_s: 1.0e-6, msg_overhead_s: 1.5e-6 }
+    }
+
+    /// Time to push `bytes` through one link once the channel is held.
+    pub fn serialization_s(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.bandwidth_bps
+    }
+
+    /// End-to-end time of an uncontended transfer over `hops` links.
+    pub fn transfer_s(&self, bytes: u64, hops: usize) -> f64 {
+        self.msg_overhead_s + hops as f64 * self.hop_latency_s + self.serialization_s(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tpu_v3_sane() {
+        let m = LinkModel::tpu_v3();
+        // 100 MiB over one link ~ 5.1 ms.
+        let t = m.transfer_s(100 << 20, 1);
+        assert!(t > 4e-3 && t < 7e-3, "{t}");
+    }
+
+    #[test]
+    fn latency_dominates_small_transfers() {
+        let m = LinkModel::tpu_v3();
+        let small = m.transfer_s(64, 10);
+        assert!(small > 10.0 * m.hop_latency_s);
+        assert!(m.serialization_s(64) < 1e-8);
+    }
+}

@@ -1,0 +1,24 @@
+//! Network simulator: times a collective [`Schedule`] on a (possibly
+//! degraded) mesh with per-link bandwidth, per-hop latency and link
+//! contention.
+//!
+//! Substitute for the paper's TPU-v3 testbed (see DESIGN.md §2): ring
+//! allreduce is bandwidth-dominated, so a cut-through channel-
+//! reservation model over the *exact* per-link traffic of the schedule
+//! reproduces the phase costs, contention effects and crossovers the
+//! paper reports, without flit-level simulation.
+//!
+//! Model: a transfer of `b` bytes over route `r` reserves every
+//! directed link of `r` simultaneously (wormhole/cut-through, as on TPU
+//! ICI); it starts when all its links are free and completes after
+//! `hops * alpha + b / bw`. Transfers within a schedule step contend;
+//! steps are barriers (matching the executor's semantics). Transfers
+//! are admitted in deterministic earliest-available order.
+
+pub mod link;
+pub mod sim;
+pub mod stats;
+
+pub use link::LinkModel;
+pub use sim::{simulate, SimError, SimReport};
+pub use stats::LinkStats;

@@ -1,0 +1,311 @@
+//! The schedule-timing simulator.
+
+use super::link::LinkModel;
+use super::stats::LinkStats;
+use crate::collective::Schedule;
+use crate::mesh::{route, Link, RouteError, Topology};
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum SimError {
+    #[error("transfer route failed: {0}")]
+    Route(#[from] RouteError),
+}
+
+/// Simulation result: makespan, per-step times and link statistics.
+#[derive(Debug)]
+pub struct SimReport {
+    /// Total schedule time (seconds).
+    pub makespan_s: f64,
+    /// Completion time of each schedule step (duration, not absolute).
+    pub step_times_s: Vec<f64>,
+    /// Per-link traffic counters.
+    pub links: LinkStats,
+    /// Max over links of (busy seconds / makespan): bottleneck
+    /// utilisation in [0, 1].
+    pub bottleneck_utilization: f64,
+    /// Total bytes injected (sum over transfers of payload bytes).
+    pub injected_bytes: u64,
+}
+
+impl SimReport {
+    /// Effective allreduce algorithm bandwidth for a payload of
+    /// `payload_bytes`: payload / makespan. Comparable to the
+    /// "algbw" reported by NCCL tests.
+    pub fn algorithm_bandwidth(&self, payload_bytes: u64) -> f64 {
+        payload_bytes as f64 / self.makespan_s
+    }
+}
+
+/// Simulate `schedule` on `topo` under `model`.
+///
+/// Dependency model: **node-local** — a step-`s` transfer may start
+/// once both its endpoints have finished all their step-`s-1` work
+/// (exactly the dataflow dependency of ring collectives: what a node
+/// sends at step `s` is what it accumulated by step `s-1`). This
+/// matches how pipelined collectives behave on real interconnects;
+/// the numeric executor's global-barrier semantics compute the same
+/// values because values never depend on timing, only on the step
+/// order, which is preserved per node. A transfer holds every link of
+/// its route from start until it has streamed its payload (cut-through
+/// reservation), so transfers sharing a link serialize; admission is
+/// greedy earliest-start with deterministic tie-breaking.
+pub fn simulate(
+    schedule: &Schedule,
+    topo: &Topology,
+    model: &LinkModel,
+) -> Result<SimReport, SimError> {
+    let mesh = topo.mesh;
+    let mut links = LinkStats::new(mesh);
+    let mut link_free = vec![0.0f64; mesh.num_link_slots()];
+    // Per-node completion time of all work up to the previous step.
+    let mut node_prev = vec![0.0f64; mesh.num_nodes()];
+    let mut node_cur = vec![0.0f64; mesh.num_nodes()];
+    let mut step_times = Vec::with_capacity(schedule.steps.len());
+    let mut injected: u64 = 0;
+    let mut makespan = 0.0f64;
+
+    for step in &schedule.steps {
+        let step_start_min = node_prev.iter().copied().fold(f64::INFINITY, f64::min);
+        let mut step_end = step_start_min.max(0.0);
+        node_cur.copy_from_slice(&node_prev);
+
+        // Resolve routes once.
+        let mut pending: Vec<(Vec<usize>, u64, usize, usize, usize)> =
+            Vec::with_capacity(step.transfers.len());
+        for t in &step.transfers {
+            let path = route(topo, t.src, t.dst)?;
+            let hops = path.len().saturating_sub(1);
+            let link_ids: Vec<usize> = path
+                .windows(2)
+                .map(|w| mesh.link_index(Link::new(w[0], w[1])))
+                .collect();
+            let bytes = 4 * t.range.len() as u64;
+            injected += bytes;
+            pending.push((
+                link_ids,
+                bytes,
+                hops,
+                mesh.node_index(t.src),
+                mesh.node_index(t.dst),
+            ));
+        }
+
+        // Admission: order transfers by their dataflow readiness (then
+        // by index for determinism) and assign start times in one pass.
+        // Contended links serialize in that order. A full O(T^2)
+        // earliest-start greedy changes makespans by well under 1% on
+        // the paper's configurations (see EXPERIMENTS.md §Perf) while
+        // being ~20x slower on 32x32 meshes, so the single pass is the
+        // production path.
+        let mut order: Vec<usize> = (0..pending.len()).collect();
+        order.sort_by(|&a, &b| {
+            let da = node_prev[pending[a].3].max(node_prev[pending[a].4]);
+            let db = node_prev[pending[b].3].max(node_prev[pending[b].4]);
+            da.partial_cmp(&db).unwrap().then(a.cmp(&b))
+        });
+        for i in order {
+            let (link_ids, bytes, hops, src, dst) = &pending[i];
+            let dep = node_prev[*src].max(node_prev[*dst]);
+            let start = link_ids.iter().map(|&l| link_free[l]).fold(dep, f64::max);
+            let stream = model.serialization_s(*bytes);
+            let finish = start + model.msg_overhead_s + *hops as f64 * model.hop_latency_s + stream;
+            for &l in link_ids {
+                link_free[l] = start + stream;
+                links.record(
+                    Link::new(
+                        mesh.coord_of(l / 4),
+                        mesh.step(mesh.coord_of(l / 4), crate::mesh::Dir::ALL[l % 4]).unwrap(),
+                    ),
+                    *bytes,
+                    stream,
+                );
+            }
+            node_cur[*src] = node_cur[*src].max(finish);
+            node_cur[*dst] = node_cur[*dst].max(finish);
+            step_end = step_end.max(finish);
+            makespan = makespan.max(finish);
+        }
+
+        node_prev.copy_from_slice(&node_cur);
+        step_times.push((step_end - step_start_min).max(0.0));
+    }
+
+    let bottleneck = if makespan > 0.0 { links.max_busy_s() / makespan } else { 0.0 };
+    Ok(SimReport {
+        makespan_s: makespan,
+        step_times_s: step_times,
+        links,
+        bottleneck_utilization: bottleneck,
+        injected_bytes: injected,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::{build_schedule, ChunkRange, OpKind, Scheme, Step, Transfer};
+    use crate::mesh::{Coord, FailedRegion};
+
+    fn model() -> LinkModel {
+        LinkModel { bandwidth_bps: 1e9, hop_latency_s: 1e-6, msg_overhead_s: 0.0 }
+    }
+
+    fn one_transfer(src: Coord, dst: Coord, elems: usize) -> Schedule {
+        let mut s = Schedule::new(elems);
+        s.steps.push(Step {
+            transfers: vec![Transfer {
+                src,
+                dst,
+                range: ChunkRange::new(0, elems),
+                op: OpKind::Copy,
+            }],
+        });
+        s
+    }
+
+    #[test]
+    fn single_transfer_time() {
+        let topo = Topology::full(4, 1);
+        // 1 MB over 3 hops at 1 GB/s: 1e-3 + 3e-6.
+        let sched = one_transfer(Coord::new(0, 0), Coord::new(3, 0), 250_000);
+        let r = simulate(&sched, &topo, &model()).unwrap();
+        assert!((r.makespan_s - (1e-3 + 3e-6)).abs() < 1e-9, "{}", r.makespan_s);
+        assert_eq!(r.injected_bytes, 1_000_000);
+        assert_eq!(r.links.links_used(), 3);
+    }
+
+    #[test]
+    fn contention_serializes() {
+        let topo = Topology::full(3, 1);
+        // Two transfers both crossing link (1,0)->(2,0).
+        let mut s = Schedule::new(500_000);
+        s.steps.push(Step {
+            transfers: vec![
+                Transfer {
+                    src: Coord::new(0, 0),
+                    dst: Coord::new(2, 0),
+                    range: ChunkRange::new(0, 250_000),
+                    op: OpKind::Copy,
+                },
+                Transfer {
+                    src: Coord::new(1, 0),
+                    dst: Coord::new(2, 0),
+                    range: ChunkRange::new(250_000, 500_000),
+                    op: OpKind::Copy,
+                },
+            ],
+        });
+        let r = simulate(&s, &topo, &model()).unwrap();
+        // Each streams 1 MB at 1 GB/s = 1 ms; they share a link so the
+        // makespan is ~2 ms, not ~1 ms.
+        assert!(r.makespan_s > 1.9e-3, "{}", r.makespan_s);
+        assert!(r.makespan_s < 2.1e-3, "{}", r.makespan_s);
+    }
+
+    #[test]
+    fn disjoint_transfers_run_concurrently() {
+        let topo = Topology::full(4, 1);
+        let mut s = Schedule::new(500_000);
+        s.steps.push(Step {
+            transfers: vec![
+                Transfer {
+                    src: Coord::new(0, 0),
+                    dst: Coord::new(1, 0),
+                    range: ChunkRange::new(0, 250_000),
+                    op: OpKind::Copy,
+                },
+                Transfer {
+                    src: Coord::new(2, 0),
+                    dst: Coord::new(3, 0),
+                    range: ChunkRange::new(250_000, 500_000),
+                    op: OpKind::Copy,
+                },
+            ],
+        });
+        let r = simulate(&s, &topo, &model()).unwrap();
+        assert!(r.makespan_s < 1.1e-3, "{}", r.makespan_s);
+    }
+
+    #[test]
+    fn steps_are_barriers() {
+        let topo = Topology::full(2, 1);
+        let a = Coord::new(0, 0);
+        let b = Coord::new(1, 0);
+        let mut s = Schedule::new(250_000);
+        for _ in 0..3 {
+            s.steps.push(Step {
+                transfers: vec![Transfer {
+                    src: a,
+                    dst: b,
+                    range: ChunkRange::new(0, 250_000),
+                    op: OpKind::Add,
+                }],
+            });
+        }
+        let r = simulate(&s, &topo, &model()).unwrap();
+        assert_eq!(r.step_times_s.len(), 3);
+        assert!((r.makespan_s - 3.0 * (1e-3 + 1e-6)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn pair_rows_beats_one_d_on_large_payload() {
+        // The headline §2.1 comparison: O(N) latency 2-D scheme beats the
+        // O(N^2) 1-D ring, and both are bandwidth-bound on big payloads.
+        let topo = Topology::full(8, 8);
+        let model = LinkModel::tpu_v3();
+        let payload = 4 << 20; // 16 MiB of f32
+        let one_d = build_schedule(Scheme::OneD, &topo, payload).unwrap();
+        let pr = build_schedule(Scheme::PairRows, &topo, payload).unwrap();
+        let t1 = simulate(&one_d, &topo, &model).unwrap();
+        let t2 = simulate(&pr, &topo, &model).unwrap();
+        assert!(
+            t2.makespan_s < t1.makespan_s,
+            "pair-rows {} vs 1-d {}",
+            t2.makespan_s,
+            t1.makespan_s
+        );
+    }
+
+    #[test]
+    fn one_d_wins_tiny_payload() {
+        // For very small payloads the 1-D ring's simplicity can win over
+        // multi-phase schemes... actually both are latency-bound; just
+        // check the latency ordering direction holds for step counts:
+        // 1-D has O(P) steps, pair-rows O(nx + ny). On tiny payloads the
+        // pair-rows scheme (fewer steps) should win.
+        let topo = Topology::full(8, 8);
+        let model = LinkModel::tpu_v3();
+        let one_d = build_schedule(Scheme::OneD, &topo, 64).unwrap();
+        let pr = build_schedule(Scheme::PairRows, &topo, 64).unwrap();
+        let t1 = simulate(&one_d, &topo, &model).unwrap();
+        let t2 = simulate(&pr, &topo, &model).unwrap();
+        assert!(t2.makespan_s < t1.makespan_s);
+    }
+
+    #[test]
+    fn ft_overhead_is_modest() {
+        // Table 2's shape: FT allreduce costs more than full-mesh
+        // allreduce, but by a bounded factor.
+        let model = LinkModel::tpu_v3();
+        let payload = 1 << 20;
+        let full = Topology::full(16, 8);
+        let ft = Topology::with_failure(16, 8, FailedRegion::host(4, 2));
+        let s_full = build_schedule(Scheme::FaultTolerant, &full, payload).unwrap();
+        let s_ft = build_schedule(Scheme::FaultTolerant, &ft, payload).unwrap();
+        let t_full = simulate(&s_full, &full, &model).unwrap();
+        let t_ft = simulate(&s_ft, &ft, &model).unwrap();
+        let ratio = t_ft.makespan_s / t_full.makespan_s;
+        assert!(ratio > 1.0, "FT should cost more: {ratio}");
+        assert!(ratio < 2.5, "FT overhead should be bounded: {ratio}");
+    }
+
+    #[test]
+    fn bottleneck_utilization_bounded() {
+        let topo = Topology::full(8, 8);
+        let s = build_schedule(Scheme::PairRows, &topo, 1 << 20).unwrap();
+        let r = simulate(&s, &topo, &LinkModel::tpu_v3()).unwrap();
+        assert!(r.bottleneck_utilization > 0.1);
+        assert!(r.bottleneck_utilization <= 1.0 + 1e-9);
+    }
+}

@@ -1,0 +1,75 @@
+//! Per-link traffic statistics collected by the simulator.
+
+use crate::mesh::{Link, Mesh};
+
+/// Dense per-link counters (indexed by [`Mesh::link_index`]).
+#[derive(Debug, Clone)]
+pub struct LinkStats {
+    mesh: Mesh,
+    bytes: Vec<u64>,
+    busy_s: Vec<f64>,
+    transfers: Vec<u32>,
+}
+
+impl LinkStats {
+    pub fn new(mesh: Mesh) -> Self {
+        let n = mesh.num_link_slots();
+        Self { mesh, bytes: vec![0; n], busy_s: vec![0.0; n], transfers: vec![0; n] }
+    }
+
+    pub fn record(&mut self, link: Link, bytes: u64, busy_s: f64) {
+        let i = self.mesh.link_index(link);
+        self.bytes[i] += bytes;
+        self.busy_s[i] += busy_s;
+        self.transfers[i] += 1;
+    }
+
+    pub fn bytes_on(&self, link: Link) -> u64 {
+        self.bytes[self.mesh.link_index(link)]
+    }
+
+    pub fn transfers_on(&self, link: Link) -> u32 {
+        self.transfers[self.mesh.link_index(link)]
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().sum()
+    }
+
+    /// Highest per-link byte count (the bottleneck link's load).
+    pub fn max_bytes(&self) -> u64 {
+        self.bytes.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Busiest link's busy time; with the makespan this gives the
+    /// bottleneck utilisation.
+    pub fn max_busy_s(&self) -> f64 {
+        self.busy_s.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Number of links that carried any traffic.
+    pub fn links_used(&self) -> usize {
+        self.bytes.iter().filter(|&&b| b > 0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::Coord;
+
+    #[test]
+    fn record_and_query() {
+        let mesh = Mesh::new(3, 1);
+        let mut s = LinkStats::new(mesh);
+        let l = Link::new(Coord::new(0, 0), Coord::new(1, 0));
+        s.record(l, 100, 1e-6);
+        s.record(l, 50, 0.5e-6);
+        assert_eq!(s.bytes_on(l), 150);
+        assert_eq!(s.transfers_on(l), 2);
+        assert_eq!(s.total_bytes(), 150);
+        assert_eq!(s.max_bytes(), 150);
+        assert_eq!(s.links_used(), 1);
+        assert!((s.max_busy_s() - 1.5e-6).abs() < 1e-12);
+    }
+}

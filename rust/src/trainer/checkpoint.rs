@@ -1,0 +1,154 @@
+//! Checkpointing: the recovery substrate the paper's introduction
+//! assumes ("the job will restart from a recent checkpoint"). The
+//! fault-tolerant scheme's whole point is to *avoid* the restart, but
+//! the coordinator still checkpoints periodically and the sub-mesh
+//! baseline restarts from here.
+//!
+//! Format (little-endian):
+//!   magic  u64  = 0x4d455348_52445543 ("MESHRDUC")
+//!   version u32
+//!   step    u64
+//!   n       u64 (param count)
+//!   params  n x f32
+//!   velocity n x f32
+//!   crc     u64 (FNV-1a over the two arrays' bytes)
+
+use std::io::{Read, Write};
+use std::path::Path;
+use thiserror::Error;
+
+const MAGIC: u64 = 0x4d45_5348_5244_5543;
+const VERSION: u32 = 1;
+
+#[derive(Debug, Error)]
+pub enum CheckpointError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("not a meshreduce checkpoint (bad magic)")]
+    BadMagic,
+    #[error("unsupported checkpoint version {0}")]
+    BadVersion(u32),
+    #[error("checkpoint corrupt (crc mismatch)")]
+    BadCrc,
+}
+
+/// Snapshot of training state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub params: Vec<f32>,
+    pub velocity: Vec<f32>,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    xs.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            f.write_all(&MAGIC.to_le_bytes())?;
+            f.write_all(&VERSION.to_le_bytes())?;
+            f.write_all(&self.step.to_le_bytes())?;
+            f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+            let pb = f32s_to_bytes(&self.params);
+            let vb = f32s_to_bytes(&self.velocity);
+            f.write_all(&pb)?;
+            f.write_all(&vb)?;
+            let mut crc_input = pb;
+            crc_input.extend_from_slice(&vb);
+            f.write_all(&fnv1a(&crc_input).to_le_bytes())?;
+        }
+        // Atomic-ish: write then rename, so a crash never leaves a
+        // half-written "latest" checkpoint.
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self, CheckpointError> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut u64b = [0u8; 8];
+        let mut u32b = [0u8; 4];
+        f.read_exact(&mut u64b)?;
+        if u64::from_le_bytes(u64b) != MAGIC {
+            return Err(CheckpointError::BadMagic);
+        }
+        f.read_exact(&mut u32b)?;
+        let version = u32::from_le_bytes(u32b);
+        if version != VERSION {
+            return Err(CheckpointError::BadVersion(version));
+        }
+        f.read_exact(&mut u64b)?;
+        let step = u64::from_le_bytes(u64b);
+        f.read_exact(&mut u64b)?;
+        let n = u64::from_le_bytes(u64b) as usize;
+        let mut pb = vec![0u8; 4 * n];
+        f.read_exact(&mut pb)?;
+        let mut vb = vec![0u8; 4 * n];
+        f.read_exact(&mut vb)?;
+        f.read_exact(&mut u64b)?;
+        let mut crc_input = pb.clone();
+        crc_input.extend_from_slice(&vb);
+        if u64::from_le_bytes(u64b) != fnv1a(&crc_input) {
+            return Err(CheckpointError::BadCrc);
+        }
+        let to_f32s = |b: &[u8]| -> Vec<f32> {
+            b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+        };
+        Ok(Checkpoint { step, params: to_f32s(&pb), velocity: to_f32s(&vb) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("meshreduce_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint {
+            step: 42,
+            params: (0..1000).map(|i| i as f32 * 0.5).collect(),
+            velocity: (0..1000).map(|i| -(i as f32)).collect(),
+        };
+        let p = tmpfile("roundtrip.ckpt");
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let ck = Checkpoint { step: 1, params: vec![1.0; 64], velocity: vec![2.0; 64] };
+        let p = tmpfile("corrupt.ckpt");
+        ck.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, bytes).unwrap();
+        assert!(matches!(Checkpoint::load(&p), Err(CheckpointError::BadCrc)));
+    }
+
+    #[test]
+    fn detects_wrong_file() {
+        let p = tmpfile("not_a.ckpt");
+        std::fs::write(&p, b"definitely not a checkpoint").unwrap();
+        assert!(matches!(Checkpoint::load(&p), Err(CheckpointError::BadMagic)));
+    }
+}

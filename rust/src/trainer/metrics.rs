@@ -1,0 +1,120 @@
+//! Training metrics: per-step records and CSV export for the loss
+//! curves recorded in EXPERIMENTS.md.
+
+use std::path::Path;
+
+/// One training step's record.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: u64,
+    /// Mean loss across live workers.
+    pub loss: f32,
+    /// Wall-clock compute (train_step execution) seconds.
+    pub compute_s: f64,
+    /// Wall-clock allreduce (numeric executor) seconds.
+    pub allreduce_s: f64,
+    /// Live worker count at this step.
+    pub workers: usize,
+}
+
+/// Collected metrics for a run.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub records: Vec<StepRecord>,
+    /// (step, note) annotations, e.g. failure injection events.
+    pub events: Vec<(u64, String)>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn annotate(&mut self, step: u64, note: impl Into<String>) {
+        self.events.push((step, note.into()));
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the last `n` records.
+    pub fn mean_loss_tail(&self, n: usize) -> f32 {
+        let tail = &self.records[self.records.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32
+    }
+
+    /// Fraction of step time spent in allreduce, averaged over records —
+    /// the quantity Table 2 reports.
+    pub fn allreduce_overhead(&self) -> f64 {
+        let (mut ar, mut total) = (0.0, 0.0);
+        for r in &self.records {
+            ar += r.allreduce_s;
+            total += r.allreduce_s + r.compute_s;
+        }
+        if total > 0.0 {
+            ar / total
+        } else {
+            0.0
+        }
+    }
+
+    /// Dump `step,loss,compute_s,allreduce_s,workers` CSV.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut out = String::from("step,loss,compute_s,allreduce_s,workers\n");
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                r.step, r.loss, r.compute_s, r.allreduce_s, r.workers
+            ));
+        }
+        std::fs::write(path, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, loss: f32) -> StepRecord {
+        StepRecord { step, loss, compute_s: 0.08, allreduce_s: 0.02, workers: 16 }
+    }
+
+    #[test]
+    fn tail_mean_and_overhead() {
+        let mut m = Metrics::new();
+        for i in 0..10 {
+            m.record(rec(i, 10.0 - i as f32));
+        }
+        assert_eq!(m.last_loss(), Some(1.0));
+        assert!((m.mean_loss_tail(2) - 1.5).abs() < 1e-6);
+        assert!((m.allreduce_overhead() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut m = Metrics::new();
+        m.record(rec(0, 5.0));
+        m.record(rec(1, 4.0));
+        let p = std::env::temp_dir().join("meshreduce_metrics.csv");
+        m.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("step,loss"));
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        assert!(m.last_loss().is_none());
+        assert!(m.mean_loss_tail(5).is_nan());
+        assert_eq!(m.allreduce_overhead(), 0.0);
+    }
+}

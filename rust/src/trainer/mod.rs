@@ -1,0 +1,332 @@
+//! Data-parallel trainer: the training loop that ties L2/L1 compute
+//! (via the PJRT runtime) to the paper's mesh allreduce (via the
+//! collective executor).
+//!
+//! Semantics mirror the paper's setup: every live chip of the mesh is a
+//! data-parallel worker with an identical parameter replica and its own
+//! per-step mini-batch; gradients are globally summed with the selected
+//! mesh allreduce scheme, averaged, and applied with momentum SGD.
+//! Because allreduce makes gradients identical on every worker, replicas
+//! stay bit-identical — the trainer stores the replica once and keeps
+//! per-worker *gradient* buffers, which is exactly what the allreduce
+//! schedules shard (an optional verification mode checks the post-
+//! allreduce buffers really are identical across workers).
+//!
+//! Per-worker batch size is fixed by the AOT artifact shape, as on the
+//! real system where per-chip batch is fixed; losing a board shrinks
+//! the global batch by the same fraction as on the paper's 512→504
+//! chips.
+
+pub mod checkpoint;
+pub mod data;
+pub mod metrics;
+pub mod optimizer;
+
+use crate::collective::{
+    build_schedule, execute, ExecutorArena, NodeBuffers, Schedule, Scheme,
+};
+use crate::mesh::{FailedRegion, Topology};
+use crate::runtime::{ArtifactSet, Runtime, TrainStepExec};
+use checkpoint::Checkpoint;
+use data::SyntheticCorpus;
+use metrics::{Metrics, StepRecord};
+use optimizer::SgdOptimizer;
+use std::path::PathBuf;
+use std::sync::Arc;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum TrainError {
+    #[error("runtime: {0}")]
+    Runtime(#[from] crate::runtime::pjrt::RuntimeError),
+    #[error("artifact: {0}")]
+    Artifact(#[from] crate::runtime::artifact::ArtifactError),
+    #[error("schedule: {0}")]
+    Schedule(#[from] crate::collective::allreduce::BuildError),
+    #[error("executor: {0}")]
+    Executor(#[from] crate::collective::executor::ExecError),
+    #[error("checkpoint: {0}")]
+    Checkpoint(#[from] checkpoint::CheckpointError),
+    #[error("allreduce verification failed: {0} workers deviate from the global sum")]
+    VerifyFailed(usize),
+    #[error("failure injection invalid: {0}")]
+    BadFailure(String),
+}
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    /// Model config name ("tiny", "small", ...).
+    pub model: String,
+    pub artifacts_dir: PathBuf,
+    /// Mesh shape.
+    pub nx: usize,
+    pub ny: usize,
+    /// Allreduce scheme; `FaultTolerant` handles both full and failed
+    /// meshes (the coordinator's default).
+    pub scheme: Scheme,
+    /// Base RNG seed (corpus + init).
+    pub seed: u64,
+    /// After every allreduce, check all workers hold identical sums.
+    pub verify_allreduce: bool,
+}
+
+impl TrainerConfig {
+    pub fn new(model: &str, nx: usize, ny: usize) -> Self {
+        Self {
+            model: model.to_string(),
+            artifacts_dir: crate::runtime::artifact::default_dir(),
+            nx,
+            ny,
+            scheme: Scheme::FaultTolerant,
+            seed: 0,
+            verify_allreduce: false,
+        }
+    }
+}
+
+/// The data-parallel trainer.
+pub struct DataParallelTrainer {
+    cfg: TrainerConfig,
+    topo: Topology,
+    schedule: Schedule,
+    exec: Arc<TrainStepExec>,
+    pub params: Vec<f32>,
+    opt: SgdOptimizer,
+    corpus: SyntheticCorpus,
+    arena: ExecutorArena,
+    pub metrics: Metrics,
+    pub step: u64,
+}
+
+impl DataParallelTrainer {
+    pub fn new(cfg: TrainerConfig, runtime: &Runtime) -> Result<Self, TrainError> {
+        let set = ArtifactSet::locate(&cfg.artifacts_dir, &cfg.model)?;
+        let exec = Arc::new(TrainStepExec::load(runtime, &set)?);
+        let params = set.load_init_params()?;
+        let opt = SgdOptimizer::new(params.len(), set.meta.lr, set.meta.momentum);
+        let corpus = SyntheticCorpus::new(set.meta.vocab, cfg.seed);
+        let topo = Topology::full(cfg.nx, cfg.ny);
+        let schedule = build_schedule(cfg.scheme, &topo, params.len())?;
+        Ok(Self {
+            cfg,
+            topo,
+            schedule,
+            exec,
+            params,
+            opt,
+            corpus,
+            arena: ExecutorArena::new(),
+            metrics: Metrics::new(),
+            step: 0,
+        })
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.topo.live_count()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Inject a failed region mid-run: the paper's availability story.
+    /// Rebuilds the ring plan and schedule on the degraded mesh; dead
+    /// workers simply stop contributing. Returns the rebuild time.
+    pub fn inject_failure(&mut self, region: FailedRegion) -> Result<f64, TrainError> {
+        let t0 = std::time::Instant::now();
+        let mut regions = self.topo.failed_regions().to_vec();
+        for r in &regions {
+            if r.overlaps(&region) {
+                return Err(TrainError::BadFailure(format!("{region:?} overlaps {r:?}")));
+            }
+        }
+        if !region.fits(&self.topo.mesh) {
+            return Err(TrainError::BadFailure(format!("{region:?} outside mesh")));
+        }
+        regions.push(region);
+        let topo = Topology::with_failures(self.cfg.nx, self.cfg.ny, regions);
+        if !topo.is_connected() {
+            return Err(TrainError::BadFailure("mesh disconnected".into()));
+        }
+        let schedule = build_schedule(self.cfg.scheme, &topo, self.params.len())?;
+        self.topo = topo;
+        self.schedule = schedule;
+        self.metrics.annotate(self.step, format!("failure injected: {region:?}"));
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// One synchronous data-parallel training step.
+    pub fn train_step(&mut self) -> Result<StepRecord, TrainError> {
+        let live = self.topo.live_nodes();
+        let w = live.len();
+
+        // --- compute phase: per-worker fwd+bwd through the artifact.
+        // Workers run sequentially from the coordinator's point of view;
+        // XLA's CPU backend parallelises each execution internally, so
+        // this models "all chips step together" without oversubscribing
+        // cores. (The xla crate's executables are not Sync: `execute`
+        // clones a non-atomic Rc internally, so they must not be shared
+        // across threads.)
+        let t0 = std::time::Instant::now();
+        let mut bufs = NodeBuffers::new(self.topo.mesh);
+        let mut loss_sum = 0.0f64;
+        for &node in &live {
+            let worker_id = self.topo.mesh.node_index(node) as u64;
+            let tokens =
+                self.corpus.batch(worker_id, self.step, self.exec.batch, self.exec.seq_len);
+            let (loss, grads) = self.exec.run(&self.params, &tokens)?;
+            loss_sum += loss as f64;
+            bufs.insert(node, grads);
+        }
+        let compute_s = t0.elapsed().as_secs_f64();
+
+        // --- allreduce phase: the paper's contribution.
+        let t1 = std::time::Instant::now();
+        execute(&self.schedule, &mut bufs, &mut self.arena)?;
+        let allreduce_s = t1.elapsed().as_secs_f64();
+
+        if self.cfg.verify_allreduce {
+            let reference = bufs.get(live[0]).unwrap().to_vec();
+            let bad = live[1..]
+                .iter()
+                .filter(|&&n| bufs.get(n).unwrap() != reference.as_slice())
+                .count();
+            if bad > 0 {
+                return Err(TrainError::VerifyFailed(bad));
+            }
+        }
+
+        // --- update phase: average and apply (replicas stay identical).
+        let mut summed = bufs.take(live[0]).expect("live worker buffer");
+        let inv_w = 1.0 / w as f32;
+        for g in summed.iter_mut() {
+            *g *= inv_w;
+        }
+        self.opt.step(&mut self.params, &summed);
+
+        let record = StepRecord {
+            step: self.step,
+            loss: (loss_sum / w as f64) as f32,
+            compute_s,
+            allreduce_s,
+            workers: w,
+        };
+        self.metrics.record(record);
+        self.step += 1;
+        Ok(record)
+    }
+
+    /// Run `n` steps.
+    pub fn run(&mut self, n: u64) -> Result<(), TrainError> {
+        for _ in 0..n {
+            self.train_step()?;
+        }
+        Ok(())
+    }
+
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            step: self.step,
+            params: self.params.clone(),
+            velocity: self.opt.velocity().to_vec(),
+        }
+    }
+
+    /// Restore parameters/optimizer/step from a checkpoint.
+    pub fn restore(&mut self, ck: Checkpoint) {
+        self.step = ck.step;
+        self.opt = SgdOptimizer::with_velocity(self.opt.lr, self.opt.momentum, ck.velocity);
+        self.params = ck.params;
+        self.metrics.annotate(self.step, "restored from checkpoint");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        crate::runtime::artifact::default_dir().join("model.tiny.meta").is_file()
+    }
+
+    fn tiny_trainer(nx: usize, ny: usize) -> Option<DataParallelTrainer> {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let mut cfg = TrainerConfig::new("tiny", nx, ny);
+        cfg.verify_allreduce = true;
+        Some(DataParallelTrainer::new(cfg, &rt).unwrap())
+    }
+
+    #[test]
+    fn loss_decreases_over_steps() {
+        let Some(mut tr) = tiny_trainer(2, 2) else { return };
+        tr.run(8).unwrap();
+        let first = tr.metrics.records[0].loss;
+        let last = tr.metrics.last_loss().unwrap();
+        assert!(last < first, "loss did not fall: {first} -> {last}");
+    }
+
+    #[test]
+    fn failure_injection_mid_run_continues_training() {
+        let Some(mut tr) = tiny_trainer(4, 4) else { return };
+        tr.run(2).unwrap();
+        let loss_before = tr.metrics.last_loss().unwrap();
+        tr.inject_failure(FailedRegion::board(0, 0)).unwrap();
+        assert_eq!(tr.num_workers(), 12);
+        tr.run(3).unwrap();
+        let loss_after = tr.metrics.last_loss().unwrap();
+        assert!(loss_after.is_finite());
+        assert!(loss_after < loss_before + 0.5);
+        // Records show the worker count change.
+        assert_eq!(tr.metrics.records[1].workers, 16);
+        assert_eq!(tr.metrics.records[4].workers, 12);
+        assert_eq!(tr.metrics.events.len(), 1);
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let cfg = TrainerConfig::new("tiny", 2, 2);
+        let mut a = DataParallelTrainer::new(cfg.clone(), &rt).unwrap();
+        let mut b = DataParallelTrainer::new(cfg, &rt).unwrap();
+        a.run(2).unwrap();
+        b.run(2).unwrap();
+        assert_eq!(a.params, b.params, "same seed must give identical replicas");
+        assert_eq!(a.metrics.last_loss(), b.metrics.last_loss());
+    }
+
+    #[test]
+    fn checkpoint_restore_resumes_identically() {
+        let Some(mut tr) = tiny_trainer(2, 2) else { return };
+        tr.run(3).unwrap();
+        let ck = tr.checkpoint();
+        tr.run(2).unwrap();
+        let params_after_5 = tr.params.clone();
+
+        let Some(mut tr2) = tiny_trainer(2, 2) else { return };
+        tr2.restore(ck);
+        assert_eq!(tr2.step, 3);
+        tr2.run(2).unwrap();
+        assert_eq!(tr2.params, params_after_5, "resume must be bit-identical");
+    }
+
+    #[test]
+    fn bad_failure_rejected() {
+        let Some(mut tr) = tiny_trainer(4, 4) else { return };
+        // Full-height stripe would disconnect the mesh.
+        assert!(tr.inject_failure(FailedRegion::new(2, 0, 2, 4)).is_err());
+        // Out of bounds.
+        assert!(tr.inject_failure(FailedRegion::host(2, 2)).is_err());
+    }
+}

@@ -1,0 +1,82 @@
+//! Native momentum-SGD — the L3 twin of the L1 Pallas `sgd` kernel
+//! (`python/compile/kernels/sgd.py`), used on the hot path to avoid a
+//! PJRT round-trip per step. The `runtime::SgdExec` test cross-checks
+//! the two against each other.
+
+/// Momentum SGD state + hyperparameters.
+#[derive(Debug, Clone)]
+pub struct SgdOptimizer {
+    pub lr: f32,
+    pub momentum: f32,
+    velocity: Vec<f32>,
+}
+
+impl SgdOptimizer {
+    pub fn new(param_count: usize, lr: f32, momentum: f32) -> Self {
+        Self { lr, momentum, velocity: vec![0.0; param_count] }
+    }
+
+    /// Restore from a checkpointed velocity.
+    pub fn with_velocity(lr: f32, momentum: f32, velocity: Vec<f32>) -> Self {
+        Self { lr, momentum, velocity }
+    }
+
+    pub fn velocity(&self) -> &[f32] {
+        &self.velocity
+    }
+
+    /// In-place fused update: `v = mu*v + g; p -= lr*v`.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), self.velocity.len());
+        assert_eq!(grads.len(), self.velocity.len());
+        let (lr, mu) = (self.lr, self.momentum);
+        for ((p, v), g) in params.iter_mut().zip(self.velocity.iter_mut()).zip(grads) {
+            *v = mu * *v + g;
+            *p -= lr * *v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn plain_sgd_when_no_momentum() {
+        let mut opt = SgdOptimizer::new(3, 0.5, 0.0);
+        let mut p = vec![1.0, 2.0, 3.0];
+        opt.step(&mut p, &[0.2, 0.2, 0.2]);
+        assert_eq!(p, vec![0.9, 1.9, 2.9]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = SgdOptimizer::new(1, 1.0, 0.5);
+        let mut p = vec![0.0f32];
+        opt.step(&mut p, &[1.0]); // v=1.0, p=-1.0
+        opt.step(&mut p, &[1.0]); // v=1.5, p=-2.5
+        assert!((p[0] + 2.5).abs() < 1e-6);
+        assert!((opt.velocity()[0] - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_matches_reference_formula() {
+        prop("sgd matches formula", |rng| {
+            let n = rng.usize_in(1, 200);
+            let lr = 0.001 + rng.next_f32() * 0.5;
+            let mu = rng.next_f32() * 0.99;
+            let mut opt = SgdOptimizer::new(n, lr, mu);
+            let mut p: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let p0 = p.clone();
+            let mut rng2 = SplitMix64::new(rng.next_u64());
+            let g: Vec<f32> = (0..n).map(|_| rng2.next_f32() - 0.5).collect();
+            opt.step(&mut p, &g);
+            for i in 0..n {
+                let v = g[i]; // velocity starts at 0
+                assert!((p[i] - (p0[i] - lr * v)).abs() < 1e-6);
+            }
+        });
+    }
+}

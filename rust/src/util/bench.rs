@@ -1,0 +1,91 @@
+//! Minimal bench harness (offline stand-in for criterion): warmup +
+//! timed iterations, mean/min/max/stddev and run-to-run spread (the
+//! paper quotes "run-to-run variance under 2%" — we report the same
+//! figure).
+//!
+//! All `[[bench]]` targets use `harness = false` and call into here.
+
+use super::stats::Summary;
+use std::time::Instant;
+
+/// Result of one benchmark.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.summary.mean()
+    }
+
+    /// Print a one-line report.
+    pub fn report(&self) {
+        let mean = self.summary.mean();
+        println!(
+            "{:40} {:>12} mean  {:>12} min  {:>12} max  spread {:>5.1}%  (n={})",
+            self.name,
+            super::fmt::format_duration_s(mean),
+            super::fmt::format_duration_s(self.summary.min()),
+            super::fmt::format_duration_s(self.summary.max()),
+            100.0 * self.summary.rel_spread(),
+            self.iters,
+        );
+    }
+
+    /// Report with a throughput figure derived from `bytes` per iter.
+    pub fn report_throughput(&self, bytes_per_iter: u64) {
+        let gbps = bytes_per_iter as f64 / self.summary.mean() / 1e9;
+        println!(
+            "{:40} {:>12} mean  {:>8.2} GB/s  spread {:>5.1}%  (n={})",
+            self.name,
+            super::fmt::format_duration_s(self.summary.mean()),
+            gbps,
+            100.0 * self.summary.rel_spread(),
+            self.iters,
+        );
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut summary = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        summary.add(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), iters, summary }
+}
+
+/// `cargo bench` passes `--bench`/filter args; honor an optional
+/// `--quick` to cut iteration counts (used by CI).
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("MESHREDUCE_BENCH_QUICK").is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let r = bench("noop", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(r.iters, 5);
+        assert_eq!(r.summary.count(), 5);
+        assert!(r.mean_s() >= 0.0);
+    }
+
+    #[test]
+    fn bench_measures_sleep() {
+        let r = bench("sleep", 0, 3, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(r.mean_s() >= 2e-3);
+        assert!(r.mean_s() < 50e-3);
+    }
+}

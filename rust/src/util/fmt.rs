@@ -1,0 +1,71 @@
+//! Human-readable formatting helpers shared by the CLI, examples and
+//! bench harnesses.
+
+/// Format a byte count with binary units ("96.0 MiB").
+pub fn format_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut value = bytes as f64;
+    let mut unit = 0;
+    while value >= 1024.0 && unit + 1 < UNITS.len() {
+        value /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{value:.1} {}", UNITS[unit])
+    }
+}
+
+/// Format a duration in seconds with an adaptive unit ("1.84 min",
+/// "12.3 ms", "840 ns").
+pub fn format_duration_s(seconds: f64) -> String {
+    let abs = seconds.abs();
+    if abs >= 60.0 {
+        format!("{:.2} min", seconds / 60.0)
+    } else if abs >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if abs >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else if abs >= 1e-6 {
+        format!("{:.3} us", seconds * 1e6)
+    } else {
+        format!("{:.0} ns", seconds * 1e9)
+    }
+}
+
+/// Right-pad to `width` (simple table alignment).
+pub fn pad(s: &str, width: usize) -> String {
+    if s.len() >= width {
+        s.to_string()
+    } else {
+        format!("{s}{}", " ".repeat(width - s.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(format_bytes(512), "512 B");
+        assert_eq!(format_bytes(2048), "2.0 KiB");
+        assert_eq!(format_bytes(100 * 1024 * 1024), "100.0 MiB");
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(format_duration_s(110.4), "1.84 min");
+        assert_eq!(format_duration_s(1.5), "1.500 s");
+        assert_eq!(format_duration_s(0.0123), "12.300 ms");
+        assert_eq!(format_duration_s(4.2e-5), "42.000 us");
+        assert_eq!(format_duration_s(8.4e-7), "840 ns");
+    }
+
+    #[test]
+    fn pad_widths() {
+        assert_eq!(pad("ab", 4), "ab  ");
+        assert_eq!(pad("abcdef", 4), "abcdef");
+    }
+}

@@ -1,0 +1,18 @@
+//! Small self-contained utilities: deterministic PRNG, a mini
+//! property-testing framework, statistics helpers and human-readable
+//! formatting.
+//!
+//! The build environment is fully offline with only the `xla` crate (plus
+//! `anyhow`/`thiserror`) available, so the usual `rand`/`proptest`/
+//! `criterion` stack is re-implemented here at the scale this project
+//! needs.
+
+pub mod bench;
+pub mod fmt;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use fmt::{format_bytes, format_duration_s};
+pub use rng::SplitMix64;
+pub use stats::Summary;
