@@ -2,57 +2,107 @@
 //! across schemes and topologies (supports DESIGN.md experiment E13 and
 //! the §Perf L3 target: ≥1 GB/s effective reduction bandwidth per
 //! worker).
+//!
+//! Each configuration is lowered once to a [`CompiledSchedule`] and
+//! then run through both executor paths: the serial reference and the
+//! parallel production path (per-destination write partitions on
+//! scoped threads). The serial/parallel pair and their speedup are
+//! recorded to `BENCH_allreduce.json` (override the path with
+//! `MESHREDUCE_BENCH_JSON`) so CI tracks the perf trajectory.
 
-use meshreduce::collective::{build_schedule, execute, ExecutorArena, NodeBuffers, Scheme};
+use meshreduce::collective::{
+    build_schedule, execute_compiled, execute_compiled_serial, CompiledSchedule, ExecutorArena,
+    NodeBuffers, Scheme,
+};
 use meshreduce::mesh::{FailedRegion, Topology};
-use meshreduce::util::bench::{bench, quick_mode};
+use meshreduce::util::bench::{bench, quick_mode, JsonReport};
 
-fn bench_scheme(topo: &Topology, scheme: Scheme, payload: usize, iters: usize) {
+fn bench_scheme(
+    topo: &Topology,
+    scheme: Scheme,
+    payload: usize,
+    iters: usize,
+    json: &mut JsonReport,
+) {
     let Ok(sched) = build_schedule(scheme, topo, payload) else {
         return;
     };
-    let mut arena = ExecutorArena::new();
+    let plan = CompiledSchedule::compile_exec(&sched, topo.mesh);
     let nodes = topo.live_nodes();
     let mut bufs = NodeBuffers::new(topo.mesh);
     for &n in &nodes {
         bufs.insert(n, vec![1.0f32; payload]);
     }
-    let r = bench(
-        &format!(
-            "{} on {}x{}{} payload={}K",
-            scheme.name(),
-            topo.mesh.nx,
-            topo.mesh.ny,
-            if topo.has_failures() { " (failed 4x2)" } else { "" },
-            payload / 1024
-        ),
-        1,
-        iters,
-        || {
-            execute(&sched, &mut bufs, &mut arena).expect("execute");
-        },
-    );
+    // Reset between bench phases: ~11 in-place allreduces multiply
+    // every element by the worker count each time, which stays finite
+    // in f32 within one phase but would saturate to +inf across two.
+    let refill = |bufs: &mut NodeBuffers| {
+        for &n in &nodes {
+            for x in bufs.get_mut(n).expect("buffer present").iter_mut() {
+                *x = 1.0;
+            }
+        }
+    };
     // Bytes reduced per run: every live worker contributes its payload.
-    r.report_throughput(4 * payload as u64 * nodes.len() as u64);
+    let global_bytes = 4 * payload as u64 * nodes.len() as u64;
+    let label = format!(
+        "{} on {}x{}{} payload={}K",
+        scheme.name(),
+        topo.mesh.nx,
+        topo.mesh.ny,
+        if topo.has_failures() { " (failed 4x2)" } else { "" },
+        payload / 1024
+    );
+
+    let mut arena = ExecutorArena::new();
+    refill(&mut bufs);
+    let serial = bench(&format!("{label} [serial]"), 1, iters, || {
+        execute_compiled_serial(&plan, &mut bufs, &mut arena).expect("execute serial");
+    });
+    serial.report_throughput(global_bytes);
+    refill(&mut bufs);
+    let parallel = bench(&format!("{label} [parallel]"), 1, iters, || {
+        execute_compiled(&plan, &mut bufs, &mut arena).expect("execute parallel");
+    });
+    parallel.report_throughput(global_bytes);
+
+    let speedup = serial.mean_s() / parallel.mean_s();
+    println!("    -> parallel speedup {speedup:.2}x");
+    let gbps = |mean: f64| global_bytes as f64 / mean / 1e9;
+    json.push(&format!("{label} [serial]"), serial.mean_s(), gbps(serial.mean_s()), &[]);
+    json.push(
+        &format!("{label} [parallel]"),
+        parallel.mean_s(),
+        gbps(parallel.mean_s()),
+        &[("speedup", speedup)],
+    );
 }
 
 fn main() {
     let iters = if quick_mode() { 3 } else { 10 };
     let payload = 1 << 20; // 4 MiB per worker
+    let mut json = JsonReport::new();
 
     println!("numeric allreduce executor throughput (global reduced bytes / time):\n");
     let full = Topology::full(8, 8);
     let failed = Topology::with_failure(8, 8, FailedRegion::host(2, 2));
     for scheme in Scheme::ALL {
-        bench_scheme(&full, scheme, payload, iters);
+        bench_scheme(&full, scheme, payload, iters, &mut json);
     }
     println!();
     for scheme in [Scheme::OneD, Scheme::FaultTolerant] {
-        bench_scheme(&failed, scheme, payload, iters);
+        bench_scheme(&failed, scheme, payload, iters, &mut json);
     }
 
-    // Trainer-shaped case: 4x4 mesh, `small`-model payload.
+    // Trainer-shaped case: 4x4 mesh, `small`-model payload (~13 MiB),
+    // plus the ≥16 MiB acceptance point for the compiled/parallel path.
     println!();
     let trainer_topo = Topology::full(4, 4);
-    bench_scheme(&trainer_topo, Scheme::FaultTolerant, 3_433_984, iters.min(5));
+    bench_scheme(&trainer_topo, Scheme::FaultTolerant, 3_433_984, iters.min(5), &mut json);
+    bench_scheme(&trainer_topo, Scheme::FaultTolerant, 4 << 20, iters.min(5), &mut json);
+
+    match json.write("BENCH_allreduce.json") {
+        Ok(path) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write bench json: {e}"),
+    }
 }

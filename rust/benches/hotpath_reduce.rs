@@ -1,18 +1,23 @@
 //! Bench: the innermost hot loop — chunk accumulate (the paper's
-//! gradient summation) — isolated from scheduling, plus the executor's
-//! staging overhead on a single big step. Roofline context for the
-//! §Perf record.
+//! gradient summation) — isolated from scheduling. Roofline context for
+//! the §Perf record.
+//!
+//! The measured code is `collective::kernel`, the exact add/copy the
+//! executor's direct and staged apply paths run — not a lookalike — so
+//! these numbers bound what any schedule can achieve per core.
 
+use meshreduce::collective::kernel;
 use meshreduce::util::bench::{bench, quick_mode};
 
 fn main() {
     let iters = if quick_mode() { 5 } else { 20 };
     let n = 16 << 20; // 64 MiB of f32
 
-    // Raw accumulate: dst += src (the OpKind::Add kernel).
     let src = vec![1.0f32; n];
     let mut dst = vec![0.0f32; n];
-    let r = bench("raw accumulate dst+=src (64 MiB)", 2, iters, || {
+
+    // Naive scalar accumulate, for reference against the kernel.
+    let r = bench("naive accumulate dst+=src (64 MiB)", 2, iters, || {
         for (d, s) in dst.iter_mut().zip(&src) {
             *d += s;
         }
@@ -20,22 +25,25 @@ fn main() {
     // 2 reads + 1 write per element.
     r.report_throughput(12 * n as u64);
 
-    // Raw copy (the OpKind::Copy kernel).
-    let r = bench("raw copy dst<-src (64 MiB)", 2, iters, || {
-        dst.copy_from_slice(&src);
+    // The executor's OpKind::Add kernel.
+    let r = bench("kernel::add dst+=src (64 MiB)", 2, iters, || {
+        kernel::add(&mut dst, &src);
+    });
+    r.report_throughput(12 * n as u64);
+
+    // The executor's OpKind::Copy kernel.
+    let r = bench("kernel::copy dst<-src (64 MiB)", 2, iters, || {
+        kernel::copy(&mut dst, &src);
     });
     r.report_throughput(8 * n as u64);
 
-    // Chunked accumulate at ring-chunk granularity (what the executor
-    // actually does: many small ranges).
+    // Kernel at ring-chunk granularity (what the executor actually
+    // does: many small ranges).
     let chunk = 64 * 1024;
-    let r = bench("chunked accumulate (64 KiB chunks)", 2, iters, || {
+    let r = bench("kernel::add, 64 KiB chunks (64 MiB)", 2, iters, || {
         for c in 0..n / chunk {
             let lo = c * chunk;
-            let (d, s) = (&mut dst[lo..lo + chunk], &src[lo..lo + chunk]);
-            for (x, y) in d.iter_mut().zip(s) {
-                *x += y;
-            }
+            kernel::add(&mut dst[lo..lo + chunk], &src[lo..lo + chunk]);
         }
     });
     r.report_throughput(12 * n as u64);

@@ -1,6 +1,13 @@
 //! Bench: the §2.1 latency analysis — 1-D O(N^2) vs 2-D O(N) schemes
 //! across payload sizes (DESIGN.md experiment E10). Regenerates the
 //! scheme-crossover series on 8x8, 16x16 and 32x32 meshes.
+//!
+//! Each (scheme, payload) point builds a fresh schedule, so `simulate`
+//! still lowers (and resolves routes) once per point — the compiled-
+//! plan reuse win applies to repeated simulation of one schedule (see
+//! `simnet_events`), not to this sweep. What this path does gain is
+//! the simulation-only lowering: no per-transfer route `Vec`
+//! allocations inside the replay loop and no executor analyses.
 
 use meshreduce::mesh::Topology;
 use meshreduce::perfmodel::tables::payload_sweep;

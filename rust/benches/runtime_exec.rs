@@ -1,18 +1,29 @@
-//! Bench: PJRT execution latency of the AOT artifacts — the per-worker
-//! compute cost in the end-to-end driver (§Perf: L3 coordinator
-//! overhead must be small next to this).
+//! Bench: runtime execution latency — the PJRT AOT artifacts (per-
+//! worker compute cost) and the native allreduce executor over a
+//! trainer-shaped compiled plan (§Perf: L3 coordinator overhead must be
+//! small next to compute, and the compiled/parallel executor must beat
+//! the serial reference at large payloads).
 
-use meshreduce::runtime::{artifact::default_dir, ArtifactSet, CombineExec, Runtime, SgdExec, TrainStepExec};
+use meshreduce::collective::{
+    build_schedule, execute_compiled, execute_compiled_serial, CompiledSchedule, ExecutorArena,
+    NodeBuffers, Scheme,
+};
+use meshreduce::mesh::Topology;
+use meshreduce::runtime::{
+    artifact::default_dir, ArtifactSet, CombineExec, Runtime, SgdExec, TrainStepExec,
+};
 use meshreduce::util::bench::{bench, quick_mode};
 
-fn main() {
+fn bench_pjrt(iters: usize) {
     let dir = default_dir();
     if !dir.join("model.tiny.meta").is_file() {
-        eprintln!("artifacts not built (run `make artifacts`); skipping runtime bench");
+        eprintln!("artifacts not built (run `make artifacts`); skipping PJRT section");
         return;
     }
-    let rt = Runtime::cpu().expect("PJRT cpu client");
-    let iters = if quick_mode() { 3 } else { 10 };
+    let Ok(rt) = Runtime::cpu() else {
+        eprintln!("PJRT backend unavailable (offline stub); skipping PJRT section");
+        return;
+    };
 
     for cfg in ["tiny", "small"] {
         let Ok(set) = ArtifactSet::locate(&dir, cfg) else {
@@ -59,4 +70,37 @@ fn main() {
         },
     );
     r.report_throughput(12 * combine.elems as u64);
+}
+
+/// The trainer's allreduce as the trainer runs it: one compiled plan,
+/// many executions. 4x4 mesh with a 16 MiB (4 Mi-f32) payload — the
+/// acceptance point for the compiled/parallel speedup.
+fn bench_native_allreduce(iters: usize) {
+    let topo = Topology::full(4, 4);
+    let payload = 4 << 20;
+    let sched = build_schedule(Scheme::FaultTolerant, &topo, payload).expect("schedule");
+    let plan = CompiledSchedule::compile_exec(&sched, topo.mesh);
+    let mut bufs = NodeBuffers::new(topo.mesh);
+    for c in topo.live_nodes() {
+        bufs.insert(c, vec![1.0f32; payload]);
+    }
+    let mut arena = ExecutorArena::new();
+    let global_bytes = 4 * payload as u64 * 16;
+
+    println!("\nnative allreduce executor, trainer-shaped (4x4, 16 MiB payload):");
+    let serial = bench("allreduce 4x4 16MiB [serial]", 1, iters, || {
+        execute_compiled_serial(&plan, &mut bufs, &mut arena).expect("serial");
+    });
+    serial.report_throughput(global_bytes);
+    let parallel = bench("allreduce 4x4 16MiB [parallel]", 1, iters, || {
+        execute_compiled(&plan, &mut bufs, &mut arena).expect("parallel");
+    });
+    parallel.report_throughput(global_bytes);
+    println!("    -> parallel speedup {:.2}x", serial.mean_s() / parallel.mean_s());
+}
+
+fn main() {
+    let iters = if quick_mode() { 3 } else { 10 };
+    bench_pjrt(iters);
+    bench_native_allreduce(iters);
 }

@@ -1,9 +1,19 @@
 //! Bench: DES throughput — schedule-simulation speed on paper-scale
 //! meshes (§Perf L3 target: 32x32 sweeps in seconds).
+//!
+//! Two figures per configuration:
+//! - `cold`: `simulate()` — lowering (incl. route resolution for every
+//!   transfer) plus the event replay;
+//! - `cached plan`: `simulate_plan()` over a pre-compiled
+//!   [`CompiledSchedule`] — the steady-state cost when the topology is
+//!   unchanged between calls (payload sweeps, table regeneration).
+//!
+//! The cold/cached ratio is the per-call route-resolution overhead the
+//! compiled-schedule IR removed.
 
-use meshreduce::collective::{build_schedule, Scheme};
+use meshreduce::collective::{build_schedule, CompiledSchedule, Scheme};
 use meshreduce::mesh::{FailedRegion, Topology};
-use meshreduce::simnet::{simulate, LinkModel};
+use meshreduce::simnet::{simulate, simulate_plan, LinkModel};
 use meshreduce::util::bench::{bench, quick_mode};
 
 fn main() {
@@ -16,17 +26,28 @@ fn main() {
         for (label, topo) in [("full", &full), ("failed", &ft)] {
             let sched = build_schedule(Scheme::FaultTolerant, topo, payload).expect("schedule");
             let transfers = sched.num_transfers();
-            let r = bench(
-                &format!("simulate {nx}x{ny} {label} ({transfers} transfers)"),
+            let cold = bench(
+                &format!("simulate {nx}x{ny} {label} cold ({transfers} transfers)"),
                 1,
                 iters,
                 || {
                     simulate(&sched, topo, &link).expect("simulate");
                 },
             );
+            let plan = CompiledSchedule::compile(&sched, topo).expect("compile");
+            let warm = bench(
+                &format!("simulate {nx}x{ny} {label} cached plan"),
+                1,
+                iters,
+                || {
+                    simulate_plan(&plan, &link).expect("simulate_plan");
+                },
+            );
             println!(
-                "    -> {:.2} M transfers/s",
-                transfers as f64 / r.mean_s() / 1e6
+                "    -> {:.2} M transfers/s cached ({:.2} M cold), route-cache speedup {:.2}x",
+                transfers as f64 / warm.mean_s() / 1e6,
+                transfers as f64 / cold.mean_s() / 1e6,
+                cold.mean_s() / warm.mean_s(),
             );
         }
     }

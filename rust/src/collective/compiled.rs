@@ -1,0 +1,594 @@
+//! Compiled-schedule IR: the one-pass lowering from the coordinate-
+//! level [`Schedule`] to an index-based execution plan.
+//!
+//! The numeric executor and the DES used to re-derive everything from
+//! the `Schedule` on every call: coord→index mapping per transfer,
+//! the direct-vs-staged classification per step, staging offsets, and
+//! (in the simulator) the full hop route of every transfer. On payload
+//! sweeps and training runs that re-derivation — not memory bandwidth —
+//! bounded throughput. [`CompiledSchedule`] does all of it once per
+//! (schedule, topology):
+//!
+//! - per-transfer dense node indices and element ranges;
+//! - per-step **direct** classification (no source range overlaps any
+//!   destination range, so transfers apply buffer-to-buffer with no
+//!   staging copy) — detected with an O(T log T) interval sweep;
+//! - a fixed staging-arena layout per staged step plus the max
+//!   footprint over all steps, so the executor's arena is sized once
+//!   and never resized in the per-transfer loop;
+//! - per-node disjoint **write partitions**: transfers grouped by
+//!   destination, preserving schedule order within each group. All
+//!   writes of a step to one buffer live in exactly one partition, so
+//!   partitions can be applied on different threads with no locks and
+//!   bit-identical results (see `executor::execute_compiled`);
+//! - cached link-route ids for the simulator ([`compile`] only):
+//!   `simnet::simulate_plan` consumes these instead of calling
+//!   `mesh::route` per transfer per call.
+//!
+//! The plan's identity is [`Schedule::content_hash`], fixing the old
+//! arena-fingerprint collision between equal-sized schedules.
+
+use super::schedule::{OpKind, Schedule};
+use crate::mesh::{route, Link, Mesh, RouteError, Topology};
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum CompileError {
+    #[error("route resolution failed: {0}")]
+    Route(#[from] RouteError),
+}
+
+/// One lowered transfer: dense node indices, element range, and the
+/// staging-arena offset this transfer's snapshot occupies when its step
+/// is staged.
+///
+/// Fields are `pub(crate)`: the parallel executor's unsafe apply path
+/// relies on the invariants compilation establishes (ranges within the
+/// payload, no self-sends, partitions keyed by destination), so they
+/// must not be mutable from safe code outside the crate.
+#[derive(Debug, Clone, Copy)]
+pub struct CompiledTransfer {
+    pub(crate) src: usize,
+    pub(crate) dst: usize,
+    pub(crate) lo: usize,
+    pub(crate) hi: usize,
+    pub(crate) op: OpKind,
+    pub(crate) stage: usize,
+}
+
+impl CompiledTransfer {
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+}
+
+/// Writes of one step destined for one node, in schedule order.
+/// Partitions of a step touch pairwise-distinct buffers.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub(crate) dst: usize,
+    /// Indices into [`CompiledStep::transfers`].
+    pub(crate) transfer_ids: Vec<u32>,
+}
+
+/// One lowered step.
+#[derive(Debug, Clone)]
+pub struct CompiledStep {
+    /// Transfers in schedule order.
+    pub(crate) transfers: Vec<CompiledTransfer>,
+    /// No source range overlaps any destination range: apply buffer-to-
+    /// buffer without staging (half the memory traffic).
+    pub(crate) direct: bool,
+    /// Staging elements this step needs (0 when direct).
+    pub(crate) stage_len: usize,
+    /// Total elements moved by this step (parallelism threshold input).
+    pub(crate) elems: usize,
+    /// Write partitions grouped by destination node.
+    pub(crate) partitions: Vec<Partition>,
+    /// Destination node of an illegal overlapping write involving a
+    /// `Copy` (a schedule bug), detected at compile time. Raised as
+    /// [`super::executor::ExecError::WriteConflict`] in debug builds,
+    /// matching the old executor's debug-only check.
+    pub(crate) write_conflict: Option<usize>,
+    /// Per-transfer `(start, end)` ranges into
+    /// [`CompiledSchedule::link_ids`]; `end - start` = hop count.
+    /// Empty unless lowered with routes.
+    pub(crate) routes: Vec<(usize, usize)>,
+}
+
+/// The compiled plan. Build once per (schedule, topology), execute
+/// and/or simulate many times.
+#[derive(Debug, Clone)]
+pub struct CompiledSchedule {
+    pub(crate) mesh: Mesh,
+    pub(crate) payload: usize,
+    pub(crate) steps: Vec<CompiledStep>,
+    /// Dense indices of all nodes appearing as src or dst, ascending.
+    pub(crate) participants: Vec<usize>,
+    /// Max staging footprint over all steps (executor arena size).
+    pub(crate) max_stage_len: usize,
+    /// Flat cached route link ids (see [`CompiledStep::routes`]).
+    pub(crate) link_ids: Vec<usize>,
+    /// Were routes resolved?
+    pub(crate) has_routes: bool,
+    /// Was the executor analysis (direct classification, partitions,
+    /// conflict detection) run? False for simulation-only lowerings.
+    pub(crate) has_exec: bool,
+    /// [`Schedule::content_hash`] of the source schedule (0 for
+    /// simulation-only lowerings, which no cache keys on).
+    pub(crate) hash: u64,
+    /// Total payload bytes moved by the whole schedule.
+    pub(crate) total_bytes: u64,
+}
+
+impl CompiledSchedule {
+    /// Lower for numeric execution only (no route resolution). Panics
+    /// on malformed schedules (self-sends, ranges beyond the payload) —
+    /// the invariants that make the parallel executor's disjointness
+    /// reasoning sound.
+    pub fn compile_exec(schedule: &Schedule, mesh: Mesh) -> CompiledSchedule {
+        Self::lower(schedule, mesh, true)
+    }
+
+    /// Full lowering: executor plan plus cached simulator routes.
+    pub fn compile(schedule: &Schedule, topo: &Topology) -> Result<CompiledSchedule, CompileError> {
+        let mut plan = Self::lower(schedule, topo.mesh, true);
+        plan.resolve_routes(schedule, topo)?;
+        Ok(plan)
+    }
+
+    /// Simulation-only lowering: index mapping plus cached routes,
+    /// skipping the executor analyses (direct classification, write
+    /// partitions, conflict detection, content hash) the simulator
+    /// never reads. The resulting plan is rejected by the executor;
+    /// use [`compile`](Self::compile) for a plan that does both.
+    pub fn compile_sim(
+        schedule: &Schedule,
+        topo: &Topology,
+    ) -> Result<CompiledSchedule, CompileError> {
+        let mut plan = Self::lower(schedule, topo.mesh, false);
+        plan.resolve_routes(schedule, topo)?;
+        Ok(plan)
+    }
+
+    fn lower(schedule: &Schedule, mesh: Mesh, exec: bool) -> CompiledSchedule {
+        let mut participants = vec![false; mesh.num_nodes()];
+        let mut steps = Vec::with_capacity(schedule.steps.len());
+        let mut max_stage_len = 0usize;
+        let mut total_bytes = 0u64;
+
+        for step in &schedule.steps {
+            let mut transfers = Vec::with_capacity(step.transfers.len());
+            let mut offset = 0usize;
+            for t in &step.transfers {
+                if exec {
+                    assert!(
+                        t.range.hi <= schedule.payload,
+                        "transfer range {}..{} exceeds payload {}",
+                        t.range.lo,
+                        t.range.hi,
+                        schedule.payload
+                    );
+                    assert_ne!(
+                        mesh.node_index(t.src),
+                        mesh.node_index(t.dst),
+                        "transfers never self-send ({})",
+                        t.src
+                    );
+                }
+                let src = mesh.node_index(t.src);
+                let dst = mesh.node_index(t.dst);
+                participants[src] = true;
+                participants[dst] = true;
+                transfers.push(CompiledTransfer {
+                    src,
+                    dst,
+                    lo: t.range.lo,
+                    hi: t.range.hi,
+                    op: t.op,
+                    stage: offset,
+                });
+                offset += t.range.len();
+                total_bytes += 4 * t.range.len() as u64;
+            }
+
+            let direct = exec && step_is_direct(&transfers);
+            let stage_len = if direct || !exec { 0 } else { offset };
+            max_stage_len = max_stage_len.max(stage_len);
+            let partitions = if exec { build_partitions(&transfers) } else { Vec::new() };
+            let write_conflict = if direct || !exec {
+                None
+            } else {
+                find_write_conflict(&partitions, &transfers)
+            };
+            steps.push(CompiledStep {
+                transfers,
+                direct,
+                stage_len,
+                elems: offset,
+                partitions,
+                write_conflict,
+                routes: Vec::new(),
+            });
+        }
+
+        CompiledSchedule {
+            mesh,
+            payload: schedule.payload,
+            steps,
+            participants: (0..mesh.num_nodes()).filter(|&i| participants[i]).collect(),
+            max_stage_len,
+            link_ids: Vec::new(),
+            has_routes: false,
+            has_exec: exec,
+            hash: if exec { schedule.content_hash() } else { 0 },
+            total_bytes,
+        }
+    }
+
+    fn resolve_routes(&mut self, schedule: &Schedule, topo: &Topology) -> Result<(), CompileError> {
+        let mut link_ids = Vec::new();
+        for (cstep, step) in self.steps.iter_mut().zip(&schedule.steps) {
+            let mut routes = Vec::with_capacity(step.transfers.len());
+            for t in &step.transfers {
+                let path = route(topo, t.src, t.dst)?;
+                let start = link_ids.len();
+                for w in path.windows(2) {
+                    link_ids.push(topo.mesh.link_index(Link::new(w[0], w[1])));
+                }
+                routes.push((start, link_ids.len()));
+            }
+            cstep.routes = routes;
+        }
+        self.link_ids = link_ids;
+        self.has_routes = true;
+        Ok(())
+    }
+
+    pub fn num_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn num_transfers(&self) -> usize {
+        self.steps.iter().map(|s| s.transfers.len()).sum()
+    }
+
+    pub fn mesh(&self) -> Mesh {
+        self.mesh
+    }
+
+    pub fn payload(&self) -> usize {
+        self.payload
+    }
+
+    /// [`Schedule::content_hash`] of the source schedule (0 for
+    /// simulation-only lowerings).
+    pub fn content_hash(&self) -> u64 {
+        self.hash
+    }
+
+    pub fn has_routes(&self) -> bool {
+        self.has_routes
+    }
+
+    /// Was this plan lowered with the executor analyses
+    /// ([`compile`](Self::compile) / [`compile_exec`](Self::compile_exec))?
+    pub fn is_executable(&self) -> bool {
+        self.has_exec
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    /// Is step `i` applied buffer-to-buffer (no staging copy)?
+    /// Panics if `i` is out of range or the plan is simulation-only.
+    pub fn step_direct(&self, i: usize) -> bool {
+        assert!(self.has_exec, "direct classification only exists on executable plans");
+        self.steps[i].direct
+    }
+}
+
+/// Group a step's transfers by destination node, preserving schedule
+/// order within each group.
+fn build_partitions(transfers: &[CompiledTransfer]) -> Vec<Partition> {
+    use std::collections::hash_map::Entry;
+    let mut partitions: Vec<Partition> = Vec::new();
+    let mut slot_of: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+    for (i, t) in transfers.iter().enumerate() {
+        match slot_of.entry(t.dst) {
+            Entry::Occupied(e) => partitions[*e.get()].transfer_ids.push(i as u32),
+            Entry::Vacant(e) => {
+                e.insert(partitions.len());
+                partitions.push(Partition { dst: t.dst, transfer_ids: vec![i as u32] });
+            }
+        }
+    }
+    partitions
+}
+
+/// A step is *direct* when no transfer's source range overlaps any
+/// transfer's destination range on the same node (every source is then
+/// immutable for the step, so transfers apply straight buffer-to-
+/// buffer), and no overlapping writes involve a `Copy` (those are
+/// schedule bugs routed through the staged path so its conflict check
+/// fires). Ring reduce-scatter / all-gather steps are direct by
+/// construction — node `i` sends chunk `c_i` while receiving `c_i - 1`.
+///
+/// Semantics match the executor's old O(T²) pairwise scan; this is an
+/// O(T log T) per-node interval sweep so that lowering 32x32-mesh
+/// schedules (thousands of transfers per step) stays cheap.
+fn step_is_direct(transfers: &[CompiledTransfer]) -> bool {
+    // (node, lo, hi) interval lists. Empty ranges never overlap.
+    let mut reads: Vec<(usize, usize, usize)> = Vec::with_capacity(transfers.len());
+    let mut writes: Vec<(usize, usize, usize, OpKind)> = Vec::with_capacity(transfers.len());
+    for t in transfers {
+        if t.is_empty() {
+            continue;
+        }
+        reads.push((t.src, t.lo, t.hi));
+        writes.push((t.dst, t.lo, t.hi, t.op));
+    }
+    reads.sort_unstable();
+    writes.sort_unstable_by_key(|&(n, lo, hi, _)| (n, lo, hi));
+
+    // Read/write overlap on any node forces staging.
+    let mut j = 0usize;
+    for &(rn, rlo, rhi) in &reads {
+        while j < writes.len() && (writes[j].0, writes[j].2) <= (rn, rlo) {
+            // Write is on an earlier node, or same node ending at/before
+            // this read starts.
+            j += 1;
+        }
+        // Scan forward over writes that could still overlap this read.
+        let mut k = j;
+        while k < writes.len() && writes[k].0 == rn && writes[k].1 < rhi {
+            // Same node, starts before the read ends; j-advance ensured
+            // it ends after the read starts.
+            if writes[k].2 > rlo {
+                return false;
+            }
+            k += 1;
+        }
+    }
+
+    // Overlapping writes involving a Copy force staging (the staged
+    // path's conflict check then flags the schedule bug).
+    let mut sweep = CopyOverlapSweep::default();
+    let mut cur_node = usize::MAX;
+    for &(n, lo, hi, op) in &writes {
+        if n != cur_node {
+            cur_node = n;
+            sweep = CopyOverlapSweep::default();
+        }
+        if sweep.push(lo, hi, op) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Sweep state for detecting overlapping writes to one node where at
+/// least one write is a `Copy` — the single definition of the overlap
+/// rule shared by the direct classification and the conflict reporter.
+/// Feed intervals sorted ascending by `(lo, hi)`.
+#[derive(Default)]
+struct CopyOverlapSweep {
+    max_hi: usize,
+    copy_max_hi: usize,
+}
+
+impl CopyOverlapSweep {
+    /// Returns true when this interval overlaps an earlier `Copy`, or
+    /// is itself a `Copy` overlapping any earlier write.
+    fn push(&mut self, lo: usize, hi: usize, op: OpKind) -> bool {
+        if lo < self.copy_max_hi || (lo < self.max_hi && op == OpKind::Copy) {
+            return true;
+        }
+        self.max_hi = self.max_hi.max(hi);
+        if op == OpKind::Copy {
+            self.copy_max_hi = self.copy_max_hi.max(hi);
+        }
+        false
+    }
+}
+
+/// Within a staged step, overlapping writes to one node are legal only
+/// if both are `Add` (accumulation commutes and sources are
+/// snapshotted). Any overlap involving a `Copy` is a schedule bug;
+/// return the destination so the executor can report it.
+fn find_write_conflict(
+    partitions: &[Partition],
+    transfers: &[CompiledTransfer],
+) -> Option<usize> {
+    for p in partitions {
+        if p.transfer_ids.len() < 2 {
+            continue;
+        }
+        let mut iv: Vec<(usize, usize, OpKind)> = p
+            .transfer_ids
+            .iter()
+            .map(|&i| {
+                let t = &transfers[i as usize];
+                (t.lo, t.hi, t.op)
+            })
+            .filter(|&(lo, hi, _)| lo < hi)
+            .collect();
+        iv.sort_unstable_by_key(|&(lo, hi, _)| (lo, hi));
+        let mut sweep = CopyOverlapSweep::default();
+        for &(lo, hi, op) in &iv {
+            if sweep.push(lo, hi, op) {
+                return Some(p.dst);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::allreduce::{build_schedule, Scheme};
+    use crate::collective::schedule::{ChunkRange, Step, Transfer};
+    use crate::mesh::{Coord, FailedRegion};
+
+    fn swap_step(a: Coord, b: Coord, payload: usize) -> Schedule {
+        let mut s = Schedule::new(payload);
+        s.steps.push(Step {
+            transfers: vec![
+                Transfer { src: a, dst: b, range: ChunkRange::new(0, payload), op: OpKind::Copy },
+                Transfer { src: b, dst: a, range: ChunkRange::new(0, payload), op: OpKind::Copy },
+            ],
+        });
+        s
+    }
+
+    #[test]
+    fn ring_steps_compile_direct() {
+        let topo = Topology::full(4, 4);
+        let sched = build_schedule(Scheme::OneD, &topo, 1024).unwrap();
+        let plan = CompiledSchedule::compile_exec(&sched, topo.mesh);
+        assert_eq!(plan.num_steps(), sched.num_steps());
+        assert_eq!(plan.num_transfers(), sched.num_transfers());
+        assert!(plan.steps.iter().all(|s| s.direct), "ring steps are direct by construction");
+        assert_eq!(plan.max_stage_len, 0);
+        assert_eq!(plan.participants.len(), 16);
+        assert_eq!(plan.total_bytes, sched.total_bytes());
+        assert_eq!(plan.hash, sched.content_hash());
+    }
+
+    #[test]
+    fn swap_step_compiles_staged_with_footprint() {
+        let sched = swap_step(Coord::new(0, 0), Coord::new(1, 0), 8);
+        let plan = CompiledSchedule::compile_exec(&sched, Mesh::new(2, 1));
+        assert!(!plan.steps[0].direct);
+        assert_eq!(plan.steps[0].stage_len, 16);
+        assert_eq!(plan.max_stage_len, 16);
+        assert!(plan.steps[0].write_conflict.is_none(), "disjoint dsts never conflict");
+        // Staging offsets are a packed layout.
+        assert_eq!(plan.steps[0].transfers[0].stage, 0);
+        assert_eq!(plan.steps[0].transfers[1].stage, 8);
+    }
+
+    #[test]
+    fn direct_classification_matches_pairwise_reference() {
+        // Cross-check the sweep against the obvious O(T^2) definition on
+        // every step of every scheme, full and failed.
+        let topos = [
+            Topology::full(4, 4),
+            Topology::with_failure(8, 8, FailedRegion::board(2, 2)),
+        ];
+        for topo in &topos {
+            for scheme in Scheme::ALL {
+                let Ok(sched) = build_schedule(scheme, topo, 4096) else { continue };
+                let plan = CompiledSchedule::compile_exec(&sched, topo.mesh);
+                for (step, cstep) in sched.steps.iter().zip(&plan.steps) {
+                    let mut reference = true;
+                    'outer: for (i, a) in step.transfers.iter().enumerate() {
+                        for (j, b) in step.transfers.iter().enumerate() {
+                            if a.src == b.dst && a.range.overlaps(&b.range) {
+                                reference = false;
+                                break 'outer;
+                            }
+                            if i < j
+                                && a.dst == b.dst
+                                && a.range.overlaps(&b.range)
+                                && (a.op == OpKind::Copy || b.op == OpKind::Copy)
+                            {
+                                reference = false;
+                                break 'outer;
+                            }
+                        }
+                    }
+                    assert_eq!(
+                        cstep.direct,
+                        reference,
+                        "{} step classification diverged",
+                        scheme.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partitions_cover_exactly_and_preserve_order() {
+        let topo = Topology::with_failure(8, 8, FailedRegion::host(2, 2));
+        let sched = build_schedule(Scheme::FaultTolerant, &topo, 2048).unwrap();
+        let plan = CompiledSchedule::compile_exec(&sched, topo.mesh);
+        for step in &plan.steps {
+            let mut seen = vec![false; step.transfers.len()];
+            for p in &step.partitions {
+                let mut prev = None;
+                for &i in &p.transfer_ids {
+                    let t = &step.transfers[i as usize];
+                    assert_eq!(t.dst, p.dst);
+                    assert!(!seen[i as usize]);
+                    seen[i as usize] = true;
+                    if let Some(prev) = prev {
+                        assert!(i > prev, "schedule order preserved within partition");
+                    }
+                    prev = Some(i);
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "every transfer belongs to exactly one partition");
+            // Partition destinations pairwise distinct.
+            let mut dsts: Vec<usize> = step.partitions.iter().map(|p| p.dst).collect();
+            dsts.sort_unstable();
+            dsts.dedup();
+            assert_eq!(dsts.len(), step.partitions.len());
+        }
+    }
+
+    #[test]
+    fn compile_resolves_routes_once() {
+        let topo = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        let sched = build_schedule(Scheme::FaultTolerant, &topo, 1024).unwrap();
+        let plan = CompiledSchedule::compile(&sched, &topo).unwrap();
+        assert!(plan.has_routes);
+        let mut transfers = 0;
+        for (cstep, step) in plan.steps.iter().zip(&sched.steps) {
+            assert_eq!(cstep.routes.len(), step.transfers.len());
+            for ((start, end), t) in cstep.routes.iter().zip(&step.transfers) {
+                let hops = end - start;
+                assert!(hops >= t.src.manhattan(&t.dst), "route at least minimal");
+                for &l in &plan.link_ids[*start..*end] {
+                    assert!(l < topo.mesh.num_link_slots());
+                }
+                transfers += 1;
+            }
+        }
+        assert_eq!(transfers, sched.num_transfers());
+    }
+
+    #[test]
+    fn write_conflict_detected_at_compile() {
+        let mesh = Mesh::new(3, 1);
+        let (a, b, c) = (Coord::new(0, 0), Coord::new(1, 0), Coord::new(2, 0));
+        let mut sched = Schedule::new(4);
+        sched.steps.push(Step {
+            transfers: vec![
+                Transfer { src: a, dst: c, range: ChunkRange::new(0, 2), op: OpKind::Copy },
+                Transfer { src: b, dst: c, range: ChunkRange::new(1, 3), op: OpKind::Copy },
+            ],
+        });
+        let plan = CompiledSchedule::compile_exec(&sched, mesh);
+        assert!(!plan.steps[0].direct);
+        assert_eq!(plan.steps[0].write_conflict, Some(mesh.node_index(c)));
+
+        // Overlapping Adds are legal: no conflict.
+        let mut ok = Schedule::new(4);
+        ok.steps.push(Step {
+            transfers: vec![
+                Transfer { src: a, dst: c, range: ChunkRange::new(0, 2), op: OpKind::Add },
+                Transfer { src: b, dst: c, range: ChunkRange::new(1, 3), op: OpKind::Add },
+            ],
+        });
+        let plan = CompiledSchedule::compile_exec(&ok, mesh);
+        assert!(plan.steps[0].write_conflict.is_none());
+    }
+}

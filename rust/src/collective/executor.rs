@@ -1,15 +1,36 @@
 //! Numeric schedule executor — the trainer's allreduce hot path.
 //!
 //! Each participating node owns a flat f32 buffer (the packed gradient
-//! vector produced by the L2 train-step artifact). [`execute`] applies a
-//! [`Schedule`] step by step: every transfer reads the source range *as
-//! it was at the start of the step* and either overwrites or
-//! accumulates into the destination range.
+//! vector produced by the L2 train-step artifact). Execution consumes a
+//! [`CompiledSchedule`] (see [`super::compiled`]): every transfer's
+//! node indices, staging offsets and the per-step direct/staged
+//! classification are precomputed once, so the steady-state loop does
+//! no coordinate mapping, no overlap analysis and no allocation — the
+//! staging arena is presized from the compiled max step footprint.
 //!
-//! The steady-state loop performs no allocation: a reusable staging
-//! arena is sized once per (schedule, payload) pair and reused across
-//! training steps via [`ExecutorArena`].
+//! Two execution paths share the compiled plan:
+//!
+//! - [`execute_compiled`] — the production path. Each step's transfers
+//!   are grouped into the plan's per-destination *write partitions* and
+//!   applied in parallel with scoped threads when the step moves enough
+//!   data. Within a partition writes happen in schedule order and each
+//!   buffer is written by exactly one thread, while direct-step reads
+//!   touch only ranges no transfer writes (that is what *direct*
+//!   means), so results are **bit-identical** to the serial reference
+//!   regardless of thread count — asserted by
+//!   `tests/executor_equivalence.rs`.
+//! - [`execute_compiled_serial`] — the straight-line reference
+//!   implementation (the seed executor's semantics), kept both as
+//!   documentation and as the differential-testing oracle.
+//!
+//! The legacy [`execute`] entry point lowers on first use and caches
+//! the plan in the [`ExecutorArena`], keyed by
+//! [`Schedule::content_hash`] — structurally different schedules can
+//! no longer collide the cache the way the old
+//! `(num_steps, payload, total_bytes)` fingerprint could.
 
+use super::compiled::{CompiledSchedule, CompiledStep, Partition};
+use super::kernel;
 use super::schedule::{OpKind, Schedule};
 use crate::mesh::{Coord, Mesh};
 use thiserror::Error;
@@ -22,6 +43,10 @@ pub enum ExecError {
     WrongSize(Coord, usize, usize),
     #[error("overlapping destination writes within one step at node {0}")]
     WriteConflict(Coord),
+    #[error("plan compiled for a {0}x{1} mesh, buffers belong to a {2}x{3} mesh")]
+    MeshMismatch(usize, usize, usize, usize),
+    #[error("plan was lowered for simulation only (compile_sim); lower with compile or compile_exec to execute")]
+    NotExecutable,
 }
 
 /// Per-node flat buffers, dense-indexed by mesh coordinates.
@@ -75,16 +100,13 @@ impl NodeBuffers {
     }
 }
 
-/// Reusable staging storage: one flat arena sized to the largest step.
+/// Reusable executor state: the staging arena (presized once from the
+/// compiled max step footprint) plus the cached lowering used by the
+/// legacy [`execute`] entry point.
 #[derive(Debug, Default)]
 pub struct ExecutorArena {
     stage: Vec<f32>,
-    /// (dst index, range lo, range hi, op, stage offset) per transfer.
-    plan: Vec<(usize, usize, usize, OpKind, usize)>,
-    /// Cached per-step direct-apply analysis, keyed by a schedule
-    /// fingerprint so the arena can be reused across schedules.
-    direct: Vec<bool>,
-    direct_key: (usize, usize, u64),
+    plan: Option<CompiledSchedule>,
 }
 
 impl ExecutorArena {
@@ -92,55 +114,75 @@ impl ExecutorArena {
         Self::default()
     }
 
-    /// Analyse which steps can skip staging: a step is *direct* when no
-    /// transfer's source range overlaps any transfer's destination range
-    /// (then every source is immutable for the duration of the step, so
-    /// transfers can be applied straight from buffer to buffer). Ring
-    /// reduce-scatter / all-gather steps are direct by construction —
-    /// node `i` sends chunk `c_i` while receiving chunk `c_i - 1`.
-    fn prepare(&mut self, schedule: &Schedule) {
-        let key = (schedule.steps.len(), schedule.payload, schedule.total_bytes());
-        if self.direct_key == key && !self.direct.is_empty() {
-            return;
+    fn reserve(&mut self, plan: &CompiledSchedule) {
+        if self.stage.len() < plan.max_stage_len {
+            self.stage.resize(plan.max_stage_len, 0.0);
         }
-        self.direct = schedule
-            .steps
-            .iter()
-            .map(|step| {
-                // O(T^2) on the step's transfer count, done once per
-                // (schedule, arena) pair.
-                for (i, a) in step.transfers.iter().enumerate() {
-                    for (j, b) in step.transfers.iter().enumerate() {
-                        // Read/write overlap forces staging.
-                        if a.src == b.dst && a.range.overlaps(&b.range) {
-                            return false;
-                        }
-                        // Overlapping writes involving a Copy are
-                        // schedule bugs; route them through the staged
-                        // path so its debug conflict check fires.
-                        if i < j
-                            && a.dst == b.dst
-                            && a.range.overlaps(&b.range)
-                            && (a.op == OpKind::Copy || b.op == OpKind::Copy)
-                        {
-                            return false;
-                        }
-                    }
-                }
-                true
-            })
-            .collect();
-        self.direct_key = key;
     }
 }
 
-/// Validate buffers against the schedule (sizes, presence).
-pub fn validate(schedule: &Schedule, bufs: &NodeBuffers) -> Result<(), ExecError> {
-    for node in schedule.participants() {
-        match bufs.get(node) {
-            None => return Err(ExecError::MissingBuffer(node)),
-            Some(b) if b.len() != schedule.payload => {
-                return Err(ExecError::WrongSize(node, b.len(), schedule.payload))
+/// Execution tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecOptions {
+    /// Worker threads for the parallel apply; 0 = auto (available
+    /// parallelism, capped at 16, overridable via
+    /// `MESHREDUCE_EXEC_THREADS`).
+    pub threads: usize,
+    /// Steps moving fewer elements than this run single-threaded —
+    /// spawning scoped threads for latency-bound steps would regress
+    /// small payloads.
+    pub par_min_elems: usize,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        Self { threads: 0, par_min_elems: 64 * 1024 }
+    }
+}
+
+impl ExecOptions {
+    fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        // The env override cannot meaningfully change mid-run; read it
+        // once rather than taking the process env lock every training
+        // step.
+        static ENV_OVERRIDE: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+        let overridden = *ENV_OVERRIDE.get_or_init(|| {
+            std::env::var("MESHREDUCE_EXEC_THREADS")
+                .ok()
+                .and_then(|v| v.trim().parse().ok())
+                .unwrap_or(0)
+        });
+        if overridden > 0 {
+            return overridden;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+    }
+}
+
+/// Validate buffers against a compiled plan. The mesh check is
+/// always-on: a plan lowered for a different mesh has a different
+/// dense-index layout, and executing it would scatter writes to the
+/// wrong nodes (or index out of bounds) rather than fail loudly.
+pub fn validate_plan(plan: &CompiledSchedule, bufs: &NodeBuffers) -> Result<(), ExecError> {
+    if !plan.has_exec {
+        return Err(ExecError::NotExecutable);
+    }
+    if plan.mesh != bufs.mesh {
+        return Err(ExecError::MeshMismatch(
+            plan.mesh.nx,
+            plan.mesh.ny,
+            bufs.mesh.nx,
+            bufs.mesh.ny,
+        ));
+    }
+    for &i in &plan.participants {
+        match &bufs.bufs[i] {
+            None => return Err(ExecError::MissingBuffer(plan.mesh.coord_of(i))),
+            Some(b) if b.len() != plan.payload => {
+                return Err(ExecError::WrongSize(plan.mesh.coord_of(i), b.len(), plan.payload))
             }
             _ => {}
         }
@@ -148,94 +190,234 @@ pub fn validate(schedule: &Schedule, bufs: &NodeBuffers) -> Result<(), ExecError
     Ok(())
 }
 
-/// Execute the schedule over the buffers in place.
-pub fn execute(
-    schedule: &Schedule,
+/// Base pointers of the node buffers, shared across the scoped worker
+/// threads. Soundness rests on the compiled plan's invariants:
+/// partitions of a step write pairwise-distinct buffers, writes within
+/// a partition run on one thread, and direct-step reads touch only
+/// ranges no transfer of the step writes. `validate_plan` guarantees
+/// every participant pointer is non-null with `payload` elements, and
+/// compilation bounds every range by the payload.
+struct RawBufs {
+    ptrs: Vec<*mut f32>,
+}
+
+unsafe impl Send for RawBufs {}
+unsafe impl Sync for RawBufs {}
+
+impl RawBufs {
+    fn new(bufs: &mut [Option<Vec<f32>>]) -> Self {
+        Self {
+            ptrs: bufs
+                .iter_mut()
+                .map(|b| b.as_mut().map_or(std::ptr::null_mut(), |v| v.as_mut_ptr()))
+                .collect(),
+        }
+    }
+
+    /// Shared view of `len` elements of node `i` starting at `lo`.
+    unsafe fn read(&self, i: usize, lo: usize, len: usize) -> &[f32] {
+        std::slice::from_raw_parts(self.ptrs[i].add(lo), len)
+    }
+
+    /// Exclusive view of `len` elements of node `i` starting at `lo`.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn write(&self, i: usize, lo: usize, len: usize) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(self.ptrs[i].add(lo), len)
+    }
+}
+
+/// Apply one write partition of a step. `stage` is the step's staged
+/// source snapshot (unused for direct steps).
+///
+/// Safety: the caller must ensure no other thread writes this
+/// partition's destination buffer and (for direct steps) that the
+/// plan's direct classification holds, which makes every read range
+/// disjoint from every concurrently written range.
+unsafe fn apply_partition(
+    step: &CompiledStep,
+    part: &Partition,
+    ptrs: &RawBufs,
+    stage: &[f32],
+) {
+    for &ti in &part.transfer_ids {
+        let t = &step.transfers[ti as usize];
+        let len = t.len();
+        let dst = ptrs.write(t.dst, t.lo, len);
+        if step.direct {
+            let src = ptrs.read(t.src, t.lo, len);
+            match t.op {
+                OpKind::Copy => kernel::copy(dst, src),
+                OpKind::Add => kernel::add(dst, src),
+            }
+        } else {
+            let src = &stage[t.stage..t.stage + len];
+            match t.op {
+                OpKind::Copy => kernel::copy(dst, src),
+                OpKind::Add => kernel::add(dst, src),
+            }
+        }
+    }
+}
+
+/// Snapshot all source ranges of a staged step into the arena at the
+/// compiled offsets.
+///
+/// Safety: caller must ensure no concurrent writers to the node
+/// buffers (staging is a pure read phase).
+unsafe fn stage_step(step: &CompiledStep, ptrs: &RawBufs, stage: &mut [f32]) {
+    for t in &step.transfers {
+        let len = t.len();
+        let src = ptrs.read(t.src, t.lo, len);
+        stage[t.stage..t.stage + len].copy_from_slice(src);
+    }
+}
+
+/// Execute a compiled plan with explicit options.
+pub fn execute_compiled_with(
+    plan: &CompiledSchedule,
+    bufs: &mut NodeBuffers,
+    arena: &mut ExecutorArena,
+    opts: &ExecOptions,
+) -> Result<(), ExecError> {
+    validate_plan(plan, bufs)?;
+    arena.reserve(plan);
+    let threads = opts.effective_threads();
+    let ptrs = RawBufs::new(&mut bufs.bufs);
+    for step in &plan.steps {
+        #[cfg(debug_assertions)]
+        if let Some(dst) = step.write_conflict {
+            return Err(ExecError::WriteConflict(plan.mesh.coord_of(dst)));
+        }
+        if !step.direct {
+            // Safety: read-only phase over the node buffers.
+            unsafe { stage_step(step, &ptrs, &mut arena.stage) };
+        }
+        let stage: &[f32] = &arena.stage;
+        // Scale the worker count with the step's data volume (one
+        // worker per `par_min_elems` elements) so mid-size steps spawn
+        // 2-3 threads rather than the full complement — scoped-thread
+        // spawn/join costs tens of microseconds and would otherwise
+        // erode the win on steps with ~1 ms of memory traffic.
+        let by_volume = step.elems / opts.par_min_elems.max(1);
+        let workers = threads.min(step.partitions.len()).min(by_volume);
+        if workers > 1 {
+            std::thread::scope(|scope| {
+                for w in 0..workers {
+                    let ptrs = &ptrs;
+                    scope.spawn(move || {
+                        let mut p = w;
+                        while p < step.partitions.len() {
+                            // Safety: partitions write pairwise-distinct
+                            // buffers and each is handled by exactly one
+                            // worker (`p ≡ w mod workers`); direct-step
+                            // reads are disjoint from all writes by the
+                            // compiled classification.
+                            unsafe { apply_partition(step, &step.partitions[p], ptrs, stage) };
+                            p += workers;
+                        }
+                    });
+                }
+            });
+        } else {
+            for part in &step.partitions {
+                // Safety: single-threaded apply; partition writes are
+                // exclusive trivially, staged reads come from the
+                // snapshot, direct reads are disjoint from writes.
+                unsafe { apply_partition(step, part, &ptrs, stage) };
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Execute a compiled plan (parallel across destination nodes when a
+/// step moves enough data; default options).
+pub fn execute_compiled(
+    plan: &CompiledSchedule,
     bufs: &mut NodeBuffers,
     arena: &mut ExecutorArena,
 ) -> Result<(), ExecError> {
-    validate(schedule, bufs)?;
-    arena.prepare(schedule);
-    let mesh = bufs.mesh;
-    for (step_idx, step) in schedule.steps.iter().enumerate() {
-        // Fast path: no source/destination overlap -> apply transfers
-        // buffer-to-buffer with no staging copy (half the memory
-        // traffic of the staged path).
-        if arena.direct[step_idx] {
+    execute_compiled_with(plan, bufs, arena, &ExecOptions::default())
+}
+
+/// The straight-line reference executor: applies transfers strictly in
+/// schedule order with safe borrows — the seed executor's exact
+/// semantics over the compiled plan. The parallel path must produce
+/// bit-identical buffers to this.
+pub fn execute_compiled_serial(
+    plan: &CompiledSchedule,
+    bufs: &mut NodeBuffers,
+    arena: &mut ExecutorArena,
+) -> Result<(), ExecError> {
+    validate_plan(plan, bufs)?;
+    arena.reserve(plan);
+    for step in &plan.steps {
+        #[cfg(debug_assertions)]
+        if let Some(dst) = step.write_conflict {
+            return Err(ExecError::WriteConflict(plan.mesh.coord_of(dst)));
+        }
+        if step.direct {
+            // Buffer-to-buffer, no staging copy (half the memory
+            // traffic of the staged path).
             for t in &step.transfers {
-                let si = mesh.node_index(t.src);
-                let di = mesh.node_index(t.dst);
                 let (src, dst) = bufs
-                    .pair(si, di)
-                    .ok_or(ExecError::MissingBuffer(t.src))?;
-                let s = &src[t.range.lo..t.range.hi];
-                let d = &mut dst[t.range.lo..t.range.hi];
+                    .pair(t.src, t.dst)
+                    .ok_or(ExecError::MissingBuffer(plan.mesh.coord_of(t.src)))?;
+                let s = &src[t.lo..t.hi];
+                let d = &mut dst[t.lo..t.hi];
                 match t.op {
-                    OpKind::Copy => d.copy_from_slice(s),
-                    OpKind::Add => {
-                        for (o, x) in d.iter_mut().zip(s) {
-                            *o += x;
-                        }
-                    }
+                    OpKind::Copy => kernel::copy(d, s),
+                    OpKind::Add => kernel::add(d, s),
                 }
             }
             continue;
         }
         // 1. Stage all source ranges (snapshot at step start).
-        arena.plan.clear();
-        let mut offset = 0;
         for t in &step.transfers {
-            let len = t.range.len();
-            if arena.stage.len() < offset + len {
-                arena.stage.resize(offset + len, 0.0);
-            }
-            let src = bufs
-                .get(t.src)
-                .ok_or(ExecError::MissingBuffer(t.src))?;
-            arena.stage[offset..offset + len].copy_from_slice(&src[t.range.lo..t.range.hi]);
-            arena
-                .plan
-                .push((mesh.node_index(t.dst), t.range.lo, t.range.hi, t.op, offset));
-            offset += len;
+            let src = bufs.bufs[t.src]
+                .as_deref()
+                .ok_or(ExecError::MissingBuffer(plan.mesh.coord_of(t.src)))?;
+            arena.stage[t.stage..t.stage + t.len()].copy_from_slice(&src[t.lo..t.hi]);
         }
-
-        // Debug-only conflict check: overlapping writes to one node
-        // within a step are only legal if both are `Add` (accumulation
-        // commutes and sources are snapshotted; e.g. several yellow
-        // rings forwarding the same chunk range into one blue node when
-        // the failed region sits at a mesh edge). Any overlap involving
-        // a `Copy` is a real schedule bug.
-        #[cfg(debug_assertions)]
-        {
-            let mut writes: Vec<(usize, usize, usize, OpKind)> =
-                arena.plan.iter().map(|&(d, lo, hi, op, _)| (d, lo, hi, op)).collect();
-            writes.sort_unstable_by_key(|&(d, lo, _, _)| (d, lo));
-            for w in writes.windows(2) {
-                let overlap = w[0].0 == w[1].0 && w[1].1 < w[0].2;
-                if overlap && (w[0].3 == OpKind::Copy || w[1].3 == OpKind::Copy) {
-                    return Err(ExecError::WriteConflict(mesh.coord_of(w[0].0)));
-                }
-            }
-        }
-
         // 2. Apply.
-        for &(dst_i, lo, hi, op, off) in &arena.plan {
-            let dst = bufs.bufs[dst_i]
+        for t in &step.transfers {
+            let dst = bufs.bufs[t.dst]
                 .as_mut()
-                .ok_or_else(|| ExecError::MissingBuffer(mesh.coord_of(dst_i)))?;
-            let src = &arena.stage[off..off + (hi - lo)];
-            let out = &mut dst[lo..hi];
-            match op {
-                OpKind::Copy => out.copy_from_slice(src),
-                OpKind::Add => {
-                    for (o, s) in out.iter_mut().zip(src) {
-                        *o += s;
-                    }
-                }
+                .ok_or(ExecError::MissingBuffer(plan.mesh.coord_of(t.dst)))?;
+            let src = &arena.stage[t.stage..t.stage + t.len()];
+            let out = &mut dst[t.lo..t.hi];
+            match t.op {
+                OpKind::Copy => kernel::copy(out, src),
+                OpKind::Add => kernel::add(out, src),
             }
         }
     }
     Ok(())
+}
+
+/// Execute the schedule over the buffers in place (legacy entry point:
+/// lowers on first use and caches the plan in the arena, keyed by the
+/// schedule's content hash).
+///
+/// Panics if the schedule is malformed — self-send transfers or
+/// ranges beyond the payload (see [`CompiledSchedule::compile_exec`]);
+/// those invariants are what make the parallel apply sound. Every
+/// in-tree schedule builder upholds them.
+pub fn execute(
+    schedule: &Schedule,
+    bufs: &mut NodeBuffers,
+    arena: &mut ExecutorArena,
+) -> Result<(), ExecError> {
+    let hash = schedule.content_hash();
+    let mesh = bufs.mesh;
+    let stale = !matches!(&arena.plan, Some(p) if p.hash == hash && p.mesh == mesh);
+    if stale {
+        arena.plan = Some(CompiledSchedule::compile_exec(schedule, mesh));
+    }
+    let plan = arena.plan.take().expect("plan just ensured");
+    let result = execute_compiled(&plan, bufs, arena);
+    arena.plan = Some(plan);
+    result
 }
 
 /// Convenience wrapper allocating a throwaway arena.
@@ -356,6 +538,69 @@ mod tests {
             for c in topo.live_nodes() {
                 assert!(bufs.get(c).unwrap().iter().all(|&x| (x - 16.0).abs() < 1e-4));
             }
+        }
+    }
+
+    // The arena-fingerprint-collision regression (equal-sized but
+    // structurally different schedules sharing one arena) is covered
+    // end-to-end by `shared_arena_across_equal_sized_schedules_regression`
+    // in tests/executor_equivalence.rs.
+
+    #[test]
+    fn mesh_mismatch_detected() {
+        // Same node count, different layout: executing would scatter
+        // writes to the wrong nodes, so it must fail loudly.
+        let topo = Topology::full(4, 4);
+        let sched = build_schedule(Scheme::OneD, &topo, 16).unwrap();
+        let plan = CompiledSchedule::compile_exec(&sched, topo.mesh);
+        let other = Mesh::new(2, 8);
+        let mut bufs = NodeBuffers::new(other);
+        for c in other.coords() {
+            bufs.insert(c, vec![0.0; 16]);
+        }
+        assert_eq!(
+            execute_compiled(&plan, &mut bufs, &mut ExecutorArena::new()),
+            Err(ExecError::MeshMismatch(4, 4, 2, 8))
+        );
+    }
+
+    #[test]
+    fn sim_only_plan_rejected() {
+        let topo = Topology::full(4, 4);
+        let sched = build_schedule(Scheme::OneD, &topo, 16).unwrap();
+        let plan = CompiledSchedule::compile_sim(&sched, &topo).unwrap();
+        let mut bufs = NodeBuffers::new(topo.mesh);
+        for c in topo.live_nodes() {
+            bufs.insert(c, vec![0.0; 16]);
+        }
+        assert_eq!(
+            execute_compiled(&plan, &mut bufs, &mut ExecutorArena::new()),
+            Err(ExecError::NotExecutable)
+        );
+    }
+
+    #[test]
+    fn parallel_matches_serial_when_forced() {
+        // Force the threaded path even at tiny payloads.
+        let topo = Topology::full(4, 4);
+        let sched = build_schedule(Scheme::FaultTolerant, &topo, 512).unwrap();
+        let plan = CompiledSchedule::compile_exec(&sched, topo.mesh);
+        let fill = |bufs: &mut NodeBuffers| {
+            for (k, c) in topo.live_nodes().into_iter().enumerate() {
+                bufs.insert(c, (0..512).map(|i| ((i * 7 + k * 13) % 31) as f32 - 15.0).collect());
+            }
+        };
+        let mut serial = NodeBuffers::new(topo.mesh);
+        fill(&mut serial);
+        execute_compiled_serial(&plan, &mut serial, &mut ExecutorArena::new()).unwrap();
+
+        let mut parallel = NodeBuffers::new(topo.mesh);
+        fill(&mut parallel);
+        let opts = ExecOptions { threads: 4, par_min_elems: 1 };
+        execute_compiled_with(&plan, &mut parallel, &mut ExecutorArena::new(), &opts).unwrap();
+
+        for c in topo.live_nodes() {
+            assert_eq!(serial.get(c).unwrap(), parallel.get(c).unwrap(), "node {c}");
         }
     }
 }

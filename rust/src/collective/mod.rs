@@ -4,16 +4,29 @@
 //! - [`schedule`] — the transfer-level IR shared by the executor and
 //!   the DES, plus ring reduce-scatter / all-gather builders;
 //! - [`allreduce`] — per-scheme schedule compilation ([`Scheme`]);
+//! - [`compiled`] — the one-pass lowering to an index-based plan
+//!   ([`CompiledSchedule`]): node indices, direct/staged
+//!   classification, staging layout, per-node write partitions and
+//!   cached simulator routes;
 //! - [`executor`] — numeric execution over per-node buffers (the
-//!   trainer's allreduce);
+//!   trainer's allreduce): a parallel production path over the
+//!   compiled write partitions plus the serial reference;
+//! - [`kernel`] — the chunk accumulate/copy inner loops shared with
+//!   the `hotpath_reduce` bench;
 //! - [`verify`] — exact-sum correctness checks and the CDG
 //!   deadlock-freedom certificate.
 
 pub mod allreduce;
+pub mod compiled;
 pub mod executor;
+pub mod kernel;
 pub mod schedule;
 pub mod verify;
 
 pub use allreduce::{build_schedule, Scheme};
-pub use executor::{execute, execute_once, ExecutorArena, NodeBuffers};
+pub use compiled::{CompileError, CompiledSchedule};
+pub use executor::{
+    execute, execute_compiled, execute_compiled_serial, execute_compiled_with, execute_once,
+    ExecOptions, ExecutorArena, NodeBuffers,
+};
 pub use schedule::{ChunkRange, OpKind, Schedule, Step, Transfer};

@@ -120,6 +120,40 @@ impl Schedule {
     pub fn then(&mut self, other: StepSeq) {
         self.steps.extend(other);
     }
+
+    /// Content hash over payload, step structure and every transfer.
+    ///
+    /// This is the identity key for compiled-plan caches
+    /// ([`crate::collective::compiled::CompiledSchedule`] and
+    /// [`crate::collective::executor::ExecutorArena`]). Unlike the old
+    /// `(num_steps, payload, total_bytes)` fingerprint it cannot
+    /// collide for structurally different schedules of equal size —
+    /// e.g. two 4x4 schemes over the same payload.
+    pub fn content_hash(&self) -> u64 {
+        let mut h = mix(0x6d65_7368_7265_6475, self.payload as u64);
+        for step in &self.steps {
+            // Step boundary marker: moving a transfer across a barrier
+            // must change the hash even if the flat transfer list is
+            // unchanged.
+            h = mix(h, 0x5354_4550_u64); // "STEP"
+            for t in &step.transfers {
+                h = mix(h, ((t.src.x as u64) << 32) | t.src.y as u64);
+                h = mix(h, ((t.dst.x as u64) << 32) | t.dst.y as u64);
+                h = mix(h, ((t.range.lo as u64) << 1) | (t.op == OpKind::Add) as u64);
+                h = mix(h, t.range.hi as u64);
+            }
+        }
+        h
+    }
+}
+
+/// SplitMix64-style combine: strong enough that accidental collisions
+/// between real schedules are vanishingly unlikely, with no allocation.
+fn mix(h: u64, v: u64) -> u64 {
+    let mut x = (h ^ v).wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
 }
 
 /// A raw sequence of steps (building block before assembly).
@@ -305,5 +339,49 @@ mod tests {
     fn empty_range_produces_no_steps() {
         let ring = ring4();
         assert!(ring_reduce_scatter(&ring, ChunkRange::new(3, 3)).is_empty());
+    }
+
+    #[test]
+    fn content_hash_distinguishes_equal_sized_schedules() {
+        // Two schedules with identical (num_steps, payload, total_bytes)
+        // — the old arena fingerprint — but different structure.
+        let a = Coord::new(0, 0);
+        let b = Coord::new(1, 0);
+        let mut s1 = Schedule::new(4);
+        s1.steps.push(Step {
+            transfers: vec![
+                Transfer { src: a, dst: b, range: ChunkRange::new(0, 2), op: OpKind::Copy },
+                Transfer { src: b, dst: a, range: ChunkRange::new(2, 4), op: OpKind::Copy },
+            ],
+        });
+        let mut s2 = Schedule::new(4);
+        s2.steps.push(Step {
+            transfers: vec![
+                Transfer { src: a, dst: b, range: ChunkRange::new(0, 2), op: OpKind::Copy },
+                Transfer { src: b, dst: a, range: ChunkRange::new(0, 2), op: OpKind::Copy },
+            ],
+        });
+        assert_eq!(s1.num_steps(), s2.num_steps());
+        assert_eq!(s1.payload, s2.payload);
+        assert_eq!(s1.total_bytes(), s2.total_bytes());
+        assert_ne!(s1.content_hash(), s2.content_hash());
+    }
+
+    #[test]
+    fn content_hash_stable_and_sensitive() {
+        let ring = ring4();
+        let mut s = Schedule::new(16);
+        s.then(ring_allreduce(&ring, ChunkRange::new(0, 16)));
+        let h = s.content_hash();
+        assert_eq!(h, s.content_hash(), "hash must be deterministic");
+        // Op flip changes the hash.
+        let mut s2 = s.clone();
+        s2.steps[0].transfers[0].op = OpKind::Copy;
+        assert_ne!(h, s2.content_hash());
+        // Merging two steps into one (same flat transfer list) changes it.
+        let mut s3 = s.clone();
+        let moved = s3.steps.remove(1);
+        s3.steps[0].transfers.extend(moved.transfers);
+        assert_ne!(h, s3.content_hash());
     }
 }

@@ -111,11 +111,16 @@ impl Coordinator {
     fn handle_failure(&mut self, ev: FailureEvent) -> Result<(), CoordError> {
         match self.cfg.policy {
             RecoveryPolicy::FaultTolerant => {
-                // The paper's scheme: rebuild rings, keep going.
+                // The paper's scheme: rebuild rings and recompile the
+                // allreduce plan on the degraded mesh, keep going.
                 let rebuild_s = self.trainer.inject_failure(ev.region)?;
-                self.trainer
-                    .metrics
-                    .annotate(self.trainer.step, format!("rings rebuilt in {rebuild_s:.4}s"));
+                let (steps, transfers) = self.trainer.schedule_info();
+                self.trainer.metrics.annotate(
+                    self.trainer.step,
+                    format!(
+                        "rings rebuilt in {rebuild_s:.4}s (plan: {steps} steps, {transfers} transfers)"
+                    ),
+                );
                 Ok(())
             }
             RecoveryPolicy::SubMesh => {

@@ -11,9 +11,14 @@
 //! xla_extension 0.5.1 backing the published `xla` crate rejects
 //! jax>=0.5 serialized protos (64-bit instruction ids), while the text
 //! parser reassigns ids — see /opt/xla-example/README.md.
+//!
+//! Offline builds use [`xla_stub`], an API-identical stand-in that
+//! fails at client creation; every caller (trainer, tests, benches)
+//! already skips gracefully when the runtime or artifacts are missing.
 
 pub mod artifact;
 pub mod pjrt;
+pub(crate) mod xla_stub;
 
 pub use artifact::{ArtifactSet, ModelMeta};
 pub use pjrt::{CombineExec, Runtime, SgdExec, TrainStepExec};

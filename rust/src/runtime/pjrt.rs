@@ -1,6 +1,10 @@
 //! PJRT client wrapper and typed executable wrappers.
 
 use super::artifact::ArtifactSet;
+// Offline build: the PJRT surface is provided by the in-tree stub.
+// Vendor the `xla` crate and swap this import to enable the real
+// backend (see `super::xla_stub` docs).
+use super::xla_stub as xla;
 use std::path::Path;
 use std::sync::Arc;
 use thiserror::Error;

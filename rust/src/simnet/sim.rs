@@ -1,15 +1,35 @@
 //! The schedule-timing simulator.
+//!
+//! The hot entry point is [`simulate_plan`], which consumes a
+//! [`CompiledSchedule`] carrying cached per-transfer link-route ids —
+//! repeated simulations on an unchanged topology (payload sweeps, the
+//! MLPerf tables, the coordinator's what-if checks) resolve every
+//! route exactly once at compile time instead of once per `simulate`
+//! call. [`simulate`] is the compile-and-run convenience wrapper.
 
 use super::link::LinkModel;
 use super::stats::LinkStats;
+use crate::collective::compiled::{CompileError, CompiledSchedule};
 use crate::collective::Schedule;
-use crate::mesh::{route, Link, RouteError, Topology};
+use crate::mesh::{RouteError, Topology};
 use thiserror::Error;
 
 #[derive(Debug, Error)]
 pub enum SimError {
     #[error("transfer route failed: {0}")]
     Route(#[from] RouteError),
+    #[error("plan was lowered without routes (compile_exec); use CompiledSchedule::compile")]
+    NoRoutes,
+}
+
+impl From<CompileError> for SimError {
+    fn from(e: CompileError) -> Self {
+        // Flatten lowering errors to the variants callers matched on
+        // before the compiled-schedule IR existed.
+        match e {
+            CompileError::Route(r) => SimError::Route(r),
+        }
+    }
 }
 
 /// Simulation result: makespan, per-step times and link statistics.
@@ -55,41 +75,34 @@ pub fn simulate(
     topo: &Topology,
     model: &LinkModel,
 ) -> Result<SimReport, SimError> {
-    let mesh = topo.mesh;
+    // Simulation-only lowering: skips the executor analyses
+    // (partitions, direct classification) this replay never reads.
+    let plan = CompiledSchedule::compile_sim(schedule, topo)?;
+    simulate_plan(&plan, model)
+}
+
+/// Simulate a pre-compiled plan (see [`simulate`] for the dependency
+/// model). Routes were resolved once at compile time; each call only
+/// replays the admission/contention logic, which depends on the mutable
+/// per-call link and node clocks.
+pub fn simulate_plan(plan: &CompiledSchedule, model: &LinkModel) -> Result<SimReport, SimError> {
+    if !plan.has_routes {
+        return Err(SimError::NoRoutes);
+    }
+    let mesh = plan.mesh;
     let mut links = LinkStats::new(mesh);
     let mut link_free = vec![0.0f64; mesh.num_link_slots()];
     // Per-node completion time of all work up to the previous step.
     let mut node_prev = vec![0.0f64; mesh.num_nodes()];
     let mut node_cur = vec![0.0f64; mesh.num_nodes()];
-    let mut step_times = Vec::with_capacity(schedule.steps.len());
-    let mut injected: u64 = 0;
+    let mut step_times = Vec::with_capacity(plan.steps.len());
     let mut makespan = 0.0f64;
+    let mut order: Vec<usize> = Vec::new();
 
-    for step in &schedule.steps {
+    for step in &plan.steps {
         let step_start_min = node_prev.iter().copied().fold(f64::INFINITY, f64::min);
         let mut step_end = step_start_min.max(0.0);
         node_cur.copy_from_slice(&node_prev);
-
-        // Resolve routes once.
-        let mut pending: Vec<(Vec<usize>, u64, usize, usize, usize)> =
-            Vec::with_capacity(step.transfers.len());
-        for t in &step.transfers {
-            let path = route(topo, t.src, t.dst)?;
-            let hops = path.len().saturating_sub(1);
-            let link_ids: Vec<usize> = path
-                .windows(2)
-                .map(|w| mesh.link_index(Link::new(w[0], w[1])))
-                .collect();
-            let bytes = 4 * t.range.len() as u64;
-            injected += bytes;
-            pending.push((
-                link_ids,
-                bytes,
-                hops,
-                mesh.node_index(t.src),
-                mesh.node_index(t.dst),
-            ));
-        }
 
         // Admission: order transfers by their dataflow readiness (then
         // by index for determinism) and assign start times in one pass.
@@ -98,31 +111,30 @@ pub fn simulate(
         // the paper's configurations (see EXPERIMENTS.md §Perf) while
         // being ~20x slower on 32x32 meshes, so the single pass is the
         // production path.
-        let mut order: Vec<usize> = (0..pending.len()).collect();
+        order.clear();
+        order.extend(0..step.transfers.len());
         order.sort_by(|&a, &b| {
-            let da = node_prev[pending[a].3].max(node_prev[pending[a].4]);
-            let db = node_prev[pending[b].3].max(node_prev[pending[b].4]);
+            let (ta, tb) = (&step.transfers[a], &step.transfers[b]);
+            let da = node_prev[ta.src].max(node_prev[ta.dst]);
+            let db = node_prev[tb.src].max(node_prev[tb.dst]);
             da.partial_cmp(&db).unwrap().then(a.cmp(&b))
         });
-        for i in order {
-            let (link_ids, bytes, hops, src, dst) = &pending[i];
-            let dep = node_prev[*src].max(node_prev[*dst]);
-            let start = link_ids.iter().map(|&l| link_free[l]).fold(dep, f64::max);
-            let stream = model.serialization_s(*bytes);
-            let finish = start + model.msg_overhead_s + *hops as f64 * model.hop_latency_s + stream;
-            for &l in link_ids {
+        for &i in &order {
+            let t = &step.transfers[i];
+            let (rs, re) = step.routes[i];
+            let route_links = &plan.link_ids[rs..re];
+            let hops = route_links.len();
+            let bytes = 4 * t.len() as u64;
+            let dep = node_prev[t.src].max(node_prev[t.dst]);
+            let start = route_links.iter().map(|&l| link_free[l]).fold(dep, f64::max);
+            let stream = model.serialization_s(bytes);
+            let finish = start + model.msg_overhead_s + hops as f64 * model.hop_latency_s + stream;
+            for &l in route_links {
                 link_free[l] = start + stream;
-                links.record(
-                    Link::new(
-                        mesh.coord_of(l / 4),
-                        mesh.step(mesh.coord_of(l / 4), crate::mesh::Dir::ALL[l % 4]).unwrap(),
-                    ),
-                    *bytes,
-                    stream,
-                );
+                links.record_idx(l, bytes, stream);
             }
-            node_cur[*src] = node_cur[*src].max(finish);
-            node_cur[*dst] = node_cur[*dst].max(finish);
+            node_cur[t.src] = node_cur[t.src].max(finish);
+            node_cur[t.dst] = node_cur[t.dst].max(finish);
             step_end = step_end.max(finish);
             makespan = makespan.max(finish);
         }
@@ -137,7 +149,7 @@ pub fn simulate(
         step_times_s: step_times,
         links,
         bottleneck_utilization: bottleneck,
-        injected_bytes: injected,
+        injected_bytes: plan.total_bytes,
     })
 }
 
@@ -298,6 +310,49 @@ mod tests {
         let ratio = t_ft.makespan_s / t_full.makespan_s;
         assert!(ratio > 1.0, "FT should cost more: {ratio}");
         assert!(ratio < 2.5, "FT overhead should be bounded: {ratio}");
+    }
+
+    #[test]
+    fn plan_reuse_matches_fresh_simulation() {
+        // The cached-route path must be observationally identical to
+        // compile-and-simulate, call after call.
+        let topo = Topology::with_failure(8, 8, FailedRegion::host(2, 2));
+        let sched = build_schedule(Scheme::FaultTolerant, &topo, 1 << 14).unwrap();
+        let model = LinkModel::tpu_v3();
+        let fresh = simulate(&sched, &topo, &model).unwrap();
+        let plan = crate::collective::CompiledSchedule::compile(&sched, &topo).unwrap();
+        for _ in 0..3 {
+            let r = simulate_plan(&plan, &model).unwrap();
+            assert_eq!(r.makespan_s, fresh.makespan_s);
+            assert_eq!(r.injected_bytes, fresh.injected_bytes);
+            assert_eq!(r.step_times_s, fresh.step_times_s);
+            assert_eq!(r.links.total_bytes(), fresh.links.total_bytes());
+        }
+    }
+
+    #[test]
+    fn routeless_plan_rejected() {
+        let topo = Topology::full(4, 4);
+        let sched = build_schedule(Scheme::OneD, &topo, 64).unwrap();
+        let plan = crate::collective::CompiledSchedule::compile_exec(&sched, topo.mesh);
+        assert!(matches!(simulate_plan(&plan, &model()), Err(SimError::NoRoutes)));
+    }
+
+    #[test]
+    fn sim_only_and_full_lowerings_agree() {
+        use crate::collective::CompiledSchedule;
+        let topo = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        let sched = build_schedule(Scheme::FaultTolerant, &topo, 1 << 12).unwrap();
+        let model = LinkModel::tpu_v3();
+        let slim = CompiledSchedule::compile_sim(&sched, &topo).unwrap();
+        assert!(!slim.is_executable());
+        let full = CompiledSchedule::compile(&sched, &topo).unwrap();
+        assert!(full.is_executable());
+        let a = simulate_plan(&slim, &model).unwrap();
+        let b = simulate_plan(&full, &model).unwrap();
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.step_times_s, b.step_times_s);
+        assert_eq!(a.injected_bytes, b.injected_bytes);
     }
 
     #[test]

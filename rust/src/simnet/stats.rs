@@ -18,10 +18,16 @@ impl LinkStats {
     }
 
     pub fn record(&mut self, link: Link, bytes: u64, busy_s: f64) {
-        let i = self.mesh.link_index(link);
-        self.bytes[i] += bytes;
-        self.busy_s[i] += busy_s;
-        self.transfers[i] += 1;
+        self.record_idx(self.mesh.link_index(link), bytes, busy_s);
+    }
+
+    /// Record by dense link index ([`Mesh::link_index`]) — the hot path
+    /// for the simulator, which carries cached link ids and must not
+    /// reconstruct `Link` values per transfer per call.
+    pub fn record_idx(&mut self, idx: usize, bytes: u64, busy_s: f64) {
+        self.bytes[idx] += bytes;
+        self.busy_s[idx] += busy_s;
+        self.transfers[idx] += 1;
     }
 
     pub fn bytes_on(&self, link: Link) -> u64 {

@@ -23,7 +23,7 @@ pub mod metrics;
 pub mod optimizer;
 
 use crate::collective::{
-    build_schedule, execute, ExecutorArena, NodeBuffers, Schedule, Scheme,
+    build_schedule, execute_compiled, CompiledSchedule, ExecutorArena, NodeBuffers, Scheme,
 };
 use crate::mesh::{FailedRegion, Topology};
 use crate::runtime::{ArtifactSet, Runtime, TrainStepExec};
@@ -89,7 +89,10 @@ impl TrainerConfig {
 pub struct DataParallelTrainer {
     cfg: TrainerConfig,
     topo: Topology,
-    schedule: Schedule,
+    /// Allreduce plan, lowered once per topology change and reused
+    /// across training steps (coord→index mapping, staging layout and
+    /// write partitions are not re-derived per step).
+    plan: CompiledSchedule,
     exec: Arc<TrainStepExec>,
     pub params: Vec<f32>,
     opt: SgdOptimizer,
@@ -108,10 +111,11 @@ impl DataParallelTrainer {
         let corpus = SyntheticCorpus::new(set.meta.vocab, cfg.seed);
         let topo = Topology::full(cfg.nx, cfg.ny);
         let schedule = build_schedule(cfg.scheme, &topo, params.len())?;
+        let plan = CompiledSchedule::compile_exec(&schedule, topo.mesh);
         Ok(Self {
             cfg,
             topo,
-            schedule,
+            plan,
             exec,
             params,
             opt,
@@ -134,6 +138,11 @@ impl DataParallelTrainer {
         self.params.len()
     }
 
+    /// (steps, transfers) of the current compiled allreduce plan.
+    pub fn schedule_info(&self) -> (usize, usize) {
+        (self.plan.num_steps(), self.plan.num_transfers())
+    }
+
     /// Inject a failed region mid-run: the paper's availability story.
     /// Rebuilds the ring plan and schedule on the degraded mesh; dead
     /// workers simply stop contributing. Returns the rebuild time.
@@ -154,8 +163,10 @@ impl DataParallelTrainer {
             return Err(TrainError::BadFailure("mesh disconnected".into()));
         }
         let schedule = build_schedule(self.cfg.scheme, &topo, self.params.len())?;
+        // Failure-triggered reroute: lower the new schedule once; every
+        // subsequent step reuses the compiled plan.
+        self.plan = CompiledSchedule::compile_exec(&schedule, topo.mesh);
         self.topo = topo;
-        self.schedule = schedule;
         self.metrics.annotate(self.step, format!("failure injected: {region:?}"));
         Ok(t0.elapsed().as_secs_f64())
     }
@@ -187,7 +198,7 @@ impl DataParallelTrainer {
 
         // --- allreduce phase: the paper's contribution.
         let t1 = std::time::Instant::now();
-        execute(&self.schedule, &mut bufs, &mut self.arena)?;
+        execute_compiled(&self.plan, &mut bufs, &mut self.arena)?;
         let allreduce_s = t1.elapsed().as_secs_f64();
 
         if self.cfg.verify_allreduce {

@@ -68,6 +68,60 @@ pub fn quick_mode() -> bool {
     std::env::args().any(|a| a == "--quick") || std::env::var("MESHREDUCE_BENCH_QUICK").is_ok()
 }
 
+/// Machine-readable bench record, written as a JSON array so CI can
+/// track the perf trajectory (`BENCH_allreduce.json`). Hand-rolled —
+/// the offline build has no serde.
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    entries: Vec<String>,
+}
+
+impl JsonReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one entry. `extra` holds additional numeric fields, e.g.
+    /// `[("speedup", 1.9)]`.
+    pub fn push(&mut self, name: &str, mean_s: f64, gbps: f64, extra: &[(&str, f64)]) {
+        let mut fields = format!(
+            "{{\"name\":\"{}\",\"mean_s\":{:.9},\"gbps\":{:.4}",
+            json_escape(name),
+            mean_s,
+            gbps
+        );
+        for (k, v) in extra {
+            fields.push_str(&format!(",\"{}\":{:.6}", json_escape(k), v));
+        }
+        fields.push('}');
+        self.entries.push(fields);
+    }
+
+    pub fn render(&self) -> String {
+        format!("[\n  {}\n]\n", self.entries.join(",\n  "))
+    }
+
+    /// Write to `path`, or to the `MESHREDUCE_BENCH_JSON` env override
+    /// when set. Returns the path written.
+    pub fn write(&self, default_path: &str) -> std::io::Result<String> {
+        let path =
+            std::env::var("MESHREDUCE_BENCH_JSON").unwrap_or_else(|_| default_path.to_string());
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            c if (c as u32) < 0x20 => ' '.to_string().chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,5 +141,19 @@ mod tests {
         let r = bench("sleep", 0, 3, || std::thread::sleep(std::time::Duration::from_millis(2)));
         assert!(r.mean_s() >= 2e-3);
         assert!(r.mean_s() < 50e-3);
+    }
+
+    #[test]
+    fn json_report_renders_valid_entries() {
+        let mut j = JsonReport::new();
+        j.push("a \"quoted\" name", 0.5, 12.0, &[("speedup", 1.5)]);
+        j.push("plain", 1.0, 3.0, &[]);
+        let out = j.render();
+        assert!(out.starts_with("[\n"));
+        assert!(out.trim_end().ends_with(']'));
+        assert!(out.contains("\\\"quoted\\\""));
+        assert!(out.contains("\"speedup\":1.500000"));
+        assert!(out.contains("\"mean_s\":1.000000000"));
+        assert_eq!(out.matches('{').count(), 2);
     }
 }

@@ -1,0 +1,186 @@
+//! Differential testing of the executor paths: the parallel
+//! write-partition executor must produce **bit-identical** buffers to
+//! the serial reference for every scheme on full and failed meshes,
+//! and both must equal the exact integer global sum.
+//!
+//! Also the regression test for the old arena-fingerprint collision:
+//! structurally different schedules with equal
+//! `(num_steps, payload, total_bytes)` must not share a cached
+//! analysis.
+
+use meshreduce::collective::verify::{expected_sum, int_buffer};
+use meshreduce::collective::{
+    build_schedule, execute, execute_compiled_serial, execute_compiled_with, ChunkRange,
+    CompiledSchedule, ExecOptions, ExecutorArena, NodeBuffers, OpKind, Schedule, Scheme, Step,
+    Transfer,
+};
+use meshreduce::mesh::{Coord, FailedRegion, Mesh, Topology};
+
+fn filled(topo: &Topology, payload: usize, seed: u64) -> NodeBuffers {
+    let mut bufs = NodeBuffers::new(topo.mesh);
+    for node in topo.live_nodes() {
+        bufs.insert(node, int_buffer(node, payload, seed));
+    }
+    bufs
+}
+
+fn topologies() -> Vec<(String, Topology)> {
+    vec![
+        ("4x4 full".into(), Topology::full(4, 4)),
+        ("8x8 full".into(), Topology::full(8, 8)),
+        ("4x4 board".into(), Topology::with_failure(4, 4, FailedRegion::board(0, 0))),
+        ("8x8 host".into(), Topology::with_failure(8, 8, FailedRegion::host(2, 2))),
+    ]
+}
+
+#[test]
+fn parallel_bit_identical_to_serial_all_schemes() {
+    let payload = 4096;
+    let seed = 42;
+    // Force the threaded path regardless of step size, at several
+    // thread counts (1 exercises the partition-ordered serial apply).
+    for threads in [1usize, 2, 7] {
+        let opts = ExecOptions { threads, par_min_elems: 1 };
+        for (name, topo) in topologies() {
+            for scheme in Scheme::ALL {
+                let Ok(sched) = build_schedule(scheme, &topo, payload) else {
+                    // 2-D basic rejects failures; that is expected.
+                    assert!(
+                        scheme == Scheme::TwoD && topo.has_failures(),
+                        "{} unexpectedly unsupported on {name}",
+                        scheme.name()
+                    );
+                    continue;
+                };
+                let plan = CompiledSchedule::compile_exec(&sched, topo.mesh);
+
+                let mut serial = filled(&topo, payload, seed);
+                execute_compiled_serial(&plan, &mut serial, &mut ExecutorArena::new())
+                    .expect("serial");
+
+                let mut parallel = filled(&topo, payload, seed);
+                execute_compiled_with(&plan, &mut parallel, &mut ExecutorArena::new(), &opts)
+                    .expect("parallel");
+
+                let want = expected_sum(&topo, payload, seed);
+                for node in topo.live_nodes() {
+                    let s = serial.get(node).unwrap();
+                    let p = parallel.get(node).unwrap();
+                    assert_eq!(
+                        s,
+                        p,
+                        "{} on {name} ({threads} threads): node {node} diverged from serial",
+                        scheme.name()
+                    );
+                    assert_eq!(
+                        s,
+                        want.as_slice(),
+                        "{} on {name}: node {node} != exact global sum",
+                        scheme.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_bit_identical_on_staged_swap_steps() {
+    // Hand-built staged (non-direct) step: a 4-cycle value rotation
+    // where every source range is also a destination range, so the
+    // snapshot semantics are load-bearing.
+    let mesh = Mesh::new(4, 1);
+    let nodes: Vec<Coord> = (0..4).map(|x| Coord::new(x, 0)).collect();
+    let payload = 1024;
+    let mut sched = Schedule::new(payload);
+    sched.steps.push(Step {
+        transfers: (0..4)
+            .map(|i| Transfer {
+                src: nodes[i],
+                dst: nodes[(i + 1) % 4],
+                range: ChunkRange::new(0, payload),
+                op: OpKind::Copy,
+            })
+            .collect(),
+    });
+    let plan = CompiledSchedule::compile_exec(&sched, mesh);
+    assert!(!plan.step_direct(0), "full-range rotation must be staged");
+
+    let fill = |bufs: &mut NodeBuffers| {
+        for (k, &n) in nodes.iter().enumerate() {
+            bufs.insert(n, (0..payload).map(|i| (i * (k + 1)) as f32).collect());
+        }
+    };
+    let mut serial = NodeBuffers::new(mesh);
+    fill(&mut serial);
+    execute_compiled_serial(&plan, &mut serial, &mut ExecutorArena::new()).unwrap();
+
+    let opts = ExecOptions { threads: 4, par_min_elems: 1 };
+    let mut parallel = NodeBuffers::new(mesh);
+    fill(&mut parallel);
+    execute_compiled_with(&plan, &mut parallel, &mut ExecutorArena::new(), &opts).unwrap();
+
+    for (k, &n) in nodes.iter().enumerate() {
+        assert_eq!(serial.get(n).unwrap(), parallel.get(n).unwrap());
+        // Rotation: node (k+1)%4 now holds node k's original values.
+        let from = ((k + 3) % 4) + 1;
+        assert!(serial.get(n).unwrap().iter().enumerate().all(|(i, &v)| v == (i * from) as f32));
+    }
+}
+
+#[test]
+fn shared_arena_across_equal_sized_schedules_regression() {
+    // The old fingerprint `(steps.len(), payload, total_bytes)` was
+    // identical for these two schedules; reusing one arena across them
+    // silently reused a stale direct-step analysis and corrupted the
+    // second schedule's snapshot semantics.
+    let mesh = Mesh::new(2, 1);
+    let a = Coord::new(0, 0);
+    let b = Coord::new(1, 0);
+    let payload = 64;
+
+    let mut disjoint = Schedule::new(payload);
+    disjoint.steps.push(Step {
+        transfers: vec![
+            Transfer { src: a, dst: b, range: ChunkRange::new(0, 32), op: OpKind::Copy },
+            Transfer { src: b, dst: a, range: ChunkRange::new(32, 64), op: OpKind::Copy },
+        ],
+    });
+    let mut swap = Schedule::new(payload);
+    swap.steps.push(Step {
+        transfers: vec![
+            Transfer { src: a, dst: b, range: ChunkRange::new(0, 32), op: OpKind::Copy },
+            Transfer { src: b, dst: a, range: ChunkRange::new(0, 32), op: OpKind::Copy },
+        ],
+    });
+    assert_eq!(disjoint.num_steps(), swap.num_steps());
+    assert_eq!(disjoint.payload, swap.payload);
+    assert_eq!(disjoint.total_bytes(), swap.total_bytes());
+
+    let fill = |bufs: &mut NodeBuffers| {
+        bufs.insert(a, (0..payload).map(|i| i as f32).collect());
+        bufs.insert(b, (0..payload).map(|i| (1000 + i) as f32).collect());
+    };
+
+    let mut arena = ExecutorArena::new();
+    let mut bufs = NodeBuffers::new(mesh);
+    fill(&mut bufs);
+    execute(&disjoint, &mut bufs, &mut arena).unwrap();
+
+    // Same arena, second schedule: the swap must read pre-step values.
+    let mut bufs = NodeBuffers::new(mesh);
+    fill(&mut bufs);
+    execute(&swap, &mut bufs, &mut arena).unwrap();
+    for i in 0..32 {
+        assert_eq!(bufs.get(b).unwrap()[i], i as f32, "b[{i}] must hold a's original value");
+        assert_eq!(
+            bufs.get(a).unwrap()[i],
+            (1000 + i) as f32,
+            "a[{i}] must hold b's original value"
+        );
+    }
+    for i in 32..64 {
+        assert_eq!(bufs.get(a).unwrap()[i], i as f32);
+        assert_eq!(bufs.get(b).unwrap()[i], (1000 + i) as f32);
+    }
+}
