@@ -1,49 +1,192 @@
-//! Availability demo (DESIGN.md experiment E11): a 4x2 host (8 chips)
-//! dies mid-training and the job keeps going — the paper's headline
-//! availability claim — compared against the "sub-mesh restart"
-//! alternative from the paper's introduction.
+//! Availability demo (DESIGN.md experiment E11, extended by PR 2): a
+//! scenario-script timeline — two temporally overlapping failed
+//! regions, then a repair/rejoin — replayed under every recovery
+//! policy, compared against the alternatives from the paper's
+//! introduction.
 //!
 //!     cargo run --release --example failure_recovery
+//!     cargo run --release --example failure_recovery -- --scenario my.scenario
+//!
+//! Two layers:
+//!
+//! 1. **Model-driven availability record** (always runs, no PJRT or
+//!    artifacts needed): replays the scenario through the cluster
+//!    control plane, predicts steps/sec before, during and after each
+//!    fault with `perfmodel::steptime`, measures the ring-rebuild +
+//!    plan-recompile recovery latency, and writes `BENCH_recovery.json`
+//!    (path override: `MESHREDUCE_BENCH_JSON`).
+//! 2. **Live training comparison** (when the PJRT runtime and the tiny
+//!    model artifacts are available): the same scenario driven end to
+//!    end through the coordinator under fault-tolerant, sub-mesh,
+//!    adaptive and stop policies.
 
+use meshreduce::cluster::{ClusterEvent, ClusterState, Scenario};
+use meshreduce::collective::{build_schedule, CompiledSchedule, Scheme};
 use meshreduce::coordinator::policy::{largest_submesh, spare_overhead, RecoveryPolicy};
-use meshreduce::coordinator::{Coordinator, FailureEvent, JobConfig};
-use meshreduce::mesh::FailedRegion;
+use meshreduce::coordinator::{Coordinator, JobConfig};
+use meshreduce::perfmodel::predict_candidate;
 use meshreduce::runtime::Runtime;
+use meshreduce::simnet::{validate_routes, LinkModel};
 use meshreduce::trainer::TrainerConfig;
+use meshreduce::util::bench::{bench, quick_mode, JsonReport};
 
-const MESH: (usize, usize) = (8, 8);
 const STEPS: u64 = 24;
-const FAIL_AT: u64 = 10;
+const DEFAULT_SCENARIO: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/scenarios/two_fail_one_repair.scenario");
+/// Payload of the model-driven record: 4 MiB of f32 gradients.
+const MODEL_PAYLOAD: usize = 1 << 20;
+/// Nominal per-worker compute time for the model-driven record.
+const MODEL_COMPUTE_S: f64 = 0.05;
 
-fn run_policy(runtime: &Runtime, policy: RecoveryPolicy) -> anyhow::Result<()> {
-    let region = FailedRegion::host(2, 4); // 4x2, 8 chips — as in the paper
-    let mut tcfg = TrainerConfig::new("tiny", MESH.0, MESH.1);
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let path = args
+        .iter()
+        .position(|a| a == "--scenario")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or(DEFAULT_SCENARIO);
+    let sc = Scenario::load(std::path::Path::new(path))?;
+    let (nx, ny) = sc.mesh.unwrap_or((8, 8));
+    println!(
+        "failure-recovery scenario {path}: {} events on a {nx}x{ny} mesh",
+        sc.events.len()
+    );
+
+    let record = model_driven_record(&sc, nx, ny)?;
+    let written = record.write("BENCH_recovery.json")?;
+    println!("\nrecovery bench record written to {written}");
+
+    match Runtime::cpu() {
+        Ok(runtime) => {
+            let policies = [
+                RecoveryPolicy::FaultTolerant,
+                RecoveryPolicy::SubMesh,
+                RecoveryPolicy::Adaptive,
+                RecoveryPolicy::Stop,
+            ];
+            for policy in policies {
+                run_policy(&runtime, &sc, nx, ny, policy)?;
+            }
+            cost_summary(&sc, nx, ny);
+        }
+        Err(e) => {
+            println!("\nPJRT unavailable ({e}); skipping the live training comparison");
+        }
+    }
+    Ok(())
+}
+
+/// Replay the scenario on the cluster ledger and record predicted
+/// steps/sec before, during and after each fault plus the measured
+/// recovery latency (ring rebuild + plan recompile + route cache).
+fn model_driven_record(sc: &Scenario, nx: usize, ny: usize) -> anyhow::Result<JsonReport> {
+    let link = LinkModel::tpu_v3();
+    let mut cluster = ClusterState::new(nx, ny);
+    let mut report = JsonReport::new();
+    let iters = if quick_mode() { 3 } else { 10 };
+
+    let healthy = predict_candidate(&cluster.topology(), MODEL_PAYLOAD, &link, MODEL_COMPUTE_S)?;
+    println!(
+        "\nmodel-driven record (payload {} f32, compute {MODEL_COMPUTE_S}s/worker):",
+        MODEL_PAYLOAD
+    );
+    println!(
+        "  steady state       : {:3} workers, {:.4}s/step = {:.2} steps/s",
+        healthy.workers,
+        healthy.step_s,
+        1.0 / healthy.step_s
+    );
+    report.push(
+        "steady_full_mesh",
+        healthy.step_s,
+        4.0 * MODEL_PAYLOAD as f64 / healthy.allreduce_s / 1e9,
+        &[
+            ("steps_per_s", 1.0 / healthy.step_s),
+            ("workers", healthy.workers as f64),
+            ("throughput", healthy.throughput),
+        ],
+    );
+
+    for (stage, ev) in sc.events.iter().enumerate() {
+        if matches!(ev.event, ClusterEvent::CheckpointTick | ClusterEvent::Stop) {
+            continue;
+        }
+        cluster
+            .apply(&ev.event)
+            .map_err(|e| anyhow::anyhow!("scenario step {stage} invalid: {e}"))?;
+        let topo = cluster.topology();
+        // Recovery latency: what the trainer pays on the transition —
+        // rebuild the fault-tolerant rings, recompile the schedule and
+        // re-resolve the route cache on the new topology.
+        let mut plan: Option<CompiledSchedule> = None;
+        let rebuild = bench(&format!("rebuild stage {stage}"), 1, iters, || {
+            let sched =
+                build_schedule(Scheme::FaultTolerant, &topo, MODEL_PAYLOAD).expect("schedulable");
+            plan = Some(CompiledSchedule::compile(&sched, &topo).expect("routable"));
+        });
+        // Multi-hole gate: every cached route must dodge every hole.
+        validate_routes(plan.as_ref().expect("plan built"), &topo)?;
+
+        let p = predict_candidate(&topo, MODEL_PAYLOAD, &link, MODEL_COMPUTE_S)?;
+        println!(
+            "  after {:7} @{:2} : {:3} workers, {:.4}s/step = {:.2} steps/s (rebuild {:.4}s)",
+            ev.event.name(),
+            ev.at_step,
+            p.workers,
+            p.step_s,
+            1.0 / p.step_s,
+            rebuild.mean_s(),
+        );
+        report.push(
+            &format!("stage{stage}_{}", ev.event.name()),
+            p.step_s,
+            4.0 * MODEL_PAYLOAD as f64 / p.allreduce_s / 1e9,
+            &[
+                ("steps_per_s", 1.0 / p.step_s),
+                ("workers", p.workers as f64),
+                ("throughput", p.throughput),
+                ("recovery_latency_s", rebuild.mean_s()),
+            ],
+        );
+    }
+    Ok(report)
+}
+
+/// Drive the scenario end to end through the coordinator.
+fn run_policy(
+    runtime: &Runtime,
+    sc: &Scenario,
+    nx: usize,
+    ny: usize,
+    policy: RecoveryPolicy,
+) -> anyhow::Result<()> {
+    let mut tcfg = TrainerConfig::new("tiny", nx, ny);
     tcfg.verify_allreduce = true;
     let mut job = JobConfig::new(tcfg, STEPS);
     job.policy = policy;
     job.checkpoint_every = Some(8);
-    job.failures = vec![FailureEvent { at_step: FAIL_AT, region }];
+    job.events = sc.events.clone();
 
     println!("\n--- policy: {} ---", policy.name());
-    let mut coord = Coordinator::new(job, runtime)?;
+    let mut coord = match Coordinator::new(job, runtime) {
+        Ok(c) => c,
+        Err(e) => {
+            println!("setup skipped: {e}");
+            return Ok(());
+        }
+    };
     match coord.run() {
         Ok(s) => {
             println!(
                 "completed {} steps; workers {} -> {}; final loss {:.4}",
                 s.steps_run,
-                MESH.0 * MESH.1,
+                nx * ny,
                 s.final_workers,
                 s.final_loss
             );
             for (step, e) in &s.events {
                 println!("  @step {step}: {e}");
-            }
-            // Show the loss around the failure: continuity is the point.
-            println!("  loss around the failure:");
-            for r in &coord.trainer.metrics.records {
-                if (FAIL_AT.saturating_sub(2)..FAIL_AT + 3).contains(&r.step) {
-                    println!("    step {:>2}: loss {:.4}  ({} workers)", r.step, r.loss, r.workers);
-                }
             }
         }
         Err(e) => println!("stopped: {e}"),
@@ -51,31 +194,26 @@ fn run_policy(runtime: &Runtime, policy: RecoveryPolicy) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
-    let runtime = Runtime::cpu()?;
-    println!(
-        "failure-recovery comparison on an {}x{} mesh, 4x2 host failure at step {FAIL_AT}",
-        MESH.0, MESH.1
-    );
-
-    // The paper's scheme: rebuild fault-tolerant rings, keep training.
-    run_policy(&runtime, RecoveryPolicy::FaultTolerant)?;
-
-    // Alternative 1: restart on the largest clean sub-mesh.
-    run_policy(&runtime, RecoveryPolicy::SubMesh)?;
-
-    // Alternative 2: stop and wait for repair.
-    run_policy(&runtime, RecoveryPolicy::Stop)?;
-
-    // Alternative 3 (analytic): hot spares avoid the failure entirely
-    // but cost extra chips all the time.
-    let region = FailedRegion::host(2, 4);
-    let sub = largest_submesh(MESH.0, MESH.1, &region);
-    println!("\n--- cost summary (paper §1's four options) ---");
+/// The paper §1 cost comparison at the scenario's deepest degradation.
+fn cost_summary(sc: &Scenario, nx: usize, ny: usize) {
+    let mut cluster = ClusterState::new(nx, ny);
+    let mut worst_failed = 0usize;
+    let mut worst_regions = Vec::new();
+    for ev in &sc.events {
+        if cluster.apply(&ev.event).is_ok() {
+            let failed = nx * ny - cluster.live_chips();
+            if failed >= worst_failed {
+                worst_failed = failed;
+                worst_regions = cluster.failed_regions().to_vec();
+            }
+        }
+    }
+    let sub = largest_submesh(nx, ny, &worst_regions);
+    println!("\n--- cost summary (paper §1's four options, at the deepest point) ---");
     println!(
         "fault-tolerant : keeps {}/{} chips running (this paper)",
-        MESH.0 * MESH.1 - region.num_chips(),
-        MESH.0 * MESH.1
+        nx * ny - worst_failed,
+        nx * ny
     );
     println!(
         "sub-mesh       : falls back to {}x{} = {} chips + loses steps since checkpoint",
@@ -85,8 +223,7 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "hot spares     : needs ~{:.1}% extra chips provisioned permanently",
-        100.0 * spare_overhead(MESH.0, MESH.1)
+        100.0 * spare_overhead(nx, ny)
     );
     println!("stop           : zero chips until repair");
-    Ok(())
 }

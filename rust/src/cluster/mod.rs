@@ -1,0 +1,270 @@
+//! Cluster control plane: the event-driven availability layer the
+//! coordinator consumes (the long-running-job generalisation of the
+//! paper's single scripted failure).
+//!
+//! The paper's availability claim is about jobs that outlive many
+//! failure/repair cycles: holes keep appearing in the mesh and repairs
+//! eventually fill them back in. This module models that lifecycle as a
+//! stream of [`ClusterEvent`]s over a [`ClusterState`] — the full-mesh
+//! health ledger that stays authoritative even while the trainer runs
+//! on a degraded topology or a sub-mesh restart:
+//!
+//! - [`ClusterState`] — mesh shape + the accumulated set of failed
+//!   regions, with validated transitions in *both* directions
+//!   ([`ClusterState::fail`] and [`ClusterState::repair`]);
+//! - [`ClusterEvent`] — `Fail` / `Repair` / `CheckpointTick` / `Stop`,
+//!   timestamped in training steps ([`TimedEvent`]) and drained in
+//!   order by [`EventQueue`];
+//! - [`mtbf`] — a deterministic, seeded MTBF process generating
+//!   failure/repair timelines (exponential inter-arrival and repair
+//!   times over even-aligned board/host regions);
+//! - [`scenario`] — a tiny scenario-script DSL (`at 10 fail 2,4 4x2`)
+//!   for reproducible multi-fault experiments, with a render/parse
+//!   round-trip.
+
+pub mod mtbf;
+pub mod scenario;
+
+use crate::mesh::{FailedRegion, Mesh, Topology};
+use thiserror::Error;
+
+pub use mtbf::MtbfModel;
+pub use scenario::{Scenario, ScenarioError};
+
+/// One cluster health event, timestamped by [`TimedEvent`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterEvent {
+    /// A contiguous region of chips dies.
+    Fail(FailedRegion),
+    /// A previously failed region comes back (board swapped / relinked).
+    Repair(FailedRegion),
+    /// Take a checkpoint now (scenario-driven, in addition to any
+    /// periodic cadence).
+    CheckpointTick,
+    /// Operator stop: halt the job regardless of policy.
+    Stop,
+}
+
+impl ClusterEvent {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClusterEvent::Fail(_) => "fail",
+            ClusterEvent::Repair(_) => "repair",
+            ClusterEvent::CheckpointTick => "checkpoint",
+            ClusterEvent::Stop => "stop",
+        }
+    }
+}
+
+/// A cluster event scheduled at a training step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimedEvent {
+    pub at_step: u64,
+    pub event: ClusterEvent,
+}
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum ClusterError {
+    #[error("region {0:?} does not fit the {1}x{2} mesh")]
+    OutOfBounds(FailedRegion, usize, usize),
+    #[error("region {0:?} overlaps already-failed region {1:?}")]
+    Overlap(FailedRegion, FailedRegion),
+    #[error("failing {0:?} would disconnect the live mesh")]
+    Disconnects(FailedRegion),
+    #[error("repair of {0:?} does not match any failed region")]
+    NotFailed(FailedRegion),
+}
+
+/// Full-mesh health ledger: which regions are currently failed.
+///
+/// The coordinator owns one of these for the *physical* mesh for the
+/// whole job, regardless of what topology the trainer currently runs
+/// on (fault-tolerant degraded mesh or sub-mesh restart), so recovery
+/// decisions always see every accumulated hole.
+#[derive(Debug, Clone)]
+pub struct ClusterState {
+    pub nx: usize,
+    pub ny: usize,
+    failed: Vec<FailedRegion>,
+}
+
+impl ClusterState {
+    pub fn new(nx: usize, ny: usize) -> Self {
+        Self { nx, ny, failed: Vec::new() }
+    }
+
+    pub fn failed_regions(&self) -> &[FailedRegion] {
+        &self.failed
+    }
+
+    pub fn has_failures(&self) -> bool {
+        !self.failed.is_empty()
+    }
+
+    pub fn live_chips(&self) -> usize {
+        self.nx * self.ny - self.failed.iter().map(|r| r.num_chips()).sum::<usize>()
+    }
+
+    /// The live topology this state describes.
+    pub fn topology(&self) -> Topology {
+        Topology::with_failures(self.nx, self.ny, self.failed.clone())
+    }
+
+    /// Would `fail(region)` succeed?
+    pub fn can_fail(&self, region: FailedRegion) -> bool {
+        self.check_fail(region).is_ok()
+    }
+
+    fn check_fail(&self, region: FailedRegion) -> Result<(), ClusterError> {
+        let mesh = Mesh::new(self.nx, self.ny);
+        if !region.fits(&mesh) {
+            return Err(ClusterError::OutOfBounds(region, self.nx, self.ny));
+        }
+        if let Some(hit) = self.failed.iter().find(|r| r.overlaps(&region)) {
+            return Err(ClusterError::Overlap(region, *hit));
+        }
+        let mut failed = self.failed.clone();
+        failed.push(region);
+        if !Topology::with_failures(self.nx, self.ny, failed).is_connected() {
+            return Err(ClusterError::Disconnects(region));
+        }
+        Ok(())
+    }
+
+    /// Record a new failed region. Rejects regions that leave the mesh,
+    /// overlap an existing hole, or disconnect the live node set.
+    pub fn fail(&mut self, region: FailedRegion) -> Result<(), ClusterError> {
+        self.check_fail(region)?;
+        self.failed.push(region);
+        Ok(())
+    }
+
+    /// Record a repair: the region must exactly match a failed region.
+    pub fn repair(&mut self, region: FailedRegion) -> Result<(), ClusterError> {
+        match self.failed.iter().position(|r| *r == region) {
+            Some(i) => {
+                self.failed.remove(i);
+                Ok(())
+            }
+            None => Err(ClusterError::NotFailed(region)),
+        }
+    }
+
+    /// Apply any event. `CheckpointTick`/`Stop` do not change cluster
+    /// health and are accepted as no-ops (the coordinator acts on them).
+    pub fn apply(&mut self, event: &ClusterEvent) -> Result<(), ClusterError> {
+        match *event {
+            ClusterEvent::Fail(r) => self.fail(r),
+            ClusterEvent::Repair(r) => self.repair(r),
+            ClusterEvent::CheckpointTick | ClusterEvent::Stop => Ok(()),
+        }
+    }
+}
+
+/// Step-ordered event queue the coordinator drains each step. Events
+/// with equal `at_step` keep their insertion order (stable sort), so a
+/// scenario's fail/repair sequencing is preserved.
+#[derive(Debug, Clone, Default)]
+pub struct EventQueue {
+    events: Vec<TimedEvent>,
+    next: usize,
+}
+
+impl EventQueue {
+    pub fn new(mut events: Vec<TimedEvent>) -> Self {
+        events.sort_by_key(|e| e.at_step);
+        Self { events, next: 0 }
+    }
+
+    /// Pop the next event due at or before `step`, if any.
+    pub fn pop_due(&mut self, step: u64) -> Option<TimedEvent> {
+        let ev = *self.events.get(self.next)?;
+        if ev.at_step <= step {
+            self.next += 1;
+            Some(ev)
+        } else {
+            None
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.events.len() - self.next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fail_and_repair_roundtrip() {
+        let mut cs = ClusterState::new(8, 8);
+        assert_eq!(cs.live_chips(), 64);
+        cs.fail(FailedRegion::board(2, 2)).unwrap();
+        cs.fail(FailedRegion::host(4, 6)).unwrap();
+        assert_eq!(cs.live_chips(), 64 - 4 - 8);
+        assert_eq!(cs.failed_regions().len(), 2);
+        assert_eq!(cs.topology().live_count(), cs.live_chips());
+        cs.repair(FailedRegion::board(2, 2)).unwrap();
+        assert_eq!(cs.live_chips(), 64 - 8);
+        cs.repair(FailedRegion::host(4, 6)).unwrap();
+        assert!(!cs.has_failures());
+        assert_eq!(cs.live_chips(), 64);
+    }
+
+    #[test]
+    fn fail_rejects_invalid_transitions() {
+        let mut cs = ClusterState::new(8, 8);
+        // Out of bounds.
+        assert!(matches!(
+            cs.fail(FailedRegion::host(6, 6)),
+            Err(ClusterError::OutOfBounds(..))
+        ));
+        cs.fail(FailedRegion::board(2, 2)).unwrap();
+        // Overlap.
+        assert!(matches!(
+            cs.fail(FailedRegion::new(3, 3, 2, 2)),
+            Err(ClusterError::Overlap(..))
+        ));
+        // Disconnecting stripe (completes a full-width cut with the
+        // existing hole).
+        assert!(matches!(
+            cs.fail(FailedRegion::new(0, 2, 2, 2)).and_then(|_| {
+                cs.fail(FailedRegion::new(4, 2, 4, 2))
+            }),
+            Err(ClusterError::Disconnects(_))
+        ));
+        // State unchanged by the rejected transition.
+        assert!(cs.can_fail(FailedRegion::board(4, 4)));
+    }
+
+    #[test]
+    fn repair_requires_exact_match() {
+        let mut cs = ClusterState::new(8, 8);
+        cs.fail(FailedRegion::host(2, 2)).unwrap();
+        assert_eq!(
+            cs.repair(FailedRegion::board(2, 2)),
+            Err(ClusterError::NotFailed(FailedRegion::board(2, 2)))
+        );
+        cs.repair(FailedRegion::host(2, 2)).unwrap();
+    }
+
+    #[test]
+    fn queue_drains_in_step_order_stably() {
+        let fail = ClusterEvent::Fail(FailedRegion::board(0, 0));
+        let repair = ClusterEvent::Repair(FailedRegion::board(0, 0));
+        let mut q = EventQueue::new(vec![
+            TimedEvent { at_step: 9, event: ClusterEvent::Stop },
+            TimedEvent { at_step: 3, event: fail },
+            TimedEvent { at_step: 3, event: repair },
+        ]);
+        assert_eq!(q.remaining(), 3);
+        assert!(q.pop_due(2).is_none());
+        // Same-step events keep insertion order: fail before repair.
+        assert_eq!(q.pop_due(5), Some(TimedEvent { at_step: 3, event: fail }));
+        assert_eq!(q.pop_due(5), Some(TimedEvent { at_step: 3, event: repair }));
+        assert!(q.pop_due(5).is_none());
+        assert_eq!(q.pop_due(9).unwrap().event, ClusterEvent::Stop);
+        assert_eq!(q.remaining(), 0);
+    }
+}

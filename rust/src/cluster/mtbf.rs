@@ -1,0 +1,189 @@
+//! Deterministic MTBF failure/repair process.
+//!
+//! Long-running jobs do not see one scripted failure; they see a
+//! Poisson-ish stream of board failures with finite repair times, so
+//! several holes can be open at once. [`MtbfModel::generate`] samples
+//! that process — exponential inter-failure and failure-to-repair
+//! times, measured in training steps — into a [`TimedEvent`] timeline
+//! the coordinator replays like any scenario script.
+//!
+//! Determinism: the process is driven entirely by a [`SplitMix64`]
+//! seed, so a sweep point (seed, MTBF, MTTR) is exactly reproducible —
+//! the property the EXPERIMENTS.md §Availability methodology relies on.
+//! Candidate failure sites are even-aligned rectangles filtered so the
+//! degraded mesh stays connected *and* fault-tolerant-schedulable
+//! (`ft_plan` succeeds), which mirrors the paper's assumption that
+//! failed regions are board/host shaped and leave a usable mesh.
+
+use super::{ClusterEvent, ClusterState, TimedEvent};
+use crate::mesh::FailedRegion;
+use crate::rings::fault_tolerant::ft_plan;
+use crate::util::rng::SplitMix64;
+
+/// Parameters of the failure/repair process.
+#[derive(Debug, Clone, Copy)]
+pub struct MtbfModel {
+    /// RNG seed; equal seeds give identical timelines.
+    pub seed: u64,
+    /// Mean steps between failure arrivals (exponential).
+    pub mean_failure_steps: f64,
+    /// Mean steps from a failure to its repair (exponential).
+    pub mean_repair_steps: f64,
+    /// Shape of each failed region (board `2x2`, host `4x2`, ...).
+    pub region_w: usize,
+    pub region_h: usize,
+}
+
+impl MtbfModel {
+    /// Board-failure (2x2) process.
+    pub fn board(seed: u64, mean_failure_steps: f64, mean_repair_steps: f64) -> Self {
+        Self { seed, mean_failure_steps, mean_repair_steps, region_w: 2, region_h: 2 }
+    }
+
+    /// Host-failure (4x2) process — the shape of the paper's evaluation.
+    pub fn host(seed: u64, mean_failure_steps: f64, mean_repair_steps: f64) -> Self {
+        Self { seed, mean_failure_steps, mean_repair_steps, region_w: 4, region_h: 2 }
+    }
+
+    /// Sample the failure/repair timeline for an `nx x ny` mesh over
+    /// `horizon` training steps. Events are sorted by step; a repair
+    /// always lands strictly after its failure.
+    pub fn generate(&self, nx: usize, ny: usize, horizon: u64) -> Vec<TimedEvent> {
+        let mut rng = SplitMix64::new(self.seed);
+        let mut state = ClusterState::new(nx, ny);
+        let mut events: Vec<TimedEvent> = Vec::new();
+        // (repair step, region) for currently-open holes.
+        let mut open: Vec<(u64, FailedRegion)> = Vec::new();
+        let mut t = 0u64;
+        loop {
+            t = t.saturating_add(exp_steps(&mut rng, self.mean_failure_steps));
+            if t >= horizon {
+                break;
+            }
+            // Apply repairs that happened before this failure arrival so
+            // site validity reflects the mesh at time t.
+            open.sort_by_key(|&(rt, _)| rt);
+            while let Some(&(rt, region)) = open.first() {
+                if rt <= t {
+                    state.repair(region).expect("open hole is tracked");
+                    open.remove(0);
+                } else {
+                    break;
+                }
+            }
+            let Some(region) = self.pick_site(&mut rng, &state) else {
+                continue; // mesh too degraded for another hole right now
+            };
+            state.fail(region).expect("site was validated");
+            events.push(TimedEvent { at_step: t, event: ClusterEvent::Fail(region) });
+            let rt = t + exp_steps(&mut rng, self.mean_repair_steps);
+            if rt < horizon {
+                events.push(TimedEvent { at_step: rt, event: ClusterEvent::Repair(region) });
+                open.push((rt, region));
+            }
+            // Repairs past the horizon never fire: the hole stays open
+            // for the rest of the job.
+        }
+        events.sort_by_key(|e| e.at_step);
+        events
+    }
+
+    /// Uniformly pick an even-aligned site whose failure keeps the mesh
+    /// connected and fault-tolerant-schedulable. `None` when no site
+    /// qualifies (e.g. every remaining strip is already broken).
+    fn pick_site(&self, rng: &mut SplitMix64, state: &ClusterState) -> Option<FailedRegion> {
+        let (w, h) = (self.region_w, self.region_h);
+        if w > state.nx || h > state.ny {
+            return None;
+        }
+        let mut sites = Vec::new();
+        for y0 in (0..=state.ny - h).step_by(2) {
+            for x0 in (0..=state.nx - w).step_by(2) {
+                let region = FailedRegion::new(x0, y0, w, h);
+                if !state.can_fail(region) {
+                    continue;
+                }
+                let mut failed = state.failed_regions().to_vec();
+                failed.push(region);
+                let topo = ClusterState { nx: state.nx, ny: state.ny, failed }.topology();
+                if ft_plan(&topo).is_ok() {
+                    sites.push(region);
+                }
+            }
+        }
+        if sites.is_empty() {
+            None
+        } else {
+            Some(sites[rng.usize_in(0, sites.len())])
+        }
+    }
+}
+
+/// Exponential step count with the given mean, at least 1.
+fn exp_steps(rng: &mut SplitMix64, mean: f64) -> u64 {
+    let u = 1.0 - rng.next_f64(); // (0, 1]
+    (-u.ln() * mean.max(1.0)).ceil().max(1.0) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_timeline() {
+        let m = MtbfModel::board(42, 20.0, 10.0);
+        let a = m.generate(8, 8, 400);
+        let b = m.generate(8, 8, 400);
+        assert_eq!(a, b, "MTBF timelines must be deterministic per seed");
+        assert!(!a.is_empty(), "400 steps at MTBF 20 should see failures");
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let a = MtbfModel::board(1, 20.0, 10.0).generate(8, 8, 400);
+        let b = MtbfModel::board(2, 20.0, 10.0).generate(8, 8, 400);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn timeline_replays_validly() {
+        // Every generated timeline must replay cleanly on a fresh
+        // ClusterState: fails never overlap/disconnect, repairs match.
+        for seed in 0..8 {
+            let events = MtbfModel::host(seed, 15.0, 25.0).generate(8, 8, 600);
+            let mut cs = ClusterState::new(8, 8);
+            let mut max_open = 0usize;
+            for ev in &events {
+                cs.apply(&ev.event).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+                max_open = max_open.max(cs.failed_regions().len());
+            }
+            // With MTTR > MTBF, overlapping holes must occur somewhere
+            // across seeds; assert per-seed replay sanity only.
+            assert!(max_open >= 1);
+        }
+    }
+
+    #[test]
+    fn repairs_follow_their_failure() {
+        let events = MtbfModel::board(7, 10.0, 30.0).generate(8, 8, 500);
+        for (i, ev) in events.iter().enumerate() {
+            if let ClusterEvent::Repair(region) = ev.event {
+                let fail_at = events[..i]
+                    .iter()
+                    .rfind(|e| e.event == ClusterEvent::Fail(region))
+                    .map(|e| e.at_step);
+                let fail_at = fail_at.expect("repair must follow a failure of the same region");
+                assert!(ev.at_step > fail_at);
+            }
+        }
+    }
+
+    #[test]
+    fn events_sorted_and_within_horizon() {
+        let events = MtbfModel::board(3, 5.0, 5.0).generate(8, 8, 200);
+        for w in events.windows(2) {
+            assert!(w[0].at_step <= w[1].at_step);
+        }
+        assert!(events.iter().all(|e| e.at_step < 200));
+    }
+}

@@ -1,0 +1,216 @@
+//! Scenario-script DSL: reproducible multi-fault timelines for
+//! experiments and the availability benches.
+//!
+//! A scenario is a plain-text script, one directive per line:
+//!
+//! ```text
+//! # two failures, one repair (comments and blank lines are ignored)
+//! mesh 8x8
+//! at 10 fail 2,4 4x2
+//! at 16 fail 6,0 2x2
+//! at 22 repair 2,4 4x2
+//! at 26 checkpoint
+//! at 40 stop
+//! ```
+//!
+//! - `mesh NXxNY` (optional) pins the mesh the scenario was written
+//!   for; loaders can check it against the job's mesh.
+//! - `at STEP fail X0,Y0 WxH` / `at STEP repair X0,Y0 WxH` add a
+//!   [`ClusterEvent::Fail`]/[`ClusterEvent::Repair`] of the region with
+//!   origin `(X0, Y0)` and size `W x H`. Repairs name the full region
+//!   so they match the original failure exactly.
+//! - `at STEP checkpoint` and `at STEP stop` schedule a
+//!   [`ClusterEvent::CheckpointTick`] / [`ClusterEvent::Stop`].
+//!
+//! [`Scenario::render`] emits the canonical form of every directive, so
+//! `parse(render(s)) == s` round-trips exactly (asserted by tests and
+//! the config round-trip test).
+
+use super::{ClusterEvent, TimedEvent};
+use crate::mesh::FailedRegion;
+use std::fmt::Write as _;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum ScenarioError {
+    #[error("line {0}: unknown directive {1:?}")]
+    UnknownDirective(usize, String),
+    #[error("line {0}: malformed `{1}` (expected {2})")]
+    Malformed(usize, &'static str, &'static str),
+}
+
+/// A parsed scenario: the optional mesh it targets plus its timeline.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Scenario {
+    /// `(nx, ny)` from a `mesh` directive, if present.
+    pub mesh: Option<(usize, usize)>,
+    /// Events in script order (not necessarily sorted by step; the
+    /// [`super::EventQueue`] sorts stably).
+    pub events: Vec<TimedEvent>,
+}
+
+fn parse_pair(s: &str, sep: char) -> Option<(usize, usize)> {
+    let (a, b) = s.split_once(sep)?;
+    Some((a.parse().ok()?, b.parse().ok()?))
+}
+
+impl Scenario {
+    /// Parse a scenario script. See the module docs for the grammar.
+    pub fn parse(text: &str) -> Result<Self, ScenarioError> {
+        let mut sc = Scenario::default();
+        for (i, raw) in text.lines().enumerate() {
+            let ln = i + 1;
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut words = line.split_whitespace();
+            match words.next() {
+                Some("mesh") => {
+                    let spec = words
+                        .next()
+                        .and_then(|w| parse_pair(w, 'x'))
+                        .ok_or_else(|| ScenarioError::Malformed(ln, "mesh", "mesh NXxNY"))?;
+                    sc.mesh = Some(spec);
+                }
+                Some("at") => {
+                    let bad = |what| ScenarioError::Malformed(ln, "at", what);
+                    let step: u64 = words
+                        .next()
+                        .and_then(|w| w.parse().ok())
+                        .ok_or_else(|| bad("at STEP <fail|repair|checkpoint|stop> ..."))?;
+                    let event = match words.next() {
+                        Some(kind @ ("fail" | "repair")) => {
+                            let origin = words
+                                .next()
+                                .and_then(|w| parse_pair(w, ','))
+                                .ok_or_else(|| bad("at STEP fail X0,Y0 WxH"))?;
+                            let size = words
+                                .next()
+                                .and_then(|w| parse_pair(w, 'x'))
+                                .filter(|&(w, h)| w >= 1 && h >= 1)
+                                .ok_or_else(|| bad("at STEP fail X0,Y0 WxH"))?;
+                            let region = FailedRegion::new(origin.0, origin.1, size.0, size.1);
+                            if kind == "fail" {
+                                ClusterEvent::Fail(region)
+                            } else {
+                                ClusterEvent::Repair(region)
+                            }
+                        }
+                        Some("checkpoint") => ClusterEvent::CheckpointTick,
+                        Some("stop") => ClusterEvent::Stop,
+                        _ => return Err(bad("at STEP <fail|repair|checkpoint|stop> ...")),
+                    };
+                    if words.next().is_some() {
+                        return Err(bad("no trailing tokens"));
+                    }
+                    sc.events.push(TimedEvent { at_step: step, event });
+                }
+                Some(other) => {
+                    return Err(ScenarioError::UnknownDirective(ln, other.to_string()));
+                }
+                None => unreachable!("blank lines are skipped"),
+            }
+        }
+        Ok(sc)
+    }
+
+    /// Canonical script text; `parse(render(s)) == s`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if let Some((nx, ny)) = self.mesh {
+            let _ = writeln!(out, "mesh {nx}x{ny}");
+        }
+        for ev in &self.events {
+            let _ = match ev.event {
+                ClusterEvent::Fail(r) => {
+                    writeln!(out, "at {} fail {},{} {}x{}", ev.at_step, r.x0, r.y0, r.w, r.h)
+                }
+                ClusterEvent::Repair(r) => {
+                    writeln!(out, "at {} repair {},{} {}x{}", ev.at_step, r.x0, r.y0, r.w, r.h)
+                }
+                ClusterEvent::CheckpointTick => writeln!(out, "at {} checkpoint", ev.at_step),
+                ClusterEvent::Stop => writeln!(out, "at {} stop", ev.at_step),
+            };
+        }
+        out
+    }
+
+    /// Load and parse a scenario file.
+    pub fn load(path: &std::path::Path) -> Result<Self, std::io::Error> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text).map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comments survive nowhere, directives everywhere
+mesh 8x8
+
+at 10 fail 2,4 4x2   # host dies
+at 16 fail 6,0 2x2
+at 22 repair 2,4 4x2
+at 26 checkpoint
+at 40 stop
+";
+
+    #[test]
+    fn parses_all_directives() {
+        let sc = Scenario::parse(SAMPLE).unwrap();
+        assert_eq!(sc.mesh, Some((8, 8)));
+        assert_eq!(sc.events.len(), 5);
+        assert_eq!(
+            sc.events[0],
+            TimedEvent { at_step: 10, event: ClusterEvent::Fail(FailedRegion::host(2, 4)) }
+        );
+        assert_eq!(
+            sc.events[2],
+            TimedEvent { at_step: 22, event: ClusterEvent::Repair(FailedRegion::host(2, 4)) }
+        );
+        assert_eq!(sc.events[3].event, ClusterEvent::CheckpointTick);
+        assert_eq!(sc.events[4], TimedEvent { at_step: 40, event: ClusterEvent::Stop });
+    }
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let sc = Scenario::parse(SAMPLE).unwrap();
+        let rendered = sc.render();
+        assert_eq!(Scenario::parse(&rendered).unwrap(), sc);
+        // Canonical text is a fixpoint.
+        assert_eq!(Scenario::parse(&rendered).unwrap().render(), rendered);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        assert_eq!(
+            Scenario::parse("at 3 explode\n"),
+            Err(ScenarioError::Malformed(1, "at", "at STEP <fail|repair|checkpoint|stop> ..."))
+        );
+        assert_eq!(
+            Scenario::parse("mesh 8x8\nwarp 9\n"),
+            Err(ScenarioError::UnknownDirective(2, "warp".to_string()))
+        );
+        assert_eq!(
+            Scenario::parse("at ten stop\n"),
+            Err(ScenarioError::Malformed(1, "at", "at STEP <fail|repair|checkpoint|stop> ..."))
+        );
+        assert_eq!(
+            Scenario::parse("at 3 fail 2,2\n"),
+            Err(ScenarioError::Malformed(1, "at", "at STEP fail X0,Y0 WxH"))
+        );
+        assert_eq!(
+            Scenario::parse("at 3 stop now\n"),
+            Err(ScenarioError::Malformed(1, "at", "no trailing tokens"))
+        );
+    }
+
+    #[test]
+    fn empty_and_comment_only_scripts_parse() {
+        assert_eq!(Scenario::parse("").unwrap(), Scenario::default());
+        assert_eq!(Scenario::parse("# nothing\n\n").unwrap(), Scenario::default());
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod parse;
 
+use crate::cluster::{MtbfModel, Scenario, ScenarioError};
 use crate::collective::Scheme;
 use crate::coordinator::policy::RecoveryPolicy;
 use crate::coordinator::{FailureEvent, JobConfig};
@@ -19,6 +20,8 @@ use thiserror::Error;
 pub enum ConfigError {
     #[error("parse: {0}")]
     Parse(#[from] ParseError),
+    #[error("scenario: {0}")]
+    Scenario(#[from] ScenarioError),
     #[error("[{0}] {1}: {2}")]
     Bad(String, String, String),
     #[error("io: {0}")]
@@ -43,7 +46,7 @@ pub enum ConfigError {
 /// log_every = 10
 /// checkpoint_every = 50
 /// checkpoint_path = "run.ckpt"
-/// policy = "fault-tolerant"   # fault-tolerant | sub-mesh | stop
+/// policy = "fault-tolerant"   # fault-tolerant | sub-mesh | stop | adaptive
 ///
 /// [failure]                    # optional scripted failure
 /// at_step = 50
@@ -51,6 +54,17 @@ pub enum ConfigError {
 /// y0 = 2
 /// w = 4
 /// h = 2
+///
+/// [scenario]                   # optional scenario-script timeline
+/// file = "two_fail_one_repair.scenario"
+/// # or inline, with literal \n separating directives:
+/// # script = "at 10 fail 2,4 4x2\nat 22 repair 2,4 4x2"
+///
+/// [mtbf]                       # optional seeded MTBF failure/repair process
+/// seed = 0
+/// mean_failure_steps = 50.0
+/// mean_repair_steps = 25.0
+/// region = "host"              # board (2x2) | host (4x2)
 /// ```
 pub fn load_job(path: &std::path::Path) -> Result<JobConfig, ConfigError> {
     let text = std::fs::read_to_string(path)?;
@@ -109,7 +123,46 @@ pub fn job_from_str(text: &str) -> Result<JobConfig, ConfigError> {
             region: FailedRegion::new(g("x0")?, g("y0")?, g("w")?, g("h")?),
         });
     }
+
+    // Scenario-script timeline: from a file, or inline (directives
+    // separated by literal `\n` in the TOML string).
+    if let Some(path) = doc.get_str("scenario", "file") {
+        let sc = Scenario::load(std::path::Path::new(&path))?;
+        check_scenario_mesh(&sc, nx, ny)?;
+        job.events.extend(sc.events);
+    }
+    if let Some(script) = doc.get_str("scenario", "script") {
+        let sc = Scenario::parse(&script.replace("\\n", "\n"))?;
+        check_scenario_mesh(&sc, nx, ny)?;
+        job.events.extend(sc.events);
+    }
+
+    // Seeded MTBF failure/repair process over the job horizon.
+    if doc.has_section("mtbf") {
+        let seed = doc.get_int("mtbf", "seed").unwrap_or(0) as u64;
+        let mean_fail = doc.get_float("mtbf", "mean_failure_steps").unwrap_or(50.0);
+        let mean_repair = doc.get_float("mtbf", "mean_repair_steps").unwrap_or(25.0);
+        let model = match doc.get_str("mtbf", "region").as_deref() {
+            None | Some("board") => MtbfModel::board(seed, mean_fail, mean_repair),
+            Some("host") => MtbfModel::host(seed, mean_fail, mean_repair),
+            Some(_) => return Err(bad("mtbf", "region", "expected board|host")),
+        };
+        job.events.extend(model.generate(nx, ny, steps));
+    }
     Ok(job)
+}
+
+fn check_scenario_mesh(sc: &Scenario, nx: usize, ny: usize) -> Result<(), ConfigError> {
+    if let Some((sx, sy)) = sc.mesh {
+        if (sx, sy) != (nx, ny) {
+            return Err(ConfigError::Bad(
+                "scenario".to_string(),
+                "mesh".to_string(),
+                format!("scenario targets {sx}x{sy}, job mesh is {nx}x{ny}"),
+            ));
+        }
+    }
+    Ok(())
 }
 
 pub use parse::Document as RawConfig;
@@ -171,5 +224,77 @@ h = 2
     fn bad_scheme_rejected() {
         let err = job_from_str("[train]\nscheme = \"warp-drive\"\n").unwrap_err();
         assert!(err.to_string().contains("scheme"));
+    }
+
+    #[test]
+    fn adaptive_policy_parses() {
+        let job = job_from_str("[train]\npolicy = \"adaptive\"\n").unwrap();
+        assert_eq!(job.policy, RecoveryPolicy::Adaptive);
+    }
+
+    #[test]
+    fn inline_scenario_roundtrips_through_job_config() {
+        use crate::cluster::{ClusterEvent, Scenario};
+        let text = "\
+[mesh]
+nx = 8
+ny = 8
+
+[scenario]
+script = \"at 10 fail 2,4 4x2\\nat 16 fail 6,0 2x2\\nat 22 repair 2,4 4x2\"
+";
+        let job = job_from_str(text).unwrap();
+        assert_eq!(job.events.len(), 3);
+        assert_eq!(job.events[0].event, ClusterEvent::Fail(FailedRegion::host(2, 4)));
+        assert_eq!(job.events[2].event, ClusterEvent::Repair(FailedRegion::host(2, 4)));
+        // Round-trip: rendering the parsed timeline reparses equal.
+        let sc = Scenario { mesh: Some((8, 8)), events: job.events.clone() };
+        assert_eq!(Scenario::parse(&sc.render()).unwrap(), sc);
+    }
+
+    #[test]
+    fn scenario_file_loads_and_mesh_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("meshreduce_config_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("demo.scenario");
+        std::fs::write(&path, "mesh 8x8\nat 5 fail 2,2 2x2\nat 9 repair 2,2 2x2\n").unwrap();
+        let text = format!(
+            "[mesh]\nnx = 8\nny = 8\n\n[scenario]\nfile = \"{}\"\n",
+            path.display()
+        );
+        let job = job_from_str(&text).unwrap();
+        assert_eq!(job.events.len(), 2);
+
+        let mismatch = format!(
+            "[mesh]\nnx = 4\nny = 4\n\n[scenario]\nfile = \"{}\"\n",
+            path.display()
+        );
+        let err = job_from_str(&mismatch).unwrap_err();
+        assert!(err.to_string().contains("scenario"), "{err}");
+    }
+
+    #[test]
+    fn mtbf_section_generates_deterministic_timeline() {
+        let text = "\
+[mesh]
+nx = 8
+ny = 8
+
+[train]
+steps = 400
+
+[mtbf]
+seed = 42
+mean_failure_steps = 20.0
+mean_repair_steps = 10.0
+region = \"board\"
+";
+        let a = job_from_str(text).unwrap();
+        let b = job_from_str(text).unwrap();
+        assert!(!a.events.is_empty());
+        assert_eq!(a.events, b.events, "same seed, same timeline");
+        assert!(a.events.iter().all(|e| e.at_step < 400));
+        let bad = job_from_str("[mtbf]\nregion = \"rack\"\n").unwrap_err();
+        assert!(bad.to_string().contains("mtbf"));
     }
 }

@@ -1,26 +1,40 @@
 //! Training coordinator (leader): owns the job lifecycle — scheme
-//! selection, the step loop, periodic checkpointing, failure injection
-//! and recovery policy.
+//! selection, the step loop, periodic checkpointing, and the
+//! event-driven availability control plane.
 //!
-//! This is the availability story of the paper's introduction made
-//! executable. On a failure event the coordinator applies one of three
-//! policies:
+//! This is the availability story of the paper made executable for
+//! *long-running* jobs: the coordinator consumes a stream of
+//! [`ClusterEvent`]s (scripted scenarios, deterministic MTBF timelines,
+//! or one-off [`FailureEvent`]s) over a full-mesh [`ClusterState`]
+//! ledger, and drives topology transitions in both directions —
+//! failures accumulate as multiple concurrent regions, repairs shrink
+//! them and rejoin chips with a replica re-broadcast through the
+//! allreduce machinery.
+//!
+//! On a `Fail` event the coordinator applies one of four policies:
 //!
 //! - [`RecoveryPolicy::FaultTolerant`] (the paper's contribution):
 //!   rebuild the fault-tolerant rings on the degraded mesh and keep
 //!   training — no restart, no spare;
 //! - [`RecoveryPolicy::SubMesh`]: restart from the last checkpoint on
-//!   the largest full sub-mesh that avoids the failed region (the
-//!   paper's "sub-mesh jobs" alternative);
+//!   the largest full sub-mesh that avoids **all** accumulated failed
+//!   regions (the paper's "sub-mesh jobs" alternative);
 //! - [`RecoveryPolicy::Stop`]: halt (the "wait for the fire fighter"
-//!   baseline).
+//!   baseline);
+//! - [`RecoveryPolicy::Adaptive`]: predict the step time of both
+//!   continue-vs-restart candidates with `perfmodel::steptime` and pick
+//!   the higher effective throughput (Chameleon-style runtime policy
+//!   selection).
 
 pub mod policy;
 
-use crate::mesh::FailedRegion;
+use crate::cluster::{ClusterError, ClusterEvent, ClusterState, EventQueue, TimedEvent};
+use crate::mesh::{FailedRegion, Topology};
+use crate::perfmodel::{predict_candidate, CandidatePrediction};
+use crate::runtime::Runtime;
+use crate::simnet::LinkModel;
 use crate::trainer::checkpoint::Checkpoint;
 use crate::trainer::{DataParallelTrainer, TrainError, TrainerConfig};
-use crate::runtime::Runtime;
 use policy::{largest_submesh, RecoveryPolicy};
 use std::path::PathBuf;
 use thiserror::Error;
@@ -31,11 +45,14 @@ pub enum CoordError {
     Train(#[from] TrainError),
     #[error("checkpoint io: {0}")]
     Ckpt(#[from] crate::trainer::checkpoint::CheckpointError),
+    #[error("cluster event rejected: {0}")]
+    Cluster(#[from] ClusterError),
     #[error("job stopped by policy after failure at step {0}")]
     Stopped(u64),
 }
 
 /// A scripted failure, for experiments ("at step K, host (x, y) dies").
+/// Sugar for a [`ClusterEvent::Fail`] timed event.
 #[derive(Debug, Clone, Copy)]
 pub struct FailureEvent {
     pub at_step: u64,
@@ -47,7 +64,11 @@ pub struct FailureEvent {
 pub struct JobConfig {
     pub trainer: TrainerConfig,
     pub steps: u64,
+    /// One-off scripted failures (merged into the event timeline).
     pub failures: Vec<FailureEvent>,
+    /// Full event timeline: scenario scripts, MTBF-generated
+    /// failure/repair sequences, checkpoint ticks, operator stops.
+    pub events: Vec<TimedEvent>,
     pub policy: RecoveryPolicy,
     pub checkpoint_every: Option<u64>,
     pub checkpoint_path: Option<PathBuf>,
@@ -61,11 +82,23 @@ impl JobConfig {
             trainer,
             steps,
             failures: Vec::new(),
+            events: Vec::new(),
             policy: RecoveryPolicy::FaultTolerant,
             checkpoint_every: None,
             checkpoint_path: None,
             log_every: 0,
         }
+    }
+
+    /// The merged, unsorted event timeline ([`EventQueue`] sorts it).
+    pub fn timeline(&self) -> Vec<TimedEvent> {
+        let mut events = self.events.clone();
+        events.extend(
+            self.failures
+                .iter()
+                .map(|f| TimedEvent { at_step: f.at_step, event: ClusterEvent::Fail(f.region) }),
+        );
+        events
     }
 }
 
@@ -81,96 +114,315 @@ pub struct RunSummary {
     pub events: Vec<(u64, String)>,
 }
 
-/// The leader. Drives the trainer to `steps`, applying failure events
-/// and the recovery policy along the way.
+/// The leader. Drives the trainer to `steps`, consuming the cluster
+/// event stream and applying the recovery policy along the way.
 pub struct Coordinator {
     cfg: JobConfig,
     pub trainer: DataParallelTrainer,
     last_checkpoint: Option<Checkpoint>,
+    /// Full-mesh health ledger. Stays authoritative even while the
+    /// trainer runs on a sub-mesh restart.
+    pub cluster: ClusterState,
+    /// Active sub-mesh `(x0, y0, w, h)` in full-mesh coordinates when
+    /// the trainer was restarted on one; `None` while the trainer runs
+    /// on the (possibly degraded) full mesh.
+    submesh: Option<(usize, usize, usize, usize)>,
 }
 
 impl Coordinator {
     pub fn new(cfg: JobConfig, runtime: &Runtime) -> Result<Self, CoordError> {
+        let mut cluster = ClusterState::new(cfg.trainer.nx, cfg.trainer.ny);
+        for r in &cfg.trainer.failed {
+            cluster.fail(*r)?;
+        }
         let trainer = DataParallelTrainer::new(cfg.trainer.clone(), runtime)?;
-        Ok(Self { cfg, trainer, last_checkpoint: None })
+        Ok(Self { cfg, trainer, last_checkpoint: None, cluster, submesh: None })
+    }
+
+    /// Is the trainer currently on a sub-mesh restart (vs. the full
+    /// degraded mesh)?
+    pub fn on_submesh(&self) -> bool {
+        self.submesh.is_some()
+    }
+
+    fn save_checkpoint(&mut self) -> Result<(), CoordError> {
+        let ck = self.trainer.checkpoint();
+        if let Some(path) = &self.cfg.checkpoint_path {
+            ck.save(path)?;
+        }
+        self.last_checkpoint = Some(ck);
+        Ok(())
     }
 
     fn maybe_checkpoint(&mut self) -> Result<(), CoordError> {
         if let Some(every) = self.cfg.checkpoint_every {
             if self.trainer.step > 0 && self.trainer.step % every == 0 {
-                let ck = self.trainer.checkpoint();
-                if let Some(path) = &self.cfg.checkpoint_path {
-                    ck.save(path)?;
-                }
-                self.last_checkpoint = Some(ck);
+                self.save_checkpoint()?;
             }
         }
         Ok(())
     }
 
-    fn handle_failure(&mut self, ev: FailureEvent) -> Result<(), CoordError> {
+    /// Restart the trainer from the last checkpoint on a fresh
+    /// topology (`failed` in the new mesh's own coordinates).
+    fn restart_trainer(
+        &mut self,
+        nx: usize,
+        ny: usize,
+        failed: Vec<FailedRegion>,
+        note: String,
+    ) -> Result<(), CoordError> {
+        let restored = self.last_checkpoint.clone();
+        let lost = restored.as_ref().map(|c| self.trainer.step.saturating_sub(c.step));
+        let mut tcfg = self.cfg.trainer.clone();
+        tcfg.nx = nx;
+        tcfg.ny = ny;
+        tcfg.failed = failed;
+        let runtime = Runtime::cpu().map_err(TrainError::Runtime)?;
+        let mut new_trainer = DataParallelTrainer::new(tcfg, &runtime)?;
+        // Carry metrics over so the loss curve shows the restart.
+        std::mem::swap(&mut new_trainer.metrics, &mut self.trainer.metrics);
+        if let Some(ck) = restored {
+            new_trainer.restore(ck);
+        } else {
+            new_trainer.metrics.annotate(0, "no checkpoint: restart from scratch");
+        }
+        new_trainer
+            .metrics
+            .annotate(new_trainer.step, format!("{note} (lost {} steps)", lost.unwrap_or(0)));
+        self.trainer = new_trainer;
+        Ok(())
+    }
+
+    /// Restart on the largest clean sub-mesh avoiding every accumulated
+    /// failed region.
+    fn restart_on_submesh(&mut self) -> Result<(), CoordError> {
+        let sub = largest_submesh(self.cluster.nx, self.cluster.ny, self.cluster.failed_regions());
+        let (_, _, w, h) = sub;
+        if w * h == 0 {
+            return Err(CoordError::Stopped(self.trainer.step));
+        }
+        let holes = self.cluster.failed_regions().len();
+        let note = format!("sub-mesh restart on {w}x{h} ({} chips, {holes} holes avoided)", w * h);
+        self.restart_trainer(w, h, Vec::new(), note)?;
+        self.submesh = Some(sub);
+        Ok(())
+    }
+
+    /// Mean per-worker compute time over the most recent records, the
+    /// compute half of the adaptive step-time prediction. Falls back to
+    /// a nominal 10 ms before any step has run.
+    fn per_worker_compute_s(&self) -> f64 {
+        let records = &self.trainer.metrics.records;
+        let tail = &records[records.len().saturating_sub(5)..];
+        if tail.is_empty() {
+            return 0.01;
+        }
+        let sum: f64 = tail.iter().map(|r| r.compute_s / r.workers.max(1) as f64).sum();
+        sum / tail.len() as f64
+    }
+
+    /// Predict both recovery candidates on the current cluster state:
+    /// fault-tolerant continue on the degraded full mesh, and restart
+    /// on the largest clean sub-mesh. `None` = not schedulable.
+    fn adaptive_predictions(&self) -> (Option<CandidatePrediction>, Option<CandidatePrediction>) {
+        let link = LinkModel::tpu_v3();
+        let payload = self.trainer.param_count();
+        let compute = self.per_worker_compute_s();
+        let ft = predict_candidate(&self.cluster.topology(), payload, &link, compute).ok();
+        let (nx, ny) = (self.cluster.nx, self.cluster.ny);
+        let (_, _, w, h) = largest_submesh(nx, ny, self.cluster.failed_regions());
+        let sm = if w >= 2 && h >= 2 {
+            predict_candidate(&Topology::full(w, h), payload, &link, compute).ok()
+        } else {
+            None
+        };
+        (ft, sm)
+    }
+
+    fn annotate_adaptive(
+        &mut self,
+        ft: &Option<CandidatePrediction>,
+        sm: &Option<CandidatePrediction>,
+        chose_ft: bool,
+    ) {
+        let describe = |c: &Option<CandidatePrediction>| match c {
+            Some(p) => format!(
+                "{} workers, predicted step {:.6}s, throughput {:.1}",
+                p.workers, p.step_s, p.throughput
+            ),
+            None => "not schedulable".to_string(),
+        };
+        self.trainer.metrics.annotate(
+            self.trainer.step,
+            format!(
+                "adaptive: fault-tolerant [{}] vs sub-mesh [{}] -> {}",
+                describe(ft),
+                describe(sm),
+                if chose_ft { "fault-tolerant" } else { "sub-mesh" },
+            ),
+        );
+    }
+
+    /// Shared adaptive decision: predict both candidates, record the
+    /// comparison, and return whether fault-tolerant-continue won.
+    /// `None` when neither candidate is schedulable.
+    fn adaptive_choose(&mut self) -> Option<bool> {
+        let (ft, sm) = self.adaptive_predictions();
+        let chose_ft = match (&ft, &sm) {
+            (Some(f), Some(s)) => f.throughput >= s.throughput,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => return None,
+        };
+        self.annotate_adaptive(&ft, &sm, chose_ft);
+        Some(chose_ft)
+    }
+
+    /// Leave an active sub-mesh: restart from the last checkpoint on
+    /// the full (degraded) cluster topology.
+    fn restart_on_cluster_mesh(&mut self, note: &str) -> Result<(), CoordError> {
+        let failed = self.cluster.failed_regions().to_vec();
+        let (nx, ny) = (self.cluster.nx, self.cluster.ny);
+        self.restart_trainer(nx, ny, failed, note.to_string())?;
+        self.submesh = None;
+        Ok(())
+    }
+
+    fn handle_failure(&mut self, region: FailedRegion) -> Result<(), CoordError> {
         match self.cfg.policy {
-            RecoveryPolicy::FaultTolerant => {
-                // The paper's scheme: rebuild rings and recompile the
-                // allreduce plan on the degraded mesh, keep going.
-                let rebuild_s = self.trainer.inject_failure(ev.region)?;
-                let (steps, transfers) = self.trainer.schedule_info();
-                self.trainer.metrics.annotate(
-                    self.trainer.step,
-                    format!(
-                        "rings rebuilt in {rebuild_s:.4}s (plan: {steps} steps, {transfers} transfers)"
-                    ),
-                );
-                Ok(())
-            }
-            RecoveryPolicy::SubMesh => {
-                // Restart from the last checkpoint on the largest full
-                // sub-mesh avoiding the region.
-                let mesh = self.trainer.topology().mesh;
-                let sub = largest_submesh(mesh.nx, mesh.ny, &ev.region);
-                let restored = self.last_checkpoint.clone();
-                let lost = restored.as_ref().map(|c| self.trainer.step - c.step);
-                let mut tcfg = self.cfg.trainer.clone();
-                tcfg.nx = sub.2;
-                tcfg.ny = sub.3;
-                let runtime = Runtime::cpu().map_err(TrainError::Runtime)?;
-                let mut new_trainer = DataParallelTrainer::new(tcfg, &runtime)?;
-                // Carry metrics over so the loss curve shows the restart.
-                std::mem::swap(&mut new_trainer.metrics, &mut self.trainer.metrics);
-                if let Some(ck) = restored {
-                    new_trainer.restore(ck);
-                } else {
-                    new_trainer.metrics.annotate(0, "no checkpoint: restart from scratch");
-                }
-                new_trainer.metrics.annotate(
-                    new_trainer.step,
-                    format!(
-                        "sub-mesh restart on {}x{} ({} chips, lost {} steps)",
-                        sub.2,
-                        sub.3,
-                        sub.2 * sub.3,
-                        lost.unwrap_or(0),
-                    ),
-                );
-                self.trainer = new_trainer;
-                Ok(())
-            }
+            RecoveryPolicy::FaultTolerant => self.continue_fault_tolerant(region),
+            RecoveryPolicy::SubMesh => self.submesh_after_failure(region),
             RecoveryPolicy::Stop => Err(CoordError::Stopped(self.trainer.step)),
+            RecoveryPolicy::Adaptive => {
+                let Some(chose_ft) = self.adaptive_choose() else {
+                    return Err(CoordError::Stopped(self.trainer.step));
+                };
+                if !chose_ft {
+                    self.submesh_after_failure(region)
+                } else if self.submesh.is_some() {
+                    self.restart_on_cluster_mesh("adaptive: restart on degraded full mesh")
+                } else {
+                    self.continue_fault_tolerant(region)
+                }
+            }
         }
     }
 
-    /// Run the job to completion.
+    /// The paper's scheme: rebuild rings and recompile the allreduce
+    /// plan on the degraded mesh, keep going.
+    fn continue_fault_tolerant(&mut self, region: FailedRegion) -> Result<(), CoordError> {
+        let rebuild_s = self.trainer.inject_failure(region)?;
+        let (steps, transfers) = self.trainer.schedule_info();
+        self.trainer.metrics.annotate(
+            self.trainer.step,
+            format!(
+                "rings rebuilt in {rebuild_s:.4}s (plan: {steps} steps, {transfers} transfers)"
+            ),
+        );
+        Ok(())
+    }
+
+    /// Sub-mesh policy on failure: restart unless the active sub-mesh
+    /// is untouched by the new hole.
+    fn submesh_after_failure(&mut self, region: FailedRegion) -> Result<(), CoordError> {
+        if let Some((x0, y0, w, h)) = self.submesh {
+            if !region.overlaps(&FailedRegion::new(x0, y0, w, h)) {
+                self.trainer.metrics.annotate(
+                    self.trainer.step,
+                    format!("failure {region:?} outside active sub-mesh; continuing"),
+                );
+                return Ok(());
+            }
+        }
+        self.restart_on_submesh()
+    }
+
+    fn handle_repair(&mut self, region: FailedRegion) -> Result<(), CoordError> {
+        match self.cfg.policy {
+            RecoveryPolicy::FaultTolerant => self.rejoin_fault_tolerant(region),
+            RecoveryPolicy::Stop => {
+                let note = format!("repair {region:?} ignored (stop policy)");
+                self.trainer.metrics.annotate(self.trainer.step, note);
+                Ok(())
+            }
+            RecoveryPolicy::SubMesh => self.submesh_after_repair(),
+            RecoveryPolicy::Adaptive => {
+                if self.submesh.is_none() {
+                    return self.rejoin_fault_tolerant(region);
+                }
+                match self.adaptive_choose() {
+                    Some(true) => {
+                        self.restart_on_cluster_mesh("adaptive: repair makes full mesh best")
+                    }
+                    _ => self.submesh_after_repair(),
+                }
+            }
+        }
+    }
+
+    /// Fault-tolerant rejoin: restore the region in the live trainer
+    /// and re-broadcast the replica to the recovered chips.
+    fn rejoin_fault_tolerant(&mut self, region: FailedRegion) -> Result<(), CoordError> {
+        let rebuild_s = self.trainer.rejoin_region(region)?;
+        let (steps, transfers) = self.trainer.schedule_info();
+        self.trainer.metrics.annotate(
+            self.trainer.step,
+            format!(
+                "rejoin complete in {rebuild_s:.4}s (plan: {steps} steps, {transfers} transfers, {} workers)",
+                self.trainer.num_workers()
+            ),
+        );
+        Ok(())
+    }
+
+    /// Sub-mesh policy on repair: move to the (now larger) best clean
+    /// sub-mesh when it beats the active one.
+    fn submesh_after_repair(&mut self) -> Result<(), CoordError> {
+        let sub = largest_submesh(self.cluster.nx, self.cluster.ny, self.cluster.failed_regions());
+        let gain = sub.2 * sub.3 > self.trainer.num_workers();
+        if gain {
+            self.restart_on_submesh()?;
+            if !self.cluster.has_failures() {
+                // Full mesh restored: no longer a sub-mesh run.
+                self.submesh = None;
+            }
+        } else {
+            self.trainer
+                .metrics
+                .annotate(self.trainer.step, "repair does not enlarge the best sub-mesh");
+        }
+        Ok(())
+    }
+
+    fn handle_event(&mut self, ev: TimedEvent) -> Result<(), CoordError> {
+        match ev.event {
+            ClusterEvent::CheckpointTick => {
+                self.save_checkpoint()?;
+                self.trainer.metrics.annotate(self.trainer.step, "checkpoint (scenario tick)");
+                Ok(())
+            }
+            ClusterEvent::Stop => Err(CoordError::Stopped(self.trainer.step)),
+            ClusterEvent::Fail(region) => {
+                self.cluster.fail(region)?;
+                self.handle_failure(region)
+            }
+            ClusterEvent::Repair(region) => {
+                self.cluster.repair(region)?;
+                self.handle_repair(region)
+            }
+        }
+    }
+
+    /// Run the job to completion, draining the event stream as the step
+    /// counter passes each event's timestamp.
     pub fn run(&mut self) -> Result<RunSummary, CoordError> {
         let t0 = std::time::Instant::now();
-        let mut failures = self.cfg.failures.clone();
-        failures.sort_by_key(|f| f.at_step);
-        let mut fidx = 0;
+        let mut queue = EventQueue::new(self.cfg.timeline());
         let target = self.cfg.steps;
         while self.trainer.step < target {
-            while fidx < failures.len() && failures[fidx].at_step <= self.trainer.step {
-                let ev = failures[fidx];
-                fidx += 1;
-                self.handle_failure(ev)?;
+            while let Some(ev) = queue.pop_due(self.trainer.step) {
+                self.handle_event(ev)?;
             }
             let rec = self.trainer.train_step()?;
             if self.cfg.log_every > 0 && rec.step % self.cfg.log_every == 0 {
@@ -206,6 +458,14 @@ mod tests {
         JobConfig::new(TrainerConfig::new("tiny", nx, ny), steps)
     }
 
+    fn fail_at(at_step: u64, region: FailedRegion) -> TimedEvent {
+        TimedEvent { at_step, event: ClusterEvent::Fail(region) }
+    }
+
+    fn repair_at(at_step: u64, region: FailedRegion) -> TimedEvent {
+        TimedEvent { at_step, event: ClusterEvent::Repair(region) }
+    }
+
     #[test]
     fn plain_run_completes() {
         if !have_artifacts() {
@@ -232,6 +492,7 @@ mod tests {
         assert_eq!(s.steps_run, 6);
         assert_eq!(s.final_workers, 12);
         assert!(s.events.iter().any(|(_, e)| e.contains("failure injected")));
+        assert_eq!(c.cluster.failed_regions().len(), 1);
     }
 
     #[test]
@@ -263,5 +524,71 @@ mod tests {
         // Largest sub-mesh avoiding a corner board on 4x4 is 4x2 or 2x4.
         assert_eq!(s.final_workers, 8);
         assert!(s.events.iter().any(|(_, e)| e.contains("sub-mesh restart")));
+        assert!(c.on_submesh());
+    }
+
+    #[test]
+    fn repair_rejoins_under_fault_tolerant() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let region = FailedRegion::board(2, 0);
+        let mut cfg = job(4, 4, 8);
+        cfg.events = vec![fail_at(2, region), repair_at(5, region)];
+        let mut c = Coordinator::new(cfg, &rt).unwrap();
+        let s = c.run().unwrap();
+        assert_eq!(s.steps_run, 8);
+        assert_eq!(s.final_workers, 16, "repair must restore the full mesh");
+        assert!(s.events.iter().any(|(_, e)| e.contains("rejoined")));
+        assert!(!c.cluster.has_failures());
+        // Worker count dips then recovers in the step records.
+        let workers: Vec<usize> = c.trainer.metrics.records.iter().map(|r| r.workers).collect();
+        assert!(workers.contains(&12) && workers.last() == Some(&16));
+    }
+
+    #[test]
+    fn adaptive_policy_picks_by_predicted_throughput() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let mut cfg = job(4, 4, 6);
+        cfg.policy = RecoveryPolicy::Adaptive;
+        cfg.failures = vec![FailureEvent { at_step: 2, region: FailedRegion::board(2, 0) }];
+        let mut c = Coordinator::new(cfg, &rt).unwrap();
+        let s = c.run().unwrap();
+        assert_eq!(s.steps_run, 6);
+        // A single board on 4x4: FT keeps 12 workers vs the 8-worker
+        // sub-mesh, and allreduce is payload-tiny, so FT must win.
+        assert_eq!(s.final_workers, 12);
+        let decision = s
+            .events
+            .iter()
+            .find(|(_, e)| e.starts_with("adaptive:"))
+            .expect("adaptive decision must be recorded");
+        assert!(decision.1.contains("predicted step"), "{}", decision.1);
+        assert!(decision.1.ends_with("-> fault-tolerant"), "{}", decision.1);
+    }
+
+    #[test]
+    fn multi_fault_and_repair_scenario_fault_tolerant() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        // Both boards of the bottom strip die (temporally overlapping
+        // holes); the first is later repaired.
+        let a = FailedRegion::board(0, 0);
+        let b = FailedRegion::board(2, 0);
+        let mut cfg = job(4, 4, 10);
+        cfg.events = vec![fail_at(2, a), fail_at(4, b), repair_at(7, a)];
+        let mut c = Coordinator::new(cfg, &rt).unwrap();
+        let s = c.run().unwrap();
+        assert_eq!(s.steps_run, 10);
+        assert_eq!(s.final_workers, 12, "one hole (b) still open");
+        assert_eq!(c.cluster.failed_regions(), &[b]);
+        let workers: Vec<usize> = c.trainer.metrics.records.iter().map(|r| r.workers).collect();
+        assert!(workers.contains(&8), "both holes were open at once: {workers:?}");
     }
 }

@@ -1,5 +1,8 @@
 //! Recovery policies — the four options the paper's introduction lists
-//! for surviving a failure on a mesh, minus the fire-fighter robot.
+//! for surviving a failure on a mesh (minus the fire-fighter robot),
+//! plus the model-driven adaptive selector that chooses between them at
+//! runtime (in the spirit of Chameleon, arXiv 2508.21613: recovery
+//! strategy selected from predicted throughput, not fixed a priori).
 
 use crate::mesh::FailedRegion;
 
@@ -12,38 +15,87 @@ pub enum RecoveryPolicy {
     SubMesh,
     /// Halt the job.
     Stop,
+    /// Pick fault-tolerant-continue vs. sub-mesh-restart per event by
+    /// perfmodel-predicted training throughput on the candidate
+    /// topologies.
+    Adaptive,
 }
 
 impl RecoveryPolicy {
+    pub const ALL: [RecoveryPolicy; 4] = [
+        RecoveryPolicy::FaultTolerant,
+        RecoveryPolicy::SubMesh,
+        RecoveryPolicy::Stop,
+        RecoveryPolicy::Adaptive,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             RecoveryPolicy::FaultTolerant => "fault-tolerant",
             RecoveryPolicy::SubMesh => "sub-mesh",
             RecoveryPolicy::Stop => "stop",
+            RecoveryPolicy::Adaptive => "adaptive",
         }
     }
 
     pub fn parse(s: &str) -> Option<Self> {
-        [Self::FaultTolerant, Self::SubMesh, Self::Stop].into_iter().find(|p| p.name() == s)
+        Self::ALL.into_iter().find(|p| p.name() == s)
     }
 }
 
-/// Largest axis-aligned full sub-mesh of `nx x ny` avoiding `region`,
-/// as `(x0, y0, w, h)`. The candidates are the four maximal slabs
-/// beside the region (left/right/below/above); ties prefer more chips,
-/// then wider shapes.
-pub fn largest_submesh(nx: usize, ny: usize, region: &FailedRegion) -> (usize, usize, usize, usize) {
-    let candidates = [
-        (0, 0, region.x0, ny),                                // left slab
-        (region.x1(), 0, nx.saturating_sub(region.x1()), ny), // right slab
-        (0, 0, nx, region.y0),                                // bottom slab
-        (0, region.y1(), nx, ny.saturating_sub(region.y1())), // top slab
-    ];
-    candidates
-        .into_iter()
-        .filter(|&(_, _, w, h)| w > 0 && h > 0)
-        .max_by_key(|&(_, _, w, h)| (w * h, w))
-        .unwrap_or((0, 0, 0, 0))
+/// Largest axis-aligned full sub-mesh of `nx x ny` avoiding **all**
+/// `regions`, as `(x0, y0, w, h)`. Ties prefer more chips, then wider
+/// shapes. With no failed regions the answer is the full mesh.
+///
+/// The candidate edges are drawn from the region boundary grid (every
+/// maximal empty rectangle has its edges on region boundaries or the
+/// mesh edge), so the result is exact for any number of disjoint
+/// rectangular holes — unlike the old single-region four-slab
+/// shortlist, which a second failure could silently invalidate by
+/// selecting a slab containing the first hole.
+pub fn largest_submesh(
+    nx: usize,
+    ny: usize,
+    regions: &[FailedRegion],
+) -> (usize, usize, usize, usize) {
+    let mut xs = vec![0, nx];
+    let mut ys = vec![0, ny];
+    for r in regions {
+        xs.push(r.x0.min(nx));
+        xs.push(r.x1().min(nx));
+        ys.push(r.y0.min(ny));
+        ys.push(r.y1().min(ny));
+    }
+    xs.sort_unstable();
+    xs.dedup();
+    ys.sort_unstable();
+    ys.dedup();
+
+    let clear = |x0: usize, y0: usize, x1: usize, y1: usize| {
+        let candidate = FailedRegion::new(x0, y0, x1 - x0, y1 - y0);
+        regions.iter().all(|r| !r.overlaps(&candidate))
+    };
+
+    let mut best = (0, 0, 0, 0);
+    let mut best_key = (0usize, 0usize);
+    for (i, &x0) in xs.iter().enumerate() {
+        for &x1 in &xs[i + 1..] {
+            for (j, &y0) in ys.iter().enumerate() {
+                for &y1 in &ys[j + 1..] {
+                    if !clear(x0, y0, x1, y1) {
+                        continue;
+                    }
+                    let (w, h) = (x1 - x0, y1 - y0);
+                    let key = (w * h, w);
+                    if key > best_key {
+                        best_key = key;
+                        best = (x0, y0, w, h);
+                    }
+                }
+            }
+        }
+    }
+    best
 }
 
 /// Chip cost of the hot-spare alternative (paper intro, citing the
@@ -58,20 +110,26 @@ pub fn spare_overhead(nx: usize, ny: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::prop;
 
     #[test]
     fn policy_names_roundtrip() {
-        for p in [RecoveryPolicy::FaultTolerant, RecoveryPolicy::SubMesh, RecoveryPolicy::Stop] {
+        for p in RecoveryPolicy::ALL {
             assert_eq!(RecoveryPolicy::parse(p.name()), Some(p));
         }
         assert_eq!(RecoveryPolicy::parse("??"), None);
     }
 
     #[test]
+    fn submesh_no_failures_is_full_mesh() {
+        assert_eq!(largest_submesh(8, 4, &[]), (0, 0, 8, 4));
+    }
+
+    #[test]
     fn submesh_interior_region() {
         // 8x8 with a central 2x2 at (4,4): best slab is the left 4x8 =
         // 32 chips or bottom 8x4 = 32; tie prefers wider (8x4).
-        let (x0, y0, w, h) = largest_submesh(8, 8, &FailedRegion::board(4, 4));
+        let (x0, y0, w, h) = largest_submesh(8, 8, &[FailedRegion::board(4, 4)]);
         assert_eq!(w * h, 32);
         assert_eq!((x0, y0, w, h), (0, 0, 8, 4));
     }
@@ -80,7 +138,7 @@ mod tests {
     fn submesh_corner_region() {
         // Corner 2x2 at (0,0): right slab 6x8 = 48 beats top 8x6 = 48?
         // Equal chips; wider wins -> top slab 8x6.
-        let (_, _, w, h) = largest_submesh(8, 8, &FailedRegion::board(0, 0));
+        let (_, _, w, h) = largest_submesh(8, 8, &[FailedRegion::board(0, 0)]);
         assert_eq!(w * h, 48);
         assert_eq!((w, h), (8, 6));
     }
@@ -89,10 +147,79 @@ mod tests {
     fn submesh_host_region_paper_scale() {
         // 32x16 with a 4x2 host at (16, 8): the paper's sub-mesh
         // alternative would run on at most half-ish of the mesh.
-        let (_, _, w, h) = largest_submesh(32, 16, &FailedRegion::host(16, 8));
+        let (_, _, w, h) = largest_submesh(32, 16, &[FailedRegion::host(16, 8)]);
         let frac = (w * h) as f64 / 512.0;
         assert!(frac <= 0.55, "sub-mesh keeps only ~half: {frac}");
         assert!(frac >= 0.45);
+    }
+
+    #[test]
+    fn submesh_accounts_for_all_regions() {
+        // The multi-fault regression this PR fixes: with holes at (0,0)
+        // and (4,4) on 8x8, the old single-region logic (fed only the
+        // triggering failure) would pick the bottom 8x4 slab — which
+        // contains the first hole. The exact answer avoids both.
+        let regions = [FailedRegion::board(0, 0), FailedRegion::board(4, 4)];
+        let (x0, y0, w, h) = largest_submesh(8, 8, &regions);
+        assert_eq!((x0, y0, w, h), (2, 0, 6, 4));
+        let sub = FailedRegion::new(x0, y0, w, h);
+        for r in &regions {
+            assert!(!sub.overlaps(r), "sub-mesh contains hole {r:?}");
+        }
+    }
+
+    #[test]
+    fn prop_submesh_avoids_every_region_and_beats_slabs() {
+        prop("largest_submesh exact", |rng| {
+            let nx = 2 * rng.usize_in(2, 9);
+            let ny = 2 * rng.usize_in(2, 9);
+            let mut regions: Vec<FailedRegion> = Vec::new();
+            for _ in 0..rng.usize_in(1, 4) {
+                let (w, h) = *rng.choose(&[(2, 2), (4, 2), (2, 4)]);
+                if w > nx || h > ny {
+                    continue;
+                }
+                let x0 = 2 * rng.usize_in(0, (nx - w) / 2 + 1);
+                let y0 = 2 * rng.usize_in(0, (ny - h) / 2 + 1);
+                let r = FailedRegion::new(x0.min(nx - w), y0.min(ny - h), w, h);
+                if regions.iter().all(|o| !o.overlaps(&r)) {
+                    regions.push(r);
+                }
+            }
+            let (x0, y0, w, h) = largest_submesh(nx, ny, &regions);
+            // Fits and avoids every region. (A zero-size result means
+            // the regions cover the whole mesh; nothing to check.)
+            assert!(x0 + w <= nx && y0 + h <= ny);
+            if w * h == 0 {
+                return;
+            }
+            let sub = FailedRegion::new(x0, y0, w, h);
+            for r in &regions {
+                assert!(!sub.overlaps(r), "({x0},{y0},{w},{h}) intersects {r:?}");
+            }
+            // At least as large as every per-region clean slab (the old
+            // shortlist, now filtered against all regions).
+            let clear = |rx0: usize, ry0: usize, rw: usize, rh: usize| {
+                rw > 0
+                    && rh > 0
+                    && regions
+                        .iter()
+                        .all(|r| !r.overlaps(&FailedRegion::new(rx0, ry0, rw, rh)))
+            };
+            for r in &regions {
+                let slabs = [
+                    (0, 0, r.x0, ny),
+                    (r.x1(), 0, nx.saturating_sub(r.x1()), ny),
+                    (0, 0, nx, r.y0),
+                    (0, r.y1(), nx, ny.saturating_sub(r.y1())),
+                ];
+                for (sx, sy, sw, sh) in slabs {
+                    if clear(sx, sy, sw, sh) {
+                        assert!(w * h >= sw * sh, "missed a clean slab {sw}x{sh}");
+                    }
+                }
+            }
+        });
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! runs on the training path. See `DESIGN.md` for the full inventory and
 //! `EXPERIMENTS.md` for the paper-vs-measured record.
 
+pub mod cluster;
 pub mod collective;
 pub mod config;
 pub mod coordinator;

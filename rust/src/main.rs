@@ -10,6 +10,7 @@
 //!   verify   numeric allreduce correctness check on a chosen topology
 //!   info     artifact + runtime environment info
 
+use meshreduce::cluster::Scenario;
 use meshreduce::collective::verify::{check_allreduce, schedule_cdg_acyclic};
 use meshreduce::collective::{build_schedule, Scheme};
 use meshreduce::config::load_job;
@@ -40,7 +41,8 @@ fn main() {
                  \n\
                  train   --config job.toml | [--model tiny] [--mesh 4x4] [--steps 10]\n\
                  \x20       [--scheme fault-tolerant] [--fail-at N --fail-region X0,Y0,WxH]\n\
-                 \x20       [--policy fault-tolerant|sub-mesh|stop] [--log-every N]\n\
+                 \x20       [--scenario script.scenario]\n\
+                 \x20       [--policy fault-tolerant|sub-mesh|stop|adaptive] [--log-every N]\n\
                  \x20       [--csv out.csv] [--verify-allreduce] [--seed N]\n\
                  sweep   [--mesh 8x8]\n\
                  figures [fig1 fig2 fig3 fig4 fig6 fig7 fig8 fig9 fig10]\n\
@@ -119,6 +121,26 @@ fn cmd_train(rest: &[String]) -> i32 {
             f.get("--fail-region").and_then(parse_region),
         ) {
             job.failures.push(FailureEvent { at_step: at, region });
+        }
+        if let Some(path) = f.get("--scenario") {
+            match Scenario::load(&PathBuf::from(path)) {
+                Ok(sc) => {
+                    if let Some((sx, sy)) = sc.mesh {
+                        if (sx, sy) != (job.trainer.nx, job.trainer.ny) {
+                            eprintln!(
+                                "scenario targets {sx}x{sy}, job mesh is {}x{}",
+                                job.trainer.nx, job.trainer.ny
+                            );
+                            return 1;
+                        }
+                    }
+                    job.events.extend(sc.events);
+                }
+                Err(e) => {
+                    eprintln!("scenario error: {e}");
+                    return 1;
+                }
+            }
         }
         if let Some(p) = f.get("--policy") {
             match RecoveryPolicy::parse(p) {

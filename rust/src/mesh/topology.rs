@@ -38,16 +38,6 @@ impl Topology {
         &self.failed
     }
 
-    /// The single failed region, if there is exactly one (the paper's
-    /// fault-tolerant ring schemes are specified for one contiguous
-    /// region).
-    pub fn single_failure(&self) -> Option<&FailedRegion> {
-        match self.failed.as_slice() {
-            [one] => Some(one),
-            _ => None,
-        }
-    }
-
     pub fn has_failures(&self) -> bool {
         !self.failed.is_empty()
     }
@@ -164,11 +154,22 @@ mod tests {
     }
 
     #[test]
-    fn single_failure_accessor() {
-        let t = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
-        assert!(t.single_failure().is_some());
-        let t2 = Topology::full(8, 8);
-        assert!(t2.single_failure().is_none());
+    fn multi_region_live_accounting() {
+        // The control plane accumulates several concurrent holes; the
+        // topology must account for all of them.
+        let t = Topology::with_failures(
+            8,
+            8,
+            vec![FailedRegion::board(2, 2), FailedRegion::host(4, 6), FailedRegion::board(0, 4)],
+        );
+        assert_eq!(t.live_count(), 64 - 4 - 8 - 4);
+        assert_eq!(t.live_nodes().len(), t.live_count());
+        assert!(t.is_connected());
+        for r in t.failed_regions() {
+            for c in r.coords() {
+                assert!(!t.is_alive(c));
+            }
+        }
     }
 
     #[test]

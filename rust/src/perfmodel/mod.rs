@@ -12,4 +12,7 @@ pub mod steptime;
 pub mod tables;
 
 pub use mlperf::{paper_rows, PaperRow, Workload};
-pub use steptime::{allreduce_time_s, predict_row, RowPrediction, StepModel};
+pub use steptime::{
+    allreduce_time_s, predict_candidate, predict_row, CandidatePrediction, RowPrediction,
+    StepModel,
+};

@@ -82,6 +82,43 @@ impl RowPrediction {
     }
 }
 
+/// Prediction for one candidate recovery topology — the quantity
+/// [`RecoveryPolicy::Adaptive`](crate::coordinator::policy::RecoveryPolicy)
+/// compares across fault-tolerant-continue vs. sub-mesh-restart.
+///
+/// Per-chip batch is fixed (as on the real system), so samples/sec is
+/// proportional to `workers / step_s`; that normalized figure is the
+/// `throughput` field.
+#[derive(Debug, Clone, Copy)]
+pub struct CandidatePrediction {
+    /// Live workers the candidate topology trains with.
+    pub workers: usize,
+    /// Simulated fault-tolerant allreduce time, seconds.
+    pub allreduce_s: f64,
+    /// Predicted step time: per-worker compute + allreduce, seconds.
+    pub step_s: f64,
+    /// Effective training throughput, worker-steps per second.
+    pub throughput: f64,
+}
+
+/// Predict step time and effective throughput of training on `topo`
+/// with the fault-tolerant scheme, given the (measured or modelled)
+/// per-worker compute time. Errors when the scheme cannot be scheduled
+/// on `topo` (e.g. no blue strip remains) — the adaptive policy treats
+/// that as "candidate not viable".
+pub fn predict_candidate(
+    topo: &Topology,
+    payload_elems: usize,
+    link: &LinkModel,
+    compute_s: f64,
+) -> Result<CandidatePrediction, ModelError> {
+    let allreduce_s = allreduce_time_s(topo, payload_elems, link)?;
+    let step_s = compute_s + allreduce_s;
+    let workers = topo.live_count();
+    let throughput = if step_s > 0.0 { workers as f64 / step_s } else { 0.0 };
+    Ok(CandidatePrediction { workers, allreduce_s, step_s, throughput })
+}
+
 /// Simulate the allreduce for one configuration.
 pub fn allreduce_time_s(
     topo: &Topology,
@@ -142,6 +179,35 @@ mod tests {
         let p = predict_row(&rows[0], &link).unwrap();
         assert!((p.full.overhead_frac() - rows[0].t2_overhead_full).abs() < 1e-9);
         assert!(p.full.compute_s > 0.0);
+    }
+
+    #[test]
+    fn candidate_prediction_orders_topologies() {
+        // The adaptive policy's comparison: a lightly-degraded mesh
+        // out-throughputs the sub-mesh fallback (more workers, slightly
+        // slower allreduce), which is the paper's availability argument
+        // in model form.
+        let link = LinkModel::tpu_v3();
+        let payload = 1 << 20;
+        let compute = 0.05;
+        let ft = predict_candidate(
+            &Topology::with_failure(8, 8, FailedRegion::host(2, 2)),
+            payload,
+            &link,
+            compute,
+        )
+        .unwrap();
+        let sub = predict_candidate(&Topology::full(8, 4), payload, &link, compute).unwrap();
+        assert_eq!(ft.workers, 56);
+        assert_eq!(sub.workers, 32);
+        assert!(ft.allreduce_s > 0.0 && sub.allreduce_s > 0.0);
+        assert!((ft.step_s - (compute + ft.allreduce_s)).abs() < 1e-12);
+        assert!(
+            ft.throughput > sub.throughput,
+            "ft {} vs sub-mesh {}",
+            ft.throughput,
+            sub.throughput
+        );
     }
 
     #[test]

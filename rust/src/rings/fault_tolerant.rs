@@ -31,6 +31,21 @@
 //! The builder also handles the degenerate full-mesh case (no yellow
 //! rings), which makes it the single planner used by the trainer for
 //! both Table-1 columns.
+//!
+//! **Multiple concurrent regions** (beyond the paper, needed by the
+//! event-driven control plane): the construction is purely
+//! liveness-driven — strips are classified blue/broken and segments are
+//! scanned per strip — so any *set* of disjoint even-aligned regions is
+//! handled, provided at least one blue strip survives and every yellow
+//! node still has a live blue forward target in its column
+//! ([`FtPlanError::NoForwardTarget`] otherwise, e.g. when holes in
+//! several strips stack over the same columns as every blue strip's
+//! rows — the *adaptive* recovery policy treats that as "candidate not
+//! viable" and falls back to a sub-mesh restart; under the plain
+//! fault-tolerant policy it is a hard scheduling error that aborts the
+//! job). The phase-1 full-throughput invariant (every live chip in
+//! exactly one phase-1 ring, no two phase-1 rings sharing a link) holds
+//! unchanged because phase-1 rings never leave their strip.
 
 use super::pairrows::strip_ring_order;
 use super::{Ring, RingError};
@@ -213,6 +228,14 @@ mod tests {
             r.validate(topo).unwrap();
             assert!(r.is_near_neighbor(), "phase-1 rings are physical");
         }
+        // The paper's full-throughput invariant: no two phase-1 rings
+        // share a directed link.
+        let mut seen = std::collections::HashSet::<Link>::new();
+        for r in &phase1 {
+            for l in r.links(topo).unwrap() {
+                assert!(seen.insert(l), "phase-1 link {l} shared");
+            }
+        }
         for r in &plan.phase2 {
             r.validate(topo).unwrap();
         }
@@ -373,6 +396,67 @@ mod tests {
         assert!(plan.yellow.is_empty());
         assert!(plan.phase2.is_empty());
         assert_eq!(plan.num_chips(), 8);
+    }
+
+    #[test]
+    fn two_concurrent_regions_plan() {
+        // Two holes in different strips of an 8x8: both strips shatter
+        // into segments, the surviving strips stay blue, and every
+        // phase-1 invariant holds.
+        let topo = Topology::with_failures(
+            8,
+            8,
+            vec![FailedRegion::board(2, 2), FailedRegion::host(4, 4)],
+        );
+        let plan = check_plan(&topo);
+        assert_eq!(plan.blue.len(), 2); // strips 0 and 3
+        assert_eq!(plan.yellow.len(), 3); // 2 segments strip 1, 1 segment strip 2
+        assert_eq!(plan.num_chips(), 64 - 4 - 8);
+    }
+
+    #[test]
+    fn prop_ft_plan_on_random_multi_region_topologies() {
+        // Satellite invariant test: on randomized multi-region
+        // topologies, every live node is covered by exactly one phase-1
+        // ring and no two phase-1 rings share a link (the paper's
+        // full-throughput property) — `check_plan` asserts both.
+        prop("ft plan multi-region", |rng| {
+            let nx = 2 * rng.usize_in(3, 9);
+            let ny = 2 * rng.usize_in(3, 9);
+            let mut regions: Vec<FailedRegion> = Vec::new();
+            for _ in 0..rng.usize_in(1, 4) {
+                let (w, h) = *rng.choose(&[(2, 2), (4, 2), (2, 4)]);
+                if w + 2 > nx || h + 2 > ny {
+                    continue;
+                }
+                let x0 = 2 * rng.usize_in(0, (nx - w) / 2 + 1);
+                let y0 = 2 * rng.usize_in(0, (ny - h) / 2 + 1);
+                if x0 + w > nx || y0 + h > ny {
+                    continue;
+                }
+                let r = FailedRegion::new(x0, y0, w, h);
+                if regions.iter().all(|o| !o.overlaps(&r)) {
+                    regions.push(r);
+                }
+            }
+            if regions.is_empty() {
+                return;
+            }
+            let topo = Topology::with_failures(nx, ny, regions);
+            if !topo.is_connected() {
+                return;
+            }
+            match ft_plan(&topo) {
+                // Legitimately unschedulable region sets: no full strip
+                // left, or a yellow column with no blue node alive.
+                Err(FtPlanError::NoBlueStrip | FtPlanError::NoForwardTarget(_)) => {}
+                Err(e) => panic!("unexpected ft_plan failure: {e}"),
+                Ok(_) => {
+                    let plan = check_plan(&topo);
+                    assert_eq!(plan.num_chips(), topo.live_count());
+                }
+            }
+        });
     }
 
     #[test]

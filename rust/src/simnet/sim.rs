@@ -11,7 +11,7 @@ use super::link::LinkModel;
 use super::stats::LinkStats;
 use crate::collective::compiled::{CompileError, CompiledSchedule};
 use crate::collective::Schedule;
-use crate::mesh::{RouteError, Topology};
+use crate::mesh::{Dir, Link, RouteError, Topology};
 use thiserror::Error;
 
 #[derive(Debug, Error)]
@@ -20,6 +20,12 @@ pub enum SimError {
     Route(#[from] RouteError),
     #[error("plan was lowered without routes (compile_exec); use CompiledSchedule::compile")]
     NoRoutes,
+    #[error("cached route crosses dead chip on link {0}")]
+    DeadLink(Link),
+    #[error("cached route link id {0} leaves the mesh")]
+    OffMesh(usize),
+    #[error("plan compiled for a {0}x{1} mesh, topology is {2}x{3}")]
+    MeshMismatch(usize, usize, usize, usize),
 }
 
 impl From<CompileError> for SimError {
@@ -79,6 +85,36 @@ pub fn simulate(
     // (partitions, direct classification) this replay never reads.
     let plan = CompiledSchedule::compile_sim(schedule, topo)?;
     simulate_plan(&plan, model)
+}
+
+/// Validate every cached route of a plan against a topology: each link
+/// must stay on the mesh with both endpoints alive. `mesh::route`
+/// guarantees this at compile time for the topology it routed on; this
+/// is the independent multi-hole gate for replaying a cached plan after
+/// cluster transitions — a plan compiled before a failure accumulated
+/// another hole would silently stream traffic through dead chips, and
+/// this check catches exactly that.
+pub fn validate_routes(plan: &CompiledSchedule, topo: &Topology) -> Result<(), SimError> {
+    if !plan.has_routes {
+        return Err(SimError::NoRoutes);
+    }
+    let mesh = plan.mesh;
+    if mesh != topo.mesh {
+        // A different mesh has a different link-id stride; decoding
+        // would silently check the wrong chips.
+        return Err(SimError::MeshMismatch(mesh.nx, mesh.ny, topo.mesh.nx, topo.mesh.ny));
+    }
+    for &lid in &plan.link_ids {
+        let from = mesh.coord_of(lid / 4);
+        let dir = Dir::ALL[lid % 4];
+        let Some(to) = mesh.step(from, dir) else {
+            return Err(SimError::OffMesh(lid));
+        };
+        if !topo.is_alive(from) || !topo.is_alive(to) {
+            return Err(SimError::DeadLink(Link::new(from, to)));
+        }
+    }
+    Ok(())
 }
 
 /// Simulate a pre-compiled plan (see [`simulate`] for the dependency
@@ -353,6 +389,56 @@ mod tests {
         assert_eq!(a.makespan_s, b.makespan_s);
         assert_eq!(a.step_times_s, b.step_times_s);
         assert_eq!(a.injected_bytes, b.injected_bytes);
+    }
+
+    #[test]
+    fn multi_hole_routes_avoid_all_failed_regions() {
+        // Two concurrent holes: every cached route of the compiled plan
+        // must avoid both (detouring can route phase-2 / forward
+        // traffic arbitrarily far around the second hole).
+        let regions = vec![FailedRegion::board(2, 2), FailedRegion::host(4, 4)];
+        let topo = Topology::with_failures(8, 8, regions.clone());
+        for scheme in [Scheme::OneD, Scheme::FaultTolerant] {
+            let sched = build_schedule(scheme, &topo, 1 << 12).unwrap();
+            let plan = crate::collective::CompiledSchedule::compile_sim(&sched, &topo).unwrap();
+            validate_routes(&plan, &topo).unwrap();
+            // Belt and braces: decode every cached link and check both
+            // endpoints dodge every region.
+            for &lid in &plan.link_ids {
+                let from = topo.mesh.coord_of(lid / 4);
+                let to = topo.mesh.step(from, Dir::ALL[lid % 4]).unwrap();
+                for r in &regions {
+                    assert!(!r.contains(from) && !r.contains(to), "{from}->{to} in {r:?}");
+                }
+            }
+            let report = simulate_plan(&plan, &LinkModel::tpu_v3()).unwrap();
+            assert!(report.makespan_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn stale_plan_detected_after_new_hole() {
+        // A plan compiled before a second failure must fail the route
+        // validation against the post-failure topology.
+        let topo1 = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        let sched = build_schedule(Scheme::FaultTolerant, &topo1, 1 << 10).unwrap();
+        let plan = crate::collective::CompiledSchedule::compile_sim(&sched, &topo1).unwrap();
+        validate_routes(&plan, &topo1).unwrap();
+        let topo2 = Topology::with_failures(
+            8,
+            8,
+            vec![FailedRegion::board(2, 2), FailedRegion::board(4, 0)],
+        );
+        assert!(matches!(validate_routes(&plan, &topo2), Err(SimError::DeadLink(_))));
+        // Executable-only plans carry no routes to validate.
+        let noroutes = crate::collective::CompiledSchedule::compile_exec(&sched, topo1.mesh);
+        assert!(matches!(validate_routes(&noroutes, &topo1), Err(SimError::NoRoutes)));
+        // A plan for a different mesh must be rejected, not mis-decoded.
+        let other = Topology::full(4, 4);
+        assert!(matches!(
+            validate_routes(&plan, &other),
+            Err(SimError::MeshMismatch(8, 8, 4, 4))
+        ));
     }
 
     #[test]

@@ -25,7 +25,7 @@ pub mod optimizer;
 use crate::collective::{
     build_schedule, execute_compiled, CompiledSchedule, ExecutorArena, NodeBuffers, Scheme,
 };
-use crate::mesh::{FailedRegion, Topology};
+use crate::mesh::{FailedRegion, Mesh, Topology};
 use crate::runtime::{ArtifactSet, Runtime, TrainStepExec};
 use checkpoint::Checkpoint;
 use data::SyntheticCorpus;
@@ -69,6 +69,9 @@ pub struct TrainerConfig {
     pub seed: u64,
     /// After every allreduce, check all workers hold identical sums.
     pub verify_allreduce: bool,
+    /// Regions already failed at job start (the cluster control plane
+    /// restarts trainers onto degraded topologies; empty = full mesh).
+    pub failed: Vec<FailedRegion>,
 }
 
 impl TrainerConfig {
@@ -81,6 +84,7 @@ impl TrainerConfig {
             scheme: Scheme::FaultTolerant,
             seed: 0,
             verify_allreduce: false,
+            failed: Vec::new(),
         }
     }
 }
@@ -109,7 +113,19 @@ impl DataParallelTrainer {
         let params = set.load_init_params()?;
         let opt = SgdOptimizer::new(params.len(), set.meta.lr, set.meta.momentum);
         let corpus = SyntheticCorpus::new(set.meta.vocab, cfg.seed);
-        let topo = Topology::full(cfg.nx, cfg.ny);
+        let mesh = Mesh::new(cfg.nx, cfg.ny);
+        for (i, r) in cfg.failed.iter().enumerate() {
+            if !r.fits(&mesh) {
+                return Err(TrainError::BadFailure(format!("{r:?} outside mesh")));
+            }
+            if let Some(other) = cfg.failed[i + 1..].iter().find(|o| o.overlaps(r)) {
+                return Err(TrainError::BadFailure(format!("{r:?} overlaps {other:?}")));
+            }
+        }
+        let topo = Topology::with_failures(cfg.nx, cfg.ny, cfg.failed.clone());
+        if !topo.is_connected() {
+            return Err(TrainError::BadFailure("mesh disconnected".into()));
+        }
         let schedule = build_schedule(cfg.scheme, &topo, params.len())?;
         let plan = CompiledSchedule::compile_exec(&schedule, topo.mesh);
         Ok(Self {
@@ -168,6 +184,54 @@ impl DataParallelTrainer {
         self.plan = CompiledSchedule::compile_exec(&schedule, topo.mesh);
         self.topo = topo;
         self.metrics.annotate(self.step, format!("failure injected: {region:?}"));
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// Rejoin a repaired region mid-run: the other half of the
+    /// availability story. Removes the region from the failed set,
+    /// recompiles the allreduce plan on the restored topology, and
+    /// re-broadcasts the replica to the recovered chips **through the
+    /// allreduce machinery itself**: one live root contributes the
+    /// replica, every other worker (including the rejoined chips)
+    /// contributes zeros, and the global sum delivered by the schedule
+    /// *is* the broadcast. Verifies every worker ends bit-identical and
+    /// adopts the broadcast buffer as the replica. Returns the total
+    /// rebuild + re-broadcast time.
+    pub fn rejoin_region(&mut self, region: FailedRegion) -> Result<f64, TrainError> {
+        let t0 = std::time::Instant::now();
+        let mut regions = self.topo.failed_regions().to_vec();
+        let Some(pos) = regions.iter().position(|r| *r == region) else {
+            return Err(TrainError::BadFailure(format!("{region:?} is not a failed region")));
+        };
+        regions.remove(pos);
+        let topo = Topology::with_failures(self.cfg.nx, self.cfg.ny, regions);
+        let schedule = build_schedule(self.cfg.scheme, &topo, self.params.len())?;
+        let plan = CompiledSchedule::compile_exec(&schedule, topo.mesh);
+
+        let live = topo.live_nodes();
+        let root = live[0];
+        let mut bufs = NodeBuffers::new(topo.mesh);
+        for &node in &live {
+            let buf =
+                if node == root { self.params.clone() } else { vec![0.0; self.params.len()] };
+            bufs.insert(node, buf);
+        }
+        execute_compiled(&plan, &mut bufs, &mut self.arena)?;
+        let replica = bufs.take(root).expect("root buffer");
+        let bad = live[1..]
+            .iter()
+            .filter(|&&n| bufs.get(n).unwrap() != replica.as_slice())
+            .count();
+        if bad > 0 {
+            return Err(TrainError::VerifyFailed(bad));
+        }
+        // Adopt the broadcast result so all replicas — rejoined chips
+        // included — are bit-identical from the next step on.
+        self.params = replica;
+        self.plan = plan;
+        self.topo = topo;
+        self.metrics
+            .annotate(self.step, format!("repair: {region:?} rejoined, replica re-broadcast"));
         Ok(t0.elapsed().as_secs_f64())
     }
 
@@ -300,6 +364,54 @@ mod tests {
         assert_eq!(tr.metrics.records[1].workers, 16);
         assert_eq!(tr.metrics.records[4].workers, 12);
         assert_eq!(tr.metrics.events.len(), 1);
+    }
+
+    #[test]
+    fn rejoin_restores_workers_and_replica() {
+        let Some(mut tr) = tiny_trainer(4, 4) else { return };
+        tr.run(2).unwrap();
+        tr.inject_failure(FailedRegion::board(0, 0)).unwrap();
+        tr.run(2).unwrap();
+        let params_before = tr.params.clone();
+        tr.rejoin_region(FailedRegion::board(0, 0)).unwrap();
+        assert_eq!(tr.num_workers(), 16);
+        assert!(!tr.topology().has_failures());
+        // The re-broadcast must hand every worker the replica unchanged
+        // (broadcast = allreduce of root + zeros).
+        assert_eq!(tr.params, params_before, "re-broadcast must not perturb the replica");
+        assert!(tr.metrics.events.iter().any(|(_, e)| e.contains("rejoined")));
+        // Training continues with the restored worker count.
+        tr.run(2).unwrap();
+        assert_eq!(tr.metrics.records.last().unwrap().workers, 16);
+    }
+
+    #[test]
+    fn rejoin_unknown_region_rejected() {
+        let Some(mut tr) = tiny_trainer(4, 4) else { return };
+        assert!(tr.rejoin_region(FailedRegion::board(0, 0)).is_err());
+        tr.inject_failure(FailedRegion::board(0, 0)).unwrap();
+        // Mismatched shape is not "the" failed region.
+        assert!(tr.rejoin_region(FailedRegion::new(0, 0, 2, 4)).is_err());
+        assert!(tr.rejoin_region(FailedRegion::board(0, 0)).is_ok());
+    }
+
+    #[test]
+    fn degraded_start_matches_injected_failure_topology() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let mut cfg = TrainerConfig::new("tiny", 4, 4);
+        cfg.failed = vec![FailedRegion::board(2, 2)];
+        let tr = DataParallelTrainer::new(cfg, &rt).unwrap();
+        assert_eq!(tr.num_workers(), 12);
+        // Invalid degraded starts are rejected, not panicked on.
+        let mut bad = TrainerConfig::new("tiny", 4, 4);
+        bad.failed = vec![FailedRegion::new(2, 0, 2, 4)]; // disconnects
+        assert!(matches!(
+            DataParallelTrainer::new(bad, &rt),
+            Err(TrainError::BadFailure(_))
+        ));
     }
 
     #[test]

@@ -89,6 +89,60 @@ fn coordinator_runs_from_config_text() {
 }
 
 #[test]
+fn example_scenario_file_roundtrips() {
+    // The checked-in demo scenario must parse and round-trip through
+    // the DSL (no artifacts needed).
+    use meshreduce::cluster::Scenario;
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/scenarios/two_fail_one_repair.scenario"
+    );
+    let sc = Scenario::load(std::path::Path::new(path)).unwrap();
+    assert_eq!(sc.mesh, Some((8, 8)));
+    assert_eq!(sc.events.len(), 3);
+    assert_eq!(Scenario::parse(&sc.render()).unwrap(), sc);
+}
+
+#[test]
+fn overlapping_failures_and_repair_under_all_policies() {
+    // The PR's acceptance scenario: two temporally overlapping failed
+    // regions followed by a repair/rejoin, end to end under the
+    // fault-tolerant, sub-mesh and adaptive policies.
+    if !have_artifacts() {
+        return;
+    }
+    use meshreduce::cluster::{ClusterEvent, TimedEvent};
+    use meshreduce::coordinator::policy::RecoveryPolicy;
+    let rt = Runtime::cpu().unwrap();
+    let a = FailedRegion::board(0, 0);
+    let b = FailedRegion::board(0, 2);
+    let events = vec![
+        TimedEvent { at_step: 2, event: ClusterEvent::Fail(a) },
+        TimedEvent { at_step: 4, event: ClusterEvent::Fail(b) },
+        TimedEvent { at_step: 7, event: ClusterEvent::Repair(a) },
+    ];
+    let policies =
+        [RecoveryPolicy::FaultTolerant, RecoveryPolicy::SubMesh, RecoveryPolicy::Adaptive];
+    for policy in policies {
+        let mut tcfg = TrainerConfig::new("tiny", 4, 6);
+        tcfg.verify_allreduce = true;
+        let mut job = JobConfig::new(tcfg, 10);
+        job.policy = policy;
+        job.checkpoint_every = Some(2);
+        job.events = events.clone();
+        let mut coord = Coordinator::new(job, &rt).unwrap();
+        let s = coord.run().unwrap_or_else(|e| panic!("{}: {e}", policy.name()));
+        assert_eq!(s.steps_run, 10, "{}", policy.name());
+        assert!(s.final_loss.is_finite(), "{}", policy.name());
+        if policy == RecoveryPolicy::FaultTolerant {
+            // Both holes open between steps 4 and 7, one after.
+            assert_eq!(s.final_workers, 20);
+            assert!(s.events.iter().any(|(_, e)| e.contains("rejoined")));
+        }
+    }
+}
+
+#[test]
 fn multiple_sequential_failures_survived() {
     // Beyond the paper's single-region evaluation: two boards die at
     // different times; the generalised planner keeps training.

@@ -1,0 +1,117 @@
+//! Differential scenario test (PR 2 satellite): an end-to-end
+//! multi-fault timeline — two temporally overlapping failures, then a
+//! repair — replayed through the cluster control plane, must produce
+//! **bit-identical** post-allreduce buffers at every stage:
+//!
+//! - across every scheme that can schedule the topology (integer-valued
+//!   payloads make the global sum exact, so different summation orders
+//!   cannot diverge);
+//! - across the serial and parallel executors;
+//! - and equal to the exact per-element global sum.
+//!
+//! This is the availability analogue of `executor_equivalence.rs`: the
+//! latter fixes the topology and varies the executor, this fixes a
+//! *timeline* and checks numeric equivalence is preserved through every
+//! control-plane transition, including the repair/rejoin direction.
+
+use meshreduce::cluster::{ClusterEvent, ClusterState, Scenario};
+use meshreduce::collective::verify::{expected_sum, int_buffer};
+use meshreduce::collective::{
+    build_schedule, execute_compiled_serial, execute_compiled_with, CompiledSchedule, ExecOptions,
+    ExecutorArena, NodeBuffers, Scheme,
+};
+use meshreduce::mesh::{FailedRegion, Topology};
+
+const SCRIPT: &str = "\
+mesh 8x8
+at 4 fail 2,2 4x2
+at 8 fail 6,6 2x2
+at 12 repair 2,2 4x2
+";
+
+fn filled(topo: &Topology, payload: usize, seed: u64) -> NodeBuffers {
+    let mut bufs = NodeBuffers::new(topo.mesh);
+    for node in topo.live_nodes() {
+        bufs.insert(node, int_buffer(node, payload, seed));
+    }
+    bufs
+}
+
+#[test]
+fn scenario_stages_bit_identical_across_schemes_and_executors() {
+    let payload = 2048;
+    let seed = 11;
+    let sc = Scenario::parse(SCRIPT).expect("scenario parses");
+    let (nx, ny) = sc.mesh.expect("script pins its mesh");
+    let mut cluster = ClusterState::new(nx, ny);
+
+    let mut stages = 0;
+    for ev in &sc.events {
+        cluster.apply(&ev.event).expect("valid transition");
+        let topo = cluster.topology();
+        let want = expected_sum(&topo, payload, seed);
+        // One reference result per stage; every (scheme, executor)
+        // combination must match it bit-for-bit.
+        for scheme in [Scheme::OneD, Scheme::PairRows, Scheme::FaultTolerant] {
+            let sched = build_schedule(scheme, &topo, payload)
+                .unwrap_or_else(|e| panic!("{} at stage {stages}: {e}", scheme.name()));
+            let plan = CompiledSchedule::compile_exec(&sched, topo.mesh);
+
+            let mut serial = filled(&topo, payload, seed);
+            execute_compiled_serial(&plan, &mut serial, &mut ExecutorArena::new()).unwrap();
+
+            let mut parallel = filled(&topo, payload, seed);
+            let opts = ExecOptions { threads: 4, par_min_elems: 1 };
+            execute_compiled_with(&plan, &mut parallel, &mut ExecutorArena::new(), &opts).unwrap();
+
+            for node in topo.live_nodes() {
+                let s = serial.get(node).unwrap();
+                assert_eq!(
+                    s,
+                    want.as_slice(),
+                    "{} stage {stages}: node {node} != exact global sum",
+                    scheme.name()
+                );
+                assert_eq!(
+                    s,
+                    parallel.get(node).unwrap(),
+                    "{} stage {stages}: serial vs parallel diverged at {node}",
+                    scheme.name()
+                );
+            }
+        }
+        stages += 1;
+    }
+    assert_eq!(stages, 3, "two failures and one repair must all replay");
+    // After the repair exactly one hole remains.
+    assert_eq!(cluster.failed_regions().len(), 1);
+    assert_eq!(cluster.live_chips(), nx * ny - 4);
+}
+
+#[test]
+fn rejoin_broadcast_is_exact_through_the_allreduce_machinery() {
+    // The repair path re-broadcasts the replica as "root + zeros"
+    // through the regular allreduce schedule. With exact integer
+    // payloads the broadcast must deliver the root buffer unchanged to
+    // every worker — including the freshly rejoined chips.
+    let payload = 1024;
+    let mut cluster = ClusterState::new(8, 8);
+    cluster.apply(&ClusterEvent::Fail(FailedRegion::host(2, 2))).unwrap();
+    cluster.apply(&ClusterEvent::Repair(FailedRegion::host(2, 2))).unwrap();
+    let topo = cluster.topology();
+    let live = topo.live_nodes();
+    let root = live[0];
+    let replica = int_buffer(root, payload, 99);
+
+    let sched = build_schedule(Scheme::FaultTolerant, &topo, payload).unwrap();
+    let plan = CompiledSchedule::compile_exec(&sched, topo.mesh);
+    let mut bufs = NodeBuffers::new(topo.mesh);
+    for &node in &live {
+        let buf = if node == root { replica.clone() } else { vec![0.0; payload] };
+        bufs.insert(node, buf);
+    }
+    execute_compiled_serial(&plan, &mut bufs, &mut ExecutorArena::new()).unwrap();
+    for &node in &live {
+        assert_eq!(bufs.get(node).unwrap(), replica.as_slice(), "broadcast wrong at {node}");
+    }
+}
