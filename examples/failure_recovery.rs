@@ -21,7 +21,7 @@
 //!    adaptive and stop policies.
 
 use meshreduce::cluster::{ClusterEvent, ClusterState, Scenario};
-use meshreduce::collective::{build_schedule, CompiledSchedule, Scheme};
+use meshreduce::collective::{build_schedule, CompiledSchedule, PlanCache, Scheme};
 use meshreduce::coordinator::policy::{largest_submesh, spare_overhead, RecoveryPolicy};
 use meshreduce::coordinator::{Coordinator, JobConfig};
 use meshreduce::perfmodel::predict_candidate;
@@ -84,6 +84,7 @@ fn model_driven_record(sc: &Scenario, nx: usize, ny: usize) -> anyhow::Result<Js
     let link = LinkModel::tpu_v3();
     let mut cluster = ClusterState::new(nx, ny);
     let mut report = JsonReport::new();
+    let mut cache = PlanCache::new(16);
     let iters = if quick_mode() { 3 } else { 10 };
 
     let healthy = predict_candidate(&cluster.topology(), MODEL_PAYLOAD, &link, MODEL_COMPUTE_S)?;
@@ -128,15 +129,24 @@ fn model_driven_record(sc: &Scenario, nx: usize, ny: usize) -> anyhow::Result<Js
         // Multi-hole gate: every cached route must dodge every hole.
         validate_routes(plan.as_ref().expect("plan built"), &topo)?;
 
+        // The recompilation fast path: the same transition served by
+        // the topology-keyed plan cache (hit, or incremental recompile
+        // from the previous stage's plan) instead of a cold rebuild.
+        let t0 = std::time::Instant::now();
+        let _cached = cache.get(Scheme::FaultTolerant, &topo, MODEL_PAYLOAD)?;
+        let cache_get_s = t0.elapsed().as_secs_f64();
+
         let p = predict_candidate(&topo, MODEL_PAYLOAD, &link, MODEL_COMPUTE_S)?;
         println!(
-            "  after {:7} @{:2} : {:3} workers, {:.4}s/step = {:.2} steps/s (rebuild {:.4}s)",
+            "  after {:7} @{:2} : {:3} workers, {:.4}s/step = {:.2} steps/s \
+             (rebuild {:.4}s, cached {:.5}s)",
             ev.event.name(),
             ev.at_step,
             p.workers,
             p.step_s,
             1.0 / p.step_s,
             rebuild.mean_s(),
+            cache_get_s,
         );
         report.push(
             &format!("stage{stage}_{}", ev.event.name()),
@@ -147,9 +157,37 @@ fn model_driven_record(sc: &Scenario, nx: usize, ny: usize) -> anyhow::Result<Js
                 ("workers", p.workers as f64),
                 ("throughput", p.throughput),
                 ("recovery_latency_s", rebuild.mean_s()),
+                ("plan_cache_get_s", cache_get_s),
             ],
         );
     }
+
+    // Cache effectiveness over the whole scenario: hit rate, the
+    // incremental/full compile split and mean compile latency.
+    let s = cache.stats();
+    println!(
+        "  plan cache         : {}/{} hits ({:.0}%), {} incremental + {} full compiles, \
+         mean compile {:.4}s",
+        s.hits,
+        s.lookups(),
+        100.0 * s.hit_rate(),
+        s.incremental_compiles,
+        s.full_compiles,
+        s.mean_compile_s(),
+    );
+    report.push(
+        "plan_cache",
+        s.mean_compile_s(),
+        0.0,
+        &[
+            ("hits", s.hits as f64),
+            ("lookups", s.lookups() as f64),
+            ("hit_rate", s.hit_rate()),
+            ("incremental_compiles", s.incremental_compiles as f64),
+            ("full_compiles", s.full_compiles as f64),
+            ("validation_evictions", s.validation_evictions as f64),
+        ],
+    );
     Ok(report)
 }
 

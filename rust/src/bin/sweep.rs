@@ -1,0 +1,161 @@
+//! MTBF sweep binary: the paper-scale availability sweep as a CI
+//! artifact.
+//!
+//!     cargo run --release --bin sweep                  # 16x32, 8 seeds x 3 MTBF x 4 policies
+//!     cargo run --release --bin sweep -- --quick       # reduced CI grid
+//!     cargo run --release --bin sweep -- --verify      # gate: cache hits == fresh compiles
+//!     cargo run --release --bin sweep -- --mesh 16x32 --seeds 8 \
+//!         --mtbf 400,200,100 --horizon 2000 --threads 8
+//!
+//! Writes `BENCH_sweep.json` (override with `MESHREDUCE_BENCH_JSON`):
+//! one entry per `(policy, MTBF, seed)` point with effective
+//! throughput, normalized throughput, transition count and plan-cache
+//! counters, plus one `curve_*` entry per `(policy, MTBF)` aggregate.
+//! With `--verify`, any cached plan that diverges from a fresh compile
+//! aborts with a non-zero exit (the CI gate for cache soundness).
+
+use meshreduce::cluster::{curves, run_sweep, SweepConfig};
+use meshreduce::coordinator::policy::RecoveryPolicy;
+use meshreduce::util::bench::JsonReport;
+
+fn parse_mesh(s: &str) -> Option<(usize, usize)> {
+    let (a, b) = s.split_once('x')?;
+    Some((a.parse().ok()?, b.parse().ok()?))
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |key: &str| {
+        args.iter().position(|a| a == key).and_then(|i| args.get(i + 1)).map(String::as_str)
+    };
+    let has = |key: &str| args.iter().any(|a| a == key);
+
+    let quick = has("--quick") || std::env::var("MESHREDUCE_BENCH_QUICK").is_ok();
+    let mut cfg = if quick { SweepConfig::quick() } else { SweepConfig::paper_scale() };
+    cfg.verify = has("--verify");
+    if let Some((nx, ny)) = get("--mesh").and_then(parse_mesh) {
+        cfg.nx = nx;
+        cfg.ny = ny;
+    }
+    if let Some(n) = get("--seeds").and_then(|s| s.parse::<u64>().ok()) {
+        cfg.seeds = (0..n).collect();
+    }
+    if let Some(list) = get("--mtbf") {
+        let points: Vec<f64> = list.split(',').filter_map(|p| p.parse().ok()).collect();
+        if !points.is_empty() {
+            cfg.mtbf_points = points;
+        }
+    }
+    if let Some(h) = get("--horizon").and_then(|s| s.parse().ok()) {
+        cfg.horizon = h;
+    }
+    if let Some(t) = get("--threads").and_then(|s| s.parse().ok()) {
+        cfg.threads = t;
+    }
+    if let Some(p) = get("--payload").and_then(|s| s.parse().ok()) {
+        cfg.payload = p;
+    }
+    if let Some(list) = get("--policies") {
+        let policies: Vec<RecoveryPolicy> =
+            list.split(',').filter_map(RecoveryPolicy::parse).collect();
+        if !policies.is_empty() {
+            cfg.policies = policies;
+        }
+    }
+
+    eprintln!(
+        "MTBF sweep: {}x{} mesh, horizon {} steps, {} seeds x {} MTBF points x {} policies \
+         ({} points), payload {} f32, verify={}",
+        cfg.nx,
+        cfg.ny,
+        cfg.horizon,
+        cfg.seeds.len(),
+        cfg.mtbf_points.len(),
+        cfg.policies.len(),
+        cfg.grid_size(),
+        cfg.payload,
+        cfg.verify,
+    );
+
+    let t0 = std::time::Instant::now();
+    let points = match run_sweep(&cfg) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("sweep failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut report = JsonReport::new();
+    println!(
+        "\n{:<16} {:>8} {:>6} {:>12} {:>10} {:>12} {:>9} {:>12}",
+        "policy", "mtbf", "seed", "eff (w-st/s)", "normalized", "transitions", "hit-rate", "compiles"
+    );
+    for p in &points {
+        let s = &p.cache;
+        println!(
+            "{:<16} {:>8.0} {:>6} {:>12.1} {:>10.4} {:>12} {:>9.3} {:>7}f/{:>2}i",
+            p.policy.name(),
+            p.mtbf_steps,
+            p.seed,
+            p.eff_throughput,
+            p.normalized(),
+            p.transitions,
+            s.hit_rate(),
+            s.full_compiles,
+            s.incremental_compiles,
+        );
+        report.push(
+            &format!("{}_mtbf{:.0}_seed{}", p.policy.name(), p.mtbf_steps, p.seed),
+            if p.eff_throughput > 0.0 { 1.0 / p.eff_throughput } else { 0.0 },
+            0.0,
+            &[
+                ("eff_throughput", p.eff_throughput),
+                ("normalized", p.normalized()),
+                ("mtbf_steps", p.mtbf_steps),
+                ("seed", p.seed as f64),
+                ("transitions", p.transitions as f64),
+                ("min_workers", p.min_workers as f64),
+                ("cache_hits", s.hits as f64),
+                ("cache_misses", s.misses as f64),
+                ("cache_hit_rate", s.hit_rate()),
+                ("incremental_compiles", s.incremental_compiles as f64),
+                ("full_compiles", s.full_compiles as f64),
+                ("mean_compile_s", s.mean_compile_s()),
+            ],
+        );
+    }
+
+    println!("\nper-policy curves (mean over seeds):");
+    for c in curves(&points) {
+        println!(
+            "  {:<16} mtbf {:>6.0}: eff {:>10.1} w-steps/s ({:.4} of healthy), cache hit-rate {:.3}",
+            c.policy.name(),
+            c.mtbf_steps,
+            c.mean_eff,
+            c.mean_normalized,
+            c.mean_hit_rate,
+        );
+        report.push(
+            &format!("curve_{}_mtbf{:.0}", c.policy.name(), c.mtbf_steps),
+            if c.mean_eff > 0.0 { 1.0 / c.mean_eff } else { 0.0 },
+            0.0,
+            &[
+                ("mean_eff_throughput", c.mean_eff),
+                ("mean_normalized", c.mean_normalized),
+                ("mtbf_steps", c.mtbf_steps),
+                ("seeds", c.seeds as f64),
+                ("mean_cache_hit_rate", c.mean_hit_rate),
+            ],
+        );
+    }
+
+    match report.write("BENCH_sweep.json") {
+        Ok(path) => eprintln!("\nsweep record written to {path} ({wall:.1}s wall)"),
+        Err(e) => {
+            eprintln!("failed to write sweep record: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -18,18 +18,25 @@
 //! - [`mtbf`] — a deterministic, seeded MTBF process generating
 //!   failure/repair timelines (exponential inter-arrival and repair
 //!   times over even-aligned board/host regions);
-//! - [`scenario`] — a tiny scenario-script DSL (`at 10 fail 2,4 4x2`)
-//!   for reproducible multi-fault experiments, with a render/parse
-//!   round-trip.
+//! - [`scenario`] — a tiny scenario-script DSL (`at 10 fail 2,4 4x2`,
+//!   relative `after 6 ...`, repeated `every 25 ... x4`) for
+//!   reproducible multi-fault experiments, with a render/parse
+//!   round-trip;
+//! - [`sweep`] — the parallel MTBF sweep driver: `(policy × MTBF ×
+//!   seed)` grid replayed through the plan cache and the DES,
+//!   producing per-policy effective-throughput curves
+//!   (`BENCH_sweep.json`).
 
 pub mod mtbf;
 pub mod scenario;
+pub mod sweep;
 
 use crate::mesh::{FailedRegion, Mesh, Topology};
 use thiserror::Error;
 
 pub use mtbf::MtbfModel;
 pub use scenario::{Scenario, ScenarioError};
+pub use sweep::{curves, run_sweep, CurvePoint, SweepConfig, SweepError, SweepPoint};
 
 /// One cluster health event, timestamped by [`TimedEvent`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -21,10 +21,19 @@
 //!   so they match the original failure exactly.
 //! - `at STEP checkpoint` and `at STEP stop` schedule a
 //!   [`ClusterEvent::CheckpointTick`] / [`ClusterEvent::Stop`].
+//! - `after DELTA <event>` schedules relative to the previous event's
+//!   step (`0` before any event), so dense scripts need no arithmetic:
+//!   `at 10 fail 2,4 4x2` / `after 12 repair 2,4 4x2` repairs at 22.
+//! - `every DELTA <event> xK` repeats the event `K` times, `DELTA`
+//!   steps apart, starting `DELTA` after the previous event —
+//!   `every 25 checkpoint x4` after an event at 10 checkpoints at
+//!   35/60/85/110. Subsequent relative directives chain off the last
+//!   repetition.
 //!
-//! [`Scenario::render`] emits the canonical form of every directive, so
-//! `parse(render(s)) == s` round-trips exactly (asserted by tests and
-//! the config round-trip test).
+//! Relative forms expand to absolute steps at parse time.
+//! [`Scenario::render`] emits the canonical (absolute `at`) form of
+//! every directive, so `parse(render(s)) == s` round-trips exactly
+//! (asserted by tests and the config round-trip test).
 
 use super::{ClusterEvent, TimedEvent};
 use crate::mesh::FailedRegion;
@@ -54,62 +63,128 @@ fn parse_pair(s: &str, sep: char) -> Option<(usize, usize)> {
     Some((a.parse().ok()?, b.parse().ok()?))
 }
 
+/// Parse the event tail of a directive (`fail X0,Y0 WxH`,
+/// `repair X0,Y0 WxH`, `checkpoint`, `stop`), rejecting trailing
+/// tokens. `usage`/`fail_usage` carry the directive-specific expected
+/// forms for error messages.
+fn parse_event(
+    toks: &[&str],
+    ln: usize,
+    dir: &'static str,
+    usage: &'static str,
+    fail_usage: &'static str,
+) -> Result<ClusterEvent, ScenarioError> {
+    let bad = |what: &'static str| ScenarioError::Malformed(ln, dir, what);
+    match toks.first().copied() {
+        Some(kind @ ("fail" | "repair")) => {
+            let origin =
+                toks.get(1).and_then(|w| parse_pair(w, ',')).ok_or_else(|| bad(fail_usage))?;
+            let size = toks
+                .get(2)
+                .and_then(|w| parse_pair(w, 'x'))
+                .filter(|&(w, h)| w >= 1 && h >= 1)
+                .ok_or_else(|| bad(fail_usage))?;
+            if toks.len() > 3 {
+                return Err(bad("no trailing tokens"));
+            }
+            let region = FailedRegion::new(origin.0, origin.1, size.0, size.1);
+            Ok(if kind == "fail" {
+                ClusterEvent::Fail(region)
+            } else {
+                ClusterEvent::Repair(region)
+            })
+        }
+        Some("checkpoint") => {
+            if toks.len() > 1 {
+                return Err(bad("no trailing tokens"));
+            }
+            Ok(ClusterEvent::CheckpointTick)
+        }
+        Some("stop") => {
+            if toks.len() > 1 {
+                return Err(bad("no trailing tokens"));
+            }
+            Ok(ClusterEvent::Stop)
+        }
+        _ => Err(bad(usage)),
+    }
+}
+
 impl Scenario {
     /// Parse a scenario script. See the module docs for the grammar.
+    /// The relative forms (`after`, `every`) are expanded to absolute
+    /// steps at parse time, chaining off the most recent event in
+    /// script order.
     pub fn parse(text: &str) -> Result<Self, ScenarioError> {
         let mut sc = Scenario::default();
+        // Step of the last event appended; base for `after`/`every`.
+        let mut last_step: u64 = 0;
         for (i, raw) in text.lines().enumerate() {
             let ln = i + 1;
             let line = raw.split('#').next().unwrap_or("").trim();
             if line.is_empty() {
                 continue;
             }
-            let mut words = line.split_whitespace();
-            match words.next() {
-                Some("mesh") => {
-                    let spec = words
-                        .next()
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            match toks[0] {
+                "mesh" => {
+                    let spec = toks
+                        .get(1)
+                        .filter(|_| toks.len() == 2)
                         .and_then(|w| parse_pair(w, 'x'))
                         .ok_or_else(|| ScenarioError::Malformed(ln, "mesh", "mesh NXxNY"))?;
                     sc.mesh = Some(spec);
                 }
-                Some("at") => {
-                    let bad = |what| ScenarioError::Malformed(ln, "at", what);
-                    let step: u64 = words
-                        .next()
+                "at" => {
+                    const USAGE: &str = "at STEP <fail|repair|checkpoint|stop> ...";
+                    let step: u64 = toks
+                        .get(1)
                         .and_then(|w| w.parse().ok())
-                        .ok_or_else(|| bad("at STEP <fail|repair|checkpoint|stop> ..."))?;
-                    let event = match words.next() {
-                        Some(kind @ ("fail" | "repair")) => {
-                            let origin = words
-                                .next()
-                                .and_then(|w| parse_pair(w, ','))
-                                .ok_or_else(|| bad("at STEP fail X0,Y0 WxH"))?;
-                            let size = words
-                                .next()
-                                .and_then(|w| parse_pair(w, 'x'))
-                                .filter(|&(w, h)| w >= 1 && h >= 1)
-                                .ok_or_else(|| bad("at STEP fail X0,Y0 WxH"))?;
-                            let region = FailedRegion::new(origin.0, origin.1, size.0, size.1);
-                            if kind == "fail" {
-                                ClusterEvent::Fail(region)
-                            } else {
-                                ClusterEvent::Repair(region)
-                            }
-                        }
-                        Some("checkpoint") => ClusterEvent::CheckpointTick,
-                        Some("stop") => ClusterEvent::Stop,
-                        _ => return Err(bad("at STEP <fail|repair|checkpoint|stop> ...")),
-                    };
-                    if words.next().is_some() {
-                        return Err(bad("no trailing tokens"));
-                    }
+                        .ok_or_else(|| ScenarioError::Malformed(ln, "at", USAGE))?;
+                    let event = parse_event(&toks[2..], ln, "at", USAGE, "at STEP fail X0,Y0 WxH")?;
                     sc.events.push(TimedEvent { at_step: step, event });
+                    last_step = step;
                 }
-                Some(other) => {
+                "after" => {
+                    const USAGE: &str = "after DELTA <fail|repair|checkpoint|stop> ...";
+                    let delta: u64 = toks
+                        .get(1)
+                        .and_then(|w| w.parse().ok())
+                        .ok_or_else(|| ScenarioError::Malformed(ln, "after", USAGE))?;
+                    let event =
+                        parse_event(&toks[2..], ln, "after", USAGE, "after DELTA fail X0,Y0 WxH")?;
+                    let step = last_step + delta;
+                    sc.events.push(TimedEvent { at_step: step, event });
+                    last_step = step;
+                }
+                "every" => {
+                    const USAGE: &str = "every DELTA <fail|repair|checkpoint|stop> ... xK";
+                    let bad = || ScenarioError::Malformed(ln, "every", USAGE);
+                    let delta: u64 = toks.get(1).and_then(|w| w.parse().ok()).ok_or_else(bad)?;
+                    let count: u64 = toks
+                        .last()
+                        .and_then(|w| w.strip_prefix('x'))
+                        .and_then(|w| w.parse().ok())
+                        .filter(|&k| k >= 1)
+                        .ok_or_else(bad)?;
+                    if toks.len() < 4 {
+                        return Err(bad());
+                    }
+                    let event = parse_event(
+                        &toks[2..toks.len() - 1],
+                        ln,
+                        "every",
+                        USAGE,
+                        "every DELTA fail X0,Y0 WxH xK",
+                    )?;
+                    for k in 1..=count {
+                        sc.events.push(TimedEvent { at_step: last_step + delta * k, event });
+                    }
+                    last_step += delta * count;
+                }
+                other => {
                     return Err(ScenarioError::UnknownDirective(ln, other.to_string()));
                 }
-                None => unreachable!("blank lines are skipped"),
             }
         }
         Ok(sc)
@@ -205,6 +280,71 @@ at 40 stop
         assert_eq!(
             Scenario::parse("at 3 stop now\n"),
             Err(ScenarioError::Malformed(1, "at", "no trailing tokens"))
+        );
+    }
+
+    #[test]
+    fn relative_and_repeated_directives_expand() {
+        let sc = Scenario::parse(
+            "at 10 fail 2,4 4x2\nafter 6 repair 2,4 4x2\nevery 10 checkpoint x3\nafter 5 stop\n",
+        )
+        .unwrap();
+        // after 6 -> 16; every 10 x3 -> 26, 36, 46; after 5 -> 51.
+        let steps: Vec<u64> = sc.events.iter().map(|e| e.at_step).collect();
+        assert_eq!(steps, vec![10, 16, 26, 36, 46, 51]);
+        assert_eq!(sc.events[1].event, ClusterEvent::Repair(FailedRegion::host(2, 4)));
+        assert_eq!(sc.events[2].event, ClusterEvent::CheckpointTick);
+        assert_eq!(sc.events[5].event, ClusterEvent::Stop);
+        // Round-trip through the canonical absolute form is exact.
+        let rendered = sc.render();
+        assert_eq!(Scenario::parse(&rendered).unwrap(), sc);
+        assert_eq!(Scenario::parse(&rendered).unwrap().render(), rendered);
+    }
+
+    #[test]
+    fn relative_directives_chain_from_script_start() {
+        // `after` with no prior event is relative to step 0.
+        let sc = Scenario::parse("after 7 fail 0,0 2x2\nevery 20 fail 2,2 2x2 x2\n").unwrap();
+        let steps: Vec<u64> = sc.events.iter().map(|e| e.at_step).collect();
+        assert_eq!(steps, vec![7, 27, 47]);
+        assert_eq!(
+            sc.events[2].event,
+            ClusterEvent::Fail(FailedRegion::board(2, 2))
+        );
+    }
+
+    #[test]
+    fn relative_directive_errors() {
+        assert_eq!(
+            Scenario::parse("after x stop\n"),
+            Err(ScenarioError::Malformed(
+                1,
+                "after",
+                "after DELTA <fail|repair|checkpoint|stop> ..."
+            ))
+        );
+        // Missing repetition suffix.
+        assert_eq!(
+            Scenario::parse("every 5 checkpoint\n"),
+            Err(ScenarioError::Malformed(
+                1,
+                "every",
+                "every DELTA <fail|repair|checkpoint|stop> ... xK"
+            ))
+        );
+        // Zero repetitions rejected.
+        assert_eq!(
+            Scenario::parse("every 5 stop x0\n"),
+            Err(ScenarioError::Malformed(
+                1,
+                "every",
+                "every DELTA <fail|repair|checkpoint|stop> ... xK"
+            ))
+        );
+        // Event errors inside a relative form carry its usage string.
+        assert_eq!(
+            Scenario::parse("after 5 fail 2,2\n"),
+            Err(ScenarioError::Malformed(1, "after", "after DELTA fail X0,Y0 WxH"))
         );
     }
 

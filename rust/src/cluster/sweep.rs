@@ -1,0 +1,577 @@
+//! Parallel MTBF sweep driver — the §Availability methodology at paper
+//! scale (ROADMAP's top open item).
+//!
+//! A sweep point is one `(policy, MTBF, seed)` cell: a deterministic
+//! failure/repair timeline from [`MtbfModel`] is replayed through the
+//! cluster ledger under one [`RecoveryPolicy`], and the *effective
+//! throughput* — worker-steps delivered per wall second, since
+//! per-chip batch is fixed — is integrated over the horizon. Step
+//! times come from the calibrated DES (`simnet`) via the compiled-plan
+//! cache, so a point is simulation-bound, not compile-bound: the
+//! fail→repair→fail cycles of a timeline revisit the same topologies
+//! and hit the cache, and adjacent topologies recompile incrementally
+//! ([`crate::collective::PlanCache`]).
+//!
+//! [`run_sweep`] fans the full `(policy × MTBF × seed)` grid across
+//! scoped threads (each point owns its cache, so points are
+//! independent and the result is bit-deterministic regardless of
+//! scheduling). The `sweep` binary wraps this into
+//! `BENCH_sweep.json`; `examples/mtbf_sweep.rs` is the narrated
+//! small-scale version.
+//!
+//! Transition costs are *modelled in steps* (`rebuild_steps`,
+//! `restart_steps`, checkpoint rollback) rather than measured in wall
+//! seconds so that a point's result is a pure function of its inputs;
+//! real compile latency is reported separately through
+//! [`PlanCacheStats`].
+
+use super::{ClusterEvent, ClusterState, MtbfModel};
+use crate::collective::{PlanCache, PlanCacheStats, PlanError, Scheme};
+use crate::coordinator::policy::{
+    effective_throughput, largest_submesh, CandidateCost, EventRateEstimator, RecoveryPolicy,
+};
+use crate::mesh::{FailedRegion, Topology};
+use crate::perfmodel::CandidatePrediction;
+use crate::simnet::{simulate_plan, LinkModel, SimError};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum SweepError {
+    #[error("plan: {0}")]
+    Plan(#[from] PlanError),
+    #[error("simulation: {0}")]
+    Sim(#[from] SimError),
+}
+
+/// Sweep grid and replay parameters.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub nx: usize,
+    pub ny: usize,
+    /// Job length in training steps.
+    pub horizon: u64,
+    /// One timeline per seed per MTBF point.
+    pub seeds: Vec<u64>,
+    /// Mean steps between failures (`MtbfModel::mean_failure_steps`),
+    /// one curve x-coordinate each.
+    pub mtbf_points: Vec<f64>,
+    /// Mean repair time as a fraction of the MTBF.
+    pub mttr_frac: f64,
+    pub policies: Vec<RecoveryPolicy>,
+    /// Gradient payload, f32 elements.
+    pub payload: usize,
+    /// Modelled per-worker compute seconds per step.
+    pub compute_s: f64,
+    /// Checkpoint cadence (steps); rollback on restart is
+    /// `event_step % checkpoint_every`.
+    pub checkpoint_every: u64,
+    /// Failed-region shape `(w, h)`.
+    pub region: (usize, usize),
+    /// Modelled pause (in steps) for a fault-tolerant ring rebuild.
+    pub rebuild_steps: f64,
+    /// Modelled pause (in steps) for a restart, beyond rollback.
+    pub restart_steps: f64,
+    /// Worker threads; 0 = available parallelism (capped at 16).
+    pub threads: usize,
+    /// Plan-cache capacity per point.
+    pub cache_cap: usize,
+    /// Verify every cache hit / incremental compile against a fresh
+    /// full compile (CI gate; fails the sweep on divergence).
+    pub verify: bool,
+}
+
+impl SweepConfig {
+    /// The paper-scale sweep: 16x32 mesh (512 chips), host-shaped
+    /// failures, 8 seeds x 3 MTBF points per policy.
+    pub fn paper_scale() -> Self {
+        Self {
+            nx: 16,
+            ny: 32,
+            horizon: 2000,
+            seeds: (0..8).collect(),
+            mtbf_points: vec![400.0, 200.0, 100.0],
+            mttr_frac: 0.5,
+            policies: vec![
+                RecoveryPolicy::FaultTolerant,
+                RecoveryPolicy::SubMesh,
+                RecoveryPolicy::Adaptive,
+                RecoveryPolicy::Stop,
+            ],
+            payload: 1 << 20,
+            compute_s: 0.05,
+            checkpoint_every: 50,
+            region: (4, 2),
+            rebuild_steps: 1.0,
+            restart_steps: 5.0,
+            threads: 0,
+            cache_cap: 64,
+            verify: false,
+        }
+    }
+
+    /// Reduced sweep for CI and tests: small mesh, short horizon, two
+    /// seeds, board-shaped failures.
+    pub fn quick() -> Self {
+        Self {
+            nx: 8,
+            ny: 8,
+            horizon: 240,
+            seeds: vec![1, 2],
+            mtbf_points: vec![40.0],
+            mttr_frac: 0.5,
+            policies: vec![
+                RecoveryPolicy::FaultTolerant,
+                RecoveryPolicy::SubMesh,
+                RecoveryPolicy::Adaptive,
+                RecoveryPolicy::Stop,
+            ],
+            payload: 1 << 14,
+            compute_s: 0.02,
+            checkpoint_every: 20,
+            region: (2, 2),
+            rebuild_steps: 1.0,
+            restart_steps: 5.0,
+            threads: 0,
+            cache_cap: 32,
+            verify: false,
+        }
+    }
+
+    pub fn grid_size(&self) -> usize {
+        self.policies.len() * self.mtbf_points.len() * self.seeds.len()
+    }
+}
+
+/// One replayed `(policy, MTBF, seed)` cell.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub policy: RecoveryPolicy,
+    pub mtbf_steps: f64,
+    pub seed: u64,
+    /// Worker-steps per wall second delivered over the horizon.
+    pub eff_throughput: f64,
+    /// Healthy full-mesh worker-steps per second (normalisation base).
+    pub full_throughput: f64,
+    /// Fail/repair events replayed.
+    pub transitions: u64,
+    /// Smallest live worker count the policy trained with.
+    pub min_workers: usize,
+    /// Plan-cache counters of this point's replay.
+    pub cache: PlanCacheStats,
+}
+
+impl SweepPoint {
+    /// Effective throughput as a fraction of the healthy mesh.
+    pub fn normalized(&self) -> f64 {
+        if self.full_throughput > 0.0 {
+            self.eff_throughput / self.full_throughput
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One (policy, MTBF) aggregate across seeds — a point of the
+/// per-policy effective-throughput curve.
+#[derive(Debug, Clone)]
+pub struct CurvePoint {
+    pub policy: RecoveryPolicy,
+    pub mtbf_steps: f64,
+    pub seeds: usize,
+    pub mean_eff: f64,
+    pub mean_normalized: f64,
+    pub mean_hit_rate: f64,
+}
+
+/// Aggregate sweep points into per-(policy, MTBF) curve points, in
+/// first-seen order.
+pub fn curves(points: &[SweepPoint]) -> Vec<CurvePoint> {
+    let mut out: Vec<CurvePoint> = Vec::new();
+    for p in points {
+        let idx = match out
+            .iter()
+            .position(|c| c.policy == p.policy && c.mtbf_steps == p.mtbf_steps)
+        {
+            Some(i) => i,
+            None => {
+                out.push(CurvePoint {
+                    policy: p.policy,
+                    mtbf_steps: p.mtbf_steps,
+                    seeds: 0,
+                    mean_eff: 0.0,
+                    mean_normalized: 0.0,
+                    mean_hit_rate: 0.0,
+                });
+                out.len() - 1
+            }
+        };
+        let slot = &mut out[idx];
+        slot.seeds += 1;
+        slot.mean_eff += p.eff_throughput;
+        slot.mean_normalized += p.normalized();
+        slot.mean_hit_rate += p.cache.hit_rate();
+    }
+    for c in &mut out {
+        let n = c.seeds.max(1) as f64;
+        c.mean_eff /= n;
+        c.mean_normalized /= n;
+        c.mean_hit_rate /= n;
+    }
+    out
+}
+
+/// Per-point replay state: the plan cache plus a step-time memo so
+/// each distinct topology is simulated once (the cache is still
+/// consulted on every prediction, so hit counters reflect topology
+/// revisits).
+struct Replay<'a> {
+    cfg: &'a SweepConfig,
+    cache: PlanCache,
+    sim_memo: HashMap<(usize, usize, Vec<FailedRegion>), f64>,
+    link: LinkModel,
+}
+
+impl<'a> Replay<'a> {
+    fn new(cfg: &'a SweepConfig) -> Self {
+        let cache = if cfg.verify {
+            PlanCache::with_verification(cfg.cache_cap)
+        } else {
+            PlanCache::new(cfg.cache_cap)
+        };
+        Self { cfg, cache, sim_memo: HashMap::new(), link: LinkModel::tpu_v3() }
+    }
+
+    /// Predicted seconds per training step on `topo`: modelled compute
+    /// plus the simulated fault-tolerant allreduce.
+    fn step_time(&mut self, topo: &Topology) -> Result<f64, SweepError> {
+        let plan = self.cache.get(Scheme::FaultTolerant, topo, self.cfg.payload)?;
+        let mut failed = topo.failed_regions().to_vec();
+        failed.sort_unstable();
+        let key = (topo.mesh.nx, topo.mesh.ny, failed);
+        if let Some(&s) = self.sim_memo.get(&key) {
+            return Ok(s);
+        }
+        let step = self.cfg.compute_s + simulate_plan(&plan, &self.link)?.makespan_s;
+        self.sim_memo.insert(key, step);
+        Ok(step)
+    }
+}
+
+/// Replay one sweep cell. Deterministic: equal inputs give equal
+/// outputs bit-for-bit (only the cache's wall-clock compile counters
+/// vary run to run).
+pub fn replay_point(
+    cfg: &SweepConfig,
+    policy: RecoveryPolicy,
+    mtbf: f64,
+    seed: u64,
+) -> Result<SweepPoint, SweepError> {
+    let (nx, ny) = (cfg.nx, cfg.ny);
+    let model = MtbfModel {
+        seed,
+        mean_failure_steps: mtbf,
+        mean_repair_steps: mtbf * cfg.mttr_frac,
+        region_w: cfg.region.0,
+        region_h: cfg.region.1,
+    };
+    let events = model.generate(nx, ny, cfg.horizon);
+    let ckpt_every = cfg.checkpoint_every.max(1);
+
+    let mut replay = Replay::new(cfg);
+    let healthy_step = replay.step_time(&Topology::full(nx, ny))?;
+    let full_workers = nx * ny;
+    let full_throughput = full_workers as f64 / healthy_step;
+
+    let mut cluster = ClusterState::new(nx, ny);
+    let mut estimator = EventRateEstimator::new(2.0 * mtbf);
+    let mut workers = full_workers;
+    let mut step_s = healthy_step;
+    let mut stopped = false;
+    let mut submesh: Option<(usize, usize, usize, usize)> = None;
+    let (mut useful, mut wall) = (0.0f64, 0.0f64);
+    let mut transitions = 0u64;
+    let mut min_workers = full_workers;
+    let mut prev_t = 0u64;
+
+    for ev in &events {
+        // Interval before this event runs at the previous rate.
+        let dt = (ev.at_step - prev_t) as f64;
+        if stopped {
+            wall += dt * healthy_step; // idle chips, wall clock still runs
+        } else {
+            useful += workers as f64 * dt;
+            wall += dt * step_s;
+        }
+        prev_t = ev.at_step;
+        cluster.apply(&ev.event).expect("MTBF timelines replay validly");
+        if stopped {
+            continue;
+        }
+        estimator.observe(ev.at_step);
+        transitions += 1;
+        let rollback = (ev.at_step % ckpt_every) as f64;
+
+        match policy {
+            RecoveryPolicy::FaultTolerant => {
+                let topo = cluster.topology();
+                step_s = replay.step_time(&topo)?;
+                workers = topo.live_count();
+                // Transition pause: ring rebuild + plan fetch, modelled
+                // in steps for determinism (the measured compile
+                // latency is reported via the cache stats).
+                wall += cfg.rebuild_steps * step_s;
+            }
+            RecoveryPolicy::Stop => {
+                if matches!(ev.event, ClusterEvent::Fail(_)) {
+                    stopped = true;
+                    workers = 0;
+                }
+            }
+            RecoveryPolicy::SubMesh => {
+                let sub = largest_submesh(nx, ny, cluster.failed_regions());
+                let needs_restart = match (&ev.event, submesh) {
+                    (ClusterEvent::Fail(r), Some(sm)) => {
+                        r.overlaps(&FailedRegion::new(sm.0, sm.1, sm.2, sm.3))
+                    }
+                    (ClusterEvent::Fail(_), None) => true,
+                    (ClusterEvent::Repair(_), _) => sub.2 * sub.3 > workers,
+                    _ => false,
+                };
+                if needs_restart {
+                    if sub.2 * sub.3 == 0 {
+                        stopped = true;
+                        workers = 0;
+                    } else {
+                        step_s = replay.step_time(&Topology::full(sub.2, sub.3))?;
+                        workers = sub.2 * sub.3;
+                        wall += (rollback + cfg.restart_steps) * step_s;
+                        submesh = if cluster.has_failures() { Some(sub) } else { None };
+                    }
+                }
+            }
+            RecoveryPolicy::Adaptive => {
+                let horizon_steps = estimator.expected_gap_steps();
+                let topo = cluster.topology();
+                // Only genuine schedulability errors mean "candidate
+                // not viable"; anything else (cache divergence under
+                // --verify, simulation failures) must fail the point
+                // so the CI gate actually gates.
+                let ft = match replay.step_time(&topo) {
+                    Ok(s) => Some((topo.live_count(), s)),
+                    Err(SweepError::Plan(PlanError::Build(_))) => None,
+                    Err(e) => return Err(e),
+                };
+                let sub = largest_submesh(nx, ny, cluster.failed_regions());
+                let sm = if sub.2 >= 2 && sub.3 >= 2 {
+                    match replay.step_time(&Topology::full(sub.2, sub.3)) {
+                        Ok(s) => Some((sub.2 * sub.3, s)),
+                        Err(SweepError::Plan(PlanError::Build(_))) => None,
+                        Err(e) => return Err(e),
+                    }
+                } else {
+                    None
+                };
+                let eff = |w: usize, s: f64, cost: &CandidateCost| {
+                    let pred = CandidatePrediction {
+                        workers: w,
+                        allreduce_s: (s - cfg.compute_s).max(0.0),
+                        step_s: s,
+                        throughput: w as f64 / s,
+                    };
+                    effective_throughput(&pred, horizon_steps, cost)
+                };
+                let ft_eff = ft.map(|(w, s)| {
+                    let cost =
+                        CandidateCost { one_off_s: cfg.rebuild_steps * s, rollback_steps: 0.0 };
+                    eff(w, s, &cost)
+                });
+                let sm_eff = sm.map(|(w, s)| {
+                    let cost = CandidateCost {
+                        one_off_s: cfg.restart_steps * s,
+                        rollback_steps: rollback,
+                    };
+                    eff(w, s, &cost)
+                });
+                let chose_ft = match (ft_eff, sm_eff) {
+                    (Some(f), Some(m)) => f >= m,
+                    (Some(_), None) => true,
+                    (None, Some(_)) => false,
+                    (None, None) => {
+                        stopped = true;
+                        workers = 0;
+                        min_workers = 0;
+                        continue;
+                    }
+                };
+                if chose_ft {
+                    let (w, s) = ft.expect("chose_ft implies ft candidate");
+                    if submesh.is_some() {
+                        // Leaving a sub-mesh is a restart onto the
+                        // degraded full mesh.
+                        wall += (rollback + cfg.restart_steps) * s;
+                    } else {
+                        wall += cfg.rebuild_steps * s;
+                    }
+                    submesh = None;
+                    workers = w;
+                    step_s = s;
+                } else {
+                    let (w, s) = sm.expect("!chose_ft implies sub-mesh candidate");
+                    if submesh != Some(sub) {
+                        wall += (rollback + cfg.restart_steps) * s;
+                        submesh = if cluster.has_failures() { Some(sub) } else { None };
+                        workers = w;
+                        step_s = s;
+                    }
+                }
+            }
+        }
+        min_workers = min_workers.min(workers);
+    }
+
+    // Tail from the last event to the horizon.
+    let dt = (cfg.horizon - prev_t) as f64;
+    if stopped {
+        wall += dt * healthy_step;
+    } else {
+        useful += workers as f64 * dt;
+        wall += dt * step_s;
+    }
+
+    let eff_throughput = if wall > 0.0 { useful / wall } else { 0.0 };
+    Ok(SweepPoint {
+        policy,
+        mtbf_steps: mtbf,
+        seed,
+        eff_throughput,
+        full_throughput,
+        transitions,
+        min_workers,
+        cache: replay.cache.stats().clone(),
+    })
+}
+
+/// Run the full `(policy × MTBF × seed)` grid across scoped worker
+/// threads. Points are independent (each owns its plan cache), so the
+/// output is deterministic regardless of thread scheduling; results
+/// come back in grid order (policy-major, then MTBF, then seed).
+pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepPoint>, SweepError> {
+    let mut grid: Vec<(RecoveryPolicy, f64, u64)> = Vec::new();
+    for &policy in &cfg.policies {
+        for &mtbf in &cfg.mtbf_points {
+            for &seed in &cfg.seeds {
+                grid.push((policy, mtbf, seed));
+            }
+        }
+    }
+    if grid.is_empty() {
+        return Ok(Vec::new());
+    }
+    let threads = if cfg.threads > 0 {
+        cfg.threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+    }
+    .min(grid.len())
+    .max(1);
+
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<Result<SweepPoint, SweepError>>>> =
+        Mutex::new((0..grid.len()).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= grid.len() {
+                    break;
+                }
+                let (policy, mtbf, seed) = grid[i];
+                let point = replay_point(cfg, policy, mtbf, seed);
+                results.lock().expect("sweep results lock")[i] = Some(point);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .expect("sweep results lock")
+        .into_iter()
+        .map(|r| r.expect("every grid point visited"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> SweepConfig {
+        let mut cfg = SweepConfig::quick();
+        cfg.horizon = 120;
+        cfg.seeds = vec![1];
+        cfg.payload = 1 << 12;
+        cfg
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_runs_and_threads() {
+        let mut cfg = tiny_cfg();
+        cfg.seeds = vec![1, 2];
+        let a = run_sweep(&cfg).unwrap();
+        cfg.threads = 1;
+        let b = run_sweep(&cfg).unwrap();
+        assert_eq!(a.len(), cfg.grid_size());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.policy, x.mtbf_steps.to_bits(), x.seed), (
+                y.policy,
+                y.mtbf_steps.to_bits(),
+                y.seed
+            ));
+            assert_eq!(x.eff_throughput.to_bits(), y.eff_throughput.to_bits());
+            assert_eq!(x.transitions, y.transitions);
+            assert_eq!(x.min_workers, y.min_workers);
+        }
+    }
+
+    #[test]
+    fn sweep_exercises_cache_and_orders_policies() {
+        let cfg = tiny_cfg();
+        let points = run_sweep(&cfg).unwrap();
+        assert_eq!(points.len(), 4);
+        // The timeline has events and the replay hits the plan cache
+        // (step predictions consult it on every transition).
+        assert!(points.iter().any(|p| p.transitions > 0), "no events in 120 steps at MTBF 40?");
+        assert!(points.iter().any(|p| p.cache.hits > 0), "cache hit rate must be > 0");
+        let eff = |pol: RecoveryPolicy| {
+            points.iter().find(|p| p.policy == pol).map(|p| p.eff_throughput).unwrap()
+        };
+        // Fault-tolerant continue dominates stopping on failures.
+        assert!(eff(RecoveryPolicy::FaultTolerant) >= eff(RecoveryPolicy::Stop));
+        // Every policy's effective throughput is bounded by healthy.
+        for p in &points {
+            assert!(p.normalized() <= 1.0 + 1e-9, "{:?} beats healthy", p.policy);
+            assert!(p.eff_throughput >= 0.0);
+        }
+    }
+
+    #[test]
+    fn verification_mode_passes_on_quick_grid() {
+        let mut cfg = tiny_cfg();
+        cfg.verify = true;
+        let points = run_sweep(&cfg).unwrap();
+        assert!(points.iter().any(|p| p.cache.hits > 0));
+    }
+
+    #[test]
+    fn curves_aggregate_per_policy_point() {
+        let cfg = tiny_cfg();
+        let points = run_sweep(&cfg).unwrap();
+        let cs = curves(&points);
+        assert_eq!(cs.len(), cfg.policies.len() * cfg.mtbf_points.len());
+        for c in &cs {
+            assert_eq!(c.seeds, cfg.seeds.len());
+            assert!(c.mean_normalized <= 1.0 + 1e-9);
+        }
+    }
+}

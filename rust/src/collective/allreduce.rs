@@ -17,7 +17,7 @@ use crate::rings::twod::{two_d_plan, TwoDError};
 use thiserror::Error;
 
 /// Allreduce algorithm selector.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Scheme {
     /// 1-D Hamiltonian-circuit ring (Figure 3 / Figure 8). O(N^2)
     /// latency on an N x N mesh.
@@ -92,25 +92,37 @@ pub fn build_schedule(
         }
         Scheme::PairRows | Scheme::FaultTolerant => {
             let plan = ft_plan(topo)?;
-            // With a failed region the yellow and blue phase-1 rings are
-            // link-disjoint, so the schedule is software-pipelined over
-            // payload sub-ranges: sub-range i+1's yellow reduce-scatter
-            // runs while sub-range i's blue rings are already reducing.
-            // This hides the yellow stage almost entirely (the paper's
-            // figure-10 forwarding is naturally pipelined on the real
-            // system). The pipeline depth is payload-aware: each blue
-            // ring transfer should still stream >= ~64 KiB so the extra
-            // steps do not turn a bandwidth-bound schedule latency-bound.
-            let k = if plan.yellow.is_empty() {
-                1
-            } else {
-                let blue_p = plan.blue.first().map(|r| r.len()).unwrap_or(2);
-                (4 * payload / (blue_p * (64 << 10))).clamp(1, 6)
-            };
-            sched.then(ft_schedule_pipelined(&plan, full, k));
+            return Ok(build_ft_schedule(&plan, payload));
         }
     }
     Ok(sched)
+}
+
+/// Assemble the complete fault-tolerant/pair-row schedule from an
+/// already-built ring plan. Split out of [`build_schedule`] so the
+/// compiled-plan cache can feed an *incrementally* recompiled
+/// [`FtPlan`] through the identical schedule assembly
+/// (`collective::plancache`).
+///
+/// With a failed region the yellow and blue phase-1 rings are
+/// link-disjoint, so the schedule is software-pipelined over payload
+/// sub-ranges: sub-range i+1's yellow reduce-scatter runs while
+/// sub-range i's blue rings are already reducing. This hides the yellow
+/// stage almost entirely (the paper's figure-10 forwarding is naturally
+/// pipelined on the real system). The pipeline depth is payload-aware:
+/// each blue ring transfer should still stream >= ~64 KiB so the extra
+/// steps do not turn a bandwidth-bound schedule latency-bound.
+pub fn build_ft_schedule(plan: &FtPlan, payload: usize) -> Schedule {
+    let full = ChunkRange::new(0, payload);
+    let mut sched = Schedule::new(payload);
+    let k = if plan.yellow.is_empty() {
+        1
+    } else {
+        let blue_p = plan.blue.first().map(|r| r.len()).unwrap_or(2);
+        (4 * payload / (blue_p * (64 << 10))).clamp(1, 6)
+    };
+    sched.then(ft_schedule_pipelined(plan, full, k));
+    sched
 }
 
 /// One colour of the basic 2-D algorithm: reduce-scatter along the

@@ -28,8 +28,9 @@
 //! The plan's identity is [`Schedule::content_hash`], fixing the old
 //! arena-fingerprint collision between equal-sized schedules.
 
-use super::schedule::{OpKind, Schedule};
-use crate::mesh::{route, Link, Mesh, RouteError, Topology};
+use super::schedule::{mix, OpKind, Schedule};
+use crate::mesh::{route_traced, Coord, Dir, FailedRegion, Link, Mesh, RouteError, Topology};
+use std::collections::HashMap;
 use thiserror::Error;
 
 #[derive(Debug, Error)]
@@ -46,7 +47,7 @@ pub enum CompileError {
 /// relies on the invariants compilation establishes (ranges within the
 /// payload, no self-sends, partitions keyed by destination), so they
 /// must not be mutable from safe code outside the crate.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CompiledTransfer {
     pub(crate) src: usize,
     pub(crate) dst: usize,
@@ -68,7 +69,7 @@ impl CompiledTransfer {
 
 /// Writes of one step destined for one node, in schedule order.
 /// Partitions of a step touch pairwise-distinct buffers.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Partition {
     pub(crate) dst: usize,
     /// Indices into [`CompiledStep::transfers`].
@@ -76,7 +77,7 @@ pub struct Partition {
 }
 
 /// One lowered step.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CompiledStep {
     /// Transfers in schedule order.
     pub(crate) transfers: Vec<CompiledTransfer>,
@@ -101,8 +102,10 @@ pub struct CompiledStep {
 }
 
 /// The compiled plan. Build once per (schedule, topology), execute
-/// and/or simulate many times.
-#[derive(Debug, Clone)]
+/// and/or simulate many times. `PartialEq` is full structural equality
+/// (every transfer, partition, route and flag) — the oracle for the
+/// cache-hit-bit-identity and incremental-vs-full differential tests.
+#[derive(Debug, Clone, PartialEq)]
 pub struct CompiledSchedule {
     pub(crate) mesh: Mesh,
     pub(crate) payload: usize,
@@ -113,6 +116,12 @@ pub struct CompiledSchedule {
     pub(crate) max_stage_len: usize,
     /// Flat cached route link ids (see [`CompiledStep::routes`]).
     pub(crate) link_ids: Vec<usize>,
+    /// One flag per transfer (schedule order, flat across steps): did
+    /// this route come from the global BFS fallback? BFS routes depend
+    /// on the whole topology and are never spliced by
+    /// [`compile_incremental`](Self::compile_incremental). Empty unless
+    /// lowered with routes.
+    pub(crate) route_bfs: Vec<bool>,
     /// Were routes resolved?
     pub(crate) has_routes: bool,
     /// Was the executor analysis (direct classification, partitions,
@@ -155,13 +164,85 @@ impl CompiledSchedule {
         Ok(plan)
     }
 
+    /// Incremental full lowering: produce exactly the plan
+    /// [`compile`](Self::compile) would, but splice unchanged pieces
+    /// from a previous plan on a *related* topology instead of
+    /// re-deriving them:
+    ///
+    /// - steps whose lowered transfer list is identical to a step of
+    ///   `prev` reuse its direct classification, staging layout and
+    ///   write partitions (the O(T log T) analyses are skipped);
+    /// - a transfer's link-route is copied from `prev` when the
+    ///   topology delta (regions failed/repaired between `prev_topo`
+    ///   and `topo`) stays clear of the route's neighbourhood — the
+    ///   deterministic DOR/route-around walk only probes cells adjacent
+    ///   to its final path, so a clear neighbourhood guarantees the
+    ///   re-derived route would be identical. BFS-fallback routes are
+    ///   never spliced (see [`crate::mesh::route_traced`]).
+    ///
+    /// The result is structurally equal to a fresh `compile` — the
+    /// differential tests compare with `==` — so the plan cache can use
+    /// either path interchangeably; this one turns the
+    /// fail→repair→fail recompiles of an MTBF timeline from
+    /// route-resolution-bound into splice-bound.
+    pub fn compile_incremental(
+        schedule: &Schedule,
+        topo: &Topology,
+        prev: &CompiledSchedule,
+        prev_topo: &Topology,
+    ) -> Result<CompiledSchedule, CompileError> {
+        if prev.mesh != topo.mesh || prev_topo.mesh != topo.mesh || !prev.has_routes {
+            return Self::compile(schedule, topo);
+        }
+        let mut plan = Self::lower_with(schedule, topo.mesh, true, Some(prev));
+        let splice = RouteSplice::new(prev, prev_topo, topo);
+        plan.resolve_routes_spliced(schedule, topo, Some(&splice))?;
+        Ok(plan)
+    }
+
     fn lower(schedule: &Schedule, mesh: Mesh, exec: bool) -> CompiledSchedule {
+        Self::lower_with(schedule, mesh, exec, None)
+    }
+
+    /// Hash of a lowered step's transfer list, the splice-candidate
+    /// lookup key. Collisions are harmless: candidates are verified
+    /// with full equality before reuse.
+    fn step_key(transfers: &[CompiledTransfer]) -> u64 {
+        let mut h = 0x7374_6570_u64; // "step"
+        for t in transfers {
+            h = mix(h, ((t.src as u64) << 32) | t.dst as u64);
+            h = mix(h, ((t.lo as u64) << 1) | (t.op == OpKind::Add) as u64);
+            h = mix(h, t.hi as u64);
+        }
+        h
+    }
+
+    fn lower_with(
+        schedule: &Schedule,
+        mesh: Mesh,
+        exec: bool,
+        prev: Option<&CompiledSchedule>,
+    ) -> CompiledSchedule {
         let mut participants = vec![false; mesh.num_nodes()];
         let mut steps = Vec::with_capacity(schedule.steps.len());
         let mut max_stage_len = 0usize;
         let mut total_bytes = 0u64;
 
-        for step in &schedule.steps {
+        // Splice index over the previous plan's steps: lowered-transfer
+        // hash -> step indices (verified by full equality on lookup).
+        let prev = prev.filter(|p| p.has_exec && p.mesh == mesh);
+        let prev_index: HashMap<u64, Vec<usize>> = match prev {
+            Some(p) => {
+                let mut index: HashMap<u64, Vec<usize>> = HashMap::new();
+                for (j, ps) in p.steps.iter().enumerate() {
+                    index.entry(Self::step_key(&ps.transfers)).or_default().push(j);
+                }
+                index
+            }
+            None => HashMap::new(),
+        };
+
+        for (i, step) in schedule.steps.iter().enumerate() {
             let mut transfers = Vec::with_capacity(step.transfers.len());
             let mut offset = 0usize;
             for t in &step.transfers {
@@ -196,15 +277,45 @@ impl CompiledSchedule {
                 total_bytes += 4 * t.range.len() as u64;
             }
 
-            let direct = exec && step_is_direct(&transfers);
-            let stage_len = if direct || !exec { 0 } else { offset };
-            max_stage_len = max_stage_len.max(stage_len);
-            let partitions = if exec { build_partitions(&transfers) } else { Vec::new() };
-            let write_conflict = if direct || !exec {
-                None
-            } else {
-                find_write_conflict(&partitions, &transfers)
+            // Splice: a previous step with the identical transfer list
+            // has identical analysis results (direct classification,
+            // staging layout, partitions, conflict) — clone them
+            // instead of re-deriving. Try the same index first (steps
+            // mostly align across a small topology delta), then any
+            // hash match.
+            let spliced = prev.and_then(|p| {
+                let aligned = p
+                    .steps
+                    .get(i)
+                    .filter(|ps| ps.transfers == transfers)
+                    .map(|ps| (ps.direct, ps.stage_len, ps.partitions.clone(), ps.write_conflict));
+                aligned.or_else(|| {
+                    prev_index.get(&Self::step_key(&transfers)).and_then(|cands| {
+                        cands
+                            .iter()
+                            .map(|&j| &p.steps[j])
+                            .find(|ps| ps.transfers == transfers)
+                            .map(|ps| {
+                                (ps.direct, ps.stage_len, ps.partitions.clone(), ps.write_conflict)
+                            })
+                    })
+                })
+            });
+            let (direct, stage_len, partitions, write_conflict) = match spliced {
+                Some(parts) if exec => parts,
+                _ => {
+                    let direct = exec && step_is_direct(&transfers);
+                    let stage_len = if direct || !exec { 0 } else { offset };
+                    let partitions = if exec { build_partitions(&transfers) } else { Vec::new() };
+                    let write_conflict = if direct || !exec {
+                        None
+                    } else {
+                        find_write_conflict(&partitions, &transfers)
+                    };
+                    (direct, stage_len, partitions, write_conflict)
+                }
             };
+            max_stage_len = max_stage_len.max(stage_len);
             steps.push(CompiledStep {
                 transfers,
                 direct,
@@ -223,6 +334,7 @@ impl CompiledSchedule {
             participants: (0..mesh.num_nodes()).filter(|&i| participants[i]).collect(),
             max_stage_len,
             link_ids: Vec::new(),
+            route_bfs: Vec::new(),
             has_routes: false,
             has_exec: exec,
             hash: if exec { schedule.content_hash() } else { 0 },
@@ -231,20 +343,53 @@ impl CompiledSchedule {
     }
 
     fn resolve_routes(&mut self, schedule: &Schedule, topo: &Topology) -> Result<(), CompileError> {
-        let mut link_ids = Vec::new();
+        self.resolve_routes_spliced(schedule, topo, None)
+    }
+
+    fn resolve_routes_spliced(
+        &mut self,
+        schedule: &Schedule,
+        topo: &Topology,
+        splice: Option<&RouteSplice>,
+    ) -> Result<(), CompileError> {
+        let mut link_ids: Vec<usize> = Vec::new();
+        let mut route_bfs: Vec<bool> = Vec::new();
+        // Per-pair memo within this resolution: a route is a pure
+        // function of (topology, src, dst), and pipelined schedules
+        // repeat every ring hop across many sub-ranges and stages, so
+        // each distinct pair is resolved exactly once per compile.
+        let mut memo: HashMap<(Coord, Coord), (Vec<usize>, bool)> = HashMap::new();
         for (cstep, step) in self.steps.iter_mut().zip(&schedule.steps) {
             let mut routes = Vec::with_capacity(step.transfers.len());
             for t in &step.transfers {
-                let path = route(topo, t.src, t.dst)?;
                 let start = link_ids.len();
-                for w in path.windows(2) {
-                    link_ids.push(topo.mesh.link_index(Link::new(w[0], w[1])));
+                if let Some((ids, bfs)) = memo.get(&(t.src, t.dst)) {
+                    link_ids.extend_from_slice(ids);
+                    route_bfs.push(*bfs);
+                    routes.push((start, link_ids.len()));
+                    continue;
                 }
+                let entry: (Vec<usize>, bool) = match splice.and_then(|s| s.lookup(t.src, t.dst))
+                {
+                    Some(ids) => (ids, false),
+                    None => {
+                        let (path, bfs) = route_traced(topo, t.src, t.dst)?;
+                        let ids = path
+                            .windows(2)
+                            .map(|w| topo.mesh.link_index(Link::new(w[0], w[1])))
+                            .collect();
+                        (ids, bfs)
+                    }
+                };
+                link_ids.extend_from_slice(&entry.0);
+                route_bfs.push(entry.1);
                 routes.push((start, link_ids.len()));
+                memo.insert((t.src, t.dst), entry);
             }
             cstep.routes = routes;
         }
         self.link_ids = link_ids;
+        self.route_bfs = route_bfs;
         self.has_routes = true;
         Ok(())
     }
@@ -290,6 +435,80 @@ impl CompiledSchedule {
     pub fn step_direct(&self, i: usize) -> bool {
         assert!(self.has_exec, "direct classification only exists on executable plans");
         self.steps[i].direct
+    }
+}
+
+/// Reusable link-routes of a previous plan, keyed by (src, dst)
+/// coordinate pair, admitted by the neighbourhood-clearance rule that
+/// makes cross-topology reuse *exact*: the deterministic DOR /
+/// route-around walk probes only cells adjacent to its final path
+/// (path cells plus the blocked cells that trigger detours), so if no
+/// region of the topology delta intersects the path's bounding box
+/// expanded by one cell, the walk re-run on the new topology sees
+/// identical aliveness at every probe and reproduces the route
+/// verbatim. BFS-fallback routes depend on the whole live set and are
+/// excluded outright.
+struct RouteSplice {
+    map: HashMap<(Coord, Coord), Vec<usize>>,
+}
+
+impl RouteSplice {
+    fn new(prev: &CompiledSchedule, prev_topo: &Topology, topo: &Topology) -> Self {
+        let mesh = prev.mesh;
+        // Regions present in exactly one of the two failed sets — the
+        // only regions that can flip a route decision.
+        let changed: Vec<FailedRegion> = prev_topo
+            .failed_regions()
+            .iter()
+            .filter(|r| !topo.failed_regions().contains(r))
+            .chain(
+                topo.failed_regions().iter().filter(|r| !prev_topo.failed_regions().contains(r)),
+            )
+            .copied()
+            .collect();
+        let mut map: HashMap<(Coord, Coord), Vec<usize>> = HashMap::new();
+        let mut flat = 0usize;
+        for step in &prev.steps {
+            for (t, &(rs, re)) in step.transfers.iter().zip(&step.routes) {
+                let bfs = prev.route_bfs.get(flat).copied().unwrap_or(true);
+                flat += 1;
+                let src = mesh.coord_of(t.src);
+                let dst = mesh.coord_of(t.dst);
+                if bfs || map.contains_key(&(src, dst)) {
+                    continue;
+                }
+                let ids = &prev.link_ids[rs..re];
+                // Inclusive bounding box of every cell on the route.
+                let (mut bx0, mut bx1, mut by0, mut by1) = (src.x, src.x, src.y, src.y);
+                for &lid in ids {
+                    let from = mesh.coord_of(lid / 4);
+                    bx0 = bx0.min(from.x);
+                    bx1 = bx1.max(from.x);
+                    by0 = by0.min(from.y);
+                    by1 = by1.max(from.y);
+                    if let Some(to) = mesh.step(from, Dir::ALL[lid % 4]) {
+                        bx0 = bx0.min(to.x);
+                        bx1 = bx1.max(to.x);
+                        by0 = by0.min(to.y);
+                        by1 = by1.max(to.y);
+                    }
+                }
+                // Expand by one: the probe set of the routing walk.
+                let (ex0, ey0) = (bx0.saturating_sub(1), by0.saturating_sub(1));
+                let (ex1, ey1) = (bx1 + 1, by1 + 1);
+                let clear = changed
+                    .iter()
+                    .all(|r| !(r.x0 <= ex1 && ex0 < r.x1() && r.y0 <= ey1 && ey0 < r.y1()));
+                if clear {
+                    map.insert((src, dst), ids.to_vec());
+                }
+            }
+        }
+        Self { map }
+    }
+
+    fn lookup(&self, src: Coord, dst: Coord) -> Option<Vec<usize>> {
+        self.map.get(&(src, dst)).cloned()
     }
 }
 

@@ -8,6 +8,9 @@
 //!   ([`CompiledSchedule`]): node indices, direct/staged
 //!   classification, staging layout, per-node write partitions and
 //!   cached simulator routes;
+//! - [`plancache`] — the topology-keyed bounded cache of compiled
+//!   plans with incremental recompilation across fail/repair deltas
+//!   ([`PlanCache`]) — the fast path for cluster transitions;
 //! - [`executor`] — numeric execution over per-node buffers (the
 //!   trainer's allreduce): a parallel production path over the
 //!   compiled write partitions plus the serial reference;
@@ -20,11 +23,13 @@ pub mod allreduce;
 pub mod compiled;
 pub mod executor;
 pub mod kernel;
+pub mod plancache;
 pub mod schedule;
 pub mod verify;
 
-pub use allreduce::{build_schedule, Scheme};
+pub use allreduce::{build_ft_schedule, build_schedule, Scheme};
 pub use compiled::{CompileError, CompiledSchedule};
+pub use plancache::{PlanCache, PlanCacheStats, PlanError, PlanKey};
 pub use executor::{
     execute, execute_compiled, execute_compiled_serial, execute_compiled_with, execute_once,
     ExecOptions, ExecutorArena, NodeBuffers,

@@ -1,0 +1,538 @@
+//! Topology-keyed compiled-plan cache — the recompilation subsystem
+//! that makes `ClusterEvent::{Fail, Repair}` transitions cheap.
+//!
+//! Long MTBF timelines are dominated by fail→repair→fail cycles over
+//! the *same* hole sets: a board dies, is swapped, and dies (or a
+//! neighbour dies) again, so the same degraded topologies recur for
+//! the whole life of a job. Before this cache every transition paid a
+//! from-scratch `build_schedule` + `CompiledSchedule::compile`, making
+//! long availability sweeps compile-bound rather than
+//! simulation-bound. [`PlanCache`] removes that cost twice over:
+//!
+//! - **Cache hits**: plans are keyed by a *topology fingerprint* —
+//!   mesh dims plus the canonically sorted failed-region set — plus
+//!   scheme and payload ([`PlanKey`]). A revisited topology returns
+//!   its previously compiled plan, gated by
+//!   [`crate::simnet::validate_routes`]: every cached link-route must
+//!   still run over live chips, so a stale or mis-filed plan can never
+//!   stream traffic through a hole (the entry is evicted and
+//!   recompiled instead).
+//! - **Cache misses** on a topology *adjacent* to the previously used
+//!   one (one region failed or repaired) recompile **incrementally**:
+//!   only rings intersecting the changed strips are rebuilt
+//!   ([`crate::rings::fault_tolerant::ft_plan_incremental`]) and only
+//!   transfers whose routes the delta could have touched are re-lowered
+//!   ([`CompiledSchedule::compile_incremental`]); everything else is
+//!   spliced from the previous plan. Incremental results are
+//!   structurally identical to full compiles (differentially tested
+//!   below) — the cache records them under the same fingerprint.
+//!
+//! The cache is bounded (LRU eviction) and purely in-memory; hit/miss,
+//! incremental/full and compile-latency counters are exposed through
+//! [`PlanCacheStats`] and surfaced in `BENCH_recovery.json` /
+//! `BENCH_sweep.json`. A verification mode (used by the CI sweep)
+//! fresh-compiles on every hit and incremental compile and fails loudly
+//! on any divergence.
+
+use super::allreduce::{build_ft_schedule, build_schedule, BuildError, Scheme};
+use super::compiled::{CompileError, CompiledSchedule};
+use crate::mesh::{FailedRegion, Topology};
+use crate::rings::fault_tolerant::{ft_plan, ft_plan_incremental, FtPlan};
+use crate::simnet::validate_routes;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum PlanError {
+    #[error("schedule build failed: {0}")]
+    Build(#[from] BuildError),
+    #[error("plan compile failed: {0}")]
+    Compile(#[from] CompileError),
+    #[error("cached plan diverged from a fresh compile (cache verification mode)")]
+    Divergence,
+}
+
+/// Cache identity of a compiled plan: the topology fingerprint (mesh
+/// dims + canonically sorted failed regions) plus scheme and payload.
+/// Two topologies with equal fingerprints have identical live sets and
+/// links, hence identical schedules and plans.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub nx: usize,
+    pub ny: usize,
+    /// Failed regions in canonical (sorted) order.
+    pub failed: Vec<FailedRegion>,
+    pub scheme: Scheme,
+    pub payload: usize,
+}
+
+impl PlanKey {
+    pub fn fingerprint(scheme: Scheme, topo: &Topology, payload: usize) -> PlanKey {
+        let mut failed = topo.failed_regions().to_vec();
+        failed.sort_unstable();
+        PlanKey { nx: topo.mesh.nx, ny: topo.mesh.ny, failed, scheme, payload }
+    }
+
+    /// Reconstruct the topology this key fingerprints.
+    fn topology(&self) -> Topology {
+        Topology::with_failures(self.nx, self.ny, self.failed.clone())
+    }
+}
+
+/// Cache effectiveness counters, cumulative over the cache's lifetime.
+#[derive(Debug, Clone, Default)]
+pub struct PlanCacheStats {
+    /// Lookups answered from the cache (after route validation).
+    pub hits: u64,
+    /// Lookups that had to compile.
+    pub misses: u64,
+    /// Misses compiled from scratch.
+    pub full_compiles: u64,
+    /// Misses compiled incrementally from the previous plan.
+    pub incremental_compiles: u64,
+    /// Incremental attempts that fell back to a full compile.
+    pub incremental_fallbacks: u64,
+    /// Hits whose cached routes failed validation (evicted + recompiled).
+    pub validation_evictions: u64,
+    /// Capacity (LRU) evictions.
+    pub evictions: u64,
+    /// Wall seconds spent compiling on misses (full + incremental).
+    pub compile_s: f64,
+}
+
+impl PlanCacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Hits per lookup in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+
+    /// Mean compile latency per miss, seconds.
+    pub fn mean_compile_s(&self) -> f64 {
+        let compiles = self.full_compiles + self.incremental_compiles;
+        if compiles == 0 {
+            0.0
+        } else {
+            self.compile_s / compiles as f64
+        }
+    }
+}
+
+struct Slot {
+    plan: Arc<CompiledSchedule>,
+    /// Ring plan behind the compiled schedule (FT/pair-row schemes
+    /// only) — the seed for incremental recompilation from this entry.
+    ft: Option<Arc<FtPlan>>,
+    last_used: u64,
+}
+
+/// Bounded LRU cache of compiled allreduce plans. See the module docs.
+pub struct PlanCache {
+    cap: usize,
+    verify: bool,
+    tick: u64,
+    slots: HashMap<PlanKey, Slot>,
+    /// Key of the most recently returned plan: the incremental-compile
+    /// context for the next adjacent topology.
+    last: Option<PlanKey>,
+    stats: PlanCacheStats,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new(32)
+    }
+}
+
+impl PlanCache {
+    /// Cache bounded to `cap` plans (at least 1).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            verify: false,
+            tick: 0,
+            slots: HashMap::new(),
+            last: None,
+            stats: PlanCacheStats::default(),
+        }
+    }
+
+    /// Like [`new`](Self::new), but every cache hit and every
+    /// incremental compile is checked against a fresh full compile;
+    /// any divergence returns [`PlanError::Divergence`]. Used by the
+    /// CI sweep as a hard gate.
+    pub fn with_verification(cap: usize) -> Self {
+        let mut c = Self::new(cap);
+        c.verify = true;
+        c
+    }
+
+    pub fn stats(&self) -> &PlanCacheStats {
+        &self.stats
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Fetch (or compile) the plan for `scheme` on `topo` at `payload`
+    /// f32 elements. Hits are gated by route validation; misses prefer
+    /// incremental recompilation from the previously returned plan.
+    pub fn get(
+        &mut self,
+        scheme: Scheme,
+        topo: &Topology,
+        payload: usize,
+    ) -> Result<Arc<CompiledSchedule>, PlanError> {
+        let key = PlanKey::fingerprint(scheme, topo, payload);
+        self.tick += 1;
+        if let Some(slot) = self.slots.get_mut(&key) {
+            slot.last_used = self.tick;
+            let plan = slot.plan.clone();
+            // Safety gate: every cached route must still cross only
+            // live chips on *this* topology.
+            if validate_routes(&plan, topo).is_ok() {
+                self.stats.hits += 1;
+                if self.verify {
+                    let (fresh, _) = compile_full(scheme, topo, payload)?;
+                    if *plan != fresh {
+                        return Err(PlanError::Divergence);
+                    }
+                }
+                self.last = Some(key);
+                return Ok(plan);
+            }
+            self.slots.remove(&key);
+            self.stats.validation_evictions += 1;
+        }
+        self.stats.misses += 1;
+        let (plan, ft) = self.compile_for(scheme, topo, payload)?;
+        let plan = Arc::new(plan);
+        self.slots.insert(key.clone(), Slot { plan: plan.clone(), ft, last_used: self.tick });
+        self.evict_over_cap();
+        self.last = Some(key);
+        Ok(plan)
+    }
+
+    /// Compile for a miss: incremental from the previously returned
+    /// plan when scheme/payload/mesh line up, full otherwise.
+    fn compile_for(
+        &mut self,
+        scheme: Scheme,
+        topo: &Topology,
+        payload: usize,
+    ) -> Result<(CompiledSchedule, Option<Arc<FtPlan>>), PlanError> {
+        if matches!(scheme, Scheme::PairRows | Scheme::FaultTolerant) {
+            if let Some(prev) = self.incremental_context(scheme, topo, payload) {
+                let (prev_ft, prev_plan, prev_topo) = prev;
+                // Time only the production compile — the verification
+                // compile below is gate overhead, not cache cost.
+                let t0 = Instant::now();
+                match compile_incremental_ft(topo, payload, &prev_ft, &prev_plan, &prev_topo) {
+                    Ok((plan, ftp)) => {
+                        self.stats.compile_s += t0.elapsed().as_secs_f64();
+                        if self.verify {
+                            let (fresh, _) = compile_full(scheme, topo, payload)?;
+                            if plan != fresh {
+                                return Err(PlanError::Divergence);
+                            }
+                        }
+                        self.stats.incremental_compiles += 1;
+                        return Ok((plan, Some(Arc::new(ftp))));
+                    }
+                    // e.g. the delta makes the scheme unschedulable in a
+                    // way the full planner reports differently — let the
+                    // full path produce the authoritative result/error.
+                    Err(_) => self.stats.incremental_fallbacks += 1,
+                }
+            }
+        }
+        self.stats.full_compiles += 1;
+        let t0 = Instant::now();
+        let (plan, ft) = compile_full(scheme, topo, payload)?;
+        self.stats.compile_s += t0.elapsed().as_secs_f64();
+        Ok((plan, ft.map(Arc::new)))
+    }
+
+    /// The previous (ring plan, compiled plan, topology) when the last
+    /// returned entry can seed an incremental compile for `topo`.
+    fn incremental_context(
+        &self,
+        scheme: Scheme,
+        topo: &Topology,
+        payload: usize,
+    ) -> Option<(Arc<FtPlan>, Arc<CompiledSchedule>, Topology)> {
+        let prev_key = self.last.as_ref()?;
+        if prev_key.scheme != scheme
+            || prev_key.payload != payload
+            || prev_key.nx != topo.mesh.nx
+            || prev_key.ny != topo.mesh.ny
+        {
+            return None;
+        }
+        let slot = self.slots.get(prev_key)?;
+        let ft = slot.ft.clone()?;
+        Some((ft, slot.plan.clone(), prev_key.topology()))
+    }
+
+    fn evict_over_cap(&mut self) {
+        while self.slots.len() > self.cap {
+            let victim = self
+                .slots
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    self.slots.remove(&k);
+                    self.stats.evictions += 1;
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+/// Full compile: ring plan (FT schemes) + schedule + route-carrying
+/// lowered plan.
+fn compile_full(
+    scheme: Scheme,
+    topo: &Topology,
+    payload: usize,
+) -> Result<(CompiledSchedule, Option<FtPlan>), PlanError> {
+    if payload == 0 {
+        return Err(PlanError::Build(BuildError::PayloadTooSmall(payload)));
+    }
+    match scheme {
+        Scheme::PairRows | Scheme::FaultTolerant => {
+            let ftp = ft_plan(topo).map_err(BuildError::from)?;
+            let sched = build_ft_schedule(&ftp, payload);
+            let plan = CompiledSchedule::compile(&sched, topo)?;
+            Ok((plan, Some(ftp)))
+        }
+        Scheme::OneD | Scheme::TwoD => {
+            let sched = build_schedule(scheme, topo, payload)?;
+            let plan = CompiledSchedule::compile(&sched, topo)?;
+            Ok((plan, None))
+        }
+    }
+}
+
+/// Incremental compile of the FT/pair-row scheme from the previous
+/// plan: rebuild only rings touching the changed strips, splice
+/// untouched lowering and routes.
+fn compile_incremental_ft(
+    topo: &Topology,
+    payload: usize,
+    prev_ft: &FtPlan,
+    prev_plan: &CompiledSchedule,
+    prev_topo: &Topology,
+) -> Result<(CompiledSchedule, FtPlan), PlanError> {
+    let ftp = ft_plan_incremental(topo, prev_topo, prev_ft).map_err(BuildError::from)?;
+    let sched = build_ft_schedule(&ftp, payload);
+    let plan = CompiledSchedule::compile_incremental(&sched, topo, prev_plan, prev_topo)?;
+    Ok((plan, ftp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop;
+    use crate::util::rng::SplitMix64;
+
+    /// Random disjoint even-aligned regions on an even mesh, each kept
+    /// only if the running topology stays connected.
+    fn random_regions(rng: &mut SplitMix64, nx: usize, ny: usize, max: usize) -> Vec<FailedRegion> {
+        let mut regions: Vec<FailedRegion> = Vec::new();
+        for _ in 0..rng.usize_in(0, max + 1) {
+            let (w, h) = *rng.choose(&[(2, 2), (4, 2), (2, 4)]);
+            if w + 2 > nx || h + 2 > ny {
+                continue;
+            }
+            let x0 = (2 * rng.usize_in(0, (nx - w) / 2 + 1)).min(nx - w);
+            let y0 = (2 * rng.usize_in(0, (ny - h) / 2 + 1)).min(ny - h);
+            let r = FailedRegion::new(x0, y0, w, h);
+            if regions.iter().any(|o| o.overlaps(&r)) {
+                continue;
+            }
+            regions.push(r);
+            if !Topology::with_failures(nx, ny, regions.clone()).is_connected() {
+                regions.pop();
+            }
+        }
+        regions
+    }
+
+    #[test]
+    fn prop_cache_hits_are_bit_identical_to_fresh_compiles() {
+        // The ISSUE's headline property: across randomized multi-region
+        // topologies, a plan answered from the cache equals a fresh
+        // from-scratch compile structurally — transfers, partitions,
+        // staging layout, routes and flags.
+        prop("cache hit bit-identical", |rng| {
+            let nx = 2 * rng.usize_in(3, 7);
+            let ny = 2 * rng.usize_in(3, 7);
+            let regions = random_regions(rng, nx, ny, 3);
+            let topo = Topology::with_failures(nx, ny, regions);
+            if ft_plan(&topo).is_err() {
+                return;
+            }
+            let payload = 1 << rng.usize_in(8, 13);
+            let mut cache = PlanCache::new(8);
+            let first = cache.get(Scheme::FaultTolerant, &topo, payload).unwrap();
+            let hit = cache.get(Scheme::FaultTolerant, &topo, payload).unwrap();
+            assert!(Arc::ptr_eq(&first, &hit), "second lookup must be a cache hit");
+            assert_eq!(cache.stats().hits, 1);
+            let (fresh, _) = compile_full(Scheme::FaultTolerant, &topo, payload).unwrap();
+            assert_eq!(*hit, fresh, "cached plan diverges from fresh compile");
+        });
+    }
+
+    #[test]
+    fn prop_incremental_recompile_matches_full() {
+        // Differential test: starting from a random topology, fail one
+        // more region (or repair one), and check both the incremental
+        // ring plan and the incremental compiled plan are equal to
+        // their from-scratch counterparts transfer-for-transfer.
+        prop("incremental == full", |rng| {
+            let nx = 2 * rng.usize_in(3, 7);
+            let ny = 2 * rng.usize_in(3, 7);
+            let base = random_regions(rng, nx, ny, 2);
+            let (old_regions, new_regions) = if !base.is_empty() && rng.bernoulli(0.4) {
+                // Repair: drop one region.
+                let keep = rng.usize_in(0, base.len());
+                let mut repaired = base.clone();
+                repaired.remove(keep);
+                (base.clone(), repaired)
+            } else {
+                // Failure: add one region.
+                let mut grown = random_regions(rng, nx, ny, 3);
+                grown.retain(|r| !base.iter().any(|o| o.overlaps(r)));
+                let mut all = base.clone();
+                all.extend(grown.into_iter().take(1));
+                if !Topology::with_failures(nx, ny, all.clone()).is_connected() {
+                    return;
+                }
+                (base.clone(), all)
+            };
+            let topo_old = Topology::with_failures(nx, ny, old_regions);
+            let topo_new = Topology::with_failures(nx, ny, new_regions);
+            let Ok(ft_old) = ft_plan(&topo_old) else { return };
+            let Ok(ft_new_full) = ft_plan(&topo_new) else { return };
+            let ft_new_inc = ft_plan_incremental(&topo_new, &topo_old, &ft_old)
+                .expect("incremental plan must build when full plan does");
+            assert_eq!(ft_new_inc, ft_new_full, "incremental ring plan diverged");
+
+            let payload = 4096;
+            let prev_sched = build_ft_schedule(&ft_old, payload);
+            let prev_plan = CompiledSchedule::compile(&prev_sched, &topo_old).unwrap();
+            let sched = build_ft_schedule(&ft_new_full, payload);
+            let full = CompiledSchedule::compile(&sched, &topo_new).unwrap();
+            let inc =
+                CompiledSchedule::compile_incremental(&sched, &topo_new, &prev_plan, &topo_old)
+                    .unwrap();
+            assert_eq!(inc, full, "incremental compiled plan diverged");
+        });
+    }
+
+    #[test]
+    fn fail_repair_fail_cycle_reuses_plans() {
+        // The dominant MTBF pattern: the same hole opens, closes and
+        // re-opens. Transitions 3+ must all be hits.
+        let mut cache = PlanCache::new(8);
+        let full = Topology::full(8, 8);
+        let holed = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        let payload = 2048;
+        for _ in 0..3 {
+            cache.get(Scheme::FaultTolerant, &holed, payload).unwrap();
+            cache.get(Scheme::FaultTolerant, &full, payload).unwrap();
+        }
+        let s = cache.stats();
+        assert_eq!(s.lookups(), 6);
+        assert_eq!(s.misses, 2, "only the first visit of each topology compiles");
+        assert_eq!(s.hits, 4);
+        assert!(s.hit_rate() > 0.6);
+        // The second topology was adjacent to the first: compiled
+        // incrementally.
+        assert_eq!(s.incremental_compiles + s.incremental_fallbacks, 1);
+    }
+
+    #[test]
+    fn capacity_is_bounded_lru() {
+        let mut cache = PlanCache::new(2);
+        let topos = [
+            Topology::full(8, 8),
+            Topology::with_failure(8, 8, FailedRegion::board(0, 0)),
+            Topology::with_failure(8, 8, FailedRegion::board(4, 4)),
+        ];
+        for t in &topos {
+            cache.get(Scheme::FaultTolerant, t, 1024).unwrap();
+        }
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        // The least-recently-used entry (the full mesh) was evicted.
+        cache.get(Scheme::FaultTolerant, &topos[0], 1024).unwrap();
+        assert_eq!(cache.stats().misses, 4);
+    }
+
+    #[test]
+    fn validation_gate_evicts_poisoned_entries() {
+        // A plan filed under the wrong fingerprint must never be
+        // returned: its routes cross the hole. (Cannot happen through
+        // `get` — fingerprints determine topology — so poison the map
+        // directly.)
+        let mut cache = PlanCache::new(8);
+        let full = Topology::full(8, 8);
+        let holed = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        let payload = 1024;
+        cache.get(Scheme::OneD, &full, payload).unwrap();
+        let full_key = PlanKey::fingerprint(Scheme::OneD, &full, payload);
+        let slot = cache.slots.remove(&full_key).unwrap();
+        let holed_key = PlanKey::fingerprint(Scheme::OneD, &holed, payload);
+        cache.slots.insert(holed_key, slot);
+
+        let plan = cache.get(Scheme::OneD, &holed, payload).unwrap();
+        assert_eq!(cache.stats().validation_evictions, 1);
+        assert!(validate_routes(&plan, &holed).is_ok(), "recompiled plan must be clean");
+    }
+
+    #[test]
+    fn verification_mode_accepts_consistent_cache() {
+        let mut cache = PlanCache::with_verification(8);
+        let full = Topology::full(6, 6);
+        let holed = Topology::with_failure(6, 6, FailedRegion::board(2, 2));
+        for t in [&full, &holed, &full, &holed] {
+            cache.get(Scheme::FaultTolerant, t, 4096).unwrap();
+        }
+        assert!(cache.stats().hits >= 2);
+    }
+
+    #[test]
+    fn distinct_schemes_and_payloads_do_not_collide() {
+        let mut cache = PlanCache::new(8);
+        let topo = Topology::full(4, 4);
+        let a = cache.get(Scheme::OneD, &topo, 1024).unwrap();
+        let b = cache.get(Scheme::FaultTolerant, &topo, 1024).unwrap();
+        let c = cache.get(Scheme::FaultTolerant, &topo, 2048).unwrap();
+        assert_eq!(cache.stats().misses, 3);
+        assert_ne!(*a, *b);
+        assert_ne!(*b, *c);
+    }
+}

@@ -149,7 +149,10 @@ impl Schedule {
 
 /// SplitMix64-style combine: strong enough that accidental collisions
 /// between real schedules are vanishingly unlikely, with no allocation.
-fn mix(h: u64, v: u64) -> u64 {
+/// Shared with the compiled-plan step matcher
+/// (`compiled::compile_incremental`), which hashes lowered steps to
+/// find splice candidates in the previous plan.
+pub(crate) fn mix(h: u64, v: u64) -> u64 {
     let mut x = (h ^ v).wrapping_add(0x9E37_79B9_7F4A_7C15);
     x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);

@@ -30,12 +30,14 @@ pub mod policy;
 
 use crate::cluster::{ClusterError, ClusterEvent, ClusterState, EventQueue, TimedEvent};
 use crate::mesh::{FailedRegion, Topology};
-use crate::perfmodel::{predict_candidate, CandidatePrediction};
+use crate::perfmodel::{predict_candidate_cached, CandidatePrediction};
 use crate::runtime::Runtime;
 use crate::simnet::LinkModel;
 use crate::trainer::checkpoint::Checkpoint;
 use crate::trainer::{DataParallelTrainer, TrainError, TrainerConfig};
-use policy::{largest_submesh, RecoveryPolicy};
+use policy::{
+    effective_throughput, largest_submesh, CandidateCost, EventRateEstimator, RecoveryPolicy,
+};
 use std::path::PathBuf;
 use thiserror::Error;
 
@@ -127,7 +129,21 @@ pub struct Coordinator {
     /// the trainer was restarted on one; `None` while the trainer runs
     /// on the (possibly degraded) full mesh.
     submesh: Option<(usize, usize, usize, usize)>,
+    /// Posterior over the cluster's event rate, feeding the expected
+    /// time-to-next-event horizon of the adaptive comparison.
+    estimator: EventRateEstimator,
+    /// Most recently measured ring-rebuild + recompile latency
+    /// (fault-tolerant continue's one-off cost), seconds.
+    last_rebuild_s: f64,
+    /// Most recently measured trainer-restart latency (sub-mesh
+    /// restart's one-off cost beyond rollback), seconds.
+    last_restart_s: f64,
 }
+
+/// Prior mean inter-event gap (steps) before any event is observed —
+/// wide enough that the first decisions stay close to the steady-state
+/// comparison.
+const EVENT_GAP_PRIOR_STEPS: f64 = 200.0;
 
 impl Coordinator {
     pub fn new(cfg: JobConfig, runtime: &Runtime) -> Result<Self, CoordError> {
@@ -136,7 +152,16 @@ impl Coordinator {
             cluster.fail(*r)?;
         }
         let trainer = DataParallelTrainer::new(cfg.trainer.clone(), runtime)?;
-        Ok(Self { cfg, trainer, last_checkpoint: None, cluster, submesh: None })
+        Ok(Self {
+            cfg,
+            trainer,
+            last_checkpoint: None,
+            cluster,
+            submesh: None,
+            estimator: EventRateEstimator::new(EVENT_GAP_PRIOR_STEPS),
+            last_rebuild_s: 0.0,
+            last_restart_s: 0.0,
+        })
     }
 
     /// Is the trainer currently on a sub-mesh restart (vs. the full
@@ -164,22 +189,31 @@ impl Coordinator {
     }
 
     /// Restart the trainer from the last checkpoint on a fresh
-    /// topology (`failed` in the new mesh's own coordinates).
+    /// topology (`failed` in the new mesh's own coordinates), anchored
+    /// at physical origin `(x0, y0)` of the cluster mesh so data
+    /// sharding follows the placement.
     fn restart_trainer(
         &mut self,
         nx: usize,
         ny: usize,
+        origin: (usize, usize),
         failed: Vec<FailedRegion>,
         note: String,
     ) -> Result<(), CoordError> {
+        let t0 = std::time::Instant::now();
         let restored = self.last_checkpoint.clone();
         let lost = restored.as_ref().map(|c| self.trainer.step.saturating_sub(c.step));
         let mut tcfg = self.cfg.trainer.clone();
         tcfg.nx = nx;
         tcfg.ny = ny;
+        tcfg.x0 = origin.0;
+        tcfg.y0 = origin.1;
         tcfg.failed = failed;
         let runtime = Runtime::cpu().map_err(TrainError::Runtime)?;
-        let mut new_trainer = DataParallelTrainer::new(tcfg, &runtime)?;
+        // The compiled-plan cache survives the restart: topologies seen
+        // before the transition (and after the next repair) stay hits.
+        let cache = self.trainer.take_cache();
+        let mut new_trainer = DataParallelTrainer::new_with_cache(tcfg, &runtime, cache)?;
         // Carry metrics over so the loss curve shows the restart.
         std::mem::swap(&mut new_trainer.metrics, &mut self.trainer.metrics);
         if let Some(ck) = restored {
@@ -191,20 +225,24 @@ impl Coordinator {
             .metrics
             .annotate(new_trainer.step, format!("{note} (lost {} steps)", lost.unwrap_or(0)));
         self.trainer = new_trainer;
+        self.last_restart_s = t0.elapsed().as_secs_f64();
         Ok(())
     }
 
     /// Restart on the largest clean sub-mesh avoiding every accumulated
-    /// failed region.
+    /// failed region, anchored at its physical placement.
     fn restart_on_submesh(&mut self) -> Result<(), CoordError> {
         let sub = largest_submesh(self.cluster.nx, self.cluster.ny, self.cluster.failed_regions());
-        let (_, _, w, h) = sub;
+        let (x0, y0, w, h) = sub;
         if w * h == 0 {
             return Err(CoordError::Stopped(self.trainer.step));
         }
         let holes = self.cluster.failed_regions().len();
-        let note = format!("sub-mesh restart on {w}x{h} ({} chips, {holes} holes avoided)", w * h);
-        self.restart_trainer(w, h, Vec::new(), note)?;
+        let note = format!(
+            "sub-mesh restart on {w}x{h} at ({x0},{y0}) ({} chips, {holes} holes avoided)",
+            w * h
+        );
+        self.restart_trainer(w, h, (x0, y0), Vec::new(), note)?;
         self.submesh = Some(sub);
         Ok(())
     }
@@ -225,15 +263,22 @@ impl Coordinator {
     /// Predict both recovery candidates on the current cluster state:
     /// fault-tolerant continue on the degraded full mesh, and restart
     /// on the largest clean sub-mesh. `None` = not schedulable.
-    fn adaptive_predictions(&self) -> (Option<CandidatePrediction>, Option<CandidatePrediction>) {
+    /// Predictions go through the trainer's plan cache, so repeated
+    /// what-if checks over recurring topologies stop paying the
+    /// per-event schedule build + compile.
+    fn adaptive_predictions(
+        &mut self,
+    ) -> (Option<CandidatePrediction>, Option<CandidatePrediction>) {
         let link = LinkModel::tpu_v3();
         let payload = self.trainer.param_count();
         let compute = self.per_worker_compute_s();
-        let ft = predict_candidate(&self.cluster.topology(), payload, &link, compute).ok();
+        let ft_topo = self.cluster.topology();
         let (nx, ny) = (self.cluster.nx, self.cluster.ny);
         let (_, _, w, h) = largest_submesh(nx, ny, self.cluster.failed_regions());
+        let cache = self.trainer.cache_mut();
+        let ft = predict_candidate_cached(&ft_topo, payload, &link, compute, cache).ok();
         let sm = if w >= 2 && h >= 2 {
-            predict_candidate(&Topology::full(w, h), payload, &link, compute).ok()
+            predict_candidate_cached(&Topology::full(w, h), payload, &link, compute, cache).ok()
         } else {
             None
         };
@@ -242,21 +287,22 @@ impl Coordinator {
 
     fn annotate_adaptive(
         &mut self,
-        ft: &Option<CandidatePrediction>,
-        sm: &Option<CandidatePrediction>,
+        ft: &Option<(CandidatePrediction, f64)>,
+        sm: &Option<(CandidatePrediction, f64)>,
+        horizon: f64,
         chose_ft: bool,
     ) {
-        let describe = |c: &Option<CandidatePrediction>| match c {
-            Some(p) => format!(
-                "{} workers, predicted step {:.6}s, throughput {:.1}",
-                p.workers, p.step_s, p.throughput
+        let describe = |c: &Option<(CandidatePrediction, f64)>| match c {
+            Some((p, eff)) => format!(
+                "{} workers, predicted step {:.6}s, effective throughput {:.1}",
+                p.workers, p.step_s, eff
             ),
             None => "not schedulable".to_string(),
         };
         self.trainer.metrics.annotate(
             self.trainer.step,
             format!(
-                "adaptive: fault-tolerant [{}] vs sub-mesh [{}] -> {}",
+                "adaptive: fault-tolerant [{}] vs sub-mesh [{}] over ~{horizon:.0} steps -> {}",
                 describe(ft),
                 describe(sm),
                 if chose_ft { "fault-tolerant" } else { "sub-mesh" },
@@ -264,18 +310,43 @@ impl Coordinator {
         );
     }
 
-    /// Shared adaptive decision: predict both candidates, record the
-    /// comparison, and return whether fault-tolerant-continue won.
-    /// `None` when neither candidate is schedulable.
+    /// Steps the sub-mesh candidate would roll back to its checkpoint.
+    fn rollback_steps(&self) -> f64 {
+        match &self.last_checkpoint {
+            Some(ck) => self.trainer.step.saturating_sub(ck.step) as f64,
+            None => self.trainer.step as f64,
+        }
+    }
+
+    /// Shared adaptive decision: predict both candidates, fold in each
+    /// one's one-off costs (measured rebuild/restart latency, rollback
+    /// steps) over the expected time-to-next-event from the MTBF
+    /// posterior, record the comparison, and return whether
+    /// fault-tolerant-continue won. `None` when neither candidate is
+    /// schedulable.
     fn adaptive_choose(&mut self) -> Option<bool> {
         let (ft, sm) = self.adaptive_predictions();
+        let horizon = self.estimator.expected_gap_steps();
+        let ft_cost = CandidateCost { one_off_s: self.last_rebuild_s, rollback_steps: 0.0 };
+        let sm_cost = CandidateCost {
+            one_off_s: self.last_restart_s,
+            rollback_steps: self.rollback_steps(),
+        };
+        let ft = ft.map(|p| {
+            let e = effective_throughput(&p, horizon, &ft_cost);
+            (p, e)
+        });
+        let sm = sm.map(|p| {
+            let e = effective_throughput(&p, horizon, &sm_cost);
+            (p, e)
+        });
         let chose_ft = match (&ft, &sm) {
-            (Some(f), Some(s)) => f.throughput >= s.throughput,
+            (Some((_, f)), Some((_, s))) => f >= s,
             (Some(_), None) => true,
             (None, Some(_)) => false,
             (None, None) => return None,
         };
-        self.annotate_adaptive(&ft, &sm, chose_ft);
+        self.annotate_adaptive(&ft, &sm, horizon, chose_ft);
         Some(chose_ft)
     }
 
@@ -284,7 +355,7 @@ impl Coordinator {
     fn restart_on_cluster_mesh(&mut self, note: &str) -> Result<(), CoordError> {
         let failed = self.cluster.failed_regions().to_vec();
         let (nx, ny) = (self.cluster.nx, self.cluster.ny);
-        self.restart_trainer(nx, ny, failed, note.to_string())?;
+        self.restart_trainer(nx, ny, (0, 0), failed, note.to_string())?;
         self.submesh = None;
         Ok(())
     }
@@ -313,11 +384,17 @@ impl Coordinator {
     /// plan on the degraded mesh, keep going.
     fn continue_fault_tolerant(&mut self, region: FailedRegion) -> Result<(), CoordError> {
         let rebuild_s = self.trainer.inject_failure(region)?;
+        self.last_rebuild_s = rebuild_s;
         let (steps, transfers) = self.trainer.schedule_info();
+        let (hits, lookups, incremental) = {
+            let s = self.trainer.cache_stats();
+            (s.hits, s.lookups(), s.incremental_compiles)
+        };
         self.trainer.metrics.annotate(
             self.trainer.step,
             format!(
-                "rings rebuilt in {rebuild_s:.4}s (plan: {steps} steps, {transfers} transfers)"
+                "rings rebuilt in {rebuild_s:.4}s (plan: {steps} steps, {transfers} transfers; \
+                 cache {hits} hits / {lookups} lookups, {incremental} incremental)"
             ),
         );
         Ok(())
@@ -365,6 +442,7 @@ impl Coordinator {
     /// and re-broadcast the replica to the recovered chips.
     fn rejoin_fault_tolerant(&mut self, region: FailedRegion) -> Result<(), CoordError> {
         let rebuild_s = self.trainer.rejoin_region(region)?;
+        self.last_rebuild_s = rebuild_s;
         let (steps, transfers) = self.trainer.schedule_info();
         self.trainer.metrics.annotate(
             self.trainer.step,
@@ -405,10 +483,12 @@ impl Coordinator {
             ClusterEvent::Stop => Err(CoordError::Stopped(self.trainer.step)),
             ClusterEvent::Fail(region) => {
                 self.cluster.fail(region)?;
+                self.estimator.observe(ev.at_step);
                 self.handle_failure(region)
             }
             ClusterEvent::Repair(region) => {
                 self.cluster.repair(region)?;
+                self.estimator.observe(ev.at_step);
                 self.handle_repair(region)
             }
         }
@@ -525,6 +605,27 @@ mod tests {
         assert_eq!(s.final_workers, 8);
         assert!(s.events.iter().any(|(_, e)| e.contains("sub-mesh restart")));
         assert!(c.on_submesh());
+    }
+
+    #[test]
+    fn submesh_restart_anchors_at_physical_origin() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let mut cfg = job(4, 4, 6);
+        cfg.policy = RecoveryPolicy::SubMesh;
+        cfg.checkpoint_every = Some(2);
+        cfg.failures = vec![FailureEvent { at_step: 3, region: FailedRegion::board(0, 0) }];
+        let mut c = Coordinator::new(cfg, &rt).unwrap();
+        c.run().unwrap();
+        assert!(c.on_submesh());
+        // Corner board at (0,0) on 4x4: the widest clean slab is the
+        // 4x2 at (0, 2) — the trainer must anchor there, not at the
+        // origin, so shards follow the physical chips.
+        assert_eq!(c.trainer.origin(), (0, 2));
+        // The carried plan cache kept the pre-restart compiles.
+        assert!(c.trainer.cache_stats().lookups() >= 2);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! strategy selected from predicted throughput, not fixed a priori).
 
 use crate::mesh::FailedRegion;
+use crate::perfmodel::CandidatePrediction;
 
 /// What the coordinator does when chips fail.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -96,6 +97,85 @@ pub fn largest_submesh(
         }
     }
     best
+}
+
+/// One-off costs of switching to a recovery candidate, folded into the
+/// adaptive comparison alongside its steady-state throughput.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CandidateCost {
+    /// Wall seconds paid once on the transition (ring rebuild + plan
+    /// recompile for fault-tolerant continue; trainer re-construction
+    /// for a restart).
+    pub one_off_s: f64,
+    /// Training steps that must be re-run because the candidate rolls
+    /// back to the last checkpoint (0 for fault-tolerant continue).
+    pub rollback_steps: f64,
+}
+
+/// Effective throughput of a candidate over the expected horizon to
+/// the next cluster event, in worker-steps per wall second:
+///
+/// ```text
+///            horizon * workers
+/// ----------------------------------------------
+/// one_off + (horizon + rollback_steps) * step_s
+/// ```
+///
+/// The numerator counts only *new* progress (rolled-back steps are
+/// re-run, not gained); the denominator charges the one-off transition
+/// cost and the re-run time. As `horizon → ∞` this converges to the
+/// steady-state `workers / step_s` the adaptive policy used before
+/// costs were modelled; a short expected time-to-next-event (high MTBF
+/// pressure) amortises one-off costs over fewer steps and correctly
+/// penalises restart-happy candidates.
+pub fn effective_throughput(
+    pred: &CandidatePrediction,
+    horizon_steps: f64,
+    cost: &CandidateCost,
+) -> f64 {
+    let h = horizon_steps.max(1.0);
+    let wall = cost.one_off_s + (h + cost.rollback_steps) * pred.step_s;
+    if wall > 0.0 {
+        h * pred.workers as f64 / wall
+    } else {
+        0.0
+    }
+}
+
+/// Online posterior-mean estimate of the expected steps to the next
+/// cluster event, from the inter-event gaps observed so far.
+///
+/// The MTBF process is exponential (memoryless), so the expected time
+/// to the next event equals the mean inter-arrival time; with a
+/// conjugate prior equivalent to one pseudo-observation of
+/// `prior_mean_steps`, the posterior mean is
+/// `(prior + Σ gaps) / (1 + n)`. Deterministic and cheap — the
+/// adaptive policy and the MTBF sweep share this estimator.
+#[derive(Debug, Clone)]
+pub struct EventRateEstimator {
+    prior_mean_steps: f64,
+    gap_sum: f64,
+    gaps: u64,
+    last_event_step: u64,
+}
+
+impl EventRateEstimator {
+    pub fn new(prior_mean_steps: f64) -> Self {
+        Self { prior_mean_steps, gap_sum: 0.0, gaps: 0, last_event_step: 0 }
+    }
+
+    /// Record a cluster event at `step` (gaps are measured from the
+    /// previous event, or from step 0 for the first).
+    pub fn observe(&mut self, step: u64) {
+        self.gap_sum += step.saturating_sub(self.last_event_step) as f64;
+        self.gaps += 1;
+        self.last_event_step = step;
+    }
+
+    /// Posterior-mean expected steps until the next event.
+    pub fn expected_gap_steps(&self) -> f64 {
+        (self.prior_mean_steps + self.gap_sum) / (1 + self.gaps) as f64
+    }
 }
 
 /// Chip cost of the hot-spare alternative (paper intro, citing the
@@ -220,6 +300,48 @@ mod tests {
                 }
             }
         });
+    }
+
+    fn pred(workers: usize, step_s: f64) -> CandidatePrediction {
+        CandidatePrediction {
+            workers,
+            allreduce_s: 0.01,
+            step_s,
+            throughput: workers as f64 / step_s,
+        }
+    }
+
+    #[test]
+    fn effective_throughput_converges_to_steady_state() {
+        let p = pred(12, 0.05);
+        let eff = effective_throughput(&p, 1e9, &CandidateCost::default());
+        assert!((eff - p.throughput).abs() / p.throughput < 1e-6);
+    }
+
+    #[test]
+    fn one_off_costs_penalize_short_horizons() {
+        let p = pred(8, 0.05);
+        let cost = CandidateCost { one_off_s: 1.0, rollback_steps: 20.0 };
+        let short = effective_throughput(&p, 10.0, &cost);
+        let long = effective_throughput(&p, 1000.0, &cost);
+        assert!(short < long, "{short} vs {long}");
+        assert!(long < p.throughput);
+        // Over a short horizon, a larger candidate paying rollback can
+        // lose to a smaller cost-free one — the regime the adaptive
+        // policy previously got wrong.
+        let eff_big = effective_throughput(&pred(12, 0.05), 10.0, &cost);
+        let eff_small_free = effective_throughput(&p, 10.0, &CandidateCost::default());
+        assert!(eff_small_free > eff_big, "{eff_small_free} vs {eff_big}");
+    }
+
+    #[test]
+    fn estimator_tracks_observed_gaps() {
+        let mut e = EventRateEstimator::new(100.0);
+        assert!((e.expected_gap_steps() - 100.0).abs() < 1e-9);
+        e.observe(10);
+        e.observe(30);
+        // Gaps 10 and 20: posterior mean = (100 + 30) / 3.
+        assert!((e.expected_gap_steps() - 130.0 / 3.0).abs() < 1e-9);
     }
 
     #[test]

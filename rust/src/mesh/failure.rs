@@ -10,7 +10,11 @@ use super::coords::{Coord, Mesh};
 
 /// An axis-aligned rectangle of failed chips: `w x h` chips with the
 /// lower-left corner at `(x0, y0)`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+///
+/// `Ord`/`Hash` exist so a *set* of disjoint regions has a canonical
+/// sorted form — the topology fingerprint the compiled-plan cache keys
+/// on (`collective::plancache`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct FailedRegion {
     pub x0: usize,
     pub y0: usize,

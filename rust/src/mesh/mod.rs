@@ -23,5 +23,5 @@ pub mod vc;
 
 pub use coords::{Coord, Dir, Link, Mesh};
 pub use failure::{FailedRegion, RegionShape};
-pub use routing::{route, route_dor, RouteError};
+pub use routing::{route, route_dor, route_traced, RouteError};
 pub use topology::Topology;

@@ -46,6 +46,21 @@ pub fn route_dor(src: Coord, dst: Coord) -> Vec<Coord> {
 /// route-around otherwise, BFS fallback for pathological multi-region
 /// layouts.
 pub fn route(topo: &Topology, src: Coord, dst: Coord) -> Result<Vec<Coord>, RouteError> {
+    route_traced(topo, src, dst).map(|(path, _)| path)
+}
+
+/// [`route`] plus a provenance flag: did resolution fall back to the
+/// global BFS? DOR and route-around probe only cells adjacent to the
+/// final path, so their result is a *local* function of the topology —
+/// a plan cache may splice such a route across a topology change whose
+/// delta stays clear of the path neighbourhood. A BFS route depends on
+/// the whole live node set and must never be spliced
+/// (`collective::compiled::compile_incremental` checks this flag).
+pub fn route_traced(
+    topo: &Topology,
+    src: Coord,
+    dst: Coord,
+) -> Result<(Vec<Coord>, bool), RouteError> {
     if !topo.is_alive(src) {
         return Err(RouteError::DeadSource(src));
     }
@@ -53,20 +68,22 @@ pub fn route(topo: &Topology, src: Coord, dst: Coord) -> Result<Vec<Coord>, Rout
         return Err(RouteError::DeadDestination(dst));
     }
     if src == dst {
-        return Ok(vec![src]);
+        return Ok((vec![src], false));
     }
     if !topo.has_failures() {
-        return Ok(route_dor(src, dst));
+        return Ok((route_dor(src, dst), false));
     }
     let dor = route_dor(src, dst);
     if dor.iter().all(|&c| topo.is_alive(c)) {
-        return Ok(dor);
+        return Ok((dor, false));
     }
     if let Some(path) = route_around(topo, src, dst) {
         debug_assert!(path.iter().all(|&c| topo.is_alive(c)));
-        return Ok(path);
+        return Ok((path, false));
     }
-    bfs_route(topo, src, dst).ok_or(RouteError::Disconnected(src, dst))
+    bfs_route(topo, src, dst)
+        .map(|p| (p, true))
+        .ok_or(RouteError::Disconnected(src, dst))
 }
 
 /// Deterministic route-around for rectangular failed regions.

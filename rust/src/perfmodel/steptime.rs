@@ -13,15 +13,17 @@
 //! a genuine reproduction of the *shape* of the result.
 
 use super::mlperf::{workload_by_name, PaperRow};
-use crate::collective::{build_schedule, Scheme};
+use crate::collective::{build_schedule, PlanCache, Scheme};
 use crate::mesh::{FailedRegion, Topology};
-use crate::simnet::{simulate, LinkModel};
+use crate::simnet::{simulate, simulate_plan, LinkModel};
 use thiserror::Error;
 
 #[derive(Debug, Error)]
 pub enum ModelError {
     #[error("schedule build failed: {0}")]
     Build(#[from] crate::collective::allreduce::BuildError),
+    #[error("plan cache: {0}")]
+    Plan(#[from] crate::collective::PlanError),
     #[error("simulation failed: {0}")]
     Sim(#[from] crate::simnet::SimError),
     #[error("unknown workload {0}")]
@@ -129,6 +131,38 @@ pub fn allreduce_time_s(
     Ok(simulate(&sched, topo, model)?.makespan_s)
 }
 
+/// [`allreduce_time_s`] through a [`PlanCache`]: the compiled,
+/// route-carrying plan is fetched (hit, incremental recompile or full
+/// compile) and only the DES replay runs per call. This is the hot
+/// path of MTBF sweeps and the adaptive policy's what-if checks, which
+/// revisit the same few topologies for thousands of events.
+pub fn allreduce_time_cached(
+    topo: &Topology,
+    payload_elems: usize,
+    model: &LinkModel,
+    cache: &mut PlanCache,
+) -> Result<f64, ModelError> {
+    let plan = cache.get(Scheme::FaultTolerant, topo, payload_elems)?;
+    Ok(simulate_plan(&plan, model)?.makespan_s)
+}
+
+/// [`predict_candidate`] through a [`PlanCache`] (see
+/// [`allreduce_time_cached`]). Predictions are identical to the
+/// uncached path — the cache only removes recompilation.
+pub fn predict_candidate_cached(
+    topo: &Topology,
+    payload_elems: usize,
+    link: &LinkModel,
+    compute_s: f64,
+    cache: &mut PlanCache,
+) -> Result<CandidatePrediction, ModelError> {
+    let allreduce_s = allreduce_time_cached(topo, payload_elems, link, cache)?;
+    let step_s = compute_s + allreduce_s;
+    let workers = topo.live_count();
+    let throughput = if step_s > 0.0 { workers as f64 / step_s } else { 0.0 };
+    Ok(CandidatePrediction { workers, allreduce_s, step_s, throughput })
+}
+
 /// Build the full prediction for one paper row.
 pub fn predict_row(row: &PaperRow, link: &LinkModel) -> Result<RowPrediction, ModelError> {
     let wl = workload_by_name(row.benchmark)
@@ -208,6 +242,21 @@ mod tests {
             ft.throughput,
             sub.throughput
         );
+    }
+
+    #[test]
+    fn cached_prediction_matches_uncached() {
+        let link = LinkModel::tpu_v3();
+        let topo = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        let mut cache = PlanCache::new(4);
+        let a = predict_candidate(&topo, 1 << 16, &link, 0.01).unwrap();
+        let b = predict_candidate_cached(&topo, 1 << 16, &link, 0.01, &mut cache).unwrap();
+        let c = predict_candidate_cached(&topo, 1 << 16, &link, 0.01, &mut cache).unwrap();
+        assert_eq!(a.workers, b.workers);
+        assert!((a.allreduce_s - b.allreduce_s).abs() < 1e-12, "cache must not change the model");
+        assert!((b.step_s - c.step_s).abs() < 1e-15, "hits replay identically");
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(cache.stats().misses, 1);
     }
 
     #[test]

@@ -69,7 +69,7 @@ pub enum FtPlanError {
 }
 
 /// A yellow segment ring plus the per-node forwarding assignments.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct YellowBlock {
     /// Physical ring over the `2 x k` live segment of a broken strip.
     pub ring: Ring,
@@ -85,8 +85,9 @@ pub struct ForwardPair {
     pub blue: Coord,
 }
 
-/// The complete fault-tolerant ring plan.
-#[derive(Debug, Clone)]
+/// The complete fault-tolerant ring plan. `PartialEq` backs the
+/// incremental-vs-full differential tests ([`ft_plan_incremental`]).
+#[derive(Debug, Clone, PartialEq)]
 pub struct FtPlan {
     /// Full `2 x nx` rings of unbroken strips, bottom-to-top.
     pub blue: Vec<Ring>,
@@ -114,8 +115,8 @@ fn strip_is_blue(topo: &Topology, s: usize) -> bool {
         .all(|x| topo.is_alive(Coord::new(x, 2 * s)) && topo.is_alive(Coord::new(x, 2 * s + 1)))
 }
 
-/// Build the fault-tolerant plan.
-pub fn ft_plan(topo: &Topology) -> Result<FtPlan, FtPlanError> {
+/// Shared preconditions of [`ft_plan`] and [`ft_plan_incremental`].
+fn validate_topology(topo: &Topology) -> Result<(), FtPlanError> {
     let (nx, ny) = (topo.mesh.nx, topo.mesh.ny);
     if nx < 2 || ny < 2 || ny % 2 != 0 {
         return Err(FtPlanError::BadMesh(nx, ny));
@@ -128,6 +129,71 @@ pub fn ft_plan(topo: &Topology) -> Result<FtPlan, FtPlanError> {
     if !topo.is_connected() {
         return Err(FtPlanError::Disconnected);
     }
+    Ok(())
+}
+
+/// Forwarding assignments for one yellow segment ring.
+fn forwards_for_ring(
+    topo: &Topology,
+    blue_strips: &[usize],
+    ring: &Ring,
+) -> Result<Vec<ForwardPair>, FtPlanError> {
+    ring.nodes()
+        .iter()
+        .map(|&n| {
+            forward_target(topo, blue_strips, n)
+                .map(|blue| ForwardPair { yellow: n, blue })
+                .ok_or(FtPlanError::NoForwardTarget(n))
+        })
+        .collect()
+}
+
+/// Yellow segment rings of one broken strip, left to right.
+fn yellow_blocks_for_strip(
+    topo: &Topology,
+    blue_strips: &[usize],
+    s: usize,
+) -> Result<Vec<YellowBlock>, FtPlanError> {
+    let nx = topo.mesh.nx;
+    let y0 = 2 * s;
+    let mut blocks = Vec::new();
+    let mut x = 0;
+    while x < nx {
+        while x < nx && !topo.is_alive(Coord::new(x, y0)) {
+            x += 1;
+        }
+        let start = x;
+        while x < nx && topo.is_alive(Coord::new(x, y0)) {
+            x += 1;
+        }
+        if x > start {
+            let ring = Ring::new(strip_ring_order(start, x, y0)).map_err(FtPlanError::BadRing)?;
+            let forwards = forwards_for_ring(topo, blue_strips, &ring)?;
+            blocks.push(YellowBlock { ring, forwards });
+        }
+    }
+    Ok(blocks)
+}
+
+/// Phase-2 rings: one per (column, row-parity) over the blue strips.
+fn phase2_rings(blue_strips: &[usize], nx: usize) -> Result<Vec<Ring>, FtPlanError> {
+    let mut phase2 = Vec::new();
+    if blue_strips.len() >= 2 {
+        for x in 0..nx {
+            for parity in 0..2 {
+                let nodes: Vec<Coord> =
+                    blue_strips.iter().map(|&s| Coord::new(x, 2 * s + parity)).collect();
+                phase2.push(Ring::new(nodes).map_err(FtPlanError::BadRing)?);
+            }
+        }
+    }
+    Ok(phase2)
+}
+
+/// Build the fault-tolerant plan.
+pub fn ft_plan(topo: &Topology) -> Result<FtPlan, FtPlanError> {
+    validate_topology(topo)?;
+    let (nx, ny) = (topo.mesh.nx, topo.mesh.ny);
 
     let num_strips = ny / 2;
     let blue_strips: Vec<usize> = (0..num_strips).filter(|&s| strip_is_blue(topo, s)).collect();
@@ -145,50 +211,115 @@ pub fn ft_plan(topo: &Topology) -> Result<FtPlan, FtPlanError> {
     // Yellow segment rings for broken strips.
     let mut yellow = Vec::new();
     for s in 0..num_strips {
-        if is_blue(s) {
+        if !is_blue(s) {
+            yellow.extend(yellow_blocks_for_strip(topo, &blue_strips, s)?);
+        }
+    }
+
+    let phase2 = phase2_rings(&blue_strips, nx)?;
+    Ok(FtPlan { blue, yellow, phase2 })
+}
+
+/// Incrementally rebuild a fault-tolerant plan after a topology delta
+/// (regions failed and/or repaired since `prev_topo`), reusing every
+/// ring of `prev` that the delta cannot have touched:
+///
+/// - strips whose rows do not intersect any changed region keep their
+///   previous blue/broken classification and their previous rings
+///   verbatim (blue rings and yellow segment rings alike);
+/// - yellow forwarding assignments are reused when the blue-strip set
+///   is unchanged (forward targets depend only on the blue set and the
+///   column, and blue strips are fully live by definition);
+/// - phase-2 rings are reused when the blue-strip set is unchanged.
+///
+/// Only rings intersecting the changed rows — plus, when a strip flips
+/// between blue and broken, the globally-derived forwards and phase-2
+/// rings — are rebuilt. The result is **identical** to a from-scratch
+/// [`ft_plan`] on `topo` (differentially tested), so callers may use
+/// either interchangeably; this one is the fast path for the
+/// fail→repair→fail cycles of long MTBF timelines.
+///
+/// Falls back to the full planner when the meshes differ.
+pub fn ft_plan_incremental(
+    topo: &Topology,
+    prev_topo: &Topology,
+    prev: &FtPlan,
+) -> Result<FtPlan, FtPlanError> {
+    if topo.mesh != prev_topo.mesh {
+        return ft_plan(topo);
+    }
+    validate_topology(topo)?;
+    let (nx, ny) = (topo.mesh.nx, topo.mesh.ny);
+    let num_strips = ny / 2;
+
+    // Regions present in exactly one of the two failed sets.
+    let changed: Vec<crate::mesh::FailedRegion> = prev_topo
+        .failed_regions()
+        .iter()
+        .filter(|r| !topo.failed_regions().contains(r))
+        .chain(topo.failed_regions().iter().filter(|r| !prev_topo.failed_regions().contains(r)))
+        .copied()
+        .collect();
+    if changed.is_empty() {
+        return Ok(prev.clone());
+    }
+    let strip_changed =
+        |s: usize| changed.iter().any(|r| r.y0 < 2 * s + 2 && 2 * s < r.y1());
+
+    // Previous blue set, recovered from the previous plan's rings.
+    let prev_blue: Vec<usize> = prev.blue.iter().map(|r| r.nodes()[0].y / 2).collect();
+    let was_blue = |s: usize| prev_blue.contains(&s);
+
+    let mut blue_strips = Vec::new();
+    for s in 0..num_strips {
+        let is_blue = if strip_changed(s) { strip_is_blue(topo, s) } else { was_blue(s) };
+        if is_blue {
+            blue_strips.push(s);
+        }
+    }
+    if blue_strips.is_empty() {
+        return Err(FtPlanError::NoBlueStrip);
+    }
+    let blue_set_changed =
+        blue_strips.len() != prev_blue.len() || blue_strips.iter().any(|s| !was_blue(*s));
+
+    // Blue rings: a still-blue strip's full ring is independent of the
+    // failure set, so reuse it; newly-blue strips get a fresh ring.
+    let mut blue = Vec::with_capacity(blue_strips.len());
+    for &s in &blue_strips {
+        match prev.blue.iter().find(|r| r.nodes()[0].y / 2 == s) {
+            Some(r) => blue.push(r.clone()),
+            None => {
+                blue.push(Ring::new(strip_ring_order(0, nx, 2 * s)).map_err(FtPlanError::BadRing)?)
+            }
+        }
+    }
+
+    // Yellow blocks, in the same strip-major left-to-right order as the
+    // full planner.
+    let mut yellow = Vec::new();
+    for s in 0..num_strips {
+        if blue_strips.binary_search(&s).is_ok() {
             continue;
         }
-        let y0 = 2 * s;
-        let mut x = 0;
-        while x < nx {
-            while x < nx && !topo.is_alive(Coord::new(x, y0)) {
-                x += 1;
+        if !strip_changed(s) && !was_blue(s) {
+            // Untouched broken strip: segment rings are unchanged;
+            // forwards survive too unless the blue set moved.
+            for block in prev.yellow.iter().filter(|b| b.ring.nodes()[0].y / 2 == s) {
+                if blue_set_changed {
+                    let forwards = forwards_for_ring(topo, &blue_strips, &block.ring)?;
+                    yellow.push(YellowBlock { ring: block.ring.clone(), forwards });
+                } else {
+                    yellow.push(block.clone());
+                }
             }
-            let start = x;
-            while x < nx && topo.is_alive(Coord::new(x, y0)) {
-                x += 1;
-            }
-            if x > start {
-                let ring =
-                    Ring::new(strip_ring_order(start, x, y0)).map_err(FtPlanError::BadRing)?;
-                let forwards = ring
-                    .nodes()
-                    .iter()
-                    .map(|&n| {
-                        forward_target(topo, &blue_strips, n)
-                            .map(|blue| ForwardPair { yellow: n, blue })
-                            .ok_or(FtPlanError::NoForwardTarget(n))
-                    })
-                    .collect::<Result<Vec<_>, _>>()?;
-                yellow.push(YellowBlock { ring, forwards });
-            }
+        } else {
+            yellow.extend(yellow_blocks_for_strip(topo, &blue_strips, s)?);
         }
     }
 
-    // Phase-2 rings over blue strips.
-    let mut phase2 = Vec::new();
-    if blue_strips.len() >= 2 {
-        for x in 0..nx {
-            for parity in 0..2 {
-                let nodes: Vec<Coord> = blue_strips
-                    .iter()
-                    .map(|&s| Coord::new(x, 2 * s + parity))
-                    .collect();
-                phase2.push(Ring::new(nodes).map_err(FtPlanError::BadRing)?);
-            }
-        }
-    }
-
+    let phase2 =
+        if blue_set_changed { phase2_rings(&blue_strips, nx)? } else { prev.phase2.clone() };
     Ok(FtPlan { blue, yellow, phase2 })
 }
 
@@ -457,6 +588,45 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn incremental_plan_matches_full_across_fail_repair_cycle() {
+        let full = Topology::full(8, 8);
+        let one = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        let two = Topology::with_failures(
+            8,
+            8,
+            vec![FailedRegion::board(2, 2), FailedRegion::host(4, 6)],
+        );
+        let p_full = ft_plan(&full).unwrap();
+        let p_one = ft_plan_incremental(&one, &full, &p_full).unwrap();
+        assert_eq!(p_one, ft_plan(&one).unwrap());
+        let p_two = ft_plan_incremental(&two, &one, &p_one).unwrap();
+        assert_eq!(p_two, ft_plan(&two).unwrap());
+        // Repairs walk the same path backwards.
+        let p_one_again = ft_plan_incremental(&one, &two, &p_two).unwrap();
+        assert_eq!(p_one_again, ft_plan(&one).unwrap());
+        let p_full_again = ft_plan_incremental(&full, &one, &p_one_again).unwrap();
+        assert_eq!(p_full_again, ft_plan(&full).unwrap());
+    }
+
+    #[test]
+    fn incremental_plan_identity_delta_is_clone() {
+        let topo = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        let p = ft_plan(&topo).unwrap();
+        assert_eq!(ft_plan_incremental(&topo, &topo, &p).unwrap(), p);
+    }
+
+    #[test]
+    fn incremental_plan_mesh_mismatch_falls_back_to_full() {
+        let small = Topology::full(6, 6);
+        let p_small = ft_plan(&small).unwrap();
+        let big = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        assert_eq!(
+            ft_plan_incremental(&big, &small, &p_small).unwrap(),
+            ft_plan(&big).unwrap()
+        );
     }
 
     #[test]

@@ -23,9 +23,9 @@ pub mod metrics;
 pub mod optimizer;
 
 use crate::collective::{
-    build_schedule, execute_compiled, CompiledSchedule, ExecutorArena, NodeBuffers, Scheme,
+    execute_compiled, CompiledSchedule, ExecutorArena, NodeBuffers, PlanCache, PlanError, Scheme,
 };
-use crate::mesh::{FailedRegion, Mesh, Topology};
+use crate::mesh::{Coord, FailedRegion, Mesh, Topology};
 use crate::runtime::{ArtifactSet, Runtime, TrainStepExec};
 use checkpoint::Checkpoint;
 use data::SyntheticCorpus;
@@ -43,6 +43,8 @@ pub enum TrainError {
     Artifact(#[from] crate::runtime::artifact::ArtifactError),
     #[error("schedule: {0}")]
     Schedule(#[from] crate::collective::allreduce::BuildError),
+    #[error("plan: {0}")]
+    Plan(#[from] PlanError),
     #[error("executor: {0}")]
     Executor(#[from] crate::collective::executor::ExecError),
     #[error("checkpoint: {0}")]
@@ -72,6 +74,12 @@ pub struct TrainerConfig {
     /// Regions already failed at job start (the cluster control plane
     /// restarts trainers onto degraded topologies; empty = full mesh).
     pub failed: Vec<FailedRegion>,
+    /// Physical placement of this trainer's mesh origin on the cluster
+    /// mesh. `(0, 0)` for full-mesh jobs; a sub-mesh restart anchors
+    /// here so each chip keeps the data shard of its *physical*
+    /// position rather than re-sharding from the logical origin.
+    pub x0: usize,
+    pub y0: usize,
 }
 
 impl TrainerConfig {
@@ -85,18 +93,34 @@ impl TrainerConfig {
             seed: 0,
             verify_allreduce: false,
             failed: Vec::new(),
+            x0: 0,
+            y0: 0,
         }
     }
+}
+
+/// Stable data-shard id of the worker at logical coordinate `c` of a
+/// mesh anchored at physical origin `(x0, y0)`: the shard follows the
+/// *physical* chip placement, so a sub-mesh restart at a non-zero
+/// origin keeps every surviving chip on the shard it already had.
+pub fn physical_worker_id(x0: usize, y0: usize, c: Coord) -> u64 {
+    (((y0 + c.y) as u64) << 32) | (x0 + c.x) as u64
 }
 
 /// The data-parallel trainer.
 pub struct DataParallelTrainer {
     cfg: TrainerConfig,
     topo: Topology,
-    /// Allreduce plan, lowered once per topology change and reused
-    /// across training steps (coord→index mapping, staging layout and
-    /// write partitions are not re-derived per step).
-    plan: CompiledSchedule,
+    /// Allreduce plan, fetched from the plan cache once per topology
+    /// change and reused across training steps (coord→index mapping,
+    /// staging layout and write partitions are not re-derived per
+    /// step).
+    plan: Arc<CompiledSchedule>,
+    /// Topology-keyed compiled-plan cache: fail→repair→fail cycles
+    /// revisit topologies, and adjacent topologies recompile
+    /// incrementally. Carried across restarts by the coordinator
+    /// ([`Self::take_cache`]).
+    cache: PlanCache,
     exec: Arc<TrainStepExec>,
     pub params: Vec<f32>,
     opt: SgdOptimizer,
@@ -108,6 +132,17 @@ pub struct DataParallelTrainer {
 
 impl DataParallelTrainer {
     pub fn new(cfg: TrainerConfig, runtime: &Runtime) -> Result<Self, TrainError> {
+        Self::new_with_cache(cfg, runtime, PlanCache::default())
+    }
+
+    /// Build a trainer around an existing plan cache — the coordinator
+    /// hands the cache from the outgoing trainer to its replacement on
+    /// restarts, so plans survive sub-mesh round-trips.
+    pub fn new_with_cache(
+        cfg: TrainerConfig,
+        runtime: &Runtime,
+        mut cache: PlanCache,
+    ) -> Result<Self, TrainError> {
         let set = ArtifactSet::locate(&cfg.artifacts_dir, &cfg.model)?;
         let exec = Arc::new(TrainStepExec::load(runtime, &set)?);
         let params = set.load_init_params()?;
@@ -126,12 +161,12 @@ impl DataParallelTrainer {
         if !topo.is_connected() {
             return Err(TrainError::BadFailure("mesh disconnected".into()));
         }
-        let schedule = build_schedule(cfg.scheme, &topo, params.len())?;
-        let plan = CompiledSchedule::compile_exec(&schedule, topo.mesh);
+        let plan = cache.get(cfg.scheme, &topo, params.len())?;
         Ok(Self {
             cfg,
             topo,
             plan,
+            cache,
             exec,
             params,
             opt,
@@ -144,6 +179,30 @@ impl DataParallelTrainer {
 
     pub fn topology(&self) -> &Topology {
         &self.topo
+    }
+
+    /// Physical origin of this trainer's mesh on the cluster mesh.
+    pub fn origin(&self) -> (usize, usize) {
+        (self.cfg.x0, self.cfg.y0)
+    }
+
+    /// Compiled-plan cache counters (hits, misses, incremental
+    /// recompiles, compile latency).
+    pub fn cache_stats(&self) -> &crate::collective::PlanCacheStats {
+        self.cache.stats()
+    }
+
+    /// Mutable access to the plan cache, so the coordinator's what-if
+    /// predictions (`perfmodel::predict_candidate_cached`) share the
+    /// trainer's compiled plans instead of re-compiling per event.
+    pub fn cache_mut(&mut self) -> &mut PlanCache {
+        &mut self.cache
+    }
+
+    /// Surrender the plan cache (replacing it with an empty one) so a
+    /// successor trainer can keep the compiled plans.
+    pub fn take_cache(&mut self) -> PlanCache {
+        std::mem::take(&mut self.cache)
     }
 
     pub fn num_workers(&self) -> usize {
@@ -178,10 +237,10 @@ impl DataParallelTrainer {
         if !topo.is_connected() {
             return Err(TrainError::BadFailure("mesh disconnected".into()));
         }
-        let schedule = build_schedule(self.cfg.scheme, &topo, self.params.len())?;
-        // Failure-triggered reroute: lower the new schedule once; every
-        // subsequent step reuses the compiled plan.
-        self.plan = CompiledSchedule::compile_exec(&schedule, topo.mesh);
+        // Failure-triggered reroute through the plan cache: a revisited
+        // degraded topology is a hit, an adjacent one recompiles
+        // incrementally; every subsequent step reuses the plan.
+        self.plan = self.cache.get(self.cfg.scheme, &topo, self.params.len())?;
         self.topo = topo;
         self.metrics.annotate(self.step, format!("failure injected: {region:?}"));
         Ok(t0.elapsed().as_secs_f64())
@@ -205,8 +264,9 @@ impl DataParallelTrainer {
         };
         regions.remove(pos);
         let topo = Topology::with_failures(self.cfg.nx, self.cfg.ny, regions);
-        let schedule = build_schedule(self.cfg.scheme, &topo, self.params.len())?;
-        let plan = CompiledSchedule::compile_exec(&schedule, topo.mesh);
+        // The pre-failure topology is the textbook cache hit: rejoining
+        // the only open hole restores a fingerprint the cache has seen.
+        let plan = self.cache.get(self.cfg.scheme, &topo, self.params.len())?;
 
         let live = topo.live_nodes();
         let root = live[0];
@@ -251,7 +311,7 @@ impl DataParallelTrainer {
         let mut bufs = NodeBuffers::new(self.topo.mesh);
         let mut loss_sum = 0.0f64;
         for &node in &live {
-            let worker_id = self.topo.mesh.node_index(node) as u64;
+            let worker_id = physical_worker_id(self.cfg.x0, self.cfg.y0, node);
             let tokens =
                 self.corpus.batch(worker_id, self.step, self.exec.batch, self.exec.seq_len);
             let (loss, grads) = self.exec.run(&self.params, &tokens)?;
@@ -442,6 +502,49 @@ mod tests {
         assert_eq!(tr2.step, 3);
         tr2.run(2).unwrap();
         assert_eq!(tr2.params, params_after_5, "resume must be bit-identical");
+    }
+
+    #[test]
+    fn physical_worker_ids_follow_placement() {
+        // A chip at cluster position (5, 3) keeps its shard id whether
+        // addressed from the full mesh or from a sub-mesh anchored at
+        // (4, 2) — the point of carrying the origin through the config.
+        assert_eq!(physical_worker_id(0, 0, Coord::new(5, 3)), physical_worker_id(4, 2, Coord::new(1, 1)));
+        // Distinct physical chips get distinct ids (no x/y aliasing).
+        assert_ne!(
+            physical_worker_id(0, 0, Coord::new(1, 2)),
+            physical_worker_id(0, 0, Coord::new(2, 1))
+        );
+    }
+
+    #[test]
+    fn submesh_origin_changes_data_sharding() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let cfg0 = TrainerConfig::new("tiny", 2, 2);
+        let mut cfg1 = TrainerConfig::new("tiny", 2, 2);
+        cfg1.x0 = 2;
+        cfg1.y0 = 0;
+        let mut a = DataParallelTrainer::new(cfg0, &rt).unwrap();
+        let mut b = DataParallelTrainer::new(cfg1, &rt).unwrap();
+        assert_eq!(b.origin(), (2, 0));
+        a.run(1).unwrap();
+        b.run(1).unwrap();
+        assert_ne!(a.params, b.params, "different physical placement must draw different shards");
+    }
+
+    #[test]
+    fn plan_cache_reuses_plans_across_fail_repair() {
+        let Some(mut tr) = tiny_trainer(4, 4) else { return };
+        tr.inject_failure(FailedRegion::board(0, 0)).unwrap();
+        tr.rejoin_region(FailedRegion::board(0, 0)).unwrap();
+        tr.inject_failure(FailedRegion::board(0, 0)).unwrap();
+        let s = tr.cache_stats();
+        assert!(s.hits >= 2, "rejoin + re-failure must hit the cache: {s:?}");
+        assert!(s.hit_rate() > 0.0);
+        tr.run(1).unwrap();
     }
 
     #[test]

@@ -1,0 +1,87 @@
+//! Public-API integration tests for the topology-keyed plan cache and
+//! the parallel MTBF sweep driver: cache-hit plans are structurally
+//! identical to fresh compiles, fail→repair→fail cycles reuse plans,
+//! and the paper-scale (16x32) sweep grid completes with a non-zero
+//! hit rate.
+
+use meshreduce::cluster::{run_sweep, SweepConfig};
+use meshreduce::collective::{build_schedule, CompiledSchedule, PlanCache, Scheme};
+use meshreduce::coordinator::policy::RecoveryPolicy;
+use meshreduce::mesh::{FailedRegion, Topology};
+
+#[test]
+fn cache_round_trip_matches_fresh_compiles() {
+    // fail -> repair -> fail over the same hole: misses compile (the
+    // second one incrementally), revisits hit, and every returned plan
+    // equals a from-scratch compile of the same topology.
+    let mut cache = PlanCache::new(8);
+    let payload = 1 << 12;
+    let seq = [
+        Topology::full(8, 8),
+        Topology::with_failure(8, 8, FailedRegion::host(2, 2)),
+        Topology::full(8, 8),
+        Topology::with_failure(8, 8, FailedRegion::host(2, 2)),
+    ];
+    for topo in &seq {
+        let plan = cache.get(Scheme::FaultTolerant, topo, payload).unwrap();
+        let sched = build_schedule(Scheme::FaultTolerant, topo, payload).unwrap();
+        let fresh = CompiledSchedule::compile(&sched, topo).unwrap();
+        assert_eq!(*plan, fresh, "cached plan diverged from fresh compile");
+    }
+    let s = cache.stats();
+    assert_eq!(s.misses, 2);
+    assert_eq!(s.hits, 2);
+    assert!(s.hit_rate() > 0.4);
+    assert_eq!(
+        s.incremental_compiles + s.incremental_fallbacks,
+        1,
+        "adjacent topology must attempt the incremental path"
+    );
+}
+
+#[test]
+fn verified_cache_accepts_long_alternation() {
+    // Verification mode fresh-compiles on every hit and incremental
+    // compile; any divergence would error here.
+    let mut cache = PlanCache::with_verification(8);
+    let a = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+    let b = Topology::with_failures(
+        8,
+        8,
+        vec![FailedRegion::board(2, 2), FailedRegion::board(4, 4)],
+    );
+    for _ in 0..3 {
+        cache.get(Scheme::FaultTolerant, &a, 2048).unwrap();
+        cache.get(Scheme::FaultTolerant, &b, 2048).unwrap();
+    }
+    assert!(cache.stats().hits >= 4);
+}
+
+#[test]
+fn paper_scale_sweep_grid_completes_with_cache_hits() {
+    // The acceptance shape: a 16x32 sweep, 8 seeds x 3 policies,
+    // through the parallel driver. Payload and horizon are reduced to
+    // keep CI wall time sane — the mesh scale (512 chips) is the
+    // point.
+    let mut cfg = SweepConfig::paper_scale();
+    cfg.horizon = 400;
+    cfg.mtbf_points = vec![100.0];
+    cfg.payload = 1 << 14;
+    cfg.policies = vec![
+        RecoveryPolicy::FaultTolerant,
+        RecoveryPolicy::SubMesh,
+        RecoveryPolicy::Adaptive,
+    ];
+    let points = run_sweep(&cfg).unwrap();
+    assert_eq!(points.len(), 8 * 3);
+    assert!(
+        points.iter().any(|p| p.cache.hits > 0),
+        "sweep must exercise the cache-hit path"
+    );
+    assert!(points.iter().any(|p| p.transitions > 0));
+    for p in &points {
+        assert!(p.eff_throughput > 0.0, "{:?} produced no throughput", p.policy);
+        assert!(p.normalized() <= 1.0 + 1e-9);
+        assert!(p.min_workers > 0, "{:?} lost the whole mesh", p.policy);
+    }
+}
