@@ -1,0 +1,107 @@
+//! Fleet scheduler walk-through (EXPERIMENTS.md §Fleet): replay one
+//! seeded multi-job workload × MTBF timeline under each recovery
+//! policy and compare utilization, job completion time and goodput —
+//! the paper's availability argument generalised from one job to a
+//! whole fleet sharing the mesh.
+//!
+//!     cargo run --release --example fleet_sim            # reduced 16x32 fleet
+//!     cargo run --release --example fleet_sim -- --paper # full paper-scale fleet
+//!
+//! Writes `BENCH_fleet.json` (path override: `MESHREDUCE_BENCH_JSON`).
+//! Also demonstrates plan-cache persistence: the warmed process-wide
+//! cache is saved and re-loaded, and the reloaded run's first visits
+//! become hits.
+
+use meshreduce::sched::{metrics, run_with_cache, FleetConfig, JobPolicy};
+use meshreduce::util::bench::JsonReport;
+
+fn main() -> anyhow::Result<()> {
+    let paper = std::env::args().any(|a| a == "--paper");
+    let mut cfg = if paper { FleetConfig::paper_scale() } else { FleetConfig::quick() };
+    if !paper {
+        cfg.horizon = 300;
+        cfg.payload = 1 << 13;
+    }
+
+    let jobs = cfg.workload.generate();
+    println!(
+        "fleet on a {}x{} mesh ({} chips): {} jobs, horizon {} fleet steps",
+        cfg.nx,
+        cfg.ny,
+        cfg.nx * cfg.ny,
+        jobs.len(),
+        cfg.horizon
+    );
+    println!("\nworkload (seed {}):", cfg.workload.seed);
+    for j in &jobs {
+        println!(
+            "  job {}: {}x{} ({} chips), arrives t={}, {} steps of work",
+            j.id,
+            j.w,
+            j.h,
+            j.chips(),
+            j.arrival_step,
+            j.duration_steps
+        );
+    }
+
+    let policies = [JobPolicy::Continue, JobPolicy::Migrate, JobPolicy::Adaptive];
+    let mut report = JsonReport::new();
+    let mut warmed = None;
+    println!("\nper-policy comparison (same workload, same failures):");
+    for p in policies {
+        let mut c = cfg.clone();
+        c.policy = Some(p);
+        let (run, cache) = run_with_cache(&c)?;
+        let s = &run.summary;
+        println!(
+            "  {:<12} goodput {:>8.1} w-steps/step, utilization {:.3}, mean JCT {:>6.1}, \
+             {}/{} done, {} migrations, {} shrinks, {} ft-continues, {} waits \
+             (cache hit-rate {:.3}, splice rate {:.3})",
+            run.label,
+            s.goodput,
+            s.mean_utilization,
+            s.mean_jct,
+            s.completed,
+            s.arrivals,
+            s.migrations,
+            s.shrinks,
+            s.ft_continues,
+            s.queue_waits,
+            s.cache.hit_rate(),
+            s.cache.step_splice_rate(),
+        );
+        metrics::push_run(&mut report, &run);
+        if warmed.is_none() {
+            // Keep the first policy's annotated event log + cache.
+            for (t, e) in run.events.iter().take(12) {
+                println!("      [t={t:>4}] {e}");
+            }
+            warmed = Some(cache);
+        }
+    }
+
+    // Plan-cache persistence round-trip: save the warmed cache, reload
+    // it, and re-run — first visits to persisted topologies are hits.
+    if let Some(cache) = warmed {
+        let path = std::env::temp_dir().join("meshreduce_fleet_sim.plans");
+        let saved = cache.save(&path, 64)?;
+        let loaded = meshreduce::collective::PlanCache::load(&path, 64)?;
+        let mut c = cfg.clone();
+        c.policy = Some(JobPolicy::Continue);
+        c.seed_cache = Some(loaded);
+        let (rerun, _) = run_with_cache(&c)?;
+        println!(
+            "\nplan-cache persistence: {} entries saved to {}; warm re-run hit-rate {:.3} \
+             ({} loaded entries served)",
+            saved,
+            path.display(),
+            rerun.summary.cache.hit_rate(),
+            rerun.summary.cache.persist_loaded,
+        );
+    }
+
+    let written = report.write("BENCH_fleet.json")?;
+    println!("\nfleet record written to {written}");
+    Ok(())
+}

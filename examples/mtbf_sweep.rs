@@ -26,12 +26,13 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!(
-        "MTBF sweep on a {}x{} mesh: horizon {} steps, MTTR = {:.0}% of MTBF, \
-         {} seeds x {} MTBF points x {} policies",
+        "MTBF sweep on a {}x{} mesh: horizon {} steps, MTTR fractions {:?}, \
+         region shapes {:?}, {} seeds x {} MTBF points x {} policies",
         cfg.nx,
         cfg.ny,
         cfg.horizon,
-        100.0 * cfg.mttr_frac,
+        cfg.mttr_fracs,
+        cfg.regions,
         cfg.seeds.len(),
         cfg.mtbf_points.len(),
         cfg.policies.len(),
@@ -59,13 +60,22 @@ fn main() -> anyhow::Result<()> {
             p.cache.incremental_compiles,
         );
         report.push(
-            &format!("{}_mtbf{:.0}_seed{}", p.policy.name(), p.mtbf_steps, p.seed),
+            &format!(
+                "{}_mtbf{:.0}_mttr{:.2}_{}x{}_seed{}",
+                p.policy.name(),
+                p.mtbf_steps,
+                p.mttr_frac,
+                p.region.0,
+                p.region.1,
+                p.seed
+            ),
             if p.eff_throughput > 0.0 { 1.0 / p.eff_throughput } else { 0.0 },
             0.0,
             &[
                 ("eff_throughput", p.eff_throughput),
                 ("normalized", p.normalized()),
                 ("mtbf_steps", p.mtbf_steps),
+                ("mttr_frac", p.mttr_frac),
                 ("transitions", p.transitions as f64),
                 ("cache_hit_rate", p.cache.hit_rate()),
                 ("incremental_compiles", p.cache.incremental_compiles as f64),
@@ -85,13 +95,21 @@ fn main() -> anyhow::Result<()> {
             c.mean_hit_rate,
         );
         report.push(
-            &format!("curve_{}_mtbf{:.0}", c.policy.name(), c.mtbf_steps),
+            &format!(
+                "curve_{}_mtbf{:.0}_mttr{:.2}_{}x{}",
+                c.policy.name(),
+                c.mtbf_steps,
+                c.mttr_frac,
+                c.region.0,
+                c.region.1
+            ),
             if c.mean_eff > 0.0 { 1.0 / c.mean_eff } else { 0.0 },
             0.0,
             &[
                 ("mean_eff_throughput", c.mean_eff),
                 ("mean_normalized", c.mean_normalized),
                 ("mtbf_steps", c.mtbf_steps),
+                ("mttr_frac", c.mttr_frac),
                 ("mean_cache_hit_rate", c.mean_hit_rate),
             ],
         );

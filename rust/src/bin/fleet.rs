@@ -1,0 +1,167 @@
+//! Fleet-scheduler binary: the multi-job placement/recovery
+//! simulation as a CI artifact.
+//!
+//!     cargo run --release --bin fleet                    # 16x32, 8 jobs, per-policy comparison
+//!     cargo run --release --bin fleet -- --quick         # reduced CI fleet (same mesh scale)
+//!     cargo run --release --bin fleet -- --verify        # gate: cache hits == fresh compiles
+//!     cargo run --release --bin fleet -- --mesh 16x32 --jobs 8 --horizon 2000 \
+//!         --mtbf 250 --policies continue-ft,migrate,adaptive --plan-cache fleet.plans
+//!
+//! Writes `BENCH_fleet.json` (override with `MESHREDUCE_BENCH_JSON`):
+//! one `fleet_<policy>` summary entry per policy (utilization, JCT,
+//! goodput, migration/shrink/wait counts, plan-cache counters) plus
+//! `fleet_<policy>_t<step>` utilization/goodput curve samples.
+//!
+//! Exit is non-zero on any placement-invariant violation or (under
+//! `--verify`) plan-cache divergence — the CI gate. With
+//! `--plan-cache PATH`, the shared plan cache warm-starts from PATH
+//! when it exists and is saved back after the run, so repeated fleet
+//! runs (and the sweep driver pointed at the same file) skip their
+//! first-visit compiles.
+
+use meshreduce::collective::PlanCache;
+use meshreduce::sched::{metrics, run_with_cache, FleetConfig, JobPolicy};
+use meshreduce::util::bench::JsonReport;
+use std::path::Path;
+
+fn parse_mesh(s: &str) -> Option<(usize, usize)> {
+    let (a, b) = s.split_once('x')?;
+    Some((a.parse().ok()?, b.parse().ok()?))
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |key: &str| {
+        args.iter().position(|a| a == key).and_then(|i| args.get(i + 1)).map(String::as_str)
+    };
+    let has = |key: &str| args.iter().any(|a| a == key);
+
+    let quick = has("--quick") || std::env::var("MESHREDUCE_BENCH_QUICK").is_ok();
+    let mut cfg = if quick { FleetConfig::quick() } else { FleetConfig::paper_scale() };
+    cfg.verify = has("--verify");
+    if let Some((nx, ny)) = get("--mesh").and_then(parse_mesh) {
+        cfg.nx = nx;
+        cfg.ny = ny;
+    }
+    if let Some(n) = get("--jobs").and_then(|s| s.parse::<usize>().ok()) {
+        cfg.workload.jobs = n;
+    }
+    if let Some(h) = get("--horizon").and_then(|s| s.parse().ok()) {
+        cfg.horizon = h;
+    }
+    if let Some(s) = get("--seed").and_then(|s| s.parse::<u64>().ok()) {
+        cfg.workload.seed = s;
+        if let Some(m) = &mut cfg.mtbf {
+            m.seed = s.wrapping_add(17);
+        }
+    }
+    if let Some(m) = get("--mtbf").and_then(|s| s.parse::<f64>().ok()) {
+        if let Some(model) = &mut cfg.mtbf {
+            model.mean_failure_steps = m;
+            model.mean_repair_steps = m * 0.5;
+        }
+    }
+    if let Some(p) = get("--payload").and_then(|s| s.parse().ok()) {
+        cfg.payload = p;
+    }
+    let policies: Vec<JobPolicy> = get("--policies")
+        .map(|list| list.split(',').filter_map(JobPolicy::parse).collect())
+        .filter(|v: &Vec<JobPolicy>| !v.is_empty())
+        .unwrap_or_else(|| {
+            vec![JobPolicy::Continue, JobPolicy::Migrate, JobPolicy::Adaptive]
+        });
+
+    let cache_path = get("--plan-cache").map(Path::new);
+    if let Some(path) = cache_path {
+        cfg.seed_cache = PlanCache::load_warm_start(path, cfg.cache_cap);
+    }
+
+    let mtbf = cfg.mtbf.as_ref().map(|m| m.mean_failure_steps).unwrap_or(f64::INFINITY);
+    eprintln!(
+        "fleet: {}x{} mesh, {} jobs, horizon {} steps, MTBF {:.0}, policies {:?}, verify={}",
+        cfg.nx,
+        cfg.ny,
+        cfg.workload.jobs,
+        cfg.horizon,
+        mtbf,
+        policies.iter().map(|p| p.name()).collect::<Vec<_>>(),
+        cfg.verify,
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut runs = Vec::new();
+    let mut warmed: Option<PlanCache> = None;
+    for &p in &policies {
+        let mut c = cfg.clone();
+        c.policy = Some(p);
+        match run_with_cache(&c) {
+            Ok((run, cache)) => {
+                runs.push(run);
+                // Every policy starts from the same seed cache (fair
+                // comparison); the first run's warmed cache is the one
+                // persisted.
+                if warmed.is_none() {
+                    warmed = Some(cache);
+                }
+            }
+            Err(e) => {
+                eprintln!("fleet simulation failed ({}): {e}", p.name());
+                std::process::exit(1);
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut report = JsonReport::new();
+    println!(
+        "\n{:<12} {:>9} {:>11} {:>9} {:>9} {:>9} {:>7} {:>7} {:>6} {:>8}",
+        "policy", "goodput", "utilization", "mean-jct", "done", "migrate", "shrink", "ft", "wait", "hit-rate"
+    );
+    for run in &runs {
+        let s = &run.summary;
+        println!(
+            "{:<12} {:>9.1} {:>11.4} {:>9.1} {:>6}/{:>2} {:>9} {:>7} {:>7} {:>6} {:>8.3}",
+            run.label,
+            s.goodput,
+            s.mean_utilization,
+            s.mean_jct,
+            s.completed,
+            s.arrivals,
+            s.migrations,
+            s.shrinks,
+            s.ft_continues,
+            s.queue_waits,
+            s.cache.hit_rate(),
+        );
+        metrics::push_run(&mut report, run);
+    }
+    if runs.len() >= 2 {
+        let best = runs
+            .iter()
+            .max_by(|a, b| a.summary.goodput.total_cmp(&b.summary.goodput))
+            .expect("non-empty runs");
+        println!(
+            "\nbest goodput: {} ({:.1} worker-steps/fleet-step)",
+            best.label, best.summary.goodput
+        );
+    }
+
+    // Persist the warm cache for the next process (fleet or sweep).
+    if let (Some(path), Some(cache)) = (cache_path, &warmed) {
+        match cache.save(path, 64) {
+            Ok(n) => eprintln!("plan cache saved: {n} entries to {}", path.display()),
+            Err(e) => {
+                eprintln!("plan cache save failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+
+    match report.write("BENCH_fleet.json") {
+        Ok(path) => eprintln!("\nfleet record written to {path} ({wall:.1}s wall)"),
+        Err(e) => {
+            eprintln!("failed to write fleet record: {e}");
+            std::process::exit(1);
+        }
+    }
+}

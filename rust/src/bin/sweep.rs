@@ -4,19 +4,27 @@
 //!     cargo run --release --bin sweep                  # 16x32, 8 seeds x 3 MTBF x 4 policies
 //!     cargo run --release --bin sweep -- --quick       # reduced CI grid
 //!     cargo run --release --bin sweep -- --verify      # gate: cache hits == fresh compiles
+//!     cargo run --release --bin sweep -- --contour     # MTBF x MTTR x region-shape grid
 //!     cargo run --release --bin sweep -- --mesh 16x32 --seeds 8 \
-//!         --mtbf 400,200,100 --horizon 2000 --threads 8
+//!         --mtbf 400,200,100 --mttr 0.25,0.5,1.0 --region 2x2,4x2,2x4 \
+//!         --horizon 2000 --threads 8 --plan-cache sweep.plans
 //!
 //! Writes `BENCH_sweep.json` (override with `MESHREDUCE_BENCH_JSON`):
-//! one entry per `(policy, MTBF, seed)` point with effective
-//! throughput, normalized throughput, transition count and plan-cache
-//! counters, plus one `curve_*` entry per `(policy, MTBF)` aggregate.
+//! one entry per `(policy, MTBF, MTTR, region, seed)` point with
+//! effective throughput, normalized throughput, transition count and
+//! plan-cache counters, plus one `curve_*` entry per
+//! `(policy, MTBF, MTTR, region)` aggregate — the §Sweep contour grid.
 //! With `--verify`, any cached plan that diverges from a fresh compile
 //! aborts with a non-zero exit (the CI gate for cache soundness).
+//! With `--plan-cache PATH`, points warm-start from PATH when it
+//! exists, and a primed cache (healthy mesh + one hole per region
+//! shape) is saved back for the next process.
 
-use meshreduce::cluster::{curves, run_sweep, SweepConfig};
+use meshreduce::cluster::{curves, prime_cache, run_sweep, SweepConfig};
+use meshreduce::collective::PlanCache;
 use meshreduce::coordinator::policy::RecoveryPolicy;
 use meshreduce::util::bench::JsonReport;
+use std::path::Path;
 
 fn parse_mesh(s: &str) -> Option<(usize, usize)> {
     let (a, b) = s.split_once('x')?;
@@ -31,7 +39,13 @@ fn main() {
     let has = |key: &str| args.iter().any(|a| a == key);
 
     let quick = has("--quick") || std::env::var("MESHREDUCE_BENCH_QUICK").is_ok();
-    let mut cfg = if quick { SweepConfig::quick() } else { SweepConfig::paper_scale() };
+    let mut cfg = if quick {
+        SweepConfig::quick()
+    } else if has("--contour") {
+        SweepConfig::contour()
+    } else {
+        SweepConfig::paper_scale()
+    };
     cfg.verify = has("--verify");
     if let Some((nx, ny)) = get("--mesh").and_then(parse_mesh) {
         cfg.nx = nx;
@@ -44,6 +58,18 @@ fn main() {
         let points: Vec<f64> = list.split(',').filter_map(|p| p.parse().ok()).collect();
         if !points.is_empty() {
             cfg.mtbf_points = points;
+        }
+    }
+    if let Some(list) = get("--mttr") {
+        let fracs: Vec<f64> = list.split(',').filter_map(|p| p.parse().ok()).collect();
+        if !fracs.is_empty() {
+            cfg.mttr_fracs = fracs;
+        }
+    }
+    if let Some(list) = get("--region") {
+        let regions: Vec<(usize, usize)> = list.split(',').filter_map(parse_mesh).collect();
+        if !regions.is_empty() {
+            cfg.regions = regions;
         }
     }
     if let Some(h) = get("--horizon").and_then(|s| s.parse().ok()) {
@@ -63,14 +89,21 @@ fn main() {
         }
     }
 
+    let cache_path = get("--plan-cache").map(Path::new);
+    if let Some(path) = cache_path {
+        cfg.seed_cache = PlanCache::load_warm_start(path, cfg.cache_cap);
+    }
+
     eprintln!(
-        "MTBF sweep: {}x{} mesh, horizon {} steps, {} seeds x {} MTBF points x {} policies \
-         ({} points), payload {} f32, verify={}",
+        "MTBF sweep: {}x{} mesh, horizon {} steps, {} seeds x {} MTBF x {} MTTR x {} regions \
+         x {} policies ({} points), payload {} f32, verify={}",
         cfg.nx,
         cfg.ny,
         cfg.horizon,
         cfg.seeds.len(),
         cfg.mtbf_points.len(),
+        cfg.mttr_fracs.len(),
+        cfg.regions.len(),
         cfg.policies.len(),
         cfg.grid_size(),
         cfg.payload,
@@ -89,15 +122,27 @@ fn main() {
 
     let mut report = JsonReport::new();
     println!(
-        "\n{:<16} {:>8} {:>6} {:>12} {:>10} {:>12} {:>9} {:>12}",
-        "policy", "mtbf", "seed", "eff (w-st/s)", "normalized", "transitions", "hit-rate", "compiles"
+        "\n{:<16} {:>8} {:>6} {:>7} {:>6} {:>12} {:>10} {:>12} {:>9} {:>12}",
+        "policy",
+        "mtbf",
+        "mttr",
+        "region",
+        "seed",
+        "eff (w-st/s)",
+        "normalized",
+        "transitions",
+        "hit-rate",
+        "compiles"
     );
     for p in &points {
         let s = &p.cache;
         println!(
-            "{:<16} {:>8.0} {:>6} {:>12.1} {:>10.4} {:>12} {:>9.3} {:>7}f/{:>2}i",
+            "{:<16} {:>8.0} {:>6.2} {:>4}x{:<2} {:>6} {:>12.1} {:>10.4} {:>12} {:>9.3} {:>7}f/{:>2}i",
             p.policy.name(),
             p.mtbf_steps,
+            p.mttr_frac,
+            p.region.0,
+            p.region.1,
             p.seed,
             p.eff_throughput,
             p.normalized(),
@@ -107,13 +152,24 @@ fn main() {
             s.incremental_compiles,
         );
         report.push(
-            &format!("{}_mtbf{:.0}_seed{}", p.policy.name(), p.mtbf_steps, p.seed),
+            &format!(
+                "{}_mtbf{:.0}_mttr{:.2}_{}x{}_seed{}",
+                p.policy.name(),
+                p.mtbf_steps,
+                p.mttr_frac,
+                p.region.0,
+                p.region.1,
+                p.seed
+            ),
             if p.eff_throughput > 0.0 { 1.0 / p.eff_throughput } else { 0.0 },
             0.0,
             &[
                 ("eff_throughput", p.eff_throughput),
                 ("normalized", p.normalized()),
                 ("mtbf_steps", p.mtbf_steps),
+                ("mttr_frac", p.mttr_frac),
+                ("region_w", p.region.0 as f64),
+                ("region_h", p.region.1 as f64),
                 ("seed", p.seed as f64),
                 ("transitions", p.transitions as f64),
                 ("min_workers", p.min_workers as f64),
@@ -123,6 +179,7 @@ fn main() {
                 ("incremental_compiles", s.incremental_compiles as f64),
                 ("full_compiles", s.full_compiles as f64),
                 ("mean_compile_s", s.mean_compile_s()),
+                ("step_splice_rate", s.step_splice_rate()),
             ],
         );
     }
@@ -130,25 +187,52 @@ fn main() {
     println!("\nper-policy curves (mean over seeds):");
     for c in curves(&points) {
         println!(
-            "  {:<16} mtbf {:>6.0}: eff {:>10.1} w-steps/s ({:.4} of healthy), cache hit-rate {:.3}",
+            "  {:<16} mtbf {:>6.0} mttr {:>4.2} region {}x{}: eff {:>10.1} w-steps/s \
+             ({:.4} of healthy), cache hit-rate {:.3}",
             c.policy.name(),
             c.mtbf_steps,
+            c.mttr_frac,
+            c.region.0,
+            c.region.1,
             c.mean_eff,
             c.mean_normalized,
             c.mean_hit_rate,
         );
         report.push(
-            &format!("curve_{}_mtbf{:.0}", c.policy.name(), c.mtbf_steps),
+            &format!(
+                "curve_{}_mtbf{:.0}_mttr{:.2}_{}x{}",
+                c.policy.name(),
+                c.mtbf_steps,
+                c.mttr_frac,
+                c.region.0,
+                c.region.1
+            ),
             if c.mean_eff > 0.0 { 1.0 / c.mean_eff } else { 0.0 },
             0.0,
             &[
                 ("mean_eff_throughput", c.mean_eff),
                 ("mean_normalized", c.mean_normalized),
                 ("mtbf_steps", c.mtbf_steps),
+                ("mttr_frac", c.mttr_frac),
+                ("region_w", c.region.0 as f64),
+                ("region_h", c.region.1 as f64),
                 ("seeds", c.seeds as f64),
                 ("mean_cache_hit_rate", c.mean_hit_rate),
             ],
         );
+    }
+
+    if let Some(path) = cache_path {
+        match prime_cache(&cfg) {
+            Ok(cache) => match cache.save(path, 64) {
+                Ok(n) => eprintln!("plan cache primed: {n} entries saved to {}", path.display()),
+                Err(e) => {
+                    eprintln!("plan cache save failed: {e}");
+                    std::process::exit(1);
+                }
+            },
+            Err(e) => eprintln!("plan cache priming failed: {e}"),
+        }
     }
 
     match report.write("BENCH_sweep.json") {

@@ -36,7 +36,9 @@ use thiserror::Error;
 
 pub use mtbf::MtbfModel;
 pub use scenario::{Scenario, ScenarioError};
-pub use sweep::{curves, run_sweep, CurvePoint, SweepConfig, SweepError, SweepPoint};
+pub use sweep::{
+    curves, prime_cache, run_sweep, CurvePoint, SweepCell, SweepConfig, SweepError, SweepPoint,
+};
 
 /// One cluster health event, timestamped by [`TimedEvent`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -119,8 +119,9 @@ impl MtbfModel {
     }
 }
 
-/// Exponential step count with the given mean, at least 1.
-fn exp_steps(rng: &mut SplitMix64, mean: f64) -> u64 {
+/// Exponential step count with the given mean, at least 1. Shared
+/// with the fleet workload generator (`sched::workload`).
+pub(crate) fn exp_steps(rng: &mut SplitMix64, mean: f64) -> u64 {
     let u = 1.0 - rng.next_f64(); // (0, 1]
     (-u.ln() * mean.max(1.0)).ceil().max(1.0) as u64
 }

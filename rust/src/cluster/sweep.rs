@@ -53,13 +53,14 @@ pub struct SweepConfig {
     pub ny: usize,
     /// Job length in training steps.
     pub horizon: u64,
-    /// One timeline per seed per MTBF point.
+    /// One timeline per seed per grid cell.
     pub seeds: Vec<u64>,
     /// Mean steps between failures (`MtbfModel::mean_failure_steps`),
     /// one curve x-coordinate each.
     pub mtbf_points: Vec<f64>,
-    /// Mean repair time as a fraction of the MTBF.
-    pub mttr_frac: f64,
+    /// Mean repair times as fractions of the MTBF — one sweep axis
+    /// (the §Sweep contour's y-coordinate).
+    pub mttr_fracs: Vec<f64>,
     pub policies: Vec<RecoveryPolicy>,
     /// Gradient payload, f32 elements.
     pub payload: usize,
@@ -68,8 +69,9 @@ pub struct SweepConfig {
     /// Checkpoint cadence (steps); rollback on restart is
     /// `event_step % checkpoint_every`.
     pub checkpoint_every: u64,
-    /// Failed-region shape `(w, h)`.
-    pub region: (usize, usize),
+    /// Failed-region shapes `(w, h)` — one sweep axis (board `2x2`,
+    /// host `4x2`, tall `2x4`).
+    pub regions: Vec<(usize, usize)>,
     /// Modelled pause (in steps) for a fault-tolerant ring rebuild.
     pub rebuild_steps: f64,
     /// Modelled pause (in steps) for a restart, beyond rollback.
@@ -81,6 +83,9 @@ pub struct SweepConfig {
     /// Verify every cache hit / incremental compile against a fresh
     /// full compile (CI gate; fails the sweep on divergence).
     pub verify: bool,
+    /// Warm-start cache cloned into every point (e.g. loaded from a
+    /// plan-cache file; see `PlanCache::load`).
+    pub seed_cache: Option<PlanCache>,
 }
 
 impl SweepConfig {
@@ -93,7 +98,7 @@ impl SweepConfig {
             horizon: 2000,
             seeds: (0..8).collect(),
             mtbf_points: vec![400.0, 200.0, 100.0],
-            mttr_frac: 0.5,
+            mttr_fracs: vec![0.5],
             policies: vec![
                 RecoveryPolicy::FaultTolerant,
                 RecoveryPolicy::SubMesh,
@@ -103,13 +108,30 @@ impl SweepConfig {
             payload: 1 << 20,
             compute_s: 0.05,
             checkpoint_every: 50,
-            region: (4, 2),
+            regions: vec![(4, 2)],
             rebuild_steps: 1.0,
             restart_steps: 5.0,
             threads: 0,
             cache_cap: 64,
             verify: false,
+            seed_cache: None,
         }
+    }
+
+    /// The §Sweep contour grid: MTBF x MTTR-fraction x region shape
+    /// (board vs host vs tall), fewer seeds to keep the cell count
+    /// tractable.
+    pub fn contour() -> Self {
+        let mut cfg = Self::paper_scale();
+        cfg.seeds = (0..2).collect();
+        cfg.mttr_fracs = vec![0.25, 0.5, 1.0];
+        cfg.regions = vec![(2, 2), (4, 2), (2, 4)];
+        cfg.policies = vec![
+            RecoveryPolicy::FaultTolerant,
+            RecoveryPolicy::SubMesh,
+            RecoveryPolicy::Adaptive,
+        ];
+        cfg
     }
 
     /// Reduced sweep for CI and tests: small mesh, short horizon, two
@@ -121,7 +143,7 @@ impl SweepConfig {
             horizon: 240,
             seeds: vec![1, 2],
             mtbf_points: vec![40.0],
-            mttr_frac: 0.5,
+            mttr_fracs: vec![0.5],
             policies: vec![
                 RecoveryPolicy::FaultTolerant,
                 RecoveryPolicy::SubMesh,
@@ -131,25 +153,42 @@ impl SweepConfig {
             payload: 1 << 14,
             compute_s: 0.02,
             checkpoint_every: 20,
-            region: (2, 2),
+            regions: vec![(2, 2)],
             rebuild_steps: 1.0,
             restart_steps: 5.0,
             threads: 0,
             cache_cap: 32,
             verify: false,
+            seed_cache: None,
         }
     }
 
     pub fn grid_size(&self) -> usize {
-        self.policies.len() * self.mtbf_points.len() * self.seeds.len()
+        self.policies.len()
+            * self.mtbf_points.len()
+            * self.mttr_fracs.len()
+            * self.regions.len()
+            * self.seeds.len()
     }
 }
 
-/// One replayed `(policy, MTBF, seed)` cell.
+/// One cell of the sweep grid.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepCell {
+    pub policy: RecoveryPolicy,
+    pub mtbf_steps: f64,
+    pub mttr_frac: f64,
+    pub region: (usize, usize),
+    pub seed: u64,
+}
+
+/// One replayed `(policy, MTBF, MTTR fraction, region, seed)` cell.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
     pub policy: RecoveryPolicy,
     pub mtbf_steps: f64,
+    pub mttr_frac: f64,
+    pub region: (usize, usize),
     pub seed: u64,
     /// Worker-steps per wall second delivered over the horizon.
     pub eff_throughput: f64,
@@ -174,32 +213,39 @@ impl SweepPoint {
     }
 }
 
-/// One (policy, MTBF) aggregate across seeds — a point of the
-/// per-policy effective-throughput curve.
+/// One (policy, MTBF, MTTR fraction, region) aggregate across seeds —
+/// a point of the per-policy effective-throughput curve (and of the
+/// §Sweep contour when MTTR/region axes are swept).
 #[derive(Debug, Clone)]
 pub struct CurvePoint {
     pub policy: RecoveryPolicy,
     pub mtbf_steps: f64,
+    pub mttr_frac: f64,
+    pub region: (usize, usize),
     pub seeds: usize,
     pub mean_eff: f64,
     pub mean_normalized: f64,
     pub mean_hit_rate: f64,
 }
 
-/// Aggregate sweep points into per-(policy, MTBF) curve points, in
-/// first-seen order.
+/// Aggregate sweep points into per-(policy, MTBF, MTTR, region) curve
+/// points, in first-seen order.
 pub fn curves(points: &[SweepPoint]) -> Vec<CurvePoint> {
     let mut out: Vec<CurvePoint> = Vec::new();
     for p in points {
-        let idx = match out
-            .iter()
-            .position(|c| c.policy == p.policy && c.mtbf_steps == p.mtbf_steps)
-        {
+        let idx = match out.iter().position(|c| {
+            c.policy == p.policy
+                && c.mtbf_steps == p.mtbf_steps
+                && c.mttr_frac == p.mttr_frac
+                && c.region == p.region
+        }) {
             Some(i) => i,
             None => {
                 out.push(CurvePoint {
                     policy: p.policy,
                     mtbf_steps: p.mtbf_steps,
+                    mttr_frac: p.mttr_frac,
+                    region: p.region,
                     seeds: 0,
                     mean_eff: 0.0,
                     mean_normalized: 0.0,
@@ -236,11 +282,11 @@ struct Replay<'a> {
 
 impl<'a> Replay<'a> {
     fn new(cfg: &'a SweepConfig) -> Self {
-        let cache = if cfg.verify {
-            PlanCache::with_verification(cfg.cache_cap)
-        } else {
-            PlanCache::new(cfg.cache_cap)
+        let mut cache = match &cfg.seed_cache {
+            Some(seed) => seed.clone(),
+            None => PlanCache::new(cfg.cache_cap),
         };
+        cache.set_verification(cfg.verify);
         Self { cfg, cache, sim_memo: HashMap::new(), link: LinkModel::tpu_v3() }
     }
 
@@ -263,19 +309,15 @@ impl<'a> Replay<'a> {
 /// Replay one sweep cell. Deterministic: equal inputs give equal
 /// outputs bit-for-bit (only the cache's wall-clock compile counters
 /// vary run to run).
-pub fn replay_point(
-    cfg: &SweepConfig,
-    policy: RecoveryPolicy,
-    mtbf: f64,
-    seed: u64,
-) -> Result<SweepPoint, SweepError> {
+pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, SweepError> {
+    let SweepCell { policy, mtbf_steps: mtbf, mttr_frac, region, seed } = cell;
     let (nx, ny) = (cfg.nx, cfg.ny);
     let model = MtbfModel {
         seed,
         mean_failure_steps: mtbf,
-        mean_repair_steps: mtbf * cfg.mttr_frac,
-        region_w: cfg.region.0,
-        region_h: cfg.region.1,
+        mean_repair_steps: mtbf * mttr_frac,
+        region_w: region.0,
+        region_h: region.1,
     };
     let events = model.generate(nx, ny, cfg.horizon);
     let ckpt_every = cfg.checkpoint_every.max(1);
@@ -445,6 +487,8 @@ pub fn replay_point(
     Ok(SweepPoint {
         policy,
         mtbf_steps: mtbf,
+        mttr_frac,
+        region,
         seed,
         eff_throughput,
         full_throughput,
@@ -454,16 +498,21 @@ pub fn replay_point(
     })
 }
 
-/// Run the full `(policy × MTBF × seed)` grid across scoped worker
-/// threads. Points are independent (each owns its plan cache), so the
-/// output is deterministic regardless of thread scheduling; results
-/// come back in grid order (policy-major, then MTBF, then seed).
+/// Run the full `(policy × MTBF × MTTR × region × seed)` grid across
+/// scoped worker threads. Points are independent (each owns its plan
+/// cache, cloned from the optional warm-start seed), so the output is
+/// deterministic regardless of thread scheduling; results come back in
+/// grid order (policy-major, then MTBF, MTTR, region, seed).
 pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepPoint>, SweepError> {
-    let mut grid: Vec<(RecoveryPolicy, f64, u64)> = Vec::new();
+    let mut grid: Vec<SweepCell> = Vec::new();
     for &policy in &cfg.policies {
-        for &mtbf in &cfg.mtbf_points {
-            for &seed in &cfg.seeds {
-                grid.push((policy, mtbf, seed));
+        for &mtbf_steps in &cfg.mtbf_points {
+            for &mttr_frac in &cfg.mttr_fracs {
+                for &region in &cfg.regions {
+                    for &seed in &cfg.seeds {
+                        grid.push(SweepCell { policy, mtbf_steps, mttr_frac, region, seed });
+                    }
+                }
             }
         }
     }
@@ -488,8 +537,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepPoint>, SweepError> {
                 if i >= grid.len() {
                     break;
                 }
-                let (policy, mtbf, seed) = grid[i];
-                let point = replay_point(cfg, policy, mtbf, seed);
+                let point = replay_cell(cfg, grid[i]);
                 results.lock().expect("sweep results lock")[i] = Some(point);
             });
         }
@@ -500,6 +548,35 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepPoint>, SweepError> {
         .into_iter()
         .map(|r| r.expect("every grid point visited"))
         .collect()
+}
+
+/// Build a warm-start cache containing the sweep's recurring
+/// fingerprints: the healthy mesh plus one interior hole per region
+/// shape. Persist it with `PlanCache::save` and load it back into
+/// [`SweepConfig::seed_cache`] (the `sweep` binary's `--plan-cache`
+/// flag does both) so a later process skips those first-visit
+/// compiles.
+pub fn prime_cache(cfg: &SweepConfig) -> Result<PlanCache, SweepError> {
+    let mut cache = PlanCache::new(cfg.cache_cap);
+    cache.get(Scheme::FaultTolerant, &Topology::full(cfg.nx, cfg.ny), cfg.payload)?;
+    for &(w, h) in &cfg.regions {
+        let x0 = (cfg.nx / 2) & !1usize;
+        let y0 = (cfg.ny / 2) & !1usize;
+        if w == 0 || h == 0 || x0 + w > cfg.nx || y0 + h > cfg.ny {
+            continue;
+        }
+        let region = FailedRegion::new(x0, y0, w, h);
+        if !ClusterState::new(cfg.nx, cfg.ny).can_fail(region) {
+            continue;
+        }
+        let topo = Topology::with_failure(cfg.nx, cfg.ny, region);
+        match cache.get(Scheme::FaultTolerant, &topo, cfg.payload) {
+            Ok(_) => {}
+            Err(PlanError::Build(_)) => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(cache)
 }
 
 #[cfg(test)]
@@ -568,10 +645,57 @@ mod tests {
         let cfg = tiny_cfg();
         let points = run_sweep(&cfg).unwrap();
         let cs = curves(&points);
-        assert_eq!(cs.len(), cfg.policies.len() * cfg.mtbf_points.len());
+        let cells = cfg.policies.len()
+            * cfg.mtbf_points.len()
+            * cfg.mttr_fracs.len()
+            * cfg.regions.len();
+        assert_eq!(cs.len(), cells);
         for c in &cs {
             assert_eq!(c.seeds, cfg.seeds.len());
             assert!(c.mean_normalized <= 1.0 + 1e-9);
         }
+    }
+
+    #[test]
+    fn grid_covers_mttr_and_region_axes() {
+        let mut cfg = tiny_cfg();
+        cfg.policies = vec![RecoveryPolicy::FaultTolerant];
+        cfg.mttr_fracs = vec![0.25, 1.0];
+        cfg.regions = vec![(2, 2), (4, 2)];
+        let points = run_sweep(&cfg).unwrap();
+        assert_eq!(points.len(), cfg.grid_size());
+        for &m in &cfg.mttr_fracs {
+            for &r in &cfg.regions {
+                assert!(
+                    points.iter().any(|p| p.mttr_frac == m && p.region == r),
+                    "missing cell mttr={m} region={r:?}"
+                );
+            }
+        }
+        let cs = curves(&points);
+        assert_eq!(cs.len(), 4, "one curve point per (mttr, region) cell");
+    }
+
+    #[test]
+    fn seed_cache_warm_starts_points_without_changing_results() {
+        let cfg = tiny_cfg();
+        let primed = prime_cache(&cfg).unwrap();
+        assert!(primed.len() >= 2, "healthy + one holed topology primed");
+        let mut warm = cfg.clone();
+        warm.seed_cache = Some(primed);
+        let a = run_sweep(&cfg).unwrap();
+        let b = run_sweep(&warm).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                x.eff_throughput.to_bits(),
+                y.eff_throughput.to_bits(),
+                "warm start must not change results"
+            );
+            assert!(y.cache.hits >= x.cache.hits, "warm start can only add hits");
+        }
+        assert!(
+            a.iter().zip(&b).any(|(x, y)| y.cache.hits > x.cache.hits),
+            "priming the healthy mesh must turn first visits into hits"
+        );
     }
 }

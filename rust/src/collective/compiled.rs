@@ -39,6 +39,37 @@ pub enum CompileError {
     Route(#[from] RouteError),
 }
 
+/// Splice effectiveness of one incremental compile: how much of the
+/// previous plan was reused instead of re-derived. Returned by
+/// [`CompiledSchedule::compile_incremental_reported`] and aggregated
+/// into `PlanCacheStats` by the plan cache.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpliceReport {
+    /// Non-empty lowered steps examined for splicing.
+    pub steps_total: usize,
+    /// Non-empty steps whose executor analyses were spliced from the
+    /// previous plan.
+    pub steps_spliced: usize,
+    /// Spliced steps matched at a *shifted* index — the pipeline-shift
+    /// case where the schedules differ by empty prefixes.
+    pub steps_spliced_shifted: usize,
+    /// Distinct (src, dst) link-routes copied from the previous plan.
+    pub routes_spliced: usize,
+    /// Distinct (src, dst) link-routes re-derived by the router.
+    pub routes_resolved: usize,
+}
+
+impl SpliceReport {
+    /// Fraction of non-empty steps spliced, in [0, 1].
+    pub fn step_splice_rate(&self) -> f64 {
+        if self.steps_total == 0 {
+            0.0
+        } else {
+            self.steps_spliced as f64 / self.steps_total as f64
+        }
+    }
+}
+
 /// One lowered transfer: dense node indices, element range, and the
 /// staging-arena offset this transfer's snapshot occupies when its step
 /// is staged.
@@ -185,23 +216,45 @@ impl CompiledSchedule {
     /// either path interchangeably; this one turns the
     /// fail→repair→fail recompiles of an MTBF timeline from
     /// route-resolution-bound into splice-bound.
+    ///
+    /// Step matching is *shift-aware*: when the two schedules differ
+    /// only by a pipeline shift (empty steps prepended to the
+    /// sub-range sequences, e.g. because the yellow depth changed),
+    /// steps are matched modulo those empty prefixes — the aligned
+    /// lookup is offset by the leading-empty-step delta and re-learned
+    /// from every hash match, so a shifted schedule still splices at
+    /// the same rate as a perfectly aligned one.
     pub fn compile_incremental(
         schedule: &Schedule,
         topo: &Topology,
         prev: &CompiledSchedule,
         prev_topo: &Topology,
     ) -> Result<CompiledSchedule, CompileError> {
+        Ok(Self::compile_incremental_reported(schedule, topo, prev, prev_topo)?.0)
+    }
+
+    /// [`compile_incremental`](Self::compile_incremental), also
+    /// returning the [`SpliceReport`] of how much of `prev` was
+    /// reused.
+    pub fn compile_incremental_reported(
+        schedule: &Schedule,
+        topo: &Topology,
+        prev: &CompiledSchedule,
+        prev_topo: &Topology,
+    ) -> Result<(CompiledSchedule, SpliceReport), CompileError> {
+        let mut report = SpliceReport::default();
         if prev.mesh != topo.mesh || prev_topo.mesh != topo.mesh || !prev.has_routes {
-            return Self::compile(schedule, topo);
+            return Ok((Self::compile(schedule, topo)?, report));
         }
-        let mut plan = Self::lower_with(schedule, topo.mesh, true, Some(prev));
+        let mut plan = Self::lower_with(schedule, topo.mesh, true, Some(prev), &mut report);
         let splice = RouteSplice::new(prev, prev_topo, topo);
-        plan.resolve_routes_spliced(schedule, topo, Some(&splice))?;
-        Ok(plan)
+        plan.resolve_routes_spliced(schedule, topo, Some(&splice), &mut report)?;
+        Ok((plan, report))
     }
 
     fn lower(schedule: &Schedule, mesh: Mesh, exec: bool) -> CompiledSchedule {
-        Self::lower_with(schedule, mesh, exec, None)
+        let mut report = SpliceReport::default();
+        Self::lower_with(schedule, mesh, exec, None, &mut report)
     }
 
     /// Hash of a lowered step's transfer list, the splice-candidate
@@ -222,6 +275,7 @@ impl CompiledSchedule {
         mesh: Mesh,
         exec: bool,
         prev: Option<&CompiledSchedule>,
+        report: &mut SpliceReport,
     ) -> CompiledSchedule {
         let mut participants = vec![false; mesh.num_nodes()];
         let mut steps = Vec::with_capacity(schedule.steps.len());
@@ -241,6 +295,21 @@ impl CompiledSchedule {
             }
             None => HashMap::new(),
         };
+
+        // Shift-aware alignment: a pipeline-shift change surfaces as a
+        // different number of leading empty steps, so the aligned
+        // lookup is offset by that delta instead of assuming step i
+        // maps to step i. Every hash match re-learns the offset, so a
+        // schedule whose tail is shifted keeps matching through the
+        // cheap aligned path.
+        let leading_empty =
+            schedule.steps.iter().take_while(|s| s.transfers.is_empty()).count() as isize;
+        let mut delta: isize = prev
+            .map(|p| {
+                p.steps.iter().take_while(|s| s.transfers.is_empty()).count() as isize
+                    - leading_empty
+            })
+            .unwrap_or(0);
 
         for (i, step) in schedule.steps.iter().enumerate() {
             let mut transfers = Vec::with_capacity(step.transfers.len());
@@ -280,27 +349,44 @@ impl CompiledSchedule {
             // Splice: a previous step with the identical transfer list
             // has identical analysis results (direct classification,
             // staging layout, partitions, conflict) — clone them
-            // instead of re-deriving. Try the same index first (steps
-            // mostly align across a small topology delta), then any
-            // hash match.
-            let spliced = prev.and_then(|p| {
-                let aligned = p
-                    .steps
-                    .get(i)
-                    .filter(|ps| ps.transfers == transfers)
-                    .map(|ps| (ps.direct, ps.stage_len, ps.partitions.clone(), ps.write_conflict));
-                aligned.or_else(|| {
-                    prev_index.get(&Self::step_key(&transfers)).and_then(|cands| {
-                        cands
-                            .iter()
-                            .map(|&j| &p.steps[j])
-                            .find(|ps| ps.transfers == transfers)
-                            .map(|ps| {
-                                (ps.direct, ps.stage_len, ps.partitions.clone(), ps.write_conflict)
-                            })
-                    })
-                })
-            });
+            // instead of re-deriving. Try the shift-aware aligned
+            // index first (steps mostly align across a small topology
+            // delta, modulo the empty prefixes a pipeline shift
+            // inserts), then any hash match.
+            let mut spliced = None;
+            let mut shifted = false;
+            if let Some(p) = prev {
+                let aligned = i
+                    .checked_add_signed(delta)
+                    .and_then(|j| p.steps.get(j))
+                    .filter(|ps| ps.transfers == transfers);
+                let found = match aligned {
+                    Some(ps) => Some((delta != 0, ps)),
+                    None => prev_index
+                        .get(&Self::step_key(&transfers))
+                        .and_then(|cands| {
+                            cands.iter().copied().find(|&j| p.steps[j].transfers == transfers)
+                        })
+                        .map(|j| {
+                            delta = j as isize - i as isize;
+                            (delta != 0, &p.steps[j])
+                        }),
+                };
+                if let Some((at_shift, ps)) = found {
+                    shifted = at_shift;
+                    spliced =
+                        Some((ps.direct, ps.stage_len, ps.partitions.clone(), ps.write_conflict));
+                }
+                if exec && !transfers.is_empty() {
+                    report.steps_total += 1;
+                    if spliced.is_some() {
+                        report.steps_spliced += 1;
+                        if shifted {
+                            report.steps_spliced_shifted += 1;
+                        }
+                    }
+                }
+            }
             let (direct, stage_len, partitions, write_conflict) = match spliced {
                 Some(parts) if exec => parts,
                 _ => {
@@ -343,7 +429,8 @@ impl CompiledSchedule {
     }
 
     fn resolve_routes(&mut self, schedule: &Schedule, topo: &Topology) -> Result<(), CompileError> {
-        self.resolve_routes_spliced(schedule, topo, None)
+        let mut report = SpliceReport::default();
+        self.resolve_routes_spliced(schedule, topo, None, &mut report)
     }
 
     fn resolve_routes_spliced(
@@ -351,6 +438,7 @@ impl CompiledSchedule {
         schedule: &Schedule,
         topo: &Topology,
         splice: Option<&RouteSplice>,
+        report: &mut SpliceReport,
     ) -> Result<(), CompileError> {
         let mut link_ids: Vec<usize> = Vec::new();
         let mut route_bfs: Vec<bool> = Vec::new();
@@ -371,8 +459,12 @@ impl CompiledSchedule {
                 }
                 let entry: (Vec<usize>, bool) = match splice.and_then(|s| s.lookup(t.src, t.dst))
                 {
-                    Some(ids) => (ids, false),
+                    Some(ids) => {
+                        report.routes_spliced += 1;
+                        (ids, false)
+                    }
                     None => {
+                        report.routes_resolved += 1;
                         let (path, bfs) = route_traced(topo, t.src, t.dst)?;
                         let ids = path
                             .windows(2)
@@ -782,6 +874,43 @@ mod tests {
             }
         }
         assert_eq!(transfers, sched.num_transfers());
+    }
+
+    #[test]
+    fn shift_only_change_splices_every_step() {
+        // A pure pipeline shift: the same schedule with empty steps
+        // prepended — what a yellow-depth change does to each pipelined
+        // sub-sequence. Nothing lines up index-for-index any more, but
+        // the shift-aware matcher must still splice every non-empty
+        // step from the previous plan (matched modulo the empty
+        // prefix), and the result must equal a fresh compile.
+        let topo = Topology::with_failure(6, 6, FailedRegion::board(2, 2));
+        let sched = build_schedule(Scheme::FaultTolerant, &topo, 1 << 20).unwrap();
+        let prev = CompiledSchedule::compile(&sched, &topo).unwrap();
+
+        let mut shifted = sched.clone();
+        for _ in 0..3 {
+            shifted.steps.insert(0, Step::default());
+        }
+        let full = CompiledSchedule::compile(&shifted, &topo).unwrap();
+        let (inc, report) =
+            CompiledSchedule::compile_incremental_reported(&shifted, &topo, &prev, &topo)
+                .unwrap();
+        assert_eq!(inc, full, "incremental plan diverged under a pure shift");
+        assert!(report.steps_total > 0);
+        assert_eq!(
+            report.steps_spliced, report.steps_total,
+            "every non-empty step must splice despite the shift: {report:?}"
+        );
+        assert!((report.step_splice_rate() - 1.0).abs() < 1e-12);
+        assert!(
+            report.steps_spliced_shifted > 0,
+            "matches must happen at shifted indices: {report:?}"
+        );
+        // Identical topology: every distinct non-BFS route is spliced
+        // (BFS fallback routes are excluded from splicing by design).
+        assert!(report.routes_spliced > 0);
+        assert!(report.routes_spliced > report.routes_resolved, "{report:?}");
     }
 
     #[test]

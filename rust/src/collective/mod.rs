@@ -28,8 +28,8 @@ pub mod schedule;
 pub mod verify;
 
 pub use allreduce::{build_ft_schedule, build_schedule, Scheme};
-pub use compiled::{CompileError, CompiledSchedule};
-pub use plancache::{PlanCache, PlanCacheStats, PlanError, PlanKey};
+pub use compiled::{CompileError, CompiledSchedule, SpliceReport};
+pub use plancache::{PlanCache, PlanCacheStats, PlanError, PlanKey, SharedPlanCache};
 pub use executor::{
     execute, execute_compiled, execute_compiled_serial, execute_compiled_with, execute_once,
     ExecOptions, ExecutorArena, NodeBuffers,

@@ -35,14 +35,17 @@
 //! on any divergence.
 
 use super::allreduce::{build_ft_schedule, build_schedule, BuildError, Scheme};
-use super::compiled::{CompileError, CompiledSchedule};
+use super::compiled::{CompileError, CompiledSchedule, SpliceReport};
 use crate::mesh::{FailedRegion, Topology};
 use crate::rings::fault_tolerant::{ft_plan, ft_plan_incremental, FtPlan};
 use crate::simnet::validate_routes;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 use thiserror::Error;
+
+mod persist;
 
 #[derive(Debug, Error)]
 pub enum PlanError {
@@ -100,6 +103,16 @@ pub struct PlanCacheStats {
     pub evictions: u64,
     /// Wall seconds spent compiling on misses (full + incremental).
     pub compile_s: f64,
+    /// Non-empty steps examined across incremental compiles.
+    pub splice_steps_total: u64,
+    /// Steps spliced from the previous plan across incremental
+    /// compiles (see [`SpliceReport`]).
+    pub splice_steps_hit: u64,
+    /// Entries loaded from a persisted cache file.
+    pub persist_loaded: u64,
+    /// Persisted entries rejected at load (structural or route
+    /// validation failed).
+    pub persist_rejected: u64,
 }
 
 impl PlanCacheStats {
@@ -125,17 +138,31 @@ impl PlanCacheStats {
             self.compile_s / compiles as f64
         }
     }
+
+    /// Fraction of steps spliced (vs re-analyzed) across incremental
+    /// compiles, in [0, 1].
+    pub fn step_splice_rate(&self) -> f64 {
+        if self.splice_steps_total == 0 {
+            0.0
+        } else {
+            self.splice_steps_hit as f64 / self.splice_steps_total as f64
+        }
+    }
 }
 
+#[derive(Clone)]
 struct Slot {
     plan: Arc<CompiledSchedule>,
     /// Ring plan behind the compiled schedule (FT/pair-row schemes
     /// only) — the seed for incremental recompilation from this entry.
+    /// `None` for entries loaded from a persisted cache file (they
+    /// serve hits but cannot seed incremental compiles).
     ft: Option<Arc<FtPlan>>,
     last_used: u64,
 }
 
 /// Bounded LRU cache of compiled allreduce plans. See the module docs.
+#[derive(Clone)]
 pub struct PlanCache {
     cap: usize,
     verify: bool,
@@ -150,6 +177,16 @@ pub struct PlanCache {
 impl Default for PlanCache {
     fn default() -> Self {
         Self::new(32)
+    }
+}
+
+impl std::fmt::Debug for PlanCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlanCache")
+            .field("len", &self.slots.len())
+            .field("cap", &self.cap)
+            .field("verify", &self.verify)
+            .finish()
     }
 }
 
@@ -178,6 +215,14 @@ impl PlanCache {
 
     pub fn stats(&self) -> &PlanCacheStats {
         &self.stats
+    }
+
+    /// Toggle hit/incremental verification (see
+    /// [`with_verification`](Self::with_verification)) — used when a
+    /// pre-populated cache (warm-started or cloned) must become a
+    /// verifying one.
+    pub fn set_verification(&mut self, verify: bool) {
+        self.verify = verify;
     }
 
     pub fn len(&self) -> usize {
@@ -246,7 +291,7 @@ impl PlanCache {
                 // compile below is gate overhead, not cache cost.
                 let t0 = Instant::now();
                 match compile_incremental_ft(topo, payload, &prev_ft, &prev_plan, &prev_topo) {
-                    Ok((plan, ftp)) => {
+                    Ok((plan, ftp, report)) => {
                         self.stats.compile_s += t0.elapsed().as_secs_f64();
                         if self.verify {
                             let (fresh, _) = compile_full(scheme, topo, payload)?;
@@ -255,6 +300,8 @@ impl PlanCache {
                             }
                         }
                         self.stats.incremental_compiles += 1;
+                        self.stats.splice_steps_total += report.steps_total as u64;
+                        self.stats.splice_steps_hit += report.steps_spliced as u64;
                         return Ok((plan, Some(Arc::new(ftp))));
                     }
                     // e.g. the delta makes the scheme unschedulable in a
@@ -344,11 +391,89 @@ fn compile_incremental_ft(
     prev_ft: &FtPlan,
     prev_plan: &CompiledSchedule,
     prev_topo: &Topology,
-) -> Result<(CompiledSchedule, FtPlan), PlanError> {
+) -> Result<(CompiledSchedule, FtPlan, SpliceReport), PlanError> {
     let ftp = ft_plan_incremental(topo, prev_topo, prev_ft).map_err(BuildError::from)?;
     let sched = build_ft_schedule(&ftp, payload);
-    let plan = CompiledSchedule::compile_incremental(&sched, topo, prev_plan, prev_topo)?;
-    Ok((plan, ftp))
+    let (plan, report) =
+        CompiledSchedule::compile_incremental_reported(&sched, topo, prev_plan, prev_topo)?;
+    Ok((plan, ftp, report))
+}
+
+/// Process-wide shared handle to a [`PlanCache`].
+///
+/// The fleet scheduler runs many trainers inside one process, and all
+/// of them — plus the coordinator's what-if predictions — should reuse
+/// the same compiled plans: two jobs placed on equal sub-mesh shapes
+/// hit each other's entries, and a migrated job warm-starts from the
+/// plans its previous placement compiled. Interior mutability via a
+/// mutex; the lock is held for exactly one cache operation, and the
+/// returned plans are `Arc`s, so executions never hold the lock.
+#[derive(Clone)]
+pub struct SharedPlanCache(Arc<Mutex<PlanCache>>);
+
+impl Default for SharedPlanCache {
+    fn default() -> Self {
+        Self::from_cache(PlanCache::default())
+    }
+}
+
+impl std::fmt::Debug for SharedPlanCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.lock().fmt(f)
+    }
+}
+
+impl SharedPlanCache {
+    pub fn new(cap: usize) -> Self {
+        Self::from_cache(PlanCache::new(cap))
+    }
+
+    /// See [`PlanCache::with_verification`].
+    pub fn with_verification(cap: usize) -> Self {
+        Self::from_cache(PlanCache::with_verification(cap))
+    }
+
+    /// Wrap an existing cache (e.g. one loaded from a cache file).
+    pub fn from_cache(cache: PlanCache) -> Self {
+        Self(Arc::new(Mutex::new(cache)))
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, PlanCache> {
+        self.0.lock().expect("plan cache lock")
+    }
+
+    /// [`PlanCache::get`] under the shared lock.
+    pub fn get(
+        &self,
+        scheme: Scheme,
+        topo: &Topology,
+        payload: usize,
+    ) -> Result<Arc<CompiledSchedule>, PlanError> {
+        self.lock().get(scheme, topo, payload)
+    }
+
+    /// Snapshot of the shared cache's counters.
+    pub fn stats(&self) -> PlanCacheStats {
+        self.lock().stats.clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    /// Persist the hot entries (see [`PlanCache::save`]).
+    pub fn save(&self, path: &Path, max_entries: usize) -> std::io::Result<usize> {
+        self.lock().save(path, max_entries)
+    }
+
+    /// Run `f` with exclusive access to the underlying cache.
+    pub fn with<R>(&self, f: impl FnOnce(&mut PlanCache) -> R) -> R {
+        f(&mut self.lock())
+    }
 }
 
 #[cfg(test)]
@@ -522,6 +647,126 @@ mod tests {
             cache.get(Scheme::FaultTolerant, t, 4096).unwrap();
         }
         assert!(cache.stats().hits >= 2);
+    }
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("meshreduce_plancache_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn save_load_roundtrip_serves_hits() {
+        let mut cache = PlanCache::new(8);
+        let topos =
+            [Topology::full(6, 6), Topology::with_failure(6, 6, FailedRegion::board(2, 2))];
+        for t in &topos {
+            cache.get(Scheme::FaultTolerant, t, 4096).unwrap();
+        }
+        let path = tmpfile("roundtrip.plans");
+        assert_eq!(cache.save(&path, 16).unwrap(), 2);
+
+        let mut loaded = PlanCache::load(&path, 8).unwrap();
+        assert_eq!(loaded.stats().persist_loaded, 2);
+        assert_eq!(loaded.stats().persist_rejected, 0);
+        for t in &topos {
+            let plan = loaded.get(Scheme::FaultTolerant, t, 4096).unwrap();
+            let (fresh, _) = compile_full(Scheme::FaultTolerant, t, 4096).unwrap();
+            assert_eq!(*plan, fresh, "loaded plan must equal a fresh compile");
+        }
+        assert_eq!(loaded.stats().hits, 2, "warm start: every first visit is a hit");
+    }
+
+    #[test]
+    fn save_keeps_most_recently_used_entries() {
+        let mut cache = PlanCache::new(8);
+        let old = Topology::full(4, 4);
+        let hot = Topology::with_failure(4, 4, FailedRegion::board(0, 0));
+        cache.get(Scheme::FaultTolerant, &old, 1024).unwrap();
+        cache.get(Scheme::FaultTolerant, &hot, 1024).unwrap();
+        let path = tmpfile("truncated.plans");
+        assert_eq!(cache.save(&path, 1).unwrap(), 1);
+        let mut loaded = PlanCache::load(&path, 8).unwrap();
+        assert_eq!(loaded.stats().persist_loaded, 1);
+        loaded.get(Scheme::FaultTolerant, &hot, 1024).unwrap();
+        loaded.get(Scheme::FaultTolerant, &old, 1024).unwrap();
+        let s = loaded.stats();
+        assert_eq!(s.hits, 1, "only the most recently used entry was persisted");
+        assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn corrupt_cache_files_rejected() {
+        let junk = tmpfile("junk.plans");
+        std::fs::write(&junk, b"definitely not a plan cache").unwrap();
+        assert!(PlanCache::load(&junk, 8).is_err());
+
+        // A truncated but well-magiced file fails cleanly too.
+        let mut cache = PlanCache::new(4);
+        cache.get(Scheme::FaultTolerant, &Topology::full(4, 4), 1024).unwrap();
+        let path = tmpfile("truncate.plans");
+        cache.save(&path, 4).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(PlanCache::load(&path, 8).is_err());
+    }
+
+    #[test]
+    fn stale_persisted_entries_rejected_on_load() {
+        // File an entry under a fingerprint whose topology its routes
+        // cross (the persisted analogue of the poisoned-map test):
+        // load must reject it, not serve traffic through a hole.
+        let mut cache = PlanCache::new(8);
+        let full = Topology::full(8, 8);
+        let holed = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        cache.get(Scheme::OneD, &full, 1024).unwrap();
+        let full_key = PlanKey::fingerprint(Scheme::OneD, &full, 1024);
+        let slot = cache.slots.remove(&full_key).unwrap();
+        let holed_key = PlanKey::fingerprint(Scheme::OneD, &holed, 1024);
+        cache.slots.insert(holed_key, slot);
+
+        let path = tmpfile("stale.plans");
+        assert_eq!(cache.save(&path, 8).unwrap(), 1);
+        let loaded = PlanCache::load(&path, 8).unwrap();
+        assert_eq!(loaded.stats().persist_loaded, 0);
+        assert_eq!(loaded.stats().persist_rejected, 1);
+        assert!(loaded.is_empty());
+    }
+
+    #[test]
+    fn shared_cache_is_shared_across_clones() {
+        // Two handles to one process-wide cache: a plan compiled
+        // through one handle is a hit through the other — the fleet
+        // scheduler's jobs share plans this way.
+        let shared = SharedPlanCache::new(8);
+        let other = shared.clone();
+        let topo = Topology::with_failure(6, 6, FailedRegion::board(2, 2));
+        let a = shared.get(Scheme::FaultTolerant, &topo, 2048).unwrap();
+        let b = other.get(Scheme::FaultTolerant, &topo, 2048).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = shared.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(other.len(), 1);
+    }
+
+    #[test]
+    fn incremental_compiles_report_splice_rates() {
+        // Adjacent topologies recompile incrementally; the cache must
+        // surface how much of the previous plan was spliced.
+        let mut cache = PlanCache::new(8);
+        let a = Topology::with_failure(8, 8, FailedRegion::board(2, 2));
+        let b = Topology::with_failures(
+            8,
+            8,
+            vec![FailedRegion::board(2, 2), FailedRegion::board(6, 6)],
+        );
+        cache.get(Scheme::FaultTolerant, &a, 4096).unwrap();
+        cache.get(Scheme::FaultTolerant, &b, 4096).unwrap();
+        let s = cache.stats();
+        if s.incremental_compiles > 0 {
+            assert!(s.splice_steps_total > 0, "{s:?}");
+            assert!(s.step_splice_rate() <= 1.0);
+        }
     }
 
     #[test]

@@ -1,0 +1,549 @@
+//! Plan-cache persistence: serialise hot entries keyed by topology
+//! fingerprint so restarted jobs, the sweep driver and the fleet
+//! driver warm-start across processes (ROADMAP item).
+//!
+//! Format (little-endian, custom binary — the offline build has no
+//! serde):
+//!
+//! ```text
+//! magic    u64 = "MESHPLAN"
+//! version  u32
+//! entries  u64
+//! per entry:
+//!   key:   nx, ny u64 · scheme u8 · payload u64 ·
+//!          region count u64 · regions (x0, y0, w, h u64)
+//!   plan:  the full CompiledSchedule — transfers, partitions,
+//!          staging layout, cached routes, flags, content hash
+//! ```
+//!
+//! **Loading never trusts the file.** The executor's parallel apply
+//! path relies on invariants compilation establishes (ranges within
+//! the payload, no self-sends, disjoint per-destination write
+//! partitions), so every entry is structurally re-validated, every
+//! cached route is re-walked for contiguity on the mesh, and
+//! [`validate_routes`] re-checks link liveness against the key's
+//! topology. Entries failing any check are skipped (counted in
+//! `PlanCacheStats::persist_rejected`) without failing the load; a
+//! malformed or truncated file fails with `InvalidData`. Loaded
+//! entries serve cache hits (still gated per lookup by route
+//! validation, like any entry) but carry no ring plan, so they do not
+//! seed incremental compiles.
+
+use super::{PlanCache, PlanKey, Slot};
+use crate::collective::compiled::CompiledSchedule;
+use crate::collective::{OpKind, Scheme};
+use crate::mesh::{Dir, FailedRegion, Mesh, Topology};
+use crate::simnet::validate_routes;
+use std::fs;
+use std::io::{self, Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+const MAGIC: u64 = 0x4d45_5348_504c_414e; // "MESHPLAN"
+const VERSION: u32 = 1;
+
+/// Sanity caps applied while reading: a corrupt length field must fail
+/// cleanly instead of attempting a huge allocation.
+const MAX_ENTRIES: u64 = 4096;
+const MAX_DIM: u64 = 4096;
+const MAX_REGIONS: u64 = 1024;
+const MAX_PAYLOAD: u64 = 1 << 30;
+const MAX_STAGE: u64 = 1 << 36;
+const MAX_VEC: u64 = 1 << 26;
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("plan cache file: {msg}"))
+}
+
+fn w_u64<W: Write>(w: &mut W, v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn w_u32<W: Write>(w: &mut W, v: u32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn w_u8<W: Write>(w: &mut W, v: u8) -> io::Result<()> {
+    w.write_all(&[v])
+}
+
+fn w_usize<W: Write>(w: &mut W, v: usize) -> io::Result<()> {
+    w_u64(w, v as u64)
+}
+
+fn r_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn r_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_u8<R: Read>(r: &mut R) -> io::Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+/// A length/index field, bounded by `max`.
+fn r_len<R: Read>(r: &mut R, max: u64) -> io::Result<usize> {
+    let v = r_u64(r)?;
+    if v > max {
+        return Err(bad("length field out of range"));
+    }
+    Ok(v as usize)
+}
+
+fn scheme_to_u8(s: Scheme) -> u8 {
+    match s {
+        Scheme::OneD => 0,
+        Scheme::TwoD => 1,
+        Scheme::PairRows => 2,
+        Scheme::FaultTolerant => 3,
+    }
+}
+
+fn scheme_from_u8(v: u8) -> io::Result<Scheme> {
+    match v {
+        0 => Ok(Scheme::OneD),
+        1 => Ok(Scheme::TwoD),
+        2 => Ok(Scheme::PairRows),
+        3 => Ok(Scheme::FaultTolerant),
+        _ => Err(bad("unknown scheme tag")),
+    }
+}
+
+fn op_to_u8(op: OpKind) -> u8 {
+    match op {
+        OpKind::Copy => 0,
+        OpKind::Add => 1,
+    }
+}
+
+fn op_from_u8(v: u8) -> io::Result<OpKind> {
+    match v {
+        0 => Ok(OpKind::Copy),
+        1 => Ok(OpKind::Add),
+        _ => Err(bad("unknown op tag")),
+    }
+}
+
+fn write_key<W: Write>(w: &mut W, key: &PlanKey) -> io::Result<()> {
+    w_usize(w, key.nx)?;
+    w_usize(w, key.ny)?;
+    w_u8(w, scheme_to_u8(key.scheme))?;
+    w_usize(w, key.payload)?;
+    w_usize(w, key.failed.len())?;
+    for r in &key.failed {
+        w_usize(w, r.x0)?;
+        w_usize(w, r.y0)?;
+        w_usize(w, r.w)?;
+        w_usize(w, r.h)?;
+    }
+    Ok(())
+}
+
+fn read_key<R: Read>(r: &mut R) -> io::Result<PlanKey> {
+    let nx = r_len(r, MAX_DIM)?;
+    let ny = r_len(r, MAX_DIM)?;
+    if nx == 0 || ny == 0 {
+        return Err(bad("degenerate mesh dims"));
+    }
+    let scheme = scheme_from_u8(r_u8(r)?)?;
+    let payload = r_len(r, MAX_PAYLOAD)?;
+    let nregions = r_len(r, MAX_REGIONS)?;
+    let mut failed = Vec::with_capacity(nregions);
+    for _ in 0..nregions {
+        let x0 = r_len(r, MAX_DIM)?;
+        let y0 = r_len(r, MAX_DIM)?;
+        let w = r_len(r, MAX_DIM)?;
+        let h = r_len(r, MAX_DIM)?;
+        if w == 0 || h == 0 {
+            return Err(bad("degenerate failed region"));
+        }
+        failed.push(FailedRegion::new(x0, y0, w, h));
+    }
+    Ok(PlanKey { nx, ny, failed, scheme, payload })
+}
+
+fn write_plan<W: Write>(w: &mut W, p: &CompiledSchedule) -> io::Result<()> {
+    w_usize(w, p.mesh.nx)?;
+    w_usize(w, p.mesh.ny)?;
+    w_usize(w, p.payload)?;
+    w_u64(w, p.hash)?;
+    w_u64(w, p.total_bytes)?;
+    w_usize(w, p.max_stage_len)?;
+    w_u8(w, p.has_routes as u8)?;
+    w_u8(w, p.has_exec as u8)?;
+    w_usize(w, p.participants.len())?;
+    for &x in &p.participants {
+        w_usize(w, x)?;
+    }
+    w_usize(w, p.link_ids.len())?;
+    for &x in &p.link_ids {
+        w_usize(w, x)?;
+    }
+    w_usize(w, p.route_bfs.len())?;
+    for &b in &p.route_bfs {
+        w_u8(w, b as u8)?;
+    }
+    w_usize(w, p.steps.len())?;
+    for s in &p.steps {
+        w_u8(w, s.direct as u8)?;
+        w_usize(w, s.stage_len)?;
+        w_usize(w, s.elems)?;
+        match s.write_conflict {
+            Some(d) => {
+                w_u8(w, 1)?;
+                w_usize(w, d)?;
+            }
+            None => {
+                w_u8(w, 0)?;
+                w_usize(w, 0)?;
+            }
+        }
+        w_usize(w, s.transfers.len())?;
+        for t in &s.transfers {
+            w_usize(w, t.src)?;
+            w_usize(w, t.dst)?;
+            w_usize(w, t.lo)?;
+            w_usize(w, t.hi)?;
+            w_u8(w, op_to_u8(t.op))?;
+            w_usize(w, t.stage)?;
+        }
+        w_usize(w, s.partitions.len())?;
+        for part in &s.partitions {
+            w_usize(w, part.dst)?;
+            w_usize(w, part.transfer_ids.len())?;
+            for &id in &part.transfer_ids {
+                w_u64(w, id as u64)?;
+            }
+        }
+        w_usize(w, s.routes.len())?;
+        for &(a, b) in &s.routes {
+            w_usize(w, a)?;
+            w_usize(w, b)?;
+        }
+    }
+    Ok(())
+}
+
+fn read_plan<R: Read>(r: &mut R) -> io::Result<CompiledSchedule> {
+    use crate::collective::compiled::{CompiledStep, CompiledTransfer, Partition};
+    let nx = r_len(r, MAX_DIM)?;
+    let ny = r_len(r, MAX_DIM)?;
+    if nx == 0 || ny == 0 {
+        return Err(bad("degenerate plan mesh"));
+    }
+    let mesh = Mesh::new(nx, ny);
+    let payload = r_len(r, MAX_PAYLOAD)?;
+    let hash = r_u64(r)?;
+    let total_bytes = r_u64(r)?;
+    let max_stage_len = r_len(r, MAX_STAGE)?;
+    let has_routes = r_u8(r)? != 0;
+    let has_exec = r_u8(r)? != 0;
+    let n = r_len(r, MAX_VEC)?;
+    let mut participants = Vec::with_capacity(n);
+    for _ in 0..n {
+        participants.push(r_len(r, MAX_VEC)?);
+    }
+    let n = r_len(r, MAX_VEC)?;
+    let mut link_ids = Vec::with_capacity(n);
+    for _ in 0..n {
+        link_ids.push(r_len(r, MAX_VEC)?);
+    }
+    let n = r_len(r, MAX_VEC)?;
+    let mut route_bfs = Vec::with_capacity(n);
+    for _ in 0..n {
+        route_bfs.push(r_u8(r)? != 0);
+    }
+    let nsteps = r_len(r, MAX_VEC)?;
+    let mut steps = Vec::with_capacity(nsteps);
+    for _ in 0..nsteps {
+        let direct = r_u8(r)? != 0;
+        let stage_len = r_len(r, MAX_STAGE)?;
+        let elems = r_len(r, MAX_STAGE)?;
+        let has_conflict = r_u8(r)? != 0;
+        let conflict_dst = r_len(r, MAX_VEC)?;
+        let write_conflict = if has_conflict { Some(conflict_dst) } else { None };
+        let nt = r_len(r, MAX_VEC)?;
+        let mut transfers = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            let src = r_len(r, MAX_VEC)?;
+            let dst = r_len(r, MAX_VEC)?;
+            let lo = r_len(r, MAX_PAYLOAD)?;
+            let hi = r_len(r, MAX_PAYLOAD)?;
+            let op = op_from_u8(r_u8(r)?)?;
+            let stage = r_len(r, MAX_STAGE)?;
+            transfers.push(CompiledTransfer { src, dst, lo, hi, op, stage });
+        }
+        let np = r_len(r, MAX_VEC)?;
+        let mut partitions = Vec::with_capacity(np);
+        for _ in 0..np {
+            let dst = r_len(r, MAX_VEC)?;
+            let nid = r_len(r, MAX_VEC)?;
+            let mut transfer_ids = Vec::with_capacity(nid);
+            for _ in 0..nid {
+                let id = r_u64(r)?;
+                if id > u32::MAX as u64 {
+                    return Err(bad("partition id out of range"));
+                }
+                transfer_ids.push(id as u32);
+            }
+            partitions.push(Partition { dst, transfer_ids });
+        }
+        let nr = r_len(r, MAX_VEC)?;
+        let mut routes = Vec::with_capacity(nr);
+        for _ in 0..nr {
+            let a = r_len(r, MAX_VEC)?;
+            let b = r_len(r, MAX_VEC)?;
+            routes.push((a, b));
+        }
+        steps.push(CompiledStep {
+            transfers,
+            direct,
+            stage_len,
+            elems,
+            partitions,
+            write_conflict,
+            routes,
+        });
+    }
+    Ok(CompiledSchedule {
+        mesh,
+        payload,
+        steps,
+        participants,
+        max_stage_len,
+        link_ids,
+        route_bfs,
+        has_routes,
+        has_exec,
+        hash,
+        total_bytes,
+    })
+}
+
+/// Reconstruct the key's topology, rejecting keys whose regions leave
+/// the mesh or overlap (which `Topology::with_failures` would panic
+/// on).
+fn key_topology(key: &PlanKey) -> Option<Topology> {
+    let mesh = Mesh::new(key.nx, key.ny);
+    for (i, r) in key.failed.iter().enumerate() {
+        if !r.fits(&mesh) {
+            return None;
+        }
+        if key.failed[i + 1..].iter().any(|o| o.overlaps(r)) {
+            return None;
+        }
+    }
+    Some(Topology::with_failures(key.nx, key.ny, key.failed.clone()))
+}
+
+/// Structural soundness of a loaded plan against its key: everything
+/// the executor's (unsafe) parallel apply path assumes, plus route
+/// contiguity on the mesh.
+fn entry_is_sound(key: &PlanKey, plan: &CompiledSchedule) -> bool {
+    if plan.mesh.nx != key.nx || plan.mesh.ny != key.ny || plan.payload != key.payload {
+        return false;
+    }
+    if !plan.has_exec || !plan.has_routes {
+        return false;
+    }
+    let mesh = plan.mesh;
+    let n = mesh.num_nodes();
+    let nslots = mesh.num_link_slots();
+    if plan.participants.iter().any(|&p| p >= n) {
+        return false;
+    }
+    if plan.link_ids.iter().any(|&l| l >= nslots) {
+        return false;
+    }
+    if plan.route_bfs.len() != plan.steps.iter().map(|s| s.transfers.len()).sum::<usize>() {
+        return false;
+    }
+    // The executor sizes its staging arena from max_stage_len once; a
+    // forged value would drive an arbitrary allocation, so it must be
+    // exactly the maximum the steps need (what `lower` computes).
+    if plan.max_stage_len != plan.steps.iter().map(|s| s.stage_len).max().unwrap_or(0) {
+        return false;
+    }
+    for s in &plan.steps {
+        if s.routes.len() != s.transfers.len() {
+            return false;
+        }
+        if (s.direct && s.stage_len != 0) || s.stage_len > plan.max_stage_len {
+            return false;
+        }
+        let mut elems = 0usize;
+        for t in &s.transfers {
+            if t.src >= n || t.dst >= n || t.src == t.dst {
+                return false;
+            }
+            if t.lo > t.hi || t.hi > plan.payload {
+                return false;
+            }
+            if !s.direct && t.stage + (t.hi - t.lo) > s.stage_len {
+                return false;
+            }
+            elems += t.hi - t.lo;
+        }
+        if elems != s.elems {
+            return false;
+        }
+        // Partitions: cover every transfer exactly once, grouped by
+        // destination, schedule order preserved, destinations pairwise
+        // distinct.
+        let mut seen = vec![false; s.transfers.len()];
+        let mut dsts = Vec::with_capacity(s.partitions.len());
+        for part in &s.partitions {
+            if part.transfer_ids.is_empty() {
+                return false;
+            }
+            dsts.push(part.dst);
+            let mut prev: Option<u32> = None;
+            for &id in &part.transfer_ids {
+                let Some(t) = s.transfers.get(id as usize) else { return false };
+                if t.dst != part.dst || seen[id as usize] {
+                    return false;
+                }
+                seen[id as usize] = true;
+                if let Some(p) = prev {
+                    if id <= p {
+                        return false;
+                    }
+                }
+                prev = Some(id);
+            }
+        }
+        if !seen.iter().all(|&x| x) {
+            return false;
+        }
+        dsts.sort_unstable();
+        dsts.dedup();
+        if dsts.len() != s.partitions.len() {
+            return false;
+        }
+        // Route contiguity: every cached route walks mesh links from
+        // the transfer's source to its destination.
+        for (t, &(a, b)) in s.transfers.iter().zip(&s.routes) {
+            if a > b || b > plan.link_ids.len() {
+                return false;
+            }
+            let mut cur = mesh.coord_of(t.src);
+            for &lid in &plan.link_ids[a..b] {
+                let from = mesh.coord_of(lid / 4);
+                if from != cur {
+                    return false;
+                }
+                match mesh.step(from, Dir::ALL[lid % 4]) {
+                    Some(to) => cur = to,
+                    None => return false,
+                }
+            }
+            if cur != mesh.coord_of(t.dst) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+impl PlanCache {
+    /// CLI convenience shared by the fleet and sweep binaries: load a
+    /// warm-start cache from `path` when the file exists, logging the
+    /// outcome to stderr. `None` = no file, or a failed load (start
+    /// cold).
+    pub fn load_warm_start(path: &Path, cap: usize) -> Option<PlanCache> {
+        if !path.exists() {
+            return None;
+        }
+        match PlanCache::load(path, cap) {
+            Ok(cache) => {
+                let s = cache.stats();
+                eprintln!(
+                    "plan cache warm start: {} entries loaded, {} rejected from {}",
+                    s.persist_loaded,
+                    s.persist_rejected,
+                    path.display()
+                );
+                Some(cache)
+            }
+            Err(e) => {
+                eprintln!("plan cache load failed ({e}); starting cold");
+                None
+            }
+        }
+    }
+
+    /// Serialise the `max_entries` most recently used entries to
+    /// `path` (atomically: write a temp file, then rename). Returns
+    /// the number of entries written. The on-disk identity is the
+    /// topology fingerprint ([`PlanKey`]), so a different process —
+    /// a restarted job, the sweep driver, the fleet driver — can
+    /// [`load`](Self::load) the file and turn its first visit to each
+    /// persisted topology into a cache hit.
+    pub fn save(&self, path: &Path, max_entries: usize) -> io::Result<usize> {
+        let mut entries: Vec<(&PlanKey, &Slot)> = self.slots.iter().collect();
+        // Most recently used first; `last_used` ticks are unique, so
+        // the output is deterministic despite HashMap iteration.
+        entries.sort_by(|a, b| b.1.last_used.cmp(&a.1.last_used));
+        entries.truncate(max_entries.min(MAX_ENTRIES as usize));
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = io::BufWriter::new(fs::File::create(&tmp)?);
+            w_u64(&mut f, MAGIC)?;
+            w_u32(&mut f, VERSION)?;
+            w_usize(&mut f, entries.len())?;
+            for &(key, slot) in &entries {
+                write_key(&mut f, key)?;
+                write_plan(&mut f, &slot.plan)?;
+            }
+            f.flush()?;
+        }
+        fs::rename(&tmp, path)?;
+        Ok(entries.len())
+    }
+
+    /// Load a cache of capacity `cap` from `path`. Every entry is
+    /// re-validated (structure, route contiguity, route liveness on
+    /// the key's topology) before it is admitted; rejected entries are
+    /// counted in `PlanCacheStats::persist_rejected` and skipped. A
+    /// malformed or truncated file errors with `InvalidData`.
+    pub fn load(path: &Path, cap: usize) -> io::Result<PlanCache> {
+        let mut f = io::BufReader::new(fs::File::open(path)?);
+        if r_u64(&mut f)? != MAGIC {
+            return Err(bad("bad magic"));
+        }
+        let version = r_u32(&mut f)?;
+        if version != VERSION {
+            return Err(bad("unsupported version"));
+        }
+        let n = r_len(&mut f, MAX_ENTRIES)?;
+        let mut cache = PlanCache::new(cap);
+        for _ in 0..n {
+            // (each entry is fully parsed before validation so a
+            // rejected entry does not desynchronise the framing)
+            let key = read_key(&mut f)?;
+            let plan = read_plan(&mut f)?;
+            cache.tick += 1;
+            let valid = entry_is_sound(&key, &plan)
+                && key_topology(&key)
+                    .map(|topo| validate_routes(&plan, &topo).is_ok())
+                    .unwrap_or(false);
+            if !valid {
+                cache.stats.persist_rejected += 1;
+                continue;
+            }
+            cache.stats.persist_loaded += 1;
+            let slot = Slot { plan: Arc::new(plan), ft: None, last_used: cache.tick };
+            cache.slots.insert(key, slot);
+        }
+        cache.evict_over_cap();
+        Ok(cache)
+    }
+}

@@ -30,7 +30,7 @@ pub mod policy;
 
 use crate::cluster::{ClusterError, ClusterEvent, ClusterState, EventQueue, TimedEvent};
 use crate::mesh::{FailedRegion, Topology};
-use crate::perfmodel::{predict_candidate_cached, CandidatePrediction};
+use crate::perfmodel::{predict_candidate_shared, CandidatePrediction};
 use crate::runtime::Runtime;
 use crate::simnet::LinkModel;
 use crate::trainer::checkpoint::Checkpoint;
@@ -212,7 +212,7 @@ impl Coordinator {
         let runtime = Runtime::cpu().map_err(TrainError::Runtime)?;
         // The compiled-plan cache survives the restart: topologies seen
         // before the transition (and after the next repair) stay hits.
-        let cache = self.trainer.take_cache();
+        let cache = self.trainer.shared_cache();
         let mut new_trainer = DataParallelTrainer::new_with_cache(tcfg, &runtime, cache)?;
         // Carry metrics over so the loss curve shows the restart.
         std::mem::swap(&mut new_trainer.metrics, &mut self.trainer.metrics);
@@ -275,10 +275,10 @@ impl Coordinator {
         let ft_topo = self.cluster.topology();
         let (nx, ny) = (self.cluster.nx, self.cluster.ny);
         let (_, _, w, h) = largest_submesh(nx, ny, self.cluster.failed_regions());
-        let cache = self.trainer.cache_mut();
-        let ft = predict_candidate_cached(&ft_topo, payload, &link, compute, cache).ok();
+        let cache = self.trainer.shared_cache();
+        let ft = predict_candidate_shared(&ft_topo, payload, &link, compute, &cache).ok();
         let sm = if w >= 2 && h >= 2 {
-            predict_candidate_cached(&Topology::full(w, h), payload, &link, compute, cache).ok()
+            predict_candidate_shared(&Topology::full(w, h), payload, &link, compute, &cache).ok()
         } else {
             None
         };

@@ -48,55 +48,18 @@ impl RecoveryPolicy {
 /// `regions`, as `(x0, y0, w, h)`. Ties prefer more chips, then wider
 /// shapes. With no failed regions the answer is the full mesh.
 ///
-/// The candidate edges are drawn from the region boundary grid (every
-/// maximal empty rectangle has its edges on region boundaries or the
-/// mesh edge), so the result is exact for any number of disjoint
-/// rectangular holes — unlike the old single-region four-slab
-/// shortlist, which a second failure could silently invalidate by
-/// selecting a slab containing the first hole.
+/// The failed-regions-only special case of the fleet placer's exact
+/// boundary-grid max-empty-rectangle
+/// ([`crate::sched::placer::largest_clear_rect`], which also treats
+/// placed jobs as obstacles): every maximal empty rectangle has its
+/// edges on region boundaries or the mesh edge, so the result is exact
+/// for any number of disjoint rectangular holes.
 pub fn largest_submesh(
     nx: usize,
     ny: usize,
     regions: &[FailedRegion],
 ) -> (usize, usize, usize, usize) {
-    let mut xs = vec![0, nx];
-    let mut ys = vec![0, ny];
-    for r in regions {
-        xs.push(r.x0.min(nx));
-        xs.push(r.x1().min(nx));
-        ys.push(r.y0.min(ny));
-        ys.push(r.y1().min(ny));
-    }
-    xs.sort_unstable();
-    xs.dedup();
-    ys.sort_unstable();
-    ys.dedup();
-
-    let clear = |x0: usize, y0: usize, x1: usize, y1: usize| {
-        let candidate = FailedRegion::new(x0, y0, x1 - x0, y1 - y0);
-        regions.iter().all(|r| !r.overlaps(&candidate))
-    };
-
-    let mut best = (0, 0, 0, 0);
-    let mut best_key = (0usize, 0usize);
-    for (i, &x0) in xs.iter().enumerate() {
-        for &x1 in &xs[i + 1..] {
-            for (j, &y0) in ys.iter().enumerate() {
-                for &y1 in &ys[j + 1..] {
-                    if !clear(x0, y0, x1, y1) {
-                        continue;
-                    }
-                    let (w, h) = (x1 - x0, y1 - y0);
-                    let key = (w * h, w);
-                    if key > best_key {
-                        best_key = key;
-                        best = (x0, y0, w, h);
-                    }
-                }
-            }
-        }
-    }
-    best
+    crate::sched::placer::largest_clear_rect(nx, ny, regions)
 }
 
 /// One-off costs of switching to a recovery candidate, folded into the

@@ -27,5 +27,6 @@ pub mod perfmodel;
 pub mod simnet;
 pub mod rings;
 pub mod runtime;
+pub mod sched;
 pub mod trainer;
 pub mod util;

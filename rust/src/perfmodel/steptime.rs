@@ -13,7 +13,7 @@
 //! a genuine reproduction of the *shape* of the result.
 
 use super::mlperf::{workload_by_name, PaperRow};
-use crate::collective::{build_schedule, PlanCache, Scheme};
+use crate::collective::{build_schedule, PlanCache, Scheme, SharedPlanCache};
 use crate::mesh::{FailedRegion, Topology};
 use crate::simnet::{simulate, simulate_plan, LinkModel};
 use thiserror::Error;
@@ -144,6 +144,34 @@ pub fn allreduce_time_cached(
 ) -> Result<f64, ModelError> {
     let plan = cache.get(Scheme::FaultTolerant, topo, payload_elems)?;
     Ok(simulate_plan(&plan, model)?.makespan_s)
+}
+
+/// [`allreduce_time_cached`] through a process-wide [`SharedPlanCache`]
+/// — the handle the fleet scheduler's jobs and the coordinator's
+/// what-if predictions share with the live trainers.
+pub fn allreduce_time_shared(
+    topo: &Topology,
+    payload_elems: usize,
+    model: &LinkModel,
+    cache: &SharedPlanCache,
+) -> Result<f64, ModelError> {
+    let plan = cache.get(Scheme::FaultTolerant, topo, payload_elems)?;
+    Ok(simulate_plan(&plan, model)?.makespan_s)
+}
+
+/// [`predict_candidate_cached`] through a [`SharedPlanCache`].
+pub fn predict_candidate_shared(
+    topo: &Topology,
+    payload_elems: usize,
+    link: &LinkModel,
+    compute_s: f64,
+    cache: &SharedPlanCache,
+) -> Result<CandidatePrediction, ModelError> {
+    let allreduce_s = allreduce_time_shared(topo, payload_elems, link, cache)?;
+    let step_s = compute_s + allreduce_s;
+    let workers = topo.live_count();
+    let throughput = if step_s > 0.0 { workers as f64 / step_s } else { 0.0 };
+    Ok(CandidatePrediction { workers, allreduce_s, step_s, throughput })
 }
 
 /// [`predict_candidate`] through a [`PlanCache`] (see

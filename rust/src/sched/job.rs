@@ -1,0 +1,338 @@
+//! The real-trainer fleet path: every placed job drives an actual
+//! [`DataParallelTrainer`] on its sub-mesh, anchored at its physical
+//! origin through `TrainerConfig::{x0, y0}` (so each chip keeps the
+//! data shard of its physical position), with **one process-wide
+//! [`SharedPlanCache`]** handed to every trainer — jobs with equal
+//! sub-mesh shapes reuse each other's compiled allreduce plans, and a
+//! migrated job warm-starts from the plans its previous placement
+//! compiled.
+//!
+//! Placement moves preserve the replica **bit-identically**: a
+//! migration/shrink checkpoints the live trainer, rebuilds it at the
+//! new origin, and restores — checkpoint/restore is exact, and a
+//! fault-tolerant rejoin re-broadcasts through the allreduce with a
+//! built-in bit-identity check (`trainer::rejoin_region`). The
+//! property tests in `rust/tests/fleet_placement.rs` assert the
+//! fail→migrate→repair round-trip end to end.
+//!
+//! This engine favours correctness over scale (the simulated engine in
+//! [`super::fleet`] is the throughput instrument): jobs step in
+//! lockstep, and queue-wait is approximated by migrate.
+
+use super::placer::{self, Rect};
+use super::{FleetError, JobPolicy, JobSpec};
+use crate::cluster::{ClusterEvent, ClusterState};
+use crate::collective::{PlanCacheStats, SharedPlanCache};
+use crate::mesh::{FailedRegion, Topology};
+use crate::perfmodel::predict_candidate_shared;
+use crate::runtime::Runtime;
+use crate::simnet::LinkModel;
+use crate::trainer::metrics::StepRecord;
+use crate::trainer::{DataParallelTrainer, TrainError, TrainerConfig};
+
+/// One placed job running a real trainer on its rectangle.
+pub struct TrainedJob {
+    pub spec: JobSpec,
+    pub rect: Rect,
+    pub trainer: DataParallelTrainer,
+    model: String,
+    seed: u64,
+    cache: SharedPlanCache,
+}
+
+impl TrainedJob {
+    /// Build and place a trainer for `spec` on `rect`, sharing
+    /// `cache`.
+    pub fn launch(
+        model: &str,
+        spec: JobSpec,
+        rect: Rect,
+        cache: SharedPlanCache,
+    ) -> Result<Self, FleetError> {
+        let seed = 1000 + spec.id as u64;
+        let trainer = build_trainer(model, seed, rect, Vec::new(), &cache)?;
+        Ok(Self { spec, rect, trainer, model: model.to_string(), seed, cache })
+    }
+
+    /// One training step on the job's sub-mesh.
+    pub fn step(&mut self) -> Result<StepRecord, FleetError> {
+        Ok(self.trainer.train_step()?)
+    }
+
+    /// Local failed regions, in cluster coordinates.
+    pub fn holes(&self) -> Vec<Rect> {
+        self.trainer
+            .topology()
+            .failed_regions()
+            .iter()
+            .map(|r| placer::to_cluster(&self.rect, r))
+            .collect()
+    }
+
+    /// Continue fault-tolerant: inject the in-rectangle cut into the
+    /// live trainer (the paper's scheme on the job's sub-mesh).
+    pub fn continue_ft(&mut self, cut: Rect) -> Result<(), FleetError> {
+        let local = placer::to_local(&self.rect, &cut);
+        self.trainer.inject_failure(local)?;
+        Ok(())
+    }
+
+    /// Rejoin a repaired in-rectangle cut (replica re-broadcast with
+    /// the built-in bit-identity check).
+    pub fn rejoin(&mut self, cut: Rect) -> Result<(), FleetError> {
+        let local = placer::to_local(&self.rect, &cut);
+        self.trainer.rejoin_region(local)?;
+        Ok(())
+    }
+
+    /// Move to `target` (migration or shrink): checkpoint the live
+    /// trainer, rebuild at the new origin with the shared cache, and
+    /// restore — the replica crosses the move bit-identically.
+    pub fn move_to(&mut self, target: Rect) -> Result<(), FleetError> {
+        let ck = self.trainer.checkpoint();
+        let mut trainer = build_trainer(&self.model, self.seed, target, Vec::new(), &self.cache)?;
+        std::mem::swap(&mut trainer.metrics, &mut self.trainer.metrics);
+        trainer.restore(ck);
+        trainer.metrics.annotate(
+            trainer.step,
+            format!(
+                "job {} moved to {}x{} at ({},{})",
+                self.spec.id, target.w, target.h, target.x0, target.y0
+            ),
+        );
+        self.trainer = trainer;
+        self.rect = target;
+        Ok(())
+    }
+
+    /// Mean measured per-worker compute over recent steps (the
+    /// adaptive comparison's compute half); nominal before any step.
+    fn measured_compute_s(&self) -> f64 {
+        let records = &self.trainer.metrics.records;
+        let tail = &records[records.len().saturating_sub(5)..];
+        if tail.is_empty() {
+            return 0.01;
+        }
+        let sum: f64 = tail.iter().map(|r| r.compute_s / r.workers.max(1) as f64).sum();
+        sum / tail.len() as f64
+    }
+}
+
+fn build_trainer(
+    model: &str,
+    seed: u64,
+    rect: Rect,
+    failed: Vec<FailedRegion>,
+    cache: &SharedPlanCache,
+) -> Result<DataParallelTrainer, FleetError> {
+    let mut tcfg = TrainerConfig::new(model, rect.w, rect.h);
+    tcfg.x0 = rect.x0;
+    tcfg.y0 = rect.y0;
+    tcfg.seed = seed;
+    tcfg.failed = failed;
+    let runtime = Runtime::cpu().map_err(TrainError::Runtime)?;
+    Ok(DataParallelTrainer::new_with_cache(tcfg, &runtime, cache.clone())?)
+}
+
+/// Configuration of the real-trainer fleet.
+#[derive(Debug, Clone)]
+pub struct TrainedFleetConfig {
+    /// Model config name ("tiny", ...); needs compiled artifacts.
+    pub model: String,
+    pub nx: usize,
+    pub ny: usize,
+}
+
+/// A small multi-job fleet of real trainers on one cluster mesh,
+/// driven by explicit launches, steps and events (tests and examples
+/// script it; the simulated engine handles workload-scale runs).
+pub struct TrainedFleet {
+    pub cfg: TrainedFleetConfig,
+    pub cluster: ClusterState,
+    pub jobs: Vec<TrainedJob>,
+    cache: SharedPlanCache,
+}
+
+impl TrainedFleet {
+    pub fn new(cfg: TrainedFleetConfig) -> Self {
+        let cluster = ClusterState::new(cfg.nx, cfg.ny);
+        Self { cfg, cluster, jobs: Vec::new(), cache: SharedPlanCache::new(64) }
+    }
+
+    /// Counters of the process-wide cache all jobs share.
+    pub fn cache_stats(&self) -> PlanCacheStats {
+        self.cache.stats()
+    }
+
+    fn obstacles_excluding(&self, skip: usize) -> Vec<Rect> {
+        let mut obs: Vec<Rect> = self.cluster.failed_regions().to_vec();
+        for (i, j) in self.jobs.iter().enumerate() {
+            if i != skip {
+                obs.push(j.rect);
+            }
+        }
+        obs
+    }
+
+    /// Place and launch a job; returns its index.
+    pub fn launch(&mut self, spec: JobSpec) -> Result<usize, FleetError> {
+        let obs = self.obstacles_excluding(usize::MAX);
+        let Some(rect) = placer::place_oriented(self.cfg.nx, self.cfg.ny, &obs, spec.w, spec.h)
+        else {
+            return Err(FleetError::Unplaceable(spec.id, spec.w, spec.h));
+        };
+        let job = TrainedJob::launch(&self.cfg.model, spec, rect, self.cache.clone())?;
+        self.jobs.push(job);
+        self.check_invariants()?;
+        Ok(self.jobs.len() - 1)
+    }
+
+    /// One lockstep training step across every job.
+    pub fn step_all(&mut self) -> Result<(), FleetError> {
+        for job in &mut self.jobs {
+            job.step()?;
+        }
+        Ok(())
+    }
+
+    fn migrate_job(&mut self, i: usize, cut: Rect) -> Result<(), FleetError> {
+        let (w, h) = (self.jobs[i].spec.w, self.jobs[i].spec.h);
+        let obs = self.obstacles_excluding(i);
+        let Some(target) = placer::place_oriented(self.cfg.nx, self.cfg.ny, &obs, w, h) else {
+            return self.shrink_job(i, cut);
+        };
+        self.jobs[i].move_to(target)
+    }
+
+    /// Shrink job `i` within its rectangle, avoiding its existing
+    /// holes *and* the freshly failed `cut` (which has not been
+    /// injected into the trainer yet — only `continue_ft` does that).
+    fn shrink_job(&mut self, i: usize, cut: Rect) -> Result<(), FleetError> {
+        let rect = self.jobs[i].rect;
+        let mut local: Vec<Rect> = self.jobs[i].trainer.topology().failed_regions().to_vec();
+        let local_cut = placer::to_local(&rect, &cut);
+        if !local.contains(&local_cut) {
+            local.push(local_cut);
+        }
+        let (lx, ly, lw, lh) = placer::largest_clear_rect(rect.w, rect.h, &local);
+        let sub = (lw * lh > 0)
+            .then(|| placer::even_shrink(&Rect::new(lx, ly, lw, lh)))
+            .flatten();
+        let Some(sub) = sub else {
+            return Err(FleetError::Unschedulable(self.jobs[i].spec.id, rect.w, rect.h));
+        };
+        let target = placer::to_cluster(&rect, &sub);
+        self.jobs[i].move_to(target)
+    }
+
+    /// Adaptive arbitration with *measured* compute: continue-FT on
+    /// the degraded sub-mesh vs migrate to a fresh rectangle, by
+    /// predicted training throughput through the shared cache.
+    fn adaptive_job(&mut self, i: usize, cut: Rect) -> Result<(), FleetError> {
+        let link = LinkModel::tpu_v3();
+        let job = &self.jobs[i];
+        let compute = job.measured_compute_s();
+        let payload = job.trainer.param_count();
+        let local_cut = placer::to_local(&job.rect, &cut);
+        let mut regions = job.trainer.topology().failed_regions().to_vec();
+        regions.push(local_cut);
+        let ft_topo = Topology::with_failures(job.rect.w, job.rect.h, regions);
+        let ft = if ft_topo.is_connected() {
+            predict_candidate_shared(&ft_topo, payload, &link, compute, &self.cache).ok()
+        } else {
+            None
+        };
+        let obs = self.obstacles_excluding(i);
+        let target =
+            placer::place_oriented(self.cfg.nx, self.cfg.ny, &obs, job.spec.w, job.spec.h);
+        let mig = target.and_then(|t| {
+            predict_candidate_shared(&Topology::full(t.w, t.h), payload, &link, compute, &self.cache)
+                .ok()
+                .map(|p| (t, p))
+        });
+        match (ft, mig) {
+            (Some(f), Some((t, m))) => {
+                if f.throughput >= m.throughput {
+                    self.jobs[i].continue_ft(cut)
+                } else {
+                    self.jobs[i].move_to(t)
+                }
+            }
+            (Some(_), None) => self.jobs[i].continue_ft(cut),
+            (None, Some((t, _))) => self.jobs[i].move_to(t),
+            (None, None) => self.shrink_job(i, cut),
+        }
+    }
+
+    /// Apply one cluster event, routing consequences to each affected
+    /// job's policy.
+    pub fn handle(&mut self, event: ClusterEvent) -> Result<(), FleetError> {
+        match event {
+            ClusterEvent::Fail(region) => {
+                self.cluster.fail(region)?;
+                for i in 0..self.jobs.len() {
+                    let rect = self.jobs[i].rect;
+                    let Some(cut) = placer::intersect(&rect, &region) else { continue };
+                    match self.jobs[i].spec.policy {
+                        JobPolicy::Continue => self.jobs[i].continue_ft(cut)?,
+                        JobPolicy::Shrink => self.shrink_job(i, cut)?,
+                        // Queue-wait has no meaning for a lockstep
+                        // trained fleet; approximate with migrate.
+                        JobPolicy::Migrate | JobPolicy::Wait => self.migrate_job(i, cut)?,
+                        JobPolicy::Adaptive => self.adaptive_job(i, cut)?,
+                    }
+                }
+            }
+            ClusterEvent::Repair(region) => {
+                self.cluster.repair(region)?;
+                for i in 0..self.jobs.len() {
+                    let rect = self.jobs[i].rect;
+                    let Some(cut) = placer::intersect(&rect, &region) else { continue };
+                    let local = placer::to_local(&rect, &cut);
+                    let has_hole =
+                        self.jobs[i].trainer.topology().failed_regions().contains(&local);
+                    if has_hole {
+                        self.jobs[i].rejoin(cut)?;
+                    }
+                }
+            }
+            ClusterEvent::CheckpointTick | ClusterEvent::Stop => {}
+        }
+        self.check_invariants()
+    }
+
+    /// The placement invariants over live trainers.
+    pub fn check_invariants(&self) -> Result<(), FleetError> {
+        let fail = |violation: String| FleetError::Invariant { step: 0, violation };
+        let rects: Vec<Rect> = self.jobs.iter().map(|j| j.rect).collect();
+        placer::check_rects(self.cfg.nx, self.cfg.ny, &rects).map_err(|e| fail(e.to_string()))?;
+        for f in self.cluster.failed_regions() {
+            for j in &self.jobs {
+                if let Some(cut) = placer::intersect(&j.rect, f) {
+                    if !j.holes().contains(&cut) {
+                        return Err(fail(format!(
+                            "job {} overlaps failed {f:?} without training around it",
+                            j.spec.id
+                        )));
+                    }
+                }
+            }
+        }
+        for j in &self.jobs {
+            for h in j.holes() {
+                let backed = self
+                    .cluster
+                    .failed_regions()
+                    .iter()
+                    .any(|f| placer::intersect(f, &h) == Some(h));
+                if !backed {
+                    return Err(fail(format!(
+                        "job {} trains around {h:?} which is not a live failure",
+                        j.spec.id
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}

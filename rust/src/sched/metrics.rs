@@ -1,0 +1,175 @@
+//! Fleet metrics: utilization, job completion time, goodput,
+//! migration counts — and the `BENCH_fleet.json` rows.
+
+use super::JobPolicy;
+use crate::collective::PlanCacheStats;
+use crate::util::bench::JsonReport;
+
+/// One sampled point of the fleet's utilization/goodput curve.
+#[derive(Debug, Clone, Copy)]
+pub struct UtilSample {
+    pub step: u64,
+    /// Fraction of *live* chips allocated to running jobs at this
+    /// step.
+    pub utilization: f64,
+    /// Worker-steps of training progress delivered at this step.
+    pub goodput: f64,
+    pub running: usize,
+    pub queued: usize,
+}
+
+/// Per-job outcome of one fleet run.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub id: usize,
+    pub w: usize,
+    pub h: usize,
+    pub policy: JobPolicy,
+    pub arrival_step: u64,
+    /// Fleet step the job finished its work, `None` if the horizon
+    /// ended first.
+    pub completed_at: Option<u64>,
+    pub migrations: u64,
+    pub shrinks: u64,
+    pub ft_continues: u64,
+    /// Fleet steps spent in the queue (arrival wait + queue-wait
+    /// evictions).
+    pub waited_steps: u64,
+}
+
+impl JobOutcome {
+    /// Job completion time: arrival to completion, in fleet steps.
+    pub fn jct(&self) -> Option<u64> {
+        self.completed_at.map(|c| c.saturating_sub(self.arrival_step))
+    }
+}
+
+/// Aggregate outcome of one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetSummary {
+    pub horizon: u64,
+    pub arrivals: usize,
+    pub completed: usize,
+    /// Mean / median JCT over completed jobs (fleet steps; 0 when none
+    /// completed).
+    pub mean_jct: f64,
+    pub median_jct: f64,
+    /// Mean fraction of live chips allocated over the horizon.
+    pub mean_utilization: f64,
+    /// Mean worker-steps of training progress delivered per fleet
+    /// step — the figure the migrate-vs-continue arbitration moves.
+    pub goodput: f64,
+    pub migrations: u64,
+    pub shrinks: u64,
+    pub ft_continues: u64,
+    /// Recovery decisions that sent a job back to the queue.
+    pub queue_waits: u64,
+    /// Fail/repair events replayed.
+    pub transitions: u64,
+    pub cache: PlanCacheStats,
+}
+
+/// One fleet run: summary + per-job outcomes + sampled curves + the
+/// annotated event log.
+#[derive(Debug, Clone)]
+pub struct FleetRun {
+    /// Policy label ("continue-ft", "migrate", ..., or "mixed").
+    pub label: String,
+    pub summary: FleetSummary,
+    pub jobs: Vec<JobOutcome>,
+    pub samples: Vec<UtilSample>,
+    pub events: Vec<(u64, String)>,
+}
+
+/// Mean and median of a (small) sample.
+pub(crate) fn mean_median(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let mid = sorted.len() / 2;
+    let median = if sorted.len() % 2 == 1 {
+        sorted[mid]
+    } else {
+        0.5 * (sorted[mid - 1] + sorted[mid])
+    };
+    (mean, median)
+}
+
+/// Append one run's summary + curves to a `BENCH_fleet.json` report:
+/// a `fleet_<label>` summary entry and one `fleet_<label>_t<step>`
+/// entry per utilization/goodput sample.
+pub fn push_run(report: &mut JsonReport, run: &FleetRun) {
+    let s = &run.summary;
+    report.push(
+        &format!("fleet_{}", run.label),
+        if s.goodput > 0.0 { 1.0 / s.goodput } else { 0.0 },
+        0.0,
+        &[
+            ("goodput", s.goodput),
+            ("mean_utilization", s.mean_utilization),
+            ("mean_jct", s.mean_jct),
+            ("median_jct", s.median_jct),
+            ("completed", s.completed as f64),
+            ("arrivals", s.arrivals as f64),
+            ("migrations", s.migrations as f64),
+            ("shrinks", s.shrinks as f64),
+            ("ft_continues", s.ft_continues as f64),
+            ("queue_waits", s.queue_waits as f64),
+            ("transitions", s.transitions as f64),
+            ("cache_hit_rate", s.cache.hit_rate()),
+            ("incremental_compiles", s.cache.incremental_compiles as f64),
+            ("step_splice_rate", s.cache.step_splice_rate()),
+            ("persist_loaded", s.cache.persist_loaded as f64),
+        ],
+    );
+    for p in &run.samples {
+        report.push(
+            &format!("fleet_{}_t{}", run.label, p.step),
+            0.0,
+            0.0,
+            &[
+                ("step", p.step as f64),
+                ("utilization", p.utilization),
+                ("goodput", p.goodput),
+                ("running", p.running as f64),
+                ("queued", p.queued as f64),
+            ],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jct_is_completion_minus_arrival() {
+        let j = JobOutcome {
+            id: 0,
+            w: 4,
+            h: 4,
+            policy: JobPolicy::Adaptive,
+            arrival_step: 10,
+            completed_at: Some(250),
+            migrations: 1,
+            shrinks: 0,
+            ft_continues: 2,
+            waited_steps: 3,
+        };
+        assert_eq!(j.jct(), Some(240));
+        let unfinished = JobOutcome { completed_at: None, ..j };
+        assert_eq!(unfinished.jct(), None);
+    }
+
+    #[test]
+    fn mean_median_handles_odd_even_empty() {
+        assert_eq!(mean_median(&[]), (0.0, 0.0));
+        let (m, md) = mean_median(&[1.0, 3.0, 2.0]);
+        assert!((m - 2.0).abs() < 1e-12 && (md - 2.0).abs() < 1e-12);
+        let (m, md) = mean_median(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((m - 2.5).abs() < 1e-12 && (md - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,163 @@
+//! Multi-tenant fleet scheduler: place, run, and heal many jobs on one
+//! mesh.
+//!
+//! The paper keeps *one* training job alive by routing allreduce
+//! traffic around holes; a production fleet runs **many concurrent
+//! jobs on one mesh**, and every failure raises a *placement* question
+//! — which jobs shrink, migrate, or continue fault-tolerant — not just
+//! a routing one. This subsystem arbitrates the mesh between jobs:
+//!
+//! - [`workload`] — seeded arrival/size/duration job workloads
+//!   (exponential inter-arrival and duration, shapes drawn from a
+//!   board/host-aligned set; equal seeds give identical fleets);
+//! - [`placer`] — the 2-D rectangle placer. Candidate corners come
+//!   from the *obstacle boundary grid* (the same observation behind
+//!   `largest_submesh`: every maximal empty rectangle has its edges on
+//!   obstacle boundaries or the mesh edge), pushed bottom-left-first,
+//!   and snapped to **even** coordinates so any failed region that
+//!   later lands inside a job's rectangle stays even-aligned in the
+//!   job's local coordinates — the fault-tolerant planner's
+//!   precondition. [`placer::largest_clear_rect`] is the exact
+//!   boundary-grid max-empty-rectangle over arbitrary obstacle sets
+//!   (failed regions *and* placed jobs);
+//! - [`fleet`] — the deterministic fleet loop. It consumes the
+//!   existing `cluster::EventQueue` and routes each fail/repair to the
+//!   affected job's [`JobPolicy`]: **continue-FT** in place (the
+//!   paper's scheme on the job's sub-mesh), **shrink-restart** (the
+//!   largest clear even sub-rectangle of its own allocation),
+//!   **migrate** (a fresh rectangle elsewhere, paying restart +
+//!   rollback), or **queue-wait**. [`JobPolicy::Adaptive`] arbitrates
+//!   per event by predicted *effective throughput* over the expected
+//!   time-to-next-event (the MTBF posterior), folding in each
+//!   candidate's one-off costs — the Chameleon-style selection the
+//!   coordinator applies to one job, generalised to a fleet. Repairs
+//!   rejoin in-place holes, grow shrunk jobs back, and trigger
+//!   **defragmenting re-placement** (bottom-left repack, largest
+//!   first) when the queue head still does not fit;
+//! - [`job`] — the real-trainer path: every placed job drives a
+//!   `DataParallelTrainer` on its sub-mesh, anchored at its physical
+//!   origin via `TrainerConfig::{x0, y0}`, all jobs sharing one
+//!   process-wide `SharedPlanCache` so equal shapes reuse compiled
+//!   plans; migrations checkpoint/restore the replica bit-identically;
+//! - [`metrics`] — utilization / job-completion-time / goodput
+//!   accounting and the `BENCH_fleet.json` rows.
+//!
+//! Placement invariants (checked every fleet step, and property-tested
+//! in `rust/tests/fleet_placement.rs`): job rectangles fit the mesh
+//! and are pairwise disjoint; every overlap between a live failed
+//! region and a job rectangle is a registered hole of exactly that
+//! job; new placements never overlap live failed regions.
+
+pub mod fleet;
+pub mod job;
+pub mod metrics;
+pub mod placer;
+pub mod workload;
+
+use crate::cluster::ClusterError;
+use crate::collective::PlanError;
+use crate::simnet::SimError;
+use crate::trainer::TrainError;
+use thiserror::Error;
+
+pub use fleet::{compare_policies, run_fleet, run_with_cache, FleetConfig};
+pub use job::{TrainedFleet, TrainedFleetConfig, TrainedJob};
+pub use metrics::{FleetRun, FleetSummary, JobOutcome, UtilSample};
+pub use placer::{largest_clear_rect, place, place_oriented, Rect};
+pub use workload::WorkloadModel;
+
+#[derive(Debug, Error)]
+pub enum FleetError {
+    #[error("plan: {0}")]
+    Plan(#[from] PlanError),
+    #[error("simulation: {0}")]
+    Sim(#[from] SimError),
+    #[error("cluster event rejected: {0}")]
+    Cluster(#[from] ClusterError),
+    #[error("train: {0}")]
+    Train(#[from] TrainError),
+    #[error("placement invariant violated at step {step}: {violation}")]
+    Invariant { step: u64, violation: String },
+    #[error("job {0}: {1}x{2} can never fit the mesh")]
+    Unplaceable(usize, usize, usize),
+    #[error("job {0}: hole-free {1}x{2} sub-mesh is not schedulable")]
+    Unschedulable(usize, usize, usize),
+}
+
+/// Per-job recovery policy — what the fleet does to *this* job when a
+/// failure intersects its rectangle (the fleet-level generalisation of
+/// the coordinator's `RecoveryPolicy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobPolicy {
+    /// Continue fault-tolerant in place: keep the rectangle, route the
+    /// allreduce around the in-rectangle hole (the paper's scheme).
+    Continue,
+    /// Restart from checkpoint on the largest clear even sub-rectangle
+    /// of the job's own allocation.
+    Shrink,
+    /// Restart from checkpoint on a freshly placed rectangle elsewhere
+    /// on the mesh.
+    Migrate,
+    /// Release the rectangle and wait in the queue until placeable.
+    Wait,
+    /// Pick among the above per event by predicted effective
+    /// throughput over the expected time-to-next-event.
+    Adaptive,
+}
+
+impl JobPolicy {
+    pub const ALL: [JobPolicy; 5] = [
+        JobPolicy::Continue,
+        JobPolicy::Shrink,
+        JobPolicy::Migrate,
+        JobPolicy::Wait,
+        JobPolicy::Adaptive,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobPolicy::Continue => "continue-ft",
+            JobPolicy::Shrink => "shrink",
+            JobPolicy::Migrate => "migrate",
+            JobPolicy::Wait => "wait",
+            JobPolicy::Adaptive => "adaptive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|p| p.name() == s)
+    }
+}
+
+/// One job of a fleet workload.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: usize,
+    /// Fleet step at which the job enters the queue.
+    pub arrival_step: u64,
+    /// Requested sub-mesh shape (even dims; the placer may rotate).
+    pub w: usize,
+    pub h: usize,
+    /// Training steps of work the job must complete.
+    pub duration_steps: u64,
+    pub policy: JobPolicy,
+}
+
+impl JobSpec {
+    pub fn chips(&self) -> usize {
+        self.w * self.h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_policy_names_roundtrip() {
+        for p in JobPolicy::ALL {
+            assert_eq!(JobPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(JobPolicy::parse("??"), None);
+    }
+}

@@ -1,0 +1,344 @@
+//! 2-D rectangle placement over the obstacle boundary grid.
+//!
+//! Obstacles are failed regions *and* already-placed job rectangles —
+//! both are axis-aligned rectangles, so [`FailedRegion`]'s geometry is
+//! reused as the [`Rect`] type. Two primitives:
+//!
+//! - [`place`] — bottom-left placement of a `w x h` rectangle. The
+//!   candidate corner set is drawn from the obstacle boundary grid
+//!   (mesh edges, obstacle right/top edges, obstacle left/bottom edges
+//!   minus the rectangle size) snapped to even coordinates, which is
+//!   *complete* for even placements: pushing any valid placement down
+//!   then left (in steps of two) stops on a boundary-grid candidate.
+//!   Even snapping keeps every future in-rectangle failed region
+//!   even-aligned in the job's local coordinates — the fault-tolerant
+//!   planner's precondition (paper Fig 8).
+//! - [`largest_clear_rect`] — exact maximum-empty-rectangle over the
+//!   boundary grid (every maximal empty rectangle has its edges on
+//!   obstacle boundaries or the mesh edge). `largest_submesh` in
+//!   `coordinator::policy` is the failed-regions-only special case and
+//!   delegates here.
+
+use crate::mesh::FailedRegion;
+use thiserror::Error;
+
+/// Axis-aligned rectangle on the cluster mesh (`x0`, `y0`, `w`, `h`).
+pub type Rect = FailedRegion;
+
+/// A violated placement invariant (see the module docs of
+/// [`crate::sched`]).
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum PlacementViolation {
+    #[error("rectangle {0:?} leaves the {1}x{2} mesh")]
+    OutOfBounds(Rect, usize, usize),
+    #[error("rectangles {0:?} and {1:?} overlap")]
+    Overlap(Rect, Rect),
+}
+
+/// Bounds + pairwise-disjointness check over a set of placed
+/// rectangles.
+pub fn check_rects(nx: usize, ny: usize, rects: &[Rect]) -> Result<(), PlacementViolation> {
+    for (i, r) in rects.iter().enumerate() {
+        if r.x1() > nx || r.y1() > ny {
+            return Err(PlacementViolation::OutOfBounds(*r, nx, ny));
+        }
+        if let Some(other) = rects[i + 1..].iter().find(|o| o.overlaps(r)) {
+            return Err(PlacementViolation::Overlap(*r, *other));
+        }
+    }
+    Ok(())
+}
+
+/// Intersection of two rectangles, if non-empty.
+pub fn intersect(a: &Rect, b: &Rect) -> Option<Rect> {
+    let x0 = a.x0.max(b.x0);
+    let y0 = a.y0.max(b.y0);
+    let x1 = a.x1().min(b.x1());
+    let y1 = a.y1().min(b.y1());
+    if x0 < x1 && y0 < y1 {
+        Some(Rect::new(x0, y0, x1 - x0, y1 - y0))
+    } else {
+        None
+    }
+}
+
+/// Translate `r` (cluster coords, fully inside `rect`) into `rect`'s
+/// local coordinates.
+pub fn to_local(rect: &Rect, r: &Rect) -> Rect {
+    debug_assert!(r.x0 >= rect.x0 && r.y0 >= rect.y0 && r.x1() <= rect.x1() && r.y1() <= rect.y1());
+    Rect::new(r.x0 - rect.x0, r.y0 - rect.y0, r.w, r.h)
+}
+
+/// Translate `r` from `rect`'s local coordinates back to cluster
+/// coordinates.
+pub fn to_cluster(rect: &Rect, r: &Rect) -> Rect {
+    Rect::new(rect.x0 + r.x0, rect.y0 + r.y0, r.w, r.h)
+}
+
+fn even_up(v: usize) -> usize {
+    v + (v & 1)
+}
+
+fn even_down(v: usize) -> usize {
+    v & !1usize
+}
+
+/// Bottom-left placement of a `w x h` rectangle avoiding every
+/// obstacle, restricted to even-aligned positions. Returns the
+/// placement with minimal `(y0, x0)`, or `None` when no even-aligned
+/// position fits.
+pub fn place(nx: usize, ny: usize, obstacles: &[Rect], w: usize, h: usize) -> Option<Rect> {
+    if w == 0 || h == 0 || w > nx || h > ny {
+        return None;
+    }
+    let mut xs: Vec<usize> = vec![0, even_down(nx - w)];
+    let mut ys: Vec<usize> = vec![0, even_down(ny - h)];
+    for ob in obstacles {
+        xs.push(even_up(ob.x1()));
+        xs.push(even_down(ob.x0.saturating_sub(w)));
+        ys.push(even_up(ob.y1()));
+        ys.push(even_down(ob.y0.saturating_sub(h)));
+    }
+    xs.retain(|&x| x + w <= nx);
+    ys.retain(|&y| y + h <= ny);
+    xs.sort_unstable();
+    xs.dedup();
+    ys.sort_unstable();
+    ys.dedup();
+    for &y in &ys {
+        for &x in &xs {
+            let r = Rect::new(x, y, w, h);
+            if obstacles.iter().all(|ob| !ob.overlaps(&r)) {
+                return Some(r);
+            }
+        }
+    }
+    None
+}
+
+/// [`place`] trying both orientations (`w x h` first, then rotated);
+/// when both fit, the lower `(y0, x0)` corner wins, ties preferring
+/// the requested orientation.
+pub fn place_oriented(
+    nx: usize,
+    ny: usize,
+    obstacles: &[Rect],
+    w: usize,
+    h: usize,
+) -> Option<Rect> {
+    let a = place(nx, ny, obstacles, w, h);
+    if w == h {
+        return a;
+    }
+    let b = place(nx, ny, obstacles, h, w);
+    match (a, b) {
+        (Some(ra), Some(rb)) => {
+            if (rb.y0, rb.x0) < (ra.y0, ra.x0) {
+                Some(rb)
+            } else {
+                Some(ra)
+            }
+        }
+        (a, b) => a.or(b),
+    }
+}
+
+/// Largest axis-aligned clear rectangle of `nx x ny` avoiding **all**
+/// `obstacles`, as `(x0, y0, w, h)`. Ties prefer more chips, then
+/// wider shapes. With no obstacles the answer is the full mesh.
+///
+/// The candidate edges are drawn from the obstacle boundary grid
+/// (every maximal empty rectangle has its edges on obstacle boundaries
+/// or the mesh edge), so the result is exact for any number of
+/// disjoint rectangular obstacles.
+pub fn largest_clear_rect(
+    nx: usize,
+    ny: usize,
+    obstacles: &[Rect],
+) -> (usize, usize, usize, usize) {
+    let mut xs = vec![0, nx];
+    let mut ys = vec![0, ny];
+    for r in obstacles {
+        xs.push(r.x0.min(nx));
+        xs.push(r.x1().min(nx));
+        ys.push(r.y0.min(ny));
+        ys.push(r.y1().min(ny));
+    }
+    xs.sort_unstable();
+    xs.dedup();
+    ys.sort_unstable();
+    ys.dedup();
+
+    let clear = |x0: usize, y0: usize, x1: usize, y1: usize| {
+        let candidate = Rect::new(x0, y0, x1 - x0, y1 - y0);
+        obstacles.iter().all(|r| !r.overlaps(&candidate))
+    };
+
+    let mut best = (0, 0, 0, 0);
+    let mut best_key = (0usize, 0usize);
+    for (i, &x0) in xs.iter().enumerate() {
+        for &x1 in &xs[i + 1..] {
+            for (j, &y0) in ys.iter().enumerate() {
+                for &y1 in &ys[j + 1..] {
+                    if !clear(x0, y0, x1, y1) {
+                        continue;
+                    }
+                    let (w, h) = (x1 - x0, y1 - y0);
+                    let key = (w * h, w);
+                    if key > best_key {
+                        best_key = key;
+                        best = (x0, y0, w, h);
+                    }
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Largest *even-aligned, even-sized* sub-rectangle of a local clear
+/// rectangle: origin rounded up to even, dims rounded down. `None`
+/// when fewer than 2x2 chips remain — the smallest schedulable
+/// sub-mesh.
+pub fn even_shrink(r: &Rect) -> Option<Rect> {
+    let x0 = even_up(r.x0);
+    let y0 = even_up(r.y0);
+    if x0 >= r.x1() || y0 >= r.y1() {
+        return None;
+    }
+    let w = even_down(r.x1() - x0);
+    let h = even_down(r.y1() - y0);
+    if w < 2 || h < 2 {
+        return None;
+    }
+    Some(Rect::new(x0, y0, w, h))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop;
+
+    /// Brute-force bottom-left over even positions — the oracle for
+    /// [`place`]'s boundary-grid candidate set.
+    fn place_brute(nx: usize, ny: usize, obstacles: &[Rect], w: usize, h: usize) -> Option<Rect> {
+        if w == 0 || h == 0 || w > nx || h > ny {
+            return None;
+        }
+        for y in (0..=ny - h).step_by(2) {
+            for x in (0..=nx - w).step_by(2) {
+                let r = Rect::new(x, y, w, h);
+                if obstacles.iter().all(|ob| !ob.overlaps(&r)) {
+                    return Some(r);
+                }
+            }
+        }
+        None
+    }
+
+    fn random_obstacles(rng: &mut crate::util::rng::SplitMix64, nx: usize, ny: usize) -> Vec<Rect> {
+        let mut obs: Vec<Rect> = Vec::new();
+        for _ in 0..rng.usize_in(0, 6) {
+            let w = 2 * rng.usize_in(1, 4);
+            let h = 2 * rng.usize_in(1, 4);
+            if w > nx || h > ny {
+                continue;
+            }
+            let x0 = even_down(rng.usize_in(0, nx - w + 1));
+            let y0 = even_down(rng.usize_in(0, ny - h + 1));
+            let r = Rect::new(x0, y0, w, h);
+            if obs.iter().all(|o| !o.overlaps(&r)) {
+                obs.push(r);
+            }
+        }
+        obs
+    }
+
+    #[test]
+    fn prop_place_matches_brute_force_bottom_left() {
+        prop("place == brute-force", |rng| {
+            let nx = 2 * rng.usize_in(2, 10);
+            let ny = 2 * rng.usize_in(2, 10);
+            let obs = random_obstacles(rng, nx, ny);
+            let w = 2 * rng.usize_in(1, 5);
+            let h = 2 * rng.usize_in(1, 5);
+            let got = place(nx, ny, &obs, w, h);
+            let want = place_brute(nx, ny, &obs, w, h);
+            assert_eq!(got, want, "{nx}x{ny} place {w}x{h} among {obs:?}");
+            if let Some(r) = got {
+                assert!(r.x0 % 2 == 0 && r.y0 % 2 == 0, "even-aligned: {r:?}");
+                assert!(r.x1() <= nx && r.y1() <= ny);
+                for ob in &obs {
+                    assert!(!ob.overlaps(&r));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn place_prefers_bottom_left_and_respects_obstacles() {
+        // A 2x2 obstacle at the origin pushes the placement right.
+        let obs = [Rect::new(0, 0, 2, 2)];
+        assert_eq!(place(8, 8, &obs, 4, 4), Some(Rect::new(2, 0, 4, 4)));
+        // Full bottom strip occupied: next row band up.
+        let strip = [Rect::new(0, 0, 8, 4)];
+        assert_eq!(place(8, 8, &strip, 4, 4), Some(Rect::new(0, 4, 4, 4)));
+        // No room at all.
+        assert_eq!(place(4, 4, &[Rect::new(0, 0, 4, 4)], 2, 2), None);
+        assert_eq!(place(4, 4, &[], 6, 2), None);
+    }
+
+    #[test]
+    fn place_oriented_rotates_when_needed() {
+        // Only a 2-wide, 6-tall column is free: a 6x2 request must
+        // rotate.
+        let obs = [Rect::new(2, 0, 6, 8)];
+        let r = place_oriented(8, 8, &obs, 6, 2).unwrap();
+        assert_eq!((r.w, r.h), (2, 6));
+        assert_eq!((r.x0, r.y0), (0, 0));
+        // Square requests skip the rotation.
+        assert_eq!(place_oriented(8, 8, &[], 4, 4), place(8, 8, &[], 4, 4));
+    }
+
+    #[test]
+    fn largest_clear_rect_counts_job_obstacles_too() {
+        // One failed board + one placed job: the clear rect avoids
+        // both (the generalisation largest_submesh cannot express).
+        let obs = [Rect::new(0, 0, 2, 2), Rect::new(4, 0, 4, 8)];
+        let (x0, y0, w, h) = largest_clear_rect(8, 8, &obs);
+        assert_eq!((x0, y0, w, h), (0, 2, 4, 6));
+    }
+
+    #[test]
+    fn even_shrink_rounds_inward() {
+        assert_eq!(even_shrink(&Rect::new(1, 1, 5, 5)), Some(Rect::new(2, 2, 4, 4)));
+        assert_eq!(even_shrink(&Rect::new(0, 0, 4, 4)), Some(Rect::new(0, 0, 4, 4)));
+        assert_eq!(even_shrink(&Rect::new(1, 0, 2, 4)), None); // 1 col left
+        assert_eq!(even_shrink(&Rect::new(0, 0, 1, 1)), None);
+    }
+
+    #[test]
+    fn intersect_and_translate_roundtrip() {
+        let rect = Rect::new(4, 2, 8, 6);
+        let region = Rect::new(2, 4, 4, 4);
+        let cut = intersect(&rect, &region).unwrap();
+        assert_eq!(cut, Rect::new(4, 4, 2, 2));
+        let local = to_local(&rect, &cut);
+        assert_eq!(local, Rect::new(0, 2, 2, 2));
+        assert_eq!(to_cluster(&rect, &local), cut);
+        assert_eq!(intersect(&rect, &Rect::new(0, 0, 2, 2)), None);
+    }
+
+    #[test]
+    fn check_rects_flags_violations() {
+        assert!(check_rects(8, 8, &[Rect::new(0, 0, 4, 4), Rect::new(4, 4, 4, 4)]).is_ok());
+        assert!(matches!(
+            check_rects(8, 8, &[Rect::new(6, 6, 4, 2)]),
+            Err(PlacementViolation::OutOfBounds(..))
+        ));
+        assert!(matches!(
+            check_rects(8, 8, &[Rect::new(0, 0, 4, 4), Rect::new(2, 2, 4, 4)]),
+            Err(PlacementViolation::Overlap(..))
+        ));
+    }
+}

@@ -1,0 +1,127 @@
+//! Seeded fleet workloads: job arrival, size and duration processes.
+//!
+//! Like the MTBF process, a workload is a pure function of its seed —
+//! the property every fleet comparison relies on: two policy runs over
+//! the same seed replay *identical* job fleets, so goodput deltas are
+//! attributable to the policy, not the draw. Inter-arrival gaps and
+//! durations are exponential (the standard open-arrival cluster
+//! model); shapes are drawn uniformly from a board/host-aligned set.
+
+use super::{JobPolicy, JobSpec};
+use crate::cluster::mtbf::exp_steps;
+use crate::util::rng::SplitMix64;
+
+/// Parameters of the job arrival process.
+#[derive(Debug, Clone)]
+pub struct WorkloadModel {
+    /// RNG seed; equal seeds give identical workloads.
+    pub seed: u64,
+    /// Number of jobs to generate.
+    pub jobs: usize,
+    /// Mean fleet steps between arrivals (exponential; the first job
+    /// arrives at step 0 so every run has work immediately).
+    pub mean_interarrival_steps: f64,
+    /// Mean job length in training steps (exponential, shifted by
+    /// `min_duration_steps`).
+    pub mean_duration_steps: f64,
+    pub min_duration_steps: u64,
+    /// Candidate sub-mesh shapes, drawn uniformly (even dims).
+    pub shapes: Vec<(usize, usize)>,
+    /// Per-job recovery policies, drawn uniformly (a fleet-level
+    /// override replaces them for per-policy comparisons).
+    pub policies: Vec<JobPolicy>,
+}
+
+impl WorkloadModel {
+    /// Paper-scale default: jobs sized for a 16x32 mesh.
+    pub fn paper_scale(seed: u64) -> Self {
+        Self {
+            seed,
+            jobs: 8,
+            mean_interarrival_steps: 120.0,
+            mean_duration_steps: 700.0,
+            min_duration_steps: 200,
+            shapes: vec![(8, 8), (8, 4), (4, 4), (4, 2)],
+            policies: vec![JobPolicy::Adaptive],
+        }
+    }
+
+    /// Reduced workload for CI and tests (same mesh scale, shorter
+    /// jobs).
+    pub fn quick(seed: u64) -> Self {
+        Self {
+            seed,
+            jobs: 6,
+            mean_interarrival_steps: 30.0,
+            mean_duration_steps: 150.0,
+            min_duration_steps: 60,
+            shapes: vec![(8, 8), (8, 4), (4, 4)],
+            policies: vec![JobPolicy::Adaptive],
+        }
+    }
+
+    /// Sample the workload: job specs sorted by arrival step.
+    pub fn generate(&self) -> Vec<JobSpec> {
+        let mut rng = SplitMix64::new(self.seed ^ 0x464c_4545_5400_0000); // "FLEET"
+        let mut out = Vec::with_capacity(self.jobs);
+        let mut t = 0u64;
+        for id in 0..self.jobs {
+            if id > 0 {
+                t = t.saturating_add(exp_steps(&mut rng, self.mean_interarrival_steps));
+            }
+            let (w, h) = *rng.choose(&self.shapes);
+            let duration_steps =
+                self.min_duration_steps + exp_steps(&mut rng, self.mean_duration_steps);
+            let policy = *rng.choose(&self.policies);
+            out.push(JobSpec { id, arrival_step: t, w, h, duration_steps, policy });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_workload() {
+        let m = WorkloadModel::quick(7);
+        let a = m.generate();
+        let b = m.generate();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                (x.id, x.arrival_step, x.w, x.h, x.duration_steps, x.policy),
+                (y.id, y.arrival_step, y.w, y.h, y.duration_steps, y.policy)
+            );
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let a = WorkloadModel::quick(1).generate();
+        let b = WorkloadModel::quick(2).generate();
+        let same = a
+            .iter()
+            .zip(&b)
+            .filter(|(x, y)| x.arrival_step == y.arrival_step && x.duration_steps == y.duration_steps)
+            .count();
+        assert!(same < a.len(), "independent draws should differ somewhere");
+    }
+
+    #[test]
+    fn workload_is_well_formed() {
+        let m = WorkloadModel::paper_scale(3);
+        let jobs = m.generate();
+        assert_eq!(jobs.len(), m.jobs);
+        assert_eq!(jobs[0].arrival_step, 0, "first job arrives immediately");
+        for w in jobs.windows(2) {
+            assert!(w[0].arrival_step <= w[1].arrival_step, "arrivals sorted");
+        }
+        for j in &jobs {
+            assert!(m.shapes.contains(&(j.w, j.h)));
+            assert!(j.duration_steps >= m.min_duration_steps);
+            assert!(j.w % 2 == 0 && j.h % 2 == 0);
+        }
+    }
+}

@@ -23,7 +23,8 @@ pub mod metrics;
 pub mod optimizer;
 
 use crate::collective::{
-    execute_compiled, CompiledSchedule, ExecutorArena, NodeBuffers, PlanCache, PlanError, Scheme,
+    execute_compiled, CompiledSchedule, ExecutorArena, NodeBuffers, PlanCacheStats, PlanError,
+    Scheme, SharedPlanCache,
 };
 use crate::mesh::{Coord, FailedRegion, Mesh, Topology};
 use crate::runtime::{ArtifactSet, Runtime, TrainStepExec};
@@ -118,9 +119,11 @@ pub struct DataParallelTrainer {
     plan: Arc<CompiledSchedule>,
     /// Topology-keyed compiled-plan cache: fail→repair→fail cycles
     /// revisit topologies, and adjacent topologies recompile
-    /// incrementally. Carried across restarts by the coordinator
-    /// ([`Self::take_cache`]).
-    cache: PlanCache,
+    /// incrementally. A process-wide *shared* handle: the coordinator
+    /// carries it across restarts ([`Self::shared_cache`]) and the
+    /// fleet scheduler hands one cache to every job's trainer, so jobs
+    /// on equal sub-mesh shapes reuse each other's plans.
+    cache: SharedPlanCache,
     exec: Arc<TrainStepExec>,
     pub params: Vec<f32>,
     opt: SgdOptimizer,
@@ -132,16 +135,18 @@ pub struct DataParallelTrainer {
 
 impl DataParallelTrainer {
     pub fn new(cfg: TrainerConfig, runtime: &Runtime) -> Result<Self, TrainError> {
-        Self::new_with_cache(cfg, runtime, PlanCache::default())
+        Self::new_with_cache(cfg, runtime, SharedPlanCache::default())
     }
 
-    /// Build a trainer around an existing plan cache — the coordinator
-    /// hands the cache from the outgoing trainer to its replacement on
-    /// restarts, so plans survive sub-mesh round-trips.
+    /// Build a trainer around an existing (shared) plan cache — the
+    /// coordinator hands the cache from the outgoing trainer to its
+    /// replacement on restarts, and the fleet scheduler hands one
+    /// process-wide cache to every job, so plans survive sub-mesh
+    /// round-trips and migrations.
     pub fn new_with_cache(
         cfg: TrainerConfig,
         runtime: &Runtime,
-        mut cache: PlanCache,
+        cache: SharedPlanCache,
     ) -> Result<Self, TrainError> {
         let set = ArtifactSet::locate(&cfg.artifacts_dir, &cfg.model)?;
         let exec = Arc::new(TrainStepExec::load(runtime, &set)?);
@@ -187,22 +192,17 @@ impl DataParallelTrainer {
     }
 
     /// Compiled-plan cache counters (hits, misses, incremental
-    /// recompiles, compile latency).
-    pub fn cache_stats(&self) -> &crate::collective::PlanCacheStats {
+    /// recompiles, compile latency) — a snapshot of the shared cache.
+    pub fn cache_stats(&self) -> PlanCacheStats {
         self.cache.stats()
     }
 
-    /// Mutable access to the plan cache, so the coordinator's what-if
-    /// predictions (`perfmodel::predict_candidate_cached`) share the
-    /// trainer's compiled plans instead of re-compiling per event.
-    pub fn cache_mut(&mut self) -> &mut PlanCache {
-        &mut self.cache
-    }
-
-    /// Surrender the plan cache (replacing it with an empty one) so a
-    /// successor trainer can keep the compiled plans.
-    pub fn take_cache(&mut self) -> PlanCache {
-        std::mem::take(&mut self.cache)
+    /// Another handle to this trainer's (shared) plan cache, so the
+    /// coordinator's what-if predictions
+    /// (`perfmodel::predict_candidate_shared`) and successor trainers
+    /// reuse the compiled plans instead of re-compiling per event.
+    pub fn shared_cache(&self) -> SharedPlanCache {
+        self.cache.clone()
     }
 
     pub fn num_workers(&self) -> usize {
