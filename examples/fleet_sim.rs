@@ -8,11 +8,16 @@
 //!     cargo run --release --example fleet_sim -- --paper # full paper-scale fleet
 //!
 //! Writes `BENCH_fleet.json` (path override: `MESHREDUCE_BENCH_JSON`).
-//! Also demonstrates plan-cache persistence: the warmed process-wide
-//! cache is saved and re-loaded, and the reloaded run's first visits
-//! become hits.
+//! Also demonstrates plan-cache persistence (the warmed process-wide
+//! cache is saved, re-loaded, and the reloaded run's first visits
+//! become hits) and the wall-clock engine: the contention-off replay
+//! is checked bit-identical to round-robin (EXPERIMENTS.md
+//! §Contention), then contention is switched on and the
+//! dilation/hotspot figures are printed and recorded.
 
-use meshreduce::sched::{metrics, run_with_cache, FleetConfig, JobPolicy};
+use meshreduce::sched::{
+    metrics, run_fleet, run_with_cache, ClockMode, ContentionModel, FleetConfig, JobPolicy,
+};
 use meshreduce::util::bench::JsonReport;
 
 fn main() -> anyhow::Result<()> {
@@ -48,6 +53,7 @@ fn main() -> anyhow::Result<()> {
     let policies = [JobPolicy::Continue, JobPolicy::Migrate, JobPolicy::Adaptive];
     let mut report = JsonReport::new();
     let mut warmed = None;
+    let mut reference = None;
     println!("\nper-policy comparison (same workload, same failures):");
     for p in policies {
         let mut c = cfg.clone();
@@ -73,13 +79,16 @@ fn main() -> anyhow::Result<()> {
         );
         metrics::push_run(&mut report, &run);
         if warmed.is_none() {
-            // Keep the first policy's annotated event log + cache.
+            // Keep the first policy's annotated event log + cache, and
+            // its run as the wall-clock differential reference below.
             for (t, e) in run.events.iter().take(12) {
                 println!("      [t={t:>4}] {e}");
             }
             warmed = Some(cache);
+            reference = Some(run);
         }
     }
+    let reference = reference.expect("at least one policy ran");
 
     // Plan-cache persistence round-trip: save the warmed cache, reload
     // it, and re-run — first visits to persisted topologies are hits.
@@ -100,6 +109,44 @@ fn main() -> anyhow::Result<()> {
             rerun.summary.cache.persist_loaded,
         );
     }
+
+    // Wall-clock engine: differential check against the round-robin
+    // Continue run already computed above, then the contention-on
+    // replay with dilation + hotspot curves.
+    let mut wall = cfg.clone();
+    wall.policy = Some(JobPolicy::Continue);
+    wall.clock = ClockMode::WallClock;
+    let wall_run = run_fleet(&wall)?;
+    anyhow::ensure!(
+        reference.summary.goodput.to_bits() == wall_run.summary.goodput.to_bits()
+            && reference.events == wall_run.events,
+        "wall-clock engine (contention off) must replay round-robin bit-for-bit"
+    );
+    println!(
+        "\nwall-clock differential: goodput {:.1} == round-robin {:.1} (bit-identical trace)",
+        wall_run.summary.goodput, reference.summary.goodput
+    );
+
+    let mut contended = wall.clone();
+    contended.contention = Some(ContentionModel::tpu_default());
+    let mut run = run_fleet(&contended)?;
+    run.label = "wall-contended".to_string();
+    let s = &run.summary;
+    println!(
+        "wall-clock + contention: goodput {:.1}, mean dilation {:.4}, max dilation {:.4}, \
+         {} link epochs",
+        s.goodput, s.mean_dilation, s.max_dilation, s.contention_epochs
+    );
+    for h in run.hotspots.iter().take(4) {
+        println!(
+            "  hotspot ({},{}) {}: mean occupancy {:.3}",
+            h.x,
+            h.y,
+            h.dir_name(),
+            h.mean_occupancy
+        );
+    }
+    metrics::push_run(&mut report, &run);
 
     let written = report.write("BENCH_fleet.json")?;
     println!("\nfleet record written to {written}");

@@ -4,13 +4,21 @@
 //!     cargo run --release --bin fleet                    # 16x32, 8 jobs, per-policy comparison
 //!     cargo run --release --bin fleet -- --quick         # reduced CI fleet (same mesh scale)
 //!     cargo run --release --bin fleet -- --verify        # gate: cache hits == fresh compiles
+//!     cargo run --release --bin fleet -- --clock wall --contention --backfill
 //!     cargo run --release --bin fleet -- --mesh 16x32 --jobs 8 --horizon 2000 \
 //!         --mtbf 250 --policies continue-ft,migrate,adaptive --plan-cache fleet.plans
 //!
+//! `--clock wall` runs the event-driven wall-clock engine (jobs step
+//! asynchronously); `--contention` adds cross-job link contention
+//! (wall-clock only), `--backfill` admits later small jobs around a
+//! blocked FIFO head.
+//!
 //! Writes `BENCH_fleet.json` (override with `MESHREDUCE_BENCH_JSON`):
 //! one `fleet_<policy>` summary entry per policy (utilization, JCT,
-//! goodput, migration/shrink/wait counts, plan-cache counters) plus
-//! `fleet_<policy>_t<step>` utilization/goodput curve samples.
+//! goodput, migration/shrink/backfill counts, contention dilation,
+//! plan-cache counters), `fleet_<policy>_t<step>`
+//! utilization/goodput/dilation curve samples, and
+//! `fleet_<policy>_hot<i>` per-link-hotspot entries (contention runs).
 //!
 //! Exit is non-zero on any placement-invariant violation or (under
 //! `--verify`) plan-cache divergence — the CI gate. With
@@ -20,7 +28,9 @@
 //! first-visit compiles.
 
 use meshreduce::collective::PlanCache;
-use meshreduce::sched::{metrics, run_with_cache, FleetConfig, JobPolicy};
+use meshreduce::sched::{
+    metrics, run_with_cache, ClockMode, ContentionModel, FleetConfig, JobPolicy,
+};
 use meshreduce::util::bench::JsonReport;
 use std::path::Path;
 
@@ -39,6 +49,20 @@ fn main() {
     let quick = has("--quick") || std::env::var("MESHREDUCE_BENCH_QUICK").is_ok();
     let mut cfg = if quick { FleetConfig::quick() } else { FleetConfig::paper_scale() };
     cfg.verify = has("--verify");
+    if let Some(c) = get("--clock") {
+        match ClockMode::parse(c) {
+            Some(mode) => cfg.clock = mode,
+            None => {
+                eprintln!("unknown --clock {c} (use rr|wall)");
+                std::process::exit(2);
+            }
+        }
+    }
+    if has("--contention") {
+        cfg.clock = ClockMode::WallClock; // contention implies the wall-clock engine
+        cfg.contention = Some(ContentionModel::tpu_default());
+    }
+    cfg.backfill = has("--backfill");
     if let Some((nx, ny)) = get("--mesh").and_then(parse_mesh) {
         cfg.nx = nx;
         cfg.ny = ny;
@@ -78,13 +102,17 @@ fn main() {
 
     let mtbf = cfg.mtbf.as_ref().map(|m| m.mean_failure_steps).unwrap_or(f64::INFINITY);
     eprintln!(
-        "fleet: {}x{} mesh, {} jobs, horizon {} steps, MTBF {:.0}, policies {:?}, verify={}",
+        "fleet: {}x{} mesh, {} jobs, horizon {} steps, MTBF {:.0}, policies {:?}, \
+         clock={}, contention={}, backfill={}, verify={}",
         cfg.nx,
         cfg.ny,
         cfg.workload.jobs,
         cfg.horizon,
         mtbf,
         policies.iter().map(|p| p.name()).collect::<Vec<_>>(),
+        cfg.clock.name(),
+        cfg.contention.is_some(),
+        cfg.backfill,
         cfg.verify,
     );
 
@@ -114,13 +142,23 @@ fn main() {
 
     let mut report = JsonReport::new();
     println!(
-        "\n{:<12} {:>9} {:>11} {:>9} {:>9} {:>9} {:>7} {:>7} {:>6} {:>8}",
-        "policy", "goodput", "utilization", "mean-jct", "done", "migrate", "shrink", "ft", "wait", "hit-rate"
+        "\n{:<12} {:>9} {:>11} {:>9} {:>9} {:>9} {:>7} {:>7} {:>6} {:>8} {:>8}",
+        "policy",
+        "goodput",
+        "utilization",
+        "mean-jct",
+        "done",
+        "migrate",
+        "shrink",
+        "ft",
+        "wait",
+        "max-dil",
+        "hit-rate"
     );
     for run in &runs {
         let s = &run.summary;
         println!(
-            "{:<12} {:>9.1} {:>11.4} {:>9.1} {:>6}/{:>2} {:>9} {:>7} {:>7} {:>6} {:>8.3}",
+            "{:<12} {:>9.1} {:>11.4} {:>9.1} {:>6}/{:>2} {:>9} {:>7} {:>7} {:>6} {:>8.3} {:>8.3}",
             run.label,
             s.goodput,
             s.mean_utilization,
@@ -131,9 +169,19 @@ fn main() {
             s.shrinks,
             s.ft_continues,
             s.queue_waits,
+            s.max_dilation,
             s.cache.hit_rate(),
         );
         metrics::push_run(&mut report, run);
+        for h in run.hotspots.iter().take(4) {
+            println!(
+                "    hotspot ({},{}) {}: mean occupancy {:.3}",
+                h.x,
+                h.y,
+                h.dir_name(),
+                h.mean_occupancy
+            );
+        }
     }
     if runs.len() >= 2 {
         let best = runs

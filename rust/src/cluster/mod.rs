@@ -37,7 +37,8 @@ use thiserror::Error;
 pub use mtbf::MtbfModel;
 pub use scenario::{Scenario, ScenarioError};
 pub use sweep::{
-    curves, prime_cache, run_sweep, CurvePoint, SweepCell, SweepConfig, SweepError, SweepPoint,
+    curves, prime_cache, run_fleet_sweep, run_sweep, CurvePoint, FleetSweepCell,
+    FleetSweepConfig, FleetSweepPoint, SweepCell, SweepConfig, SweepError, SweepPoint,
 };
 
 /// One cluster health event, timestamped by [`TimedEvent`].

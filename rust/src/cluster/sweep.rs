@@ -17,7 +17,11 @@
 //! independent and the result is bit-deterministic regardless of
 //! scheduling). The `sweep` binary wraps this into
 //! `BENCH_sweep.json`; `examples/mtbf_sweep.rs` is the narrated
-//! small-scale version.
+//! small-scale version. [`run_fleet_sweep`] is the **async-fleet
+//! axis**: the same seeded multi-job workload replayed per
+//! `(clock engine, contention, MTBF, seed)` cell, quantifying what
+//! wall-clock asynchrony and cross-job link contention cost relative
+//! to the round-robin reference.
 //!
 //! Transition costs are *modelled in steps* (`rebuild_steps`,
 //! `restart_steps`, checkpoint rollback) rather than measured in wall
@@ -32,6 +36,7 @@ use crate::coordinator::policy::{
 };
 use crate::mesh::{FailedRegion, Topology};
 use crate::perfmodel::CandidatePrediction;
+use crate::sched::{run_fleet, ClockMode, ContentionModel, FleetConfig, FleetError};
 use crate::simnet::{simulate_plan, LinkModel, SimError};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -498,6 +503,49 @@ pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, Swe
     })
 }
 
+/// Fan independent sweep cells across scoped worker threads
+/// (`threads == 0` = available parallelism, capped at 16). Results
+/// come back in input order, so determinism is untouched by
+/// scheduling. Shared by [`run_sweep`] and [`run_fleet_sweep`].
+fn par_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Copy + Sync,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let threads = if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+    }
+    .min(items.len())
+    .max(1);
+
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<R>>> = Mutex::new((0..items.len()).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(items[i]);
+                results.lock().expect("sweep results lock")[i] = Some(r);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .expect("sweep results lock")
+        .into_iter()
+        .map(|r| r.expect("every item visited"))
+        .collect()
+}
+
 /// Run the full `(policy × MTBF × MTTR × region × seed)` grid across
 /// scoped worker threads. Points are independent (each owns its plan
 /// cache, cloned from the optional warm-start seed), so the output is
@@ -516,38 +564,126 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepPoint>, SweepError> {
             }
         }
     }
-    if grid.is_empty() {
-        return Ok(Vec::new());
-    }
-    let threads = if cfg.threads > 0 {
-        cfg.threads
-    } else {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
-    }
-    .min(grid.len())
-    .max(1);
+    par_map(cfg.threads, &grid, |cell| replay_cell(cfg, cell)).into_iter().collect()
+}
 
-    let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<Result<SweepPoint, SweepError>>>> =
-        Mutex::new((0..grid.len()).map(|_| None).collect());
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= grid.len() {
-                    break;
-                }
-                let point = replay_cell(cfg, grid[i]);
-                results.lock().expect("sweep results lock")[i] = Some(point);
-            });
+/// The async-fleet sweep axis: replay the same seeded multi-job
+/// workload across `(clock engine, contention on/off, MTBF, seed)`
+/// cells — the fleet-level analogue of the per-policy curves, and the
+/// instrument that quantifies what wall-clock asynchrony and cross-job
+/// link contention cost relative to the round-robin reference.
+#[derive(Debug, Clone)]
+pub struct FleetSweepConfig {
+    /// Template fleet config; each cell overrides clock, contention,
+    /// workload seed and the MTBF means.
+    pub base: FleetConfig,
+    /// Mean steps between failures, one curve x-coordinate each
+    /// (repair mean is half the MTBF, as in the fleet binary).
+    pub mtbf_points: Vec<f64>,
+    pub seeds: Vec<u64>,
+    pub clocks: Vec<ClockMode>,
+    /// Contention on/off axis; `(RoundRobin, true)` cells are skipped
+    /// (the round-robin engine has no contention accounting).
+    pub contention: Vec<bool>,
+    /// Worker threads; 0 = available parallelism (capped at 16).
+    pub threads: usize,
+}
+
+impl FleetSweepConfig {
+    /// Reduced grid for CI and tests.
+    pub fn quick() -> Self {
+        let mut base = FleetConfig::quick();
+        base.horizon = 240;
+        base.payload = 1 << 12;
+        Self {
+            base,
+            mtbf_points: vec![40.0],
+            seeds: vec![1, 2],
+            clocks: vec![ClockMode::RoundRobin, ClockMode::WallClock],
+            contention: vec![false, true],
+            threads: 0,
         }
-    });
-    results
-        .into_inner()
-        .expect("sweep results lock")
-        .into_iter()
-        .map(|r| r.expect("every grid point visited"))
-        .collect()
+    }
+
+    /// All cells, `(RoundRobin, contention)` collapsed to one.
+    pub fn grid(&self) -> Vec<FleetSweepCell> {
+        let mut out = Vec::new();
+        for &clock in &self.clocks {
+            for &contention in &self.contention {
+                if clock == ClockMode::RoundRobin && contention {
+                    continue;
+                }
+                for &mtbf_steps in &self.mtbf_points {
+                    for &seed in &self.seeds {
+                        out.push(FleetSweepCell { clock, contention, mtbf_steps, seed });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One cell of the async-fleet sweep grid.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetSweepCell {
+    pub clock: ClockMode,
+    pub contention: bool,
+    pub mtbf_steps: f64,
+    pub seed: u64,
+}
+
+/// One replayed async-fleet cell.
+#[derive(Debug, Clone)]
+pub struct FleetSweepPoint {
+    pub clock: ClockMode,
+    pub contention: bool,
+    pub mtbf_steps: f64,
+    pub seed: u64,
+    pub goodput: f64,
+    pub mean_utilization: f64,
+    pub mean_dilation: f64,
+    pub max_dilation: f64,
+    pub completed: usize,
+    pub arrivals: usize,
+}
+
+/// Replay one async-fleet cell (deterministic per cell).
+pub fn replay_fleet_cell(
+    cfg: &FleetSweepConfig,
+    cell: FleetSweepCell,
+) -> Result<FleetSweepPoint, FleetError> {
+    let mut fc = cfg.base.clone();
+    fc.clock = cell.clock;
+    fc.contention = cell.contention.then(ContentionModel::tpu_default);
+    fc.workload.seed = cell.seed;
+    if let Some(m) = &mut fc.mtbf {
+        m.seed = cell.seed.wrapping_add(17);
+        m.mean_failure_steps = cell.mtbf_steps;
+        m.mean_repair_steps = cell.mtbf_steps * 0.5;
+    }
+    let run = run_fleet(&fc)?;
+    Ok(FleetSweepPoint {
+        clock: cell.clock,
+        contention: cell.contention,
+        mtbf_steps: cell.mtbf_steps,
+        seed: cell.seed,
+        goodput: run.summary.goodput,
+        mean_utilization: run.summary.mean_utilization,
+        mean_dilation: run.summary.mean_dilation,
+        max_dilation: run.summary.max_dilation,
+        completed: run.summary.completed,
+        arrivals: run.summary.arrivals,
+    })
+}
+
+/// Run the async-fleet sweep grid across scoped worker threads (the
+/// same [`par_map`] harness as [`run_sweep`]). Cells are independent,
+/// so the output is deterministic regardless of scheduling; results
+/// come back in grid order.
+pub fn run_fleet_sweep(cfg: &FleetSweepConfig) -> Result<Vec<FleetSweepPoint>, FleetError> {
+    let grid = cfg.grid();
+    par_map(cfg.threads, &grid, |cell| replay_fleet_cell(cfg, cell)).into_iter().collect()
 }
 
 /// Build a warm-start cache containing the sweep's recurring
@@ -674,6 +810,40 @@ mod tests {
         }
         let cs = curves(&points);
         assert_eq!(cs.len(), 4, "one curve point per (mttr, region) cell");
+    }
+
+    #[test]
+    fn fleet_sweep_covers_clock_and_contention_axes() {
+        use crate::sched::JobPolicy;
+        let mut cfg = FleetSweepConfig::quick();
+        cfg.base.nx = 8;
+        cfg.base.ny = 8;
+        cfg.base.horizon = 120;
+        cfg.base.payload = 1 << 10;
+        cfg.base.policy = Some(JobPolicy::Continue);
+        cfg.base.workload.jobs = 3;
+        cfg.base.workload.shapes = vec![(4, 4), (4, 2), (2, 2)];
+        cfg.seeds = vec![1];
+        let points = run_fleet_sweep(&cfg).unwrap();
+        // (rr, off), (wall, off), (wall, on) per (mtbf, seed).
+        assert_eq!(points.len(), 3);
+        let by = |clock: ClockMode, cont: bool| {
+            points
+                .iter()
+                .find(|p| p.clock == clock && p.contention == cont)
+                .expect("cell present")
+        };
+        let rr = by(ClockMode::RoundRobin, false);
+        let wall = by(ClockMode::WallClock, false);
+        // The sweep is itself a differential harness: the contention-
+        // off wall-clock cell reproduces round-robin bit-for-bit.
+        assert_eq!(rr.goodput.to_bits(), wall.goodput.to_bits());
+        assert_eq!(rr.mean_utilization.to_bits(), wall.mean_utilization.to_bits());
+        for p in &points {
+            assert!(p.mean_dilation >= 1.0 - 1e-12);
+            assert!(p.max_dilation >= p.mean_dilation - 1e-9);
+            assert!(p.goodput.is_finite());
+        }
     }
 
     #[test]

@@ -24,10 +24,11 @@
 //! [`validate_routes`] re-checks link liveness against the key's
 //! topology. Entries failing any check are skipped (counted in
 //! `PlanCacheStats::persist_rejected`) without failing the load; a
-//! malformed or truncated file fails with `InvalidData`. Loaded
-//! entries serve cache hits (still gated per lookup by route
-//! validation, like any entry) but carry no ring plan, so they do not
-//! seed incremental compiles.
+//! malformed or truncated file — or a non-empty file in which every
+//! entry fails validation — fails with `InvalidData`. Loaded entries
+//! serve cache hits (still gated per lookup by route validation, like
+//! any entry) but carry no ring plan, so they do not seed incremental
+//! compiles.
 
 use super::{PlanCache, PlanKey, Slot};
 use crate::collective::compiled::CompiledSchedule;
@@ -542,6 +543,14 @@ impl PlanCache {
             cache.stats.persist_loaded += 1;
             let slot = Slot { plan: Arc::new(plan), ft: None, last_used: cache.tick };
             cache.slots.insert(key, slot);
+        }
+        // A partially stale file degrades gracefully (rejected entries
+        // are skipped and counted), but a non-empty file in which
+        // *every* entry fails validation — a wrong topology
+        // fingerprint, corrupted route bytes — is presumed corrupt and
+        // must surface as an error, not a silent cold start.
+        if n > 0 && cache.stats.persist_loaded == 0 {
+            return Err(bad("every entry failed validation"));
         }
         cache.evict_over_cap();
         Ok(cache)

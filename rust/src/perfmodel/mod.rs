@@ -13,7 +13,7 @@ pub mod tables;
 
 pub use mlperf::{paper_rows, PaperRow, Workload};
 pub use steptime::{
-    allreduce_time_cached, allreduce_time_s, allreduce_time_shared, predict_candidate,
-    predict_candidate_cached, predict_candidate_shared, predict_row, CandidatePrediction,
-    RowPrediction, StepModel,
+    allreduce_time_cached, allreduce_time_s, allreduce_time_shared, contended_step_s,
+    contention_dilation, contention_share, predict_candidate, predict_candidate_cached,
+    predict_candidate_shared, predict_row, CandidatePrediction, RowPrediction, StepModel,
 };

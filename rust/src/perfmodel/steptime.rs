@@ -191,6 +191,41 @@ pub fn predict_candidate_cached(
     Ok(CandidatePrediction { workers, allreduce_s, step_s, throughput })
 }
 
+/// Step time when cross-job link contention grants the job `share in
+/// (0, 1]` of the link time its allreduce needs: the bandwidth-bound
+/// allreduce term stretches by `1 / share`, compute is unaffected.
+/// `share == 1` reproduces the isolated step exactly.
+pub fn contended_step_s(compute_s: f64, allreduce_s: f64, share: f64) -> f64 {
+    compute_s + allreduce_s / share.clamp(1e-6, 1.0)
+}
+
+/// Allreduce bandwidth share that explains a whole-step contention
+/// dilation factor `dilation >= 1`: the share `s` with
+/// `contended_step_s(c, a, s) == dilation * (c + a)`. The fleet's
+/// fair-share solver grants whole-step rates; this maps the grant back
+/// onto the allreduce term (the only part contention physically
+/// stretches).
+pub fn contention_share(compute_s: f64, allreduce_s: f64, dilation: f64) -> f64 {
+    if allreduce_s <= 0.0 {
+        return 1.0;
+    }
+    let stretched_ar = dilation.max(1.0) * (compute_s + allreduce_s) - compute_s;
+    if stretched_ar <= allreduce_s {
+        1.0
+    } else {
+        (allreduce_s / stretched_ar).clamp(1e-6, 1.0)
+    }
+}
+
+/// Whole-step dilation of a contended step over the isolated step.
+pub fn contention_dilation(compute_s: f64, allreduce_s: f64, share: f64) -> f64 {
+    let isolated = compute_s + allreduce_s;
+    if isolated <= 0.0 {
+        return 1.0;
+    }
+    (contended_step_s(compute_s, allreduce_s, share) / isolated).max(1.0)
+}
+
 /// Build the full prediction for one paper row.
 pub fn predict_row(row: &PaperRow, link: &LinkModel) -> Result<RowPrediction, ModelError> {
     let wl = workload_by_name(row.benchmark)
@@ -285,6 +320,30 @@ mod tests {
         assert!((b.step_s - c.step_s).abs() < 1e-15, "hits replay identically");
         assert_eq!(cache.stats().hits, 1);
         assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn contention_helpers_round_trip() {
+        let (c, a) = (0.02, 0.01);
+        // Full share reproduces the isolated step bit-for-bit.
+        assert_eq!(contended_step_s(c, a, 1.0).to_bits(), (c + a).to_bits());
+        assert!((contention_dilation(c, a, 1.0) - 1.0).abs() < 1e-15);
+        // Monotone: less share, longer step.
+        assert!(contended_step_s(c, a, 0.5) > contended_step_s(c, a, 0.9));
+        // share -> dilation -> share round-trips.
+        for share in [0.9, 0.5, 0.2, 0.05] {
+            let d = contention_dilation(c, a, share);
+            assert!(d > 1.0);
+            let back = contention_share(c, a, d);
+            assert!((back - share).abs() < 1e-9, "share {share} -> {d} -> {back}");
+            // The recovered share reproduces the dilated step.
+            let step = contended_step_s(c, a, back);
+            assert!((step - d * (c + a)).abs() < 1e-12);
+        }
+        // Degenerate inputs stay sane.
+        assert_eq!(contention_share(c, 0.0, 3.0), 1.0);
+        assert!(contention_share(c, a, 1.0) == 1.0);
+        assert!(contended_step_s(c, a, 0.0).is_finite());
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! Cross-job link contention on the shared mesh.
+//!
+//! Jobs occupy pairwise-disjoint rectangles, so one job's allreduce
+//! traffic never *literally* streams over another job's links — the
+//! DES already prices a job's self-contention into its isolated
+//! allreduce makespan. What disjoint placement does **not** isolate is
+//! the router fabric: a mesh link terminates in the same crossbar /
+//! SerDes complex as every other link of its two endpoint chips, and
+//! two jobs whose rectangles abut drive the routers on both sides of
+//! the shared boundary (the bandwidth-sharing effect BytePS-style
+//! schedulers and the swarm-parallelism literature measure as the
+//! dominant multi-tenant cost). The model here:
+//!
+//! - every link a job's compiled plan traverses charges its own
+//!   directed edge at the job's occupancy (busy seconds per training
+//!   step, from the DES link statistics), and charges a configurable
+//!   *spillover fraction* onto each directed edge incident to the
+//!   link's endpoint chips — including the cross-boundary edges
+//!   neither job routes over. Two abutting jobs therefore meet on the
+//!   boundary edges; distant jobs share nothing;
+//! - edges charged by **two or more jobs** become constraints: per
+//!   *link epoch* (the interval between fleet reconfigurations), the
+//!   jobs sharing an edge receive a **max-min fair** share of its
+//!   occupancy budget via progressive filling ([`fair_shares`]).
+//!   Edges charged by a single job never constrain — that job's
+//!   self-interference is already inside its simulated makespan;
+//! - the granted rate dilates the job's step by exactly `cap / rate`;
+//!   `perfmodel::steptime::{contention_share, contended_step_s}`
+//!   express the equivalent stretch of the bandwidth-bound allreduce
+//!   term (compute is unaffected), and the fleet's epoch diagnostic
+//!   records the implied share of the most contended job.
+//!
+//! Invariant (property-tested in `rust/tests/fleet_async.rs`): the
+//! charged occupancy `sum_j rate_j * cost_{j,e}` on every contended
+//! edge never exceeds the capacity, and a job sharing no contended
+//! edge runs at exactly its isolated rate.
+
+use super::placer::Rect;
+use crate::mesh::{Coord, Dir, Mesh};
+use std::collections::HashMap;
+
+/// Contention model parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ContentionModel {
+    /// Occupancy budget per directed edge, in busy-fraction units
+    /// (1.0 = the edge can be busy the whole epoch). Values below 1
+    /// model reserved headroom or background (ingest/checkpoint)
+    /// traffic.
+    pub capacity: f64,
+    /// Fraction of a traversed link's occupancy charged onto each
+    /// directed edge incident to the link's endpoint chips (router /
+    /// SerDes sharing). 0 disables cross-boundary interference.
+    pub adjacency_frac: f64,
+}
+
+impl ContentionModel {
+    /// Defaults sized to the TPU-v3 link model: full per-edge budget,
+    /// half-rate router spillover.
+    pub fn tpu_default() -> Self {
+        Self { capacity: 1.0, adjacency_frac: 0.5 }
+    }
+
+    /// A deliberately tight fabric for tests and stress runs: little
+    /// per-edge headroom and full-rate spillover, so abutting jobs
+    /// contend hard.
+    pub fn stressed() -> Self {
+        Self { capacity: 0.3, adjacency_frac: 1.0 }
+    }
+}
+
+/// One job's cluster-level link load for one epoch.
+#[derive(Debug, Clone)]
+pub struct JobLoad {
+    /// Isolated job-step rate cap (job steps per fleet step):
+    /// `compute_s / step_s` on the job's current placement.
+    pub cap: f64,
+    /// `(cluster link slot, occupancy cost per unit job-step rate)` —
+    /// sorted by slot, one entry per charged edge. At the isolated
+    /// rate `cap`, an edge's busy fraction is `cap * cost`.
+    pub edges: Vec<(usize, f64)>,
+}
+
+/// Charged occupancy of one contended edge after the fair-share split.
+#[derive(Debug, Clone, Copy)]
+pub struct EdgeCharge {
+    /// Dense cluster link slot (`node_index * 4 + dir`).
+    pub slot: usize,
+    /// `sum_j rate_j * cost_{j,e}` at the granted rates.
+    pub occupancy: f64,
+    /// Distinct jobs charging the edge (always >= 2).
+    pub jobs: usize,
+}
+
+/// Result of one epoch's max-min fair split.
+#[derive(Debug, Clone)]
+pub struct ShareReport {
+    /// Granted job-step rates, `0 < rates[j] <= loads[j].cap`.
+    pub rates: Vec<f64>,
+    /// Charged occupancy per contended edge, sorted by slot.
+    pub contended: Vec<EdgeCharge>,
+}
+
+/// Build a job's cluster-level [`JobLoad`] from the per-link busy
+/// seconds of its compiled plan's DES replay (`local_busy` uses the
+/// job-local `rect.w x rect.h` mesh's dense link slots,
+/// `LinkStats::busy_slots`). `step_s` is the job's isolated step time;
+/// `compute_s` the modelled per-worker compute (the fleet's
+/// step-to-seconds unit).
+pub fn job_load(
+    nx: usize,
+    ny: usize,
+    rect: &Rect,
+    local_busy: &[(usize, f64)],
+    step_s: f64,
+    compute_s: f64,
+    model: &ContentionModel,
+) -> JobLoad {
+    let cluster = Mesh::new(nx, ny);
+    let local = Mesh::new(rect.w, rect.h);
+    let unit = compute_s.max(1e-12);
+    let mut charge: HashMap<usize, f64> = HashMap::new();
+    for &(slot, busy_s) in local_busy {
+        if busy_s <= 0.0 {
+            continue;
+        }
+        // Occupancy cost per unit job-step rate: busy seconds per
+        // training step over seconds per fleet step.
+        let cost = busy_s / unit;
+        let from_local = local.coord_of(slot / 4);
+        let dir = Dir::ALL[slot % 4];
+        let from = Coord::new(from_local.x + rect.x0, from_local.y + rect.y0);
+        let Some(to) = cluster.step(from, dir) else {
+            continue; // off-mesh slot: never carries traffic
+        };
+        let own = cluster.node_index(from) * 4 + dir.index();
+        let reverse = cluster.node_index(to) * 4 + dir.opposite().index();
+        *charge.entry(own).or_insert(0.0) += cost;
+        if model.adjacency_frac > 0.0 {
+            let spill = model.adjacency_frac * cost;
+            for endpoint in [from, to] {
+                for d in Dir::ALL {
+                    let Some(peer) = cluster.step(endpoint, d) else { continue };
+                    let out = cluster.node_index(endpoint) * 4 + d.index();
+                    let inward = cluster.node_index(peer) * 4 + d.opposite().index();
+                    for s in [out, inward] {
+                        if s != own && s != reverse {
+                            *charge.entry(s).or_insert(0.0) += spill;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let mut edges: Vec<(usize, f64)> = charge.into_iter().collect();
+    edges.sort_unstable_by_key(|e| e.0);
+    let cap = if step_s > 0.0 { (compute_s / step_s).min(1.0) } else { 0.0 };
+    JobLoad { cap, edges }
+}
+
+/// Max-min fair job-step rates under per-edge occupancy budgets
+/// (progressive filling / water-filling): raise every unfrozen job's
+/// rate uniformly until an edge saturates or a job reaches its
+/// isolated cap; freeze; repeat. Only edges charged by >= 2 jobs
+/// constrain.
+pub fn fair_shares(capacity: f64, loads: &[JobLoad]) -> ShareReport {
+    let n = loads.len();
+    let cap = capacity.max(1e-9);
+    let mut by_slot: HashMap<usize, Vec<(usize, f64)>> = HashMap::new();
+    for (j, l) in loads.iter().enumerate() {
+        for &(slot, c) in &l.edges {
+            if c > 0.0 {
+                by_slot.entry(slot).or_default().push((j, c));
+            }
+        }
+    }
+    let mut edges: Vec<(usize, Vec<(usize, f64)>)> =
+        by_slot.into_iter().filter(|(_, contrib)| contrib.len() >= 2).collect();
+    edges.sort_unstable_by_key(|e| e.0);
+
+    let mut x = vec![0.0f64; n];
+    let mut active = vec![false; n];
+    for (_, contrib) in &edges {
+        for &(j, _) in contrib {
+            active[j] = true;
+        }
+    }
+    for j in 0..n {
+        if !active[j] || loads[j].cap <= 0.0 {
+            // Uncontended jobs (and degenerate caps) run isolated.
+            x[j] = loads[j].cap.max(0.0);
+            active[j] = false;
+        }
+    }
+
+    // Each round freezes at least one job (the binding cap or every
+    // job on the saturating edge), so n + 1 rounds always suffice.
+    for _ in 0..=n {
+        if !active.iter().any(|&a| a) {
+            break;
+        }
+        let mut delta = f64::INFINITY;
+        for j in 0..n {
+            if active[j] {
+                delta = delta.min((loads[j].cap - x[j]).max(0.0));
+            }
+        }
+        for (_, contrib) in &edges {
+            let used: f64 = contrib.iter().map(|&(j, c)| x[j] * c).sum();
+            let weight: f64 =
+                contrib.iter().filter(|&&(j, _)| active[j]).map(|&(_, c)| c).sum();
+            if weight > 0.0 {
+                delta = delta.min((cap - used).max(0.0) / weight);
+            }
+        }
+        if !delta.is_finite() {
+            break;
+        }
+        for j in 0..n {
+            if active[j] {
+                x[j] += delta;
+            }
+        }
+        let mut froze = false;
+        for j in 0..n {
+            if active[j] && x[j] + 1e-12 >= loads[j].cap {
+                x[j] = loads[j].cap;
+                active[j] = false;
+                froze = true;
+            }
+        }
+        for (_, contrib) in &edges {
+            if !contrib.iter().any(|&(j, _)| active[j]) {
+                continue;
+            }
+            let used: f64 = contrib.iter().map(|&(j, c)| x[j] * c).sum();
+            if used + 1e-9 >= cap {
+                for &(j, _) in contrib {
+                    if active[j] {
+                        active[j] = false;
+                        froze = true;
+                    }
+                }
+            }
+        }
+        if !froze {
+            break;
+        }
+    }
+
+    // Floor: a starved job still trains (a 1e-6 share), so dilation
+    // stays finite and the fleet cannot deadlock on a zero rate.
+    let mut rates = x;
+    for j in 0..n {
+        let q = loads[j].cap;
+        if q > 0.0 {
+            rates[j] = rates[j].max(q * 1e-6).min(q);
+        }
+    }
+    let contended = edges
+        .iter()
+        .map(|(slot, contrib)| EdgeCharge {
+            slot: *slot,
+            occupancy: contrib.iter().map(|&(j, c)| rates[j] * c).sum(),
+            jobs: contrib.len(),
+        })
+        .collect();
+    ShareReport { rates, contended }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(cap: f64, edges: &[(usize, f64)]) -> JobLoad {
+        JobLoad { cap, edges: edges.to_vec() }
+    }
+
+    #[test]
+    fn uncontended_jobs_run_isolated() {
+        let loads = vec![load(0.5, &[(0, 0.8)]), load(0.25, &[(1, 0.9)])];
+        let rep = fair_shares(1.0, &loads);
+        assert_eq!(rep.rates, vec![0.5, 0.25]);
+        assert!(rep.contended.is_empty());
+    }
+
+    #[test]
+    fn shared_edge_splits_max_min_fairly() {
+        // Two equal jobs on one edge, demand 2x the budget: each gets
+        // half its isolated rate.
+        let loads = vec![load(1.0, &[(7, 1.0)]), load(1.0, &[(7, 1.0)])];
+        let rep = fair_shares(1.0, &loads);
+        assert!((rep.rates[0] - 0.5).abs() < 1e-9, "{:?}", rep.rates);
+        assert!((rep.rates[1] - 0.5).abs() < 1e-9);
+        assert_eq!(rep.contended.len(), 1);
+        assert!((rep.contended[0].occupancy - 1.0).abs() < 1e-9);
+        assert_eq!(rep.contended[0].jobs, 2);
+    }
+
+    #[test]
+    fn light_job_caps_out_heavy_job_takes_slack() {
+        // Job 0 caps at 0.2; job 1 absorbs the remaining edge budget —
+        // the max-min signature (not an even split).
+        let loads = vec![load(0.2, &[(3, 1.0)]), load(1.0, &[(3, 1.0)])];
+        let rep = fair_shares(1.0, &loads);
+        assert!((rep.rates[0] - 0.2).abs() < 1e-9, "{:?}", rep.rates);
+        assert!((rep.rates[1] - 0.8).abs() < 1e-9, "{:?}", rep.rates);
+    }
+
+    #[test]
+    fn job_load_translates_and_spills_across_the_boundary() {
+        // A single local link on a 2x2 job at (2,0) of an 8x8 mesh:
+        // the west-boundary chip's eastward link. Spillover must land
+        // on the cross-boundary edge into (1,0) that the job itself
+        // never routes over.
+        let rect = Rect::new(2, 0, 2, 2);
+        let local = Mesh::new(2, 2);
+        let slot = local.node_index(Coord::new(0, 0)) * 4 + Dir::East.index();
+        let model = ContentionModel { capacity: 1.0, adjacency_frac: 0.5 };
+        let l = job_load(8, 8, &rect, &[(slot, 0.02)], 0.05, 0.04, &model);
+        assert!((l.cap - 0.8).abs() < 1e-12);
+        let cluster = Mesh::new(8, 8);
+        let own = cluster.node_index(Coord::new(2, 0)) * 4 + Dir::East.index();
+        let cross = cluster.node_index(Coord::new(2, 0)) * 4 + Dir::West.index();
+        let own_cost = l.edges.iter().find(|e| e.0 == own).map(|e| e.1);
+        let cross_cost = l.edges.iter().find(|e| e.0 == cross).map(|e| e.1);
+        assert_eq!(own_cost, Some(0.02 / 0.04));
+        assert_eq!(cross_cost, Some(0.5 * 0.02 / 0.04));
+        // Sorted by slot, no duplicates.
+        assert!(l.edges.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+}

@@ -1,15 +1,34 @@
 //! The fleet loop: a deterministic multi-job simulation of one mesh
 //! shared by many training jobs under a failure/repair process.
 //!
-//! Time advances in *fleet steps*. Each running job trains at `rate =
-//! compute_s / step_s(shape, holes)` job-steps per fleet step, where
-//! `step_s` is the DES-simulated fault-tolerant allreduce on the job's
-//! sub-mesh plus the modelled compute — so a degraded or badly-shaped
-//! placement trains measurably slower, which is exactly the signal the
-//! adaptive policy arbitrates on. All step-time predictions flow
-//! through **one process-wide plan cache** shared by every job:
-//! equal shapes hit each other's compiled plans, and a migrated job
-//! warm-starts from the plans its previous placement compiled.
+//! Two clock engines share one fleet state machine
+//! ([`FleetConfig::clock`]):
+//!
+//! - [`ClockMode::RoundRobin`] — the differential reference. Time
+//!   advances in integer *fleet steps*; each running job trains at
+//!   `rate = compute_s / step_s(shape, holes)` job-steps per fleet
+//!   step, where `step_s` is the DES-simulated fault-tolerant
+//!   allreduce on the job's sub-mesh plus the modelled compute.
+//! - [`ClockMode::WallClock`] — the event-driven engine. Cluster
+//!   events and job arrivals merge into one global time-ordered heap
+//!   on a continuous `f64` timeline; between events each job
+//!   integrates progress at its own effective rate, with pauses
+//!   consumed continuously. Progress integration splits at integer
+//!   fleet-step boundaries — the grid utilization/goodput/queue-wait
+//!   metrics are defined on — which is what makes the contention-off
+//!   wall-clock engine reproduce the round-robin fleet **bit for
+//!   bit** (the differential contract `rust/tests/fleet_async.rs`
+//!   enforces). With [`FleetConfig::contention`] enabled the engine
+//!   is genuinely asynchronous: job completions cut segments at
+//!   fractional times, and every reconfiguration starts a new *link
+//!   epoch* in which [`contention`] re-splits per-edge occupancy
+//!   max-min fairly, dilating the step times of jobs whose allreduce
+//!   rings meet on shared or adjacent mesh edges.
+//!
+//! All step-time predictions flow through **one process-wide plan
+//! cache** shared by every job: equal shapes hit each other's compiled
+//! plans, and a migrated job warm-starts from the plans its previous
+//! placement compiled.
 //!
 //! Determinism: the workload, the MTBF timeline and every decision are
 //! pure functions of the config (transition costs are modelled in
@@ -17,7 +36,8 @@
 //! agree bit-for-bit — the property the per-policy goodput comparison
 //! relies on.
 
-use super::metrics::{mean_median, FleetRun, FleetSummary, JobOutcome, UtilSample};
+use super::contention::{self, ContentionModel};
+use super::metrics::{mean_median, FleetRun, FleetSummary, JobOutcome, LinkHotspot, UtilSample};
 use super::placer::{self, Rect};
 use super::workload::WorkloadModel;
 use super::{FleetError, JobPolicy, JobSpec};
@@ -25,9 +45,43 @@ use crate::cluster::{ClusterEvent, ClusterState, EventQueue, MtbfModel, TimedEve
 use crate::collective::{PlanCache, PlanError, Scheme};
 use crate::coordinator::policy::{effective_throughput, CandidateCost, EventRateEstimator};
 use crate::mesh::{FailedRegion, Topology};
+use crate::perfmodel::steptime;
 use crate::perfmodel::CandidatePrediction;
 use crate::simnet::{simulate_plan, LinkModel};
-use std::collections::{HashMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+/// Which time model drives the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClockMode {
+    /// Integer fleet steps, one global clock (the legacy engine and
+    /// the differential reference).
+    RoundRobin,
+    /// Event-driven continuous timeline with per-job rates and
+    /// optional cross-job link contention.
+    WallClock,
+}
+
+impl ClockMode {
+    pub const ALL: [ClockMode; 2] = [ClockMode::RoundRobin, ClockMode::WallClock];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClockMode::RoundRobin => "round-robin",
+            ClockMode::WallClock => "wall-clock",
+        }
+    }
+
+    /// Parse a CLI spelling (`rr`, `round-robin`, `wall`,
+    /// `wall-clock`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rr" | "round-robin" => Some(ClockMode::RoundRobin),
+            "wall" | "wall-clock" => Some(ClockMode::WallClock),
+            _ => None,
+        }
+    }
+}
 
 /// Fleet configuration.
 #[derive(Debug, Clone)]
@@ -64,6 +118,16 @@ pub struct FleetConfig {
     pub verify: bool,
     /// Warm-start cache (e.g. loaded from a plan-cache file).
     pub seed_cache: Option<PlanCache>,
+    /// Time model (see [`ClockMode`]).
+    pub clock: ClockMode,
+    /// Cross-job link contention (wall-clock engine only; `None`
+    /// disables the accounting entirely).
+    pub contention: Option<ContentionModel>,
+    /// Admit later queued jobs around a blocked FIFO head. Safe by
+    /// construction: backfill only runs when the head is unplaceable,
+    /// and obstacles only grow as backfills commit, so no backfilled
+    /// start precedes a feasible head placement it could have blocked.
+    pub backfill: bool,
 }
 
 impl FleetConfig {
@@ -87,6 +151,9 @@ impl FleetConfig {
             cache_cap: 64,
             verify: false,
             seed_cache: None,
+            clock: ClockMode::RoundRobin,
+            contention: None,
+            backfill: false,
         }
     }
 
@@ -110,6 +177,9 @@ impl FleetConfig {
             cache_cap: 64,
             verify: false,
             seed_cache: None,
+            clock: ClockMode::RoundRobin,
+            contention: None,
+            backfill: false,
         }
     }
 }
@@ -150,8 +220,11 @@ struct Job {
     holes: Vec<Rect>,
     /// Completed training steps (fractional).
     progress: f64,
-    /// Job steps per fleet step on the current placement.
+    /// Job steps per fleet step on the current placement, isolated.
     rate: f64,
+    /// Cross-job contention dilation of the current link epoch
+    /// (>= 1.0; the effective rate is `rate / dilation`).
+    dilation: f64,
     workers: usize,
     /// Remaining transition pause, fleet steps.
     pause: f64,
@@ -171,6 +244,7 @@ impl Job {
             holes: Vec::new(),
             progress: 0.0,
             rate: 0.0,
+            dilation: 1.0,
             workers: 0,
             pause: 0.0,
             started: false,
@@ -198,26 +272,51 @@ impl Job {
     }
 }
 
+/// One memoized sub-mesh simulation: step time plus the per-link busy
+/// seconds the contention accounting charges.
+#[derive(Debug, Clone)]
+struct StepSim {
+    step_s: f64,
+    /// `(local dense link slot, busy seconds)` of one allreduce.
+    busy: Vec<(usize, f64)>,
+}
+
 struct Fleet<'a> {
     cfg: &'a FleetConfig,
     cluster: ClusterState,
     cache: PlanCache,
     /// Step-time memo per (w, h, sorted local holes): each distinct
-    /// sub-mesh topology is simulated once (the cache is still
-    /// consulted, so hit counters reflect shape revisits).
-    sim_memo: HashMap<(usize, usize, Vec<Rect>), f64>,
+    /// sub-mesh topology is simulated once.
+    sim_memo: HashMap<(usize, usize, Vec<Rect>), StepSim>,
     link: LinkModel,
     estimator: EventRateEstimator,
     queue: VecDeque<Job>,
     running: Vec<Job>,
     done: Vec<Job>,
     step: u64,
+    /// Wall-clock engine's continuous time, fleet-step units.
+    now: f64,
+    sample_every: u64,
     transitions: u64,
     queue_waits: u64,
+    backfills: u64,
     goodput_sum: f64,
     util_sum: f64,
     last_util: f64,
     last_good: f64,
+    /// Within-step accumulators (wall-clock engine; flushed at every
+    /// integer boundary so the op sequence matches round-robin).
+    step_util_acc: f64,
+    step_good_acc: f64,
+    /// Contention bookkeeping.
+    contention_epochs: u64,
+    dilation_time: f64,
+    dilation_weight: f64,
+    max_dilation: f64,
+    /// Current epoch's charged occupancy per cluster link slot.
+    epoch_charge: Vec<(usize, f64)>,
+    /// Time-integrated charged occupancy per cluster link slot.
+    link_occ: Vec<f64>,
     samples: Vec<UtilSample>,
     events_log: Vec<(u64, String)>,
 }
@@ -240,12 +339,23 @@ impl<'a> Fleet<'a> {
             running: Vec::new(),
             done: Vec::new(),
             step: 0,
+            now: 0.0,
+            sample_every: (cfg.horizon / 64).max(1),
             transitions: 0,
             queue_waits: 0,
+            backfills: 0,
             goodput_sum: 0.0,
             util_sum: 0.0,
             last_util: 0.0,
             last_good: 0.0,
+            step_util_acc: 0.0,
+            step_good_acc: 0.0,
+            contention_epochs: 0,
+            dilation_time: 0.0,
+            dilation_weight: 0.0,
+            max_dilation: 1.0,
+            epoch_charge: Vec::new(),
+            link_occ: vec![0.0; cfg.nx * cfg.ny * 4],
             samples: Vec::new(),
             events_log: Vec::new(),
         }
@@ -264,30 +374,45 @@ impl<'a> Fleet<'a> {
         self.running[i].holes.iter().map(|h| placer::to_local(&r, h)).collect()
     }
 
-    /// Predicted seconds per training step on a hole-carrying `w x h`
-    /// sub-mesh: modelled compute + simulated FT allreduce through the
-    /// shared plan cache. `None` = not schedulable (e.g. the holes
-    /// break the pair-row planner or disconnect the sub-mesh).
-    fn step_time(&mut self, w: usize, h: usize, holes: &[Rect]) -> Result<Option<f64>, FleetError> {
+    fn sim_key(w: usize, h: usize, holes: &[Rect]) -> (usize, usize, Vec<Rect>) {
         let mut key_holes = holes.to_vec();
         key_holes.sort_unstable();
-        let key = (w, h, key_holes.clone());
-        if let Some(&s) = self.sim_memo.get(&key) {
-            return Ok(Some(s));
+        (w, h, key_holes)
+    }
+
+    /// Ensure the simulation record for a hole-carrying `w x h`
+    /// sub-mesh is memoized; `Ok(false)` = not schedulable (e.g. the
+    /// holes break the pair-row planner or disconnect the sub-mesh).
+    fn ensure_sim(&mut self, key: &(usize, usize, Vec<Rect>)) -> Result<bool, FleetError> {
+        if self.sim_memo.contains_key(key) {
+            return Ok(true);
         }
-        let topo = Topology::with_failures(w, h, key_holes);
+        let topo = Topology::with_failures(key.0, key.1, key.2.clone());
         if !topo.is_connected() {
-            return Ok(None);
+            return Ok(false);
         }
         match self.cache.get(Scheme::FaultTolerant, &topo, self.cfg.payload) {
             Ok(plan) => {
-                let s = self.cfg.compute_s + simulate_plan(&plan, &self.link)?.makespan_s;
-                self.sim_memo.insert(key, s);
-                Ok(Some(s))
+                let report = simulate_plan(&plan, &self.link)?;
+                let step_s = self.cfg.compute_s + report.makespan_s;
+                let busy: Vec<(usize, f64)> = report.links.busy_slots().collect();
+                self.sim_memo.insert(key.clone(), StepSim { step_s, busy });
+                Ok(true)
             }
-            Err(PlanError::Build(_)) => Ok(None),
+            Err(PlanError::Build(_)) => Ok(false),
             Err(e) => Err(e.into()),
         }
+    }
+
+    /// Predicted seconds per training step on a hole-carrying `w x h`
+    /// sub-mesh: modelled compute + simulated FT allreduce through the
+    /// shared plan cache. `None` = not schedulable.
+    fn step_time(&mut self, w: usize, h: usize, holes: &[Rect]) -> Result<Option<f64>, FleetError> {
+        let key = Self::sim_key(w, h, holes);
+        if !self.ensure_sim(&key)? {
+            return Ok(None);
+        }
+        Ok(self.sim_memo.get(&key).map(|s| s.step_s))
     }
 
     /// Current placement obstacles: live failed regions plus every
@@ -331,6 +456,7 @@ impl<'a> Fleet<'a> {
         job.holes.clear();
         job.workers = rect.num_chips();
         job.rate = self.cfg.compute_s / s;
+        job.dilation = 1.0;
         job.pause = if job.started { self.cfg.restart_steps } else { 0.0 };
         job.started = true;
         self.log(format!(
@@ -340,7 +466,10 @@ impl<'a> Fleet<'a> {
         Ok(())
     }
 
-    /// Admit queued jobs FIFO while the head fits.
+    /// Admit queued jobs FIFO while the head fits; with
+    /// [`FleetConfig::backfill`], admit later jobs around a blocked
+    /// head (the head stays unplaceable throughout — obstacles only
+    /// grow — so backfill never steals a feasible head placement).
     fn try_admit(&mut self) -> Result<(), FleetError> {
         loop {
             let Some((w, h)) = self.queue.front().map(|j| (j.spec.w, j.spec.h)) else {
@@ -353,9 +482,32 @@ impl<'a> Fleet<'a> {
                     self.start_job(&mut job, rect)?;
                     self.running.push(job);
                 }
-                None => return Ok(()),
+                None => break,
             }
         }
+        if !self.cfg.backfill || self.queue.len() < 2 {
+            return Ok(());
+        }
+        let head_id = self.queue.front().expect("head exists").spec.id;
+        let mut i = 1;
+        while i < self.queue.len() {
+            let (w, h, id) = {
+                let j = &self.queue[i];
+                (j.spec.w, j.spec.h, j.spec.id)
+            };
+            let obs = self.obstacles_excluding(usize::MAX);
+            match placer::place_oriented(self.cfg.nx, self.cfg.ny, &obs, w, h) {
+                Some(rect) => {
+                    let mut job = self.queue.remove(i).expect("index checked");
+                    self.start_job(&mut job, rect)?;
+                    self.running.push(job);
+                    self.backfills += 1;
+                    self.log(format!("job {id} backfilled around blocked head {head_id}"));
+                }
+                None => i += 1,
+            }
+        }
+        Ok(())
     }
 
     /// The clear even sub-rectangle a shrink would restart on, cluster
@@ -400,6 +552,7 @@ impl<'a> Fleet<'a> {
         j.holes.clear();
         j.workers = target.num_chips();
         j.rate = self.cfg.compute_s / s;
+        j.dilation = 1.0;
         j.pause += pause;
         let id = j.spec.id;
         let verb = match kind {
@@ -467,6 +620,7 @@ impl<'a> Fleet<'a> {
                 j.holes.clear();
                 j.workers = 0;
                 j.rate = 0.0;
+                j.dilation = 1.0;
                 j.pause = 0.0;
                 self.queue_waits += 1;
                 self.log(format!("job {} releases its rectangle and queues", j.spec.id));
@@ -714,8 +868,101 @@ impl<'a> Fleet<'a> {
         }
     }
 
-    /// One fleet step of training progress; returns whether any job
-    /// completed (freed space → admission opportunity).
+    /// Recompute the link epoch: charge every running job's compiled
+    /// plan against per-edge occupancy and split contended edges
+    /// max-min fairly. No-op unless the wall-clock engine runs with
+    /// contention enabled.
+    fn refresh_contention(&mut self) -> Result<(), FleetError> {
+        let Some(model) = self.cfg.contention else {
+            return Ok(());
+        };
+        if self.cfg.clock != ClockMode::WallClock {
+            return Ok(());
+        }
+        self.epoch_charge.clear();
+        if self.running.is_empty() {
+            return Ok(());
+        }
+        // Pass 1 (mutable): memoize every running job's simulation.
+        // Pass 2 (shared borrows only): build loads straight from the
+        // memo — no per-epoch clones of the busy vectors. A paused job
+        // (mid restart/rebuild) streams no allreduce traffic, so it
+        // charges nothing and sees no dilation; `advance_to` cuts a
+        // fresh epoch the moment its pause expires.
+        let mut keys = Vec::with_capacity(self.running.len());
+        for i in 0..self.running.len() {
+            let rect = self.rect(i);
+            let local = self.local_holes(i);
+            let key = Self::sim_key(rect.w, rect.h, &local);
+            let ok = self.ensure_sim(&key)?;
+            keys.push((rect, key, ok, self.running[i].pause > 0.0));
+        }
+        let mut loads = Vec::with_capacity(keys.len());
+        for (rect, key, ok, paused) in &keys {
+            let load = match (*ok, *paused, self.sim_memo.get(key)) {
+                (true, false, Some(sim)) => contention::job_load(
+                    self.cfg.nx,
+                    self.cfg.ny,
+                    rect,
+                    &sim.busy,
+                    sim.step_s,
+                    self.cfg.compute_s,
+                    &model,
+                ),
+                // Paused, or (defensively) unschedulable/not memoized.
+                _ => contention::JobLoad { cap: 0.0, edges: Vec::new() },
+            };
+            loads.push(load);
+        }
+        let report = contention::fair_shares(model.capacity, &loads);
+        let compute_s = self.cfg.compute_s;
+        let mut max_d = self.max_dilation;
+        let mut epoch_max = 1.0f64;
+        let mut epoch_share = 1.0f64;
+        for ((j, load), &x) in self.running.iter_mut().zip(&loads).zip(&report.rates) {
+            let q = load.cap;
+            // The fair share grants a whole-step rate x <= q, so the
+            // step dilates by exactly q / x (an uncontended job keeps
+            // x == q bit-for-bit and stays at 1.0).
+            let d = if q > 0.0 && x > 0.0 { (q / x).max(1.0) } else { 1.0 };
+            j.dilation = d;
+            if d > epoch_max {
+                // Physically the stretch lives in the bandwidth-bound
+                // allreduce term; record the implied share of the most
+                // contended job for the epoch diagnostic.
+                epoch_max = d;
+                let step_s = compute_s / q;
+                let ar_s = (step_s - compute_s).max(0.0);
+                epoch_share = steptime::contention_share(compute_s, ar_s, d);
+            }
+            max_d = max_d.max(d);
+        }
+        self.max_dilation = max_d;
+        // Charged occupancy at the granted rates, for the hotspot
+        // integral (all charged edges, not only contended ones).
+        let mut charge: HashMap<usize, f64> = HashMap::new();
+        for (i, load) in loads.iter().enumerate() {
+            for &(slot, c) in &load.edges {
+                *charge.entry(slot).or_insert(0.0) += report.rates[i] * c;
+            }
+        }
+        let mut flat: Vec<(usize, f64)> = charge.into_iter().collect();
+        flat.sort_unstable_by_key(|e| e.0);
+        self.epoch_charge = flat;
+        self.contention_epochs += 1;
+        if epoch_max > 1.0 + 1e-9 {
+            let n = self.contention_epochs;
+            self.log(format!(
+                "contention epoch {n}: max dilation {epoch_max:.3} \
+                 (implied allreduce share {epoch_share:.3})"
+            ));
+        }
+        Ok(())
+    }
+
+    /// One round-robin fleet step of training progress; returns
+    /// whether any job completed (freed space → admission
+    /// opportunity).
     fn advance(&mut self) -> bool {
         let live = self.cluster.live_chips() as f64;
         let mut util = 0.0f64;
@@ -756,6 +1003,135 @@ impl<'a> Fleet<'a> {
             self.done.push(job);
         }
         any
+    }
+
+    /// Integrate `dt` fleet steps of wall-clock training. The per-job
+    /// op sequence mirrors [`advance`](Self::advance) exactly at
+    /// `dt == 1.0` with dilation 1.0 — the differential-equivalence
+    /// contract with the round-robin engine. Returns indices of jobs
+    /// whose work finished (ascending).
+    fn advance_segment(&mut self, dt: f64) -> Vec<usize> {
+        let live = self.cluster.live_chips() as f64;
+        let mut util = 0.0f64;
+        let mut good = 0.0f64;
+        let mut dil_time = 0.0f64;
+        let mut dil_weight = 0.0f64;
+        let mut finished: Vec<usize> = Vec::new();
+        for (i, j) in self.running.iter_mut().enumerate() {
+            util += j.workers as f64;
+            dil_time += j.dilation * dt;
+            dil_weight += dt;
+            let frac = if j.pause >= dt {
+                j.pause -= dt;
+                0.0
+            } else {
+                let f = dt - j.pause;
+                j.pause = 0.0;
+                f
+            };
+            if frac > 0.0 {
+                let gained = (j.rate / j.dilation) * frac;
+                j.progress += gained;
+                good += j.workers as f64 * gained;
+                if j.progress + 1e-9 >= j.spec.duration_steps as f64 {
+                    finished.push(i);
+                }
+            }
+        }
+        let u = if live > 0.0 { util / live } else { 0.0 };
+        self.step_util_acc += u * dt;
+        self.step_good_acc += good;
+        self.dilation_time += dil_time;
+        self.dilation_weight += dil_weight;
+        let link_occ = &mut self.link_occ;
+        for &(slot, occ) in &self.epoch_charge {
+            link_occ[slot] += occ * dt;
+        }
+        finished
+    }
+
+    /// Advance the wall clock to `target` (fleet-step units).
+    /// Segments split at integer fleet-step boundaries — the metric
+    /// grid utilization/goodput/queue-wait/sample accounting is
+    /// defined on — and, when contention is enabled, at mid-segment
+    /// job completions (a freed rectangle re-partitions link shares
+    /// immediately, at its exact fractional time).
+    fn advance_to(&mut self, target: f64) -> Result<(), FleetError> {
+        let continuous = self.cfg.contention.is_some();
+        while self.now < target {
+            let cur_step = self.now.floor();
+            let boundary = (cur_step + 1.0).min(target);
+            let mut t1 = boundary;
+            if continuous {
+                for j in &self.running {
+                    if j.rate <= 0.0 {
+                        continue;
+                    }
+                    // A pause expiring mid-segment ends the link epoch
+                    // (the job resumes charging its links).
+                    if j.pause > 0.0 {
+                        let tp = self.now + j.pause;
+                        if tp > self.now && tp < t1 {
+                            t1 = tp;
+                        }
+                    }
+                    let eff = j.rate / j.dilation;
+                    let remaining = j.spec.duration_steps as f64 - j.progress;
+                    if eff <= 0.0 || remaining <= 0.0 {
+                        continue;
+                    }
+                    let tc = self.now + j.pause + remaining / eff;
+                    if tc > self.now && tc < t1 {
+                        t1 = tc;
+                    }
+                }
+            }
+            let dt = t1 - self.now;
+            if dt <= 0.0 {
+                break; // fp safety: never spin in place
+            }
+            let paused_before = self.running.iter().filter(|j| j.pause > 0.0).count();
+            let finished = self.advance_segment(dt);
+            self.now = t1;
+            self.step = cur_step as u64;
+            let at_boundary = t1 == cur_step + 1.0;
+            if at_boundary {
+                for j in self.queue.iter_mut() {
+                    j.waited += 1;
+                }
+                self.last_util = self.step_util_acc;
+                self.last_good = self.step_good_acc;
+                self.util_sum += self.last_util;
+                self.goodput_sum += self.last_good;
+                self.step_util_acc = 0.0;
+                self.step_good_acc = 0.0;
+            }
+            let completed_any = !finished.is_empty();
+            for i in finished.into_iter().rev() {
+                let mut job = self.running.remove(i);
+                job.completed_at = Some(t1.ceil() as u64);
+                let (id, migrations) = (job.spec.id, job.migrations);
+                self.log(format!("job {id} completes ({migrations} migrations)"));
+                self.done.push(job);
+            }
+            let resumed = continuous
+                && self.running.iter().filter(|j| j.pause > 0.0).count() < paused_before;
+            if completed_any {
+                self.try_admit()?;
+                self.refresh_contention()?;
+            } else if resumed {
+                // A job's pause expired: it starts charging its links
+                // again, so the fair shares must be re-split.
+                self.refresh_contention()?;
+            }
+            if at_boundary {
+                self.check_invariants()?;
+                if self.step % self.sample_every == 0 {
+                    self.sample();
+                }
+            }
+        }
+        Ok(())
     }
 
     /// The placement invariants, checked every fleet step.
@@ -802,12 +1178,14 @@ impl<'a> Fleet<'a> {
     }
 
     fn sample(&mut self) {
+        let max_dilation = self.running.iter().map(|j| j.dilation).fold(1.0f64, f64::max);
         self.samples.push(UtilSample {
             step: self.step,
             utilization: self.last_util,
             goodput: self.last_good,
             running: self.running.len(),
             queued: self.queue.len(),
+            max_dilation,
         });
     }
 
@@ -823,6 +1201,27 @@ impl<'a> Fleet<'a> {
         let jcts: Vec<f64> = jobs.iter().filter_map(|j| j.jct()).map(|x| x as f64).collect();
         let (mean_jct, median_jct) = mean_median(&jcts);
         let h = self.cfg.horizon.max(1) as f64;
+        let mut hot_idx: Vec<usize> =
+            (0..self.link_occ.len()).filter(|&s| self.link_occ[s] > 0.0).collect();
+        hot_idx.sort_by(|&a, &b| self.link_occ[b].total_cmp(&self.link_occ[a]).then(a.cmp(&b)));
+        let hotspots: Vec<LinkHotspot> = hot_idx
+            .iter()
+            .take(8)
+            .map(|&s| {
+                let node = s / 4;
+                LinkHotspot {
+                    x: node % self.cfg.nx,
+                    y: node / self.cfg.nx,
+                    dir: s % 4,
+                    mean_occupancy: self.link_occ[s] / h,
+                }
+            })
+            .collect();
+        let mean_dilation = if self.dilation_weight > 0.0 {
+            self.dilation_time / self.dilation_weight
+        } else {
+            1.0
+        };
         let run = FleetRun {
             label,
             summary: FleetSummary {
@@ -837,19 +1236,66 @@ impl<'a> Fleet<'a> {
                 shrinks: jobs.iter().map(|j| j.shrinks).sum(),
                 ft_continues: jobs.iter().map(|j| j.ft_continues).sum(),
                 queue_waits: self.queue_waits,
+                backfills: self.backfills,
                 transitions: self.transitions,
+                mean_dilation,
+                max_dilation: self.max_dilation.max(1.0),
+                contention_epochs: self.contention_epochs,
                 cache: self.cache.stats().clone(),
             },
             jobs,
             samples: self.samples,
+            hotspots,
             events: self.events_log,
         };
         (run, self.cache)
     }
 }
 
+/// One entry of the wall-clock engine's global event heap. Cluster
+/// events sort before arrivals at equal times (matching the
+/// round-robin loop's per-step order), `seq` preserves source order
+/// within a kind.
+#[derive(Debug)]
+struct WallEntry {
+    time: f64,
+    rank: u8,
+    seq: u64,
+    kind: WallKind,
+}
+
+#[derive(Debug)]
+enum WallKind {
+    Cluster(ClusterEvent),
+    Arrival(JobSpec),
+}
+
+impl PartialEq for WallEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for WallEntry {}
+
+impl PartialOrd for WallEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for WallEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then(self.rank.cmp(&other.rank))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
 /// Run one seeded fleet simulation. Errors on the first placement-
-/// invariant violation (the CI gate) or invalid scripted event.
+/// invariant violation (the CI gate), clock regression, or invalid
+/// scripted event.
 pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetRun, FleetError> {
     Ok(run_with_cache(cfg)?.0)
 }
@@ -875,10 +1321,23 @@ pub fn run_with_cache(cfg: &FleetConfig) -> Result<(FleetRun, PlanCache), FleetE
     if let Some(m) = &cfg.mtbf {
         timeline.extend(m.generate(cfg.nx, cfg.ny, cfg.horizon));
     }
+    match cfg.clock {
+        ClockMode::RoundRobin => run_round_robin(cfg, label, specs, timeline, arrivals),
+        ClockMode::WallClock => run_wall_clock(cfg, label, specs, timeline, arrivals),
+    }
+}
+
+/// The legacy single-clock loop (the differential reference).
+fn run_round_robin(
+    cfg: &FleetConfig,
+    label: String,
+    specs: Vec<JobSpec>,
+    timeline: Vec<TimedEvent>,
+    arrivals: usize,
+) -> Result<(FleetRun, PlanCache), FleetError> {
     let mut events = EventQueue::new(timeline);
     let mut pending: VecDeque<JobSpec> = specs.into();
     let mut fleet = Fleet::new(cfg);
-    let sample_every = (cfg.horizon / 64).max(1);
 
     for step in 0..cfg.horizon {
         fleet.step = step;
@@ -902,11 +1361,97 @@ pub fn run_with_cache(cfg: &FleetConfig) -> Result<(FleetRun, PlanCache), FleetE
             fleet.try_admit()?;
         }
         fleet.check_invariants()?;
-        if step % sample_every == 0 {
+        if step % fleet.sample_every == 0 {
             fleet.sample();
         }
     }
     Ok(fleet.finish(label, arrivals))
+}
+
+/// The event-driven wall-clock engine: cluster events and arrivals
+/// merge into one time-ordered heap; between events, jobs integrate
+/// progress on their own (possibly contention-dilated) timelines.
+fn run_wall_clock(
+    cfg: &FleetConfig,
+    label: String,
+    specs: Vec<JobSpec>,
+    timeline: Vec<TimedEvent>,
+    arrivals: usize,
+) -> Result<(FleetRun, PlanCache), FleetError> {
+    let mut heap: BinaryHeap<Reverse<WallEntry>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    // Drain through EventQueue so equal-time cluster events keep the
+    // exact stable order the round-robin loop replays.
+    let mut events = EventQueue::new(timeline);
+    while let Some(ev) = events.pop_due(u64::MAX) {
+        if ev.at_step >= cfg.horizon {
+            continue;
+        }
+        heap.push(Reverse(WallEntry {
+            time: ev.at_step as f64,
+            rank: 0,
+            seq,
+            kind: WallKind::Cluster(ev.event),
+        }));
+        seq += 1;
+    }
+    for spec in specs {
+        if spec.arrival_step >= cfg.horizon {
+            continue;
+        }
+        heap.push(Reverse(WallEntry {
+            time: spec.arrival_step as f64,
+            rank: 1,
+            seq,
+            kind: WallKind::Arrival(spec),
+        }));
+        seq += 1;
+    }
+
+    let mut fleet = Fleet::new(cfg);
+    let horizon = cfg.horizon as f64;
+    while let Some(Reverse(entry)) = heap.pop() {
+        let t = entry.time;
+        if t < fleet.now {
+            return Err(FleetError::Invariant {
+                step: fleet.now as u64,
+                violation: format!("global event clock regressed: {t} < {}", fleet.now),
+            });
+        }
+        fleet.advance_to(t)?;
+        fleet.step = t as u64;
+        apply_entry(&mut fleet, entry)?;
+        // Batch every same-time entry before admission so a multi-event
+        // instant behaves exactly like one round-robin step.
+        while heap.peek().is_some_and(|Reverse(e)| e.time == t) {
+            let Reverse(e) = heap.pop().expect("peeked");
+            apply_entry(&mut fleet, e)?;
+        }
+        fleet.try_admit()?;
+        fleet.refresh_contention()?;
+    }
+    fleet.advance_to(horizon)?;
+    Ok(fleet.finish(label, arrivals))
+}
+
+fn apply_entry(fleet: &mut Fleet<'_>, entry: WallEntry) -> Result<(), FleetError> {
+    match entry.kind {
+        WallKind::Cluster(event) => {
+            fleet.handle_event(TimedEvent { at_step: entry.time as u64, event })
+        }
+        WallKind::Arrival(spec) => {
+            fleet.log(format!(
+                "job {} arrives: {}x{} for {} steps ({})",
+                spec.id,
+                spec.w,
+                spec.h,
+                spec.duration_steps,
+                spec.policy.name()
+            ));
+            fleet.queue.push_back(Job::new(spec));
+            Ok(())
+        }
+    }
 }
 
 /// Run the same seeded fleet once per policy override — the
@@ -945,6 +1490,7 @@ mod tests {
             min_duration_steps: 120,
             shapes: vec![(4, 4)],
             policies: vec![JobPolicy::Continue],
+            scripted: Vec::new(),
         };
         cfg
     }
@@ -970,6 +1516,40 @@ mod tests {
         assert_eq!(a.jobs.len(), b.jobs.len());
         for (x, y) in a.jobs.iter().zip(&b.jobs) {
             assert_eq!(x.completed_at, y.completed_at);
+        }
+    }
+
+    #[test]
+    fn clock_mode_names_roundtrip() {
+        for c in ClockMode::ALL {
+            assert_eq!(ClockMode::parse(c.name()), Some(c));
+        }
+        assert_eq!(ClockMode::parse("wall"), Some(ClockMode::WallClock));
+        assert_eq!(ClockMode::parse("rr"), Some(ClockMode::RoundRobin));
+        assert_eq!(ClockMode::parse("??"), None);
+    }
+
+    #[test]
+    fn wall_clock_without_contention_matches_round_robin() {
+        // The in-module smoke version of the differential contract
+        // (`rust/tests/fleet_async.rs` runs the multi-seed version):
+        // same config, both engines, bit-identical trace.
+        let mut cfg = tiny_cfg();
+        cfg.events = vec![fail_at(40, Rect::new(0, 0, 2, 2)), repair_at(90, Rect::new(0, 0, 2, 2))];
+        cfg.policy = Some(JobPolicy::Adaptive);
+        let rr = run_fleet(&cfg).unwrap();
+        cfg.clock = ClockMode::WallClock;
+        let wall = run_fleet(&cfg).unwrap();
+        assert_eq!(rr.events, wall.events, "placement trace must match bit-for-bit");
+        assert_eq!(rr.summary.goodput.to_bits(), wall.summary.goodput.to_bits());
+        assert_eq!(
+            rr.summary.mean_utilization.to_bits(),
+            wall.summary.mean_utilization.to_bits()
+        );
+        assert_eq!(rr.samples.len(), wall.samples.len());
+        for (x, y) in rr.jobs.iter().zip(&wall.jobs) {
+            assert_eq!(x.completed_at, y.completed_at);
+            assert_eq!(x.waited_steps, y.waited_steps);
         }
     }
 

@@ -17,7 +17,11 @@
 //!
 //! This engine favours correctness over scale (the simulated engine in
 //! [`super::fleet`] is the throughput instrument): jobs step in
-//! lockstep, and queue-wait is approximated by migrate.
+//! lockstep, and queue-wait is approximated by migrate. Wall-clock
+//! asynchrony and cross-job link contention are likewise properties of
+//! the simulated engine only ([`super::fleet::ClockMode::WallClock`] +
+//! [`super::contention`]) — real trainers here share one process, so
+//! their wall time would measure the host, not the modelled fabric.
 
 use super::placer::{self, Rect};
 use super::{FleetError, JobPolicy, JobSpec};

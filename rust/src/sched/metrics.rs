@@ -1,5 +1,6 @@
 //! Fleet metrics: utilization, job completion time, goodput,
-//! migration counts — and the `BENCH_fleet.json` rows.
+//! migration counts, contention dilation / link hotspots — and the
+//! `BENCH_fleet.json` rows.
 
 use super::JobPolicy;
 use crate::collective::PlanCacheStats;
@@ -16,6 +17,9 @@ pub struct UtilSample {
     pub goodput: f64,
     pub running: usize,
     pub queued: usize,
+    /// Largest cross-job contention dilation among running jobs at
+    /// this step (1.0 = uncontended; the contention-dilation curve).
+    pub max_dilation: f64,
 }
 
 /// Per-job outcome of one fleet run.
@@ -44,6 +48,25 @@ impl JobOutcome {
     }
 }
 
+/// One hot cluster edge: time-averaged charged occupancy under the
+/// contention accounting (the per-link-hotspot curve).
+#[derive(Debug, Clone, Copy)]
+pub struct LinkHotspot {
+    pub x: usize,
+    pub y: usize,
+    /// `Dir::index()` of the directed edge leaving `(x, y)`.
+    pub dir: usize,
+    /// Charged occupancy integrated over the horizon, divided by the
+    /// horizon — mean busy fraction of the edge.
+    pub mean_occupancy: f64,
+}
+
+impl LinkHotspot {
+    pub fn dir_name(&self) -> &'static str {
+        ["east", "west", "north", "south"][self.dir.min(3)]
+    }
+}
+
 /// Aggregate outcome of one fleet run.
 #[derive(Debug, Clone)]
 pub struct FleetSummary {
@@ -64,13 +87,22 @@ pub struct FleetSummary {
     pub ft_continues: u64,
     /// Recovery decisions that sent a job back to the queue.
     pub queue_waits: u64,
+    /// Jobs admitted around a blocked FIFO head (`FleetConfig::backfill`).
+    pub backfills: u64,
     /// Fail/repair events replayed.
     pub transitions: u64,
+    /// Job-time-weighted mean cross-job contention dilation (1.0 when
+    /// contention is off or never binds).
+    pub mean_dilation: f64,
+    /// Largest dilation any job saw over the run.
+    pub max_dilation: f64,
+    /// Contention fair-share recomputations (link epochs).
+    pub contention_epochs: u64,
     pub cache: PlanCacheStats,
 }
 
-/// One fleet run: summary + per-job outcomes + sampled curves + the
-/// annotated event log.
+/// One fleet run: summary + per-job outcomes + sampled curves + link
+/// hotspots + the annotated event log.
 #[derive(Debug, Clone)]
 pub struct FleetRun {
     /// Policy label ("continue-ft", "migrate", ..., or "mixed").
@@ -78,6 +110,9 @@ pub struct FleetRun {
     pub summary: FleetSummary,
     pub jobs: Vec<JobOutcome>,
     pub samples: Vec<UtilSample>,
+    /// Top cluster edges by time-integrated charged occupancy (empty
+    /// when contention accounting is off).
+    pub hotspots: Vec<LinkHotspot>,
     pub events: Vec<(u64, String)>,
 }
 
@@ -99,8 +134,9 @@ pub(crate) fn mean_median(xs: &[f64]) -> (f64, f64) {
 }
 
 /// Append one run's summary + curves to a `BENCH_fleet.json` report:
-/// a `fleet_<label>` summary entry and one `fleet_<label>_t<step>`
-/// entry per utilization/goodput sample.
+/// a `fleet_<label>` summary entry, one `fleet_<label>_t<step>` entry
+/// per utilization/goodput/dilation sample, and one
+/// `fleet_<label>_hot<i>` entry per link hotspot.
 pub fn push_run(report: &mut JsonReport, run: &FleetRun) {
     let s = &run.summary;
     report.push(
@@ -118,7 +154,11 @@ pub fn push_run(report: &mut JsonReport, run: &FleetRun) {
             ("shrinks", s.shrinks as f64),
             ("ft_continues", s.ft_continues as f64),
             ("queue_waits", s.queue_waits as f64),
+            ("backfills", s.backfills as f64),
             ("transitions", s.transitions as f64),
+            ("mean_dilation", s.mean_dilation),
+            ("max_dilation", s.max_dilation),
+            ("contention_epochs", s.contention_epochs as f64),
             ("cache_hit_rate", s.cache.hit_rate()),
             ("incremental_compiles", s.cache.incremental_compiles as f64),
             ("step_splice_rate", s.cache.step_splice_rate()),
@@ -136,6 +176,20 @@ pub fn push_run(report: &mut JsonReport, run: &FleetRun) {
                 ("goodput", p.goodput),
                 ("running", p.running as f64),
                 ("queued", p.queued as f64),
+                ("max_dilation", p.max_dilation),
+            ],
+        );
+    }
+    for (i, h) in run.hotspots.iter().enumerate() {
+        report.push(
+            &format!("fleet_{}_hot{i}", run.label),
+            0.0,
+            0.0,
+            &[
+                ("x", h.x as f64),
+                ("y", h.y as f64),
+                ("dir", h.dir as f64),
+                ("mean_occupancy", h.mean_occupancy),
             ],
         );
     }
@@ -171,5 +225,15 @@ mod tests {
         assert!((m - 2.0).abs() < 1e-12 && (md - 2.0).abs() < 1e-12);
         let (m, md) = mean_median(&[1.0, 2.0, 3.0, 4.0]);
         assert!((m - 2.5).abs() < 1e-12 && (md - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hotspot_dir_names_are_total() {
+        for (dir, name) in
+            [(0, "east"), (1, "west"), (2, "north"), (3, "south"), (9, "south")]
+        {
+            let h = LinkHotspot { x: 1, y: 2, dir, mean_occupancy: 0.5 };
+            assert_eq!(h.dir_name(), name);
+        }
     }
 }

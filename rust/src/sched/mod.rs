@@ -20,20 +20,30 @@
 //!   precondition. [`placer::largest_clear_rect`] is the exact
 //!   boundary-grid max-empty-rectangle over arbitrary obstacle sets
 //!   (failed regions *and* placed jobs);
-//! - [`fleet`] — the deterministic fleet loop. It consumes the
-//!   existing `cluster::EventQueue` and routes each fail/repair to the
-//!   affected job's [`JobPolicy`]: **continue-FT** in place (the
-//!   paper's scheme on the job's sub-mesh), **shrink-restart** (the
-//!   largest clear even sub-rectangle of its own allocation),
-//!   **migrate** (a fresh rectangle elsewhere, paying restart +
-//!   rollback), or **queue-wait**. [`JobPolicy::Adaptive`] arbitrates
-//!   per event by predicted *effective throughput* over the expected
+//! - [`fleet`] — the deterministic fleet engines. Both clock modes
+//!   ([`fleet::ClockMode`]) consume the existing `cluster::EventQueue`
+//!   and route each fail/repair to the affected job's [`JobPolicy`]:
+//!   **continue-FT** in place (the paper's scheme on the job's
+//!   sub-mesh), **shrink-restart** (the largest clear even
+//!   sub-rectangle of its own allocation), **migrate** (a fresh
+//!   rectangle elsewhere, paying restart + rollback), or
+//!   **queue-wait**. [`JobPolicy::Adaptive`] arbitrates per event by
+//!   predicted *effective throughput* over the expected
 //!   time-to-next-event (the MTBF posterior), folding in each
 //!   candidate's one-off costs — the Chameleon-style selection the
 //!   coordinator applies to one job, generalised to a fleet. Repairs
 //!   rejoin in-place holes, grow shrunk jobs back, and trigger
 //!   **defragmenting re-placement** (bottom-left repack, largest
-//!   first) when the queue head still does not fit;
+//!   first) when the queue head still does not fit. A FIFO-blocked
+//!   head can optionally be **backfilled** around
+//!   (`FleetConfig::backfill`). The wall-clock mode steps jobs
+//!   asynchronously on a continuous timeline (global time-ordered
+//!   event heap) and, with contention enabled, dilates step times per
+//!   link epoch;
+//! - [`contention`] — cross-job link contention: each job's compiled
+//!   plan charges per-edge occupancy (plus router-adjacency
+//!   spillover), and edges shared by several jobs split their budget
+//!   max-min fairly, dilating the sharers' allreduce terms;
 //! - [`job`] — the real-trainer path: every placed job drives a
 //!   `DataParallelTrainer` on its sub-mesh, anchored at its physical
 //!   origin via `TrainerConfig::{x0, y0}`, all jobs sharing one
@@ -48,6 +58,7 @@
 //! region and a job rectangle is a registered hole of exactly that
 //! job; new placements never overlap live failed regions.
 
+pub mod contention;
 pub mod fleet;
 pub mod job;
 pub mod metrics;
@@ -60,9 +71,10 @@ use crate::simnet::SimError;
 use crate::trainer::TrainError;
 use thiserror::Error;
 
-pub use fleet::{compare_policies, run_fleet, run_with_cache, FleetConfig};
+pub use contention::{fair_shares, job_load, ContentionModel, EdgeCharge, JobLoad, ShareReport};
+pub use fleet::{compare_policies, run_fleet, run_with_cache, ClockMode, FleetConfig};
 pub use job::{TrainedFleet, TrainedFleetConfig, TrainedJob};
-pub use metrics::{FleetRun, FleetSummary, JobOutcome, UtilSample};
+pub use metrics::{FleetRun, FleetSummary, JobOutcome, LinkHotspot, UtilSample};
 pub use placer::{largest_clear_rect, place, place_oriented, Rect};
 pub use workload::WorkloadModel;
 

@@ -30,6 +30,12 @@ pub struct WorkloadModel {
     /// Per-job recovery policies, drawn uniformly (a fleet-level
     /// override replaces them for per-policy comparisons).
     pub policies: Vec<JobPolicy>,
+    /// Explicitly scripted jobs: when non-empty, [`generate`]
+    /// returns exactly these specs (sorted by arrival) instead of
+    /// sampling — the hook targeted contention/backfill scenarios use.
+    ///
+    /// [`generate`]: WorkloadModel::generate
+    pub scripted: Vec<JobSpec>,
 }
 
 impl WorkloadModel {
@@ -43,6 +49,7 @@ impl WorkloadModel {
             min_duration_steps: 200,
             shapes: vec![(8, 8), (8, 4), (4, 4), (4, 2)],
             policies: vec![JobPolicy::Adaptive],
+            scripted: Vec::new(),
         }
     }
 
@@ -57,11 +64,36 @@ impl WorkloadModel {
             min_duration_steps: 60,
             shapes: vec![(8, 8), (8, 4), (4, 4)],
             policies: vec![JobPolicy::Adaptive],
+            scripted: Vec::new(),
+        }
+    }
+
+    /// A fully scripted workload: exactly `specs`, in arrival order.
+    pub fn from_specs(mut specs: Vec<JobSpec>) -> Self {
+        specs.sort_by_key(|s| s.arrival_step);
+        Self {
+            seed: 0,
+            jobs: specs.len(),
+            mean_interarrival_steps: 1.0,
+            mean_duration_steps: 1.0,
+            min_duration_steps: 1,
+            shapes: Vec::new(),
+            policies: Vec::new(),
+            scripted: specs,
         }
     }
 
     /// Sample the workload: job specs sorted by arrival step.
     pub fn generate(&self) -> Vec<JobSpec> {
+        if !self.scripted.is_empty() {
+            // Arrival order is a contract both fleet engines rely on
+            // (the round-robin loop admits arrivals FIFO), so enforce
+            // it even when the field was populated by hand. Stable:
+            // equal arrivals keep their scripted order.
+            let mut out = self.scripted.clone();
+            out.sort_by_key(|s| s.arrival_step);
+            return out;
+        }
         let mut rng = SplitMix64::new(self.seed ^ 0x464c_4545_5400_0000); // "FLEET"
         let mut out = Vec::with_capacity(self.jobs);
         let mut t = 0u64;
@@ -107,6 +139,22 @@ mod tests {
             .filter(|(x, y)| x.arrival_step == y.arrival_step && x.duration_steps == y.duration_steps)
             .count();
         assert!(same < a.len(), "independent draws should differ somewhere");
+    }
+
+    fn spec(id: usize, arrival_step: u64, policy: JobPolicy) -> JobSpec {
+        JobSpec { id, arrival_step, w: 4, h: 4, duration_steps: 50, policy }
+    }
+
+    #[test]
+    fn scripted_workload_returns_specs_verbatim() {
+        let specs = vec![spec(1, 5, JobPolicy::Continue), spec(0, 0, JobPolicy::Wait)];
+        let m = WorkloadModel::from_specs(specs);
+        let out = m.generate();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].id, 0, "sorted by arrival");
+        assert_eq!(out[1].arrival_step, 5);
+        // Generation is stable.
+        assert_eq!(m.generate().len(), 2);
     }
 
     #[test]

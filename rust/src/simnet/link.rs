@@ -32,6 +32,17 @@ impl LinkModel {
     pub fn transfer_s(&self, bytes: u64, hops: usize) -> f64 {
         self.msg_overhead_s + hops as f64 * self.hop_latency_s + self.serialization_s(bytes)
     }
+
+    /// Fraction of an interval one direction of a link is busy
+    /// streaming `bytes` — the occupancy unit the cross-job contention
+    /// accounting shares between tenants. Clamped to [0, 1]: a link
+    /// cannot be more than fully busy.
+    pub fn busy_fraction(&self, bytes: u64, interval_s: f64) -> f64 {
+        if interval_s <= 0.0 {
+            return 0.0;
+        }
+        (self.serialization_s(bytes) / interval_s).clamp(0.0, 1.0)
+    }
 }
 
 #[cfg(test)]
@@ -44,6 +55,16 @@ mod tests {
         // 100 MiB over one link ~ 5.1 ms.
         let t = m.transfer_s(100 << 20, 1);
         assert!(t > 4e-3 && t < 7e-3, "{t}");
+    }
+
+    #[test]
+    fn busy_fraction_is_clamped_occupancy() {
+        let m = LinkModel::tpu_v3();
+        let bytes = 1 << 20;
+        let t = m.serialization_s(bytes);
+        assert!((m.busy_fraction(bytes, 2.0 * t) - 0.5).abs() < 1e-12);
+        assert_eq!(m.busy_fraction(bytes, 0.0), 0.0);
+        assert_eq!(m.busy_fraction(bytes, t / 10.0), 1.0);
     }
 
     #[test]

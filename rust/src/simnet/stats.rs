@@ -30,8 +30,26 @@ impl LinkStats {
         self.transfers[idx] += 1;
     }
 
+    /// The mesh the dense link slots are indexed on.
+    pub fn mesh(&self) -> &Mesh {
+        &self.mesh
+    }
+
     pub fn bytes_on(&self, link: Link) -> u64 {
         self.bytes[self.mesh.link_index(link)]
+    }
+
+    /// Busy seconds accumulated on one link.
+    pub fn busy_on(&self, link: Link) -> f64 {
+        self.busy_s[self.mesh.link_index(link)]
+    }
+
+    /// `(dense link slot, busy seconds)` for every link that carried
+    /// traffic — the per-link occupancy accounting the fleet's
+    /// cross-job contention model charges outside the DES
+    /// (`sched::contention::job_load`).
+    pub fn busy_slots(&self) -> impl Iterator<Item = (usize, f64)> + '_ {
+        self.busy_s.iter().enumerate().filter(|(_, &b)| b > 0.0).map(|(i, &b)| (i, b))
     }
 
     pub fn transfers_on(&self, link: Link) -> u32 {
@@ -77,5 +95,19 @@ mod tests {
         assert_eq!(s.max_bytes(), 150);
         assert_eq!(s.links_used(), 1);
         assert!((s.max_busy_s() - 1.5e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn busy_slots_expose_occupancy_outside_the_des() {
+        let mesh = Mesh::new(3, 1);
+        let mut s = LinkStats::new(mesh);
+        let l = Link::new(Coord::new(0, 0), Coord::new(1, 0));
+        s.record(l, 100, 2e-6);
+        let slots: Vec<(usize, f64)> = s.busy_slots().collect();
+        assert_eq!(slots.len(), 1);
+        assert_eq!(slots[0].0, mesh.link_index(l));
+        assert!((slots[0].1 - 2e-6).abs() < 1e-15);
+        assert!((s.busy_on(l) - 2e-6).abs() < 1e-15);
+        assert_eq!(s.mesh(), &mesh);
     }
 }

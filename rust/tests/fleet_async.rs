@@ -1,0 +1,313 @@
+//! Differential/property suite for the wall-clock asynchronous fleet
+//! (ISSUE 5):
+//!
+//! - **Differential**: the wall-clock engine with contention disabled
+//!   and synchronized (integer) arrivals reproduces the round-robin
+//!   fleet bit-for-bit — per-job step counts/outcomes, the placement
+//!   trace (full event log), goodput/utilization bits and the sampled
+//!   curves — across >= 3 seeds with live MTBF fail/repair timelines.
+//! - **Properties** (seeded, >= 50 cases each): the global event clock
+//!   is strictly monotone (a regression is an `Err`, and the event log
+//!   is time-ordered), per-link charged occupancy never exceeds
+//!   capacity under the max-min fair split, and per-run
+//!   goodput <= throughput <= 1.0 for randomized quick-style
+//!   workloads.
+//! - **Contention acceptance**: a seeded two-job workload whose 4x4
+//!   rectangles abut shows measurably dilated step time versus its
+//!   isolated replay — asserted on the recorded dilation *and* on the
+//!   completion times, with link hotspots recorded.
+//! - **Backfill regression**: a small job admitted around a blocked
+//!   large head raises utilization without delaying the head's own
+//!   (feasible) placement.
+
+use meshreduce::cluster::MtbfModel;
+use meshreduce::sched::{
+    contention, run_fleet, ClockMode, ContentionModel, FleetConfig, FleetRun, JobPolicy, JobSpec,
+    WorkloadModel,
+};
+use meshreduce::util::prop::{prop_check, Config};
+use meshreduce::util::rng::SplitMix64;
+
+fn small_cfg(seed: u64) -> FleetConfig {
+    let mut cfg = FleetConfig::quick();
+    cfg.nx = 8;
+    cfg.ny = 8;
+    cfg.horizon = 160;
+    cfg.payload = 1 << 11;
+    cfg.workload = WorkloadModel {
+        seed,
+        jobs: 3,
+        mean_interarrival_steps: 12.0,
+        mean_duration_steps: 60.0,
+        min_duration_steps: 30,
+        shapes: vec![(4, 4), (4, 2), (2, 2)],
+        policies: JobPolicy::ALL.to_vec(),
+        scripted: Vec::new(),
+    };
+    cfg.policy = None; // mixed per-job policies
+    cfg.mtbf = Some(MtbfModel::board(seed.wrapping_mul(31).wrapping_add(7), 30.0, 15.0));
+    cfg
+}
+
+fn assert_runs_bit_identical(rr: &FleetRun, wall: &FleetRun) {
+    // Placement trace: the full annotated event log, bit for bit.
+    assert_eq!(rr.events, wall.events, "placement/event trace diverged");
+    // Per-job step counts and outcomes.
+    assert_eq!(rr.jobs.len(), wall.jobs.len());
+    for (a, b) in rr.jobs.iter().zip(&wall.jobs) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.completed_at, b.completed_at, "job {} completion", a.id);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.shrinks, b.shrinks);
+        assert_eq!(a.ft_continues, b.ft_continues);
+        assert_eq!(a.waited_steps, b.waited_steps, "job {} waited", a.id);
+    }
+    // Aggregates and sampled curves.
+    assert_eq!(rr.summary.goodput.to_bits(), wall.summary.goodput.to_bits());
+    assert_eq!(
+        rr.summary.mean_utilization.to_bits(),
+        wall.summary.mean_utilization.to_bits()
+    );
+    assert_eq!(rr.summary.queue_waits, wall.summary.queue_waits);
+    assert_eq!(rr.summary.transitions, wall.summary.transitions);
+    assert_eq!(rr.samples.len(), wall.samples.len());
+    for (a, b) in rr.samples.iter().zip(&wall.samples) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+        assert_eq!(a.goodput.to_bits(), b.goodput.to_bits());
+        assert_eq!((a.running, a.queued), (b.running, b.queued));
+    }
+}
+
+#[test]
+fn wall_clock_reproduces_round_robin_across_seeds() {
+    for seed in [11u64, 23, 37] {
+        let rr_cfg = small_cfg(seed);
+        let mut wall_cfg = small_cfg(seed);
+        wall_cfg.clock = ClockMode::WallClock;
+        assert!(wall_cfg.contention.is_none(), "differential runs contention-free");
+        let rr = run_fleet(&rr_cfg).expect("round-robin reference");
+        let wall = run_fleet(&wall_cfg).expect("wall-clock engine");
+        assert_runs_bit_identical(&rr, &wall);
+        // The wall-clock run carried no contention artifacts.
+        assert_eq!(wall.summary.max_dilation, 1.0);
+        assert!(wall.hotspots.is_empty());
+    }
+}
+
+#[test]
+fn prop_wall_clock_invariants_and_bounds() {
+    // Randomized quick-style workloads through the wall-clock engine
+    // (contention and backfill toggled per case). Any placement
+    // violation or clock regression is an Err; the bounds are the
+    // goodput <= throughput <= 1.0 chain, normalized per chip.
+    let config = Config { cases: 50, seed: 0xA57C_0FFE };
+    prop_check("wall-clock fleet invariants", config, |rng| {
+        let mut cfg = small_cfg(rng.next_u64());
+        cfg.horizon = 80 + rng.next_below(80);
+        cfg.payload = 1 << 10;
+        cfg.workload.jobs = 2 + rng.next_below(3) as usize;
+        cfg.clock = ClockMode::WallClock;
+        if rng.next_below(2) == 1 {
+            cfg.contention = Some(ContentionModel::tpu_default());
+        }
+        cfg.backfill = rng.next_below(2) == 1;
+        let run = run_fleet(&cfg).expect("invariants and clock monotonicity hold");
+        let chips = (cfg.nx * cfg.ny) as f64;
+        let util = run.summary.mean_utilization;
+        assert!(util <= 1.0 + 1e-9, "throughput bound: {util}");
+        assert!(
+            run.summary.goodput / chips <= util + 1e-9,
+            "goodput {} exceeds delivered throughput {util}",
+            run.summary.goodput / chips
+        );
+        // Event log times never regress; sampled steps strictly grow.
+        assert!(run.events.windows(2).all(|w| w[0].0 <= w[1].0), "event clock regressed");
+        assert!(run.samples.windows(2).all(|w| w[0].step < w[1].step));
+        assert!(run.summary.mean_dilation >= 1.0 - 1e-12);
+        assert!(run.summary.max_dilation + 1e-12 >= run.summary.mean_dilation);
+    });
+}
+
+#[test]
+fn prop_fair_shares_never_overcharge_links() {
+    // Randomized synthetic loads: on every contended edge the charged
+    // occupancy respects the capacity, grants never exceed isolated
+    // caps, and uncontended jobs run exactly isolated.
+    let config = Config { cases: 64, seed: 0x11AB_5EED };
+    prop_check("max-min fair link shares", config, |rng: &mut SplitMix64| {
+        let n = 2 + rng.next_below(4) as usize;
+        let mut loads = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cap = 0.05 + 0.95 * rng.next_f64();
+            let mut edges = Vec::new();
+            for _ in 0..(1 + rng.next_below(6)) {
+                let slot = rng.next_below(24) as usize;
+                let cost = 0.1 + 1.9 * rng.next_f64();
+                edges.push((slot, cost));
+            }
+            edges.sort_unstable_by_key(|e| e.0);
+            edges.dedup_by_key(|e| e.0);
+            loads.push(contention::JobLoad { cap, edges });
+        }
+        let capacity = 0.1 + 0.9 * rng.next_f64();
+        let rep = contention::fair_shares(capacity, &loads);
+        assert_eq!(rep.rates.len(), n);
+        for e in &rep.contended {
+            assert!(e.jobs >= 2);
+            assert!(
+                e.occupancy <= capacity + 1e-6,
+                "edge {} charged {} over capacity {capacity}",
+                e.slot,
+                e.occupancy
+            );
+        }
+        let contended_slot = |slot: usize| rep.contended.iter().any(|e| e.slot == slot);
+        for (j, load) in loads.iter().enumerate() {
+            assert!(rep.rates[j] > 0.0, "job {j} starved to zero");
+            assert!(rep.rates[j] <= load.cap + 1e-12);
+            if !load.edges.iter().any(|&(slot, _)| contended_slot(slot)) {
+                assert_eq!(
+                    rep.rates[j].to_bits(),
+                    load.cap.to_bits(),
+                    "uncontended job {j} must run isolated"
+                );
+            }
+        }
+    });
+}
+
+fn spec(id: usize, arrival: u64, w: usize, h: usize, duration: u64) -> JobSpec {
+    let policy = JobPolicy::Continue;
+    JobSpec { id, arrival_step: arrival, w, h, duration_steps: duration, policy }
+}
+
+fn contended_cfg(jobs: Vec<JobSpec>) -> FleetConfig {
+    let mut cfg = FleetConfig::quick();
+    cfg.nx = 8;
+    cfg.ny = 8;
+    // Generous horizon: the isolated job must certainly complete, and
+    // completion time scales with the simulated allreduce makespan.
+    cfg.horizon = 2000;
+    // Allreduce-dominated steps: big payload, tiny compute, so link
+    // occupancy is high and the boundary spillover binds.
+    cfg.payload = 1 << 20;
+    cfg.compute_s = 5e-5;
+    cfg.mtbf = None;
+    cfg.workload = WorkloadModel::from_specs(jobs);
+    cfg.policy = None;
+    cfg.clock = ClockMode::WallClock;
+    cfg.contention = Some(ContentionModel::stressed());
+    cfg
+}
+
+#[test]
+fn shared_edge_contention_dilates_versus_isolated_replay() {
+    // Two 4x4 jobs placed abutting at (0,0) and (4,0): their allreduce
+    // rings meet (via router-adjacency spillover) on the x=3/x=4
+    // boundary edges. The isolated replay of job 0 under the *same*
+    // contention model sees no dilation; the shared run must.
+    let both = contended_cfg(vec![spec(0, 0, 4, 4, 12), spec(1, 0, 4, 4, 12)]);
+    let solo = contended_cfg(vec![spec(0, 0, 4, 4, 12)]);
+    let shared = run_fleet(&both).expect("two-job contended fleet");
+    let isolated = run_fleet(&solo).expect("isolated replay");
+
+    // Both placed as expected (abutting), per the placement trace.
+    assert!(shared.events.iter().any(|(_, e)| e == "job 0 placed: 4x4 at (0,0)"));
+    assert!(shared.events.iter().any(|(_, e)| e == "job 1 placed: 4x4 at (4,0)"));
+
+    // The isolated replay is uncontended even with the model enabled:
+    // single-job edges never constrain (self-interference is already
+    // priced by the DES makespan).
+    assert!(
+        isolated.summary.max_dilation <= 1.0 + 1e-9,
+        "isolated replay must not self-dilate: {}",
+        isolated.summary.max_dilation
+    );
+
+    // Shared edges dilate the step measurably...
+    assert!(
+        shared.summary.max_dilation > 1.01,
+        "abutting jobs must contend: max dilation {}",
+        shared.summary.max_dilation
+    );
+    assert!(shared.summary.mean_dilation > 1.0 + 1e-9);
+    assert!(shared.summary.contention_epochs > 0);
+
+    // ...which shows up in wall-clock completion time versus the
+    // isolated replay (later, or never within the horizon).
+    let c1 = isolated.jobs[0].completed_at.expect("isolated job completes");
+    // `None` is the extreme case: so dilated it never finished.
+    if let Some(c2) = shared.jobs[0].completed_at {
+        assert!(c2 > c1, "contended completion {c2} vs isolated {c1}");
+    }
+
+    // Hotspot curve recorded, hottest edges first.
+    assert!(!shared.hotspots.is_empty(), "contended run must record link hotspots");
+    assert!(shared
+        .hotspots
+        .windows(2)
+        .all(|w| w[0].mean_occupancy >= w[1].mean_occupancy));
+    assert!(shared.hotspots.iter().all(|h| h.x < 8 && h.y < 8 && h.dir < 4));
+}
+
+#[test]
+fn backfill_raises_utilization_without_delaying_the_head() {
+    // Geometry: an 8x4 job holds the lower half of an 8x8 mesh; an
+    // 8x8 head cannot place until it completes; a short 4x4 job can
+    // run in the free upper half meanwhile. The horizon ends before
+    // the non-backfilled run could ever start the small job.
+    let jobs = vec![spec(0, 0, 8, 4, 120), spec(1, 1, 8, 8, 40), spec(2, 2, 4, 4, 15)];
+    let mut off = FleetConfig::quick();
+    off.nx = 8;
+    off.ny = 8;
+    off.horizon = 150;
+    off.payload = 1 << 10;
+    off.mtbf = None;
+    off.workload = WorkloadModel::from_specs(jobs);
+    off.policy = None;
+    off.clock = ClockMode::WallClock;
+    let mut on = off.clone();
+    on.backfill = true;
+
+    let run_off = run_fleet(&off).expect("fifo run");
+    let run_on = run_fleet(&on).expect("backfill run");
+
+    assert_eq!(run_off.summary.backfills, 0);
+    assert!(run_on.summary.backfills >= 1, "small job must be backfilled");
+    assert!(run_on
+        .events
+        .iter()
+        .any(|(_, e)| e.contains("backfilled around blocked head 1")));
+
+    // Utilization (and completions) rise.
+    assert!(
+        run_on.summary.mean_utilization > run_off.summary.mean_utilization + 1e-6,
+        "backfill must raise utilization: {} vs {}",
+        run_on.summary.mean_utilization,
+        run_off.summary.mean_utilization
+    );
+    assert!(run_on.summary.completed > run_off.summary.completed);
+
+    // No admitted job's start precedes a feasible head placement it
+    // would have blocked: the head's own placement step is identical
+    // with and without backfill, and the backfilled job started while
+    // the head was still infeasible (strictly before it).
+    let placed_step = |run: &FleetRun, job: &str| -> u64 {
+        run.events
+            .iter()
+            .find(|(_, e)| e.starts_with(&format!("job {job} placed")))
+            .map(|(t, _)| *t)
+            .expect("placement logged")
+    };
+    let head_on = placed_step(&run_on, "1");
+    let head_off = placed_step(&run_off, "1");
+    assert_eq!(head_on, head_off, "backfill must not delay the head's placement");
+    assert!(placed_step(&run_on, "2") < head_on);
+
+    // The backfill knob behaves identically under both engines.
+    let mut on_rr = on.clone();
+    on_rr.clock = ClockMode::RoundRobin;
+    let run_on_rr = run_fleet(&on_rr).expect("round-robin backfill run");
+    assert_runs_bit_identical(&run_on_rr, &run_on);
+}

@@ -35,6 +35,7 @@ fn prop_random_fleets_never_violate_placement_invariants() {
             min_duration_steps: 30,
             shapes: vec![(2, 2), (4, 2), (4, 4)],
             policies: JobPolicy::ALL.to_vec(),
+            scripted: Vec::new(),
         };
         cfg.policy = None; // mixed per-job policies
         let mtbf = 10.0 + 30.0 * rng.next_f64();

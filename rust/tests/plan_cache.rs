@@ -1,13 +1,17 @@
 //! Public-API integration tests for the topology-keyed plan cache and
 //! the parallel MTBF sweep driver: cache-hit plans are structurally
 //! identical to fresh compiles, fail→repair→fail cycles reuse plans,
-//! and the paper-scale (16x32) sweep grid completes with a non-zero
-//! hit rate.
+//! the paper-scale (16x32) sweep grid completes with a non-zero hit
+//! rate, and `PlanCache::{save, load}` failure paths (truncated file,
+//! wrong topology fingerprint, corrupted route bytes) return `Err`
+//! without panicking.
 
 use meshreduce::cluster::{run_sweep, SweepConfig};
 use meshreduce::collective::{build_schedule, CompiledSchedule, PlanCache, Scheme};
 use meshreduce::coordinator::policy::RecoveryPolicy;
 use meshreduce::mesh::{FailedRegion, Topology};
+use std::fs;
+use std::path::PathBuf;
 
 #[test]
 fn cache_round_trip_matches_fresh_compiles() {
@@ -55,6 +59,86 @@ fn verified_cache_accepts_long_alternation() {
         cache.get(Scheme::FaultTolerant, &b, 2048).unwrap();
     }
     assert!(cache.stats().hits >= 4);
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("meshreduce_plancache_{name}_{}", std::process::id()))
+}
+
+/// Build a one-entry cache (healthy 8x8 FT plan) and save it.
+fn saved_cache_bytes(name: &str) -> (PathBuf, Vec<u8>) {
+    let mut cache = PlanCache::new(4);
+    cache.get(Scheme::FaultTolerant, &Topology::full(8, 8), 1 << 10).unwrap();
+    let path = temp_path(name);
+    let written = cache.save(&path, 1).unwrap();
+    assert_eq!(written, 1);
+    let bytes = fs::read(&path).unwrap();
+    (path, bytes)
+}
+
+#[test]
+fn persisted_cache_round_trips() {
+    let (path, bytes) = saved_cache_bytes("roundtrip");
+    assert!(bytes.len() > 20, "header + one entry expected");
+    let loaded = PlanCache::load(&path, 4).unwrap();
+    assert_eq!(loaded.stats().persist_loaded, 1);
+    assert_eq!(loaded.stats().persist_rejected, 0);
+    let mut loaded = loaded;
+    loaded.get(Scheme::FaultTolerant, &Topology::full(8, 8), 1 << 10).unwrap();
+    assert_eq!(loaded.stats().hits, 1, "persisted entry must serve the first visit");
+    let _ = fs::remove_file(&path);
+}
+
+#[test]
+fn truncated_cache_file_errors_without_panicking() {
+    let (path, bytes) = saved_cache_bytes("truncated");
+    for cut in [bytes.len() / 2, 21, 12, 3] {
+        fs::write(&path, &bytes[..cut]).unwrap();
+        let err = PlanCache::load(&path, 4).expect_err("truncated file must fail");
+        // Truncation surfaces as InvalidData or a short read.
+        assert!(
+            matches!(
+                err.kind(),
+                std::io::ErrorKind::InvalidData | std::io::ErrorKind::UnexpectedEof
+            ),
+            "unexpected error kind: {err:?}"
+        );
+    }
+    let _ = fs::remove_file(&path);
+}
+
+#[test]
+fn wrong_topology_fingerprint_errors_without_panicking() {
+    // The key's `nx` lives right after the 20-byte header
+    // (magic u64 + version u32 + entry count u64). Rewriting 8 -> 6
+    // makes the fingerprint disagree with the 8x8 plan it carries:
+    // the entry fails validation, and a file whose every entry is
+    // rejected is an InvalidData error, not a silent cold start.
+    let (path, mut bytes) = saved_cache_bytes("fingerprint");
+    bytes[20..28].copy_from_slice(&6u64.to_le_bytes());
+    fs::write(&path, &bytes).unwrap();
+    let err = PlanCache::load(&path, 4).expect_err("wrong fingerprint must fail");
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    // A nonsensical dimension (0) is rejected at the framing layer.
+    bytes[20..28].copy_from_slice(&0u64.to_le_bytes());
+    fs::write(&path, &bytes).unwrap();
+    let err = PlanCache::load(&path, 4).expect_err("degenerate dims must fail");
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    let _ = fs::remove_file(&path);
+}
+
+#[test]
+fn corrupted_route_bytes_error_without_panicking() {
+    // The entry's serialization ends with the last step's cached
+    // route ranges; stomping the final u64 corrupts route bytes and
+    // must fail the load (length fields are bounds-checked).
+    let (path, mut bytes) = saved_cache_bytes("routes");
+    let n = bytes.len();
+    bytes[n - 8..].copy_from_slice(&u64::MAX.to_le_bytes());
+    fs::write(&path, &bytes).unwrap();
+    let err = PlanCache::load(&path, 4).expect_err("corrupt route bytes must fail");
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    let _ = fs::remove_file(&path);
 }
 
 #[test]
