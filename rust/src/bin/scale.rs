@@ -1,0 +1,167 @@
+//! Scale-sweep binary: wall-clock fleet engine throughput across
+//! growing mesh dimensions, as a CI artifact.
+//!
+//!     cargo run --release --bin scale                    # full sweep, up to 256x512
+//!     cargo run --release --bin scale -- --quick         # CI sweep, up to 256x256
+//!     cargo run --release --bin scale -- --quick --verify \
+//!         --baseline ci/scale_floor.txt                  # CI gate
+//!     cargo run --release --bin scale -- --meshes 32x32,128x128 --horizon 200 --seed 7
+//!
+//! Every cell runs the event-driven wall-clock engine with cross-job
+//! link contention and sparse-occupancy fast paths enabled, and is
+//! timed end to end; **events/sec** is integration segments processed
+//! per wall second. Under `--verify` each cell is replayed through
+//! the dense full-recompute reference path and any bit-level
+//! divergence exits non-zero.
+//!
+//! Writes `BENCH_scale.json` (override with `MESHREDUCE_BENCH_JSON`):
+//! one `scale_<nx>x<ny>` entry per cell (chips, jobs, segments,
+//! events/sec, goodput) plus a `scale_total` aggregate. With
+//! `--baseline PATH` (a text file holding one number: the floor
+//! events/sec) the run exits non-zero when aggregate throughput drops
+//! below 70% of the floor — the CI regression gate.
+
+use meshreduce::cluster::{aggregate_events_per_sec, run_scale, ScaleConfig};
+use meshreduce::util::bench::JsonReport;
+
+fn parse_mesh(s: &str) -> Option<(usize, usize)> {
+    let (a, b) = s.split_once('x')?;
+    Some((a.parse().ok()?, b.parse().ok()?))
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |key: &str| {
+        args.iter().position(|a| a == key).and_then(|i| args.get(i + 1)).map(String::as_str)
+    };
+    let has = |key: &str| args.iter().any(|a| a == key);
+
+    let quick = has("--quick") || std::env::var("MESHREDUCE_BENCH_QUICK").is_ok();
+    let mut cfg = if quick { ScaleConfig::quick() } else { ScaleConfig::full() };
+    cfg.verify = has("--verify");
+    if let Some(list) = get("--meshes") {
+        let meshes: Vec<(usize, usize)> = list.split(',').filter_map(parse_mesh).collect();
+        if meshes.is_empty() {
+            eprintln!("unparseable --meshes {list} (use e.g. 32x32,128x128)");
+            std::process::exit(2);
+        }
+        cfg.meshes = meshes;
+    }
+    if let Some(h) = get("--horizon").and_then(|s| s.parse().ok()) {
+        cfg.horizon = h;
+    }
+    if let Some(s) = get("--seed").and_then(|s| s.parse().ok()) {
+        cfg.seed = s;
+    }
+    let floor = get("--baseline").map(|path| {
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("cannot read baseline floor {path}: {e}");
+            std::process::exit(2);
+        });
+        let floor: f64 = text
+            .split_whitespace()
+            .next()
+            .and_then(|t| t.parse().ok())
+            .unwrap_or_else(|| {
+                eprintln!("baseline floor {path} does not start with a number");
+                std::process::exit(2);
+            });
+        floor
+    });
+
+    eprintln!(
+        "scale: {} cells up to {:?}, horizon {} steps, seed {}, verify={}",
+        cfg.meshes.len(),
+        cfg.meshes.iter().max_by_key(|&&(x, y)| x * y).copied().unwrap_or((0, 0)),
+        cfg.horizon,
+        cfg.seed,
+        cfg.verify,
+    );
+
+    let t0 = std::time::Instant::now();
+    let points = match run_scale(&cfg) {
+        Ok(points) => points,
+        Err(e) => {
+            eprintln!("scale sweep failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut report = JsonReport::new();
+    println!(
+        "\n{:<9} {:>7} {:>5} {:>5} {:>10} {:>7} {:>9} {:>12} {:>8}",
+        "mesh", "chips", "jobs", "done", "segments", "epochs", "wall-s", "events/s", "goodput"
+    );
+    for p in &points {
+        println!(
+            "{:<9} {:>7} {:>5} {:>5} {:>10} {:>7} {:>9.3} {:>12.0} {:>8.1}",
+            format!("{}x{}", p.nx, p.ny),
+            p.chips,
+            p.jobs,
+            p.completed,
+            p.segments,
+            p.contention_epochs,
+            p.wall_s,
+            p.events_per_sec,
+            p.goodput,
+        );
+        report.push(
+            &format!("scale_{}x{}", p.nx, p.ny),
+            p.wall_s,
+            0.0,
+            &[
+                ("nx", p.nx as f64),
+                ("ny", p.ny as f64),
+                ("chips", p.chips as f64),
+                ("jobs", p.jobs as f64),
+                ("completed", p.completed as f64),
+                ("segments", p.segments as f64),
+                ("contention_epochs", p.contention_epochs as f64),
+                ("wall_s", p.wall_s),
+                ("events_per_sec", p.events_per_sec),
+                ("goodput", p.goodput),
+                ("mean_utilization", p.mean_utilization),
+                ("max_dilation", p.max_dilation),
+            ],
+        );
+    }
+    let agg = aggregate_events_per_sec(&points);
+    let segments: u64 = points.iter().map(|p| p.segments).sum();
+    let sim_wall: f64 = points.iter().map(|p| p.wall_s).sum();
+    println!("\naggregate: {segments} segments in {sim_wall:.3}s = {agg:.0} events/s");
+    report.push(
+        "scale_total",
+        sim_wall,
+        0.0,
+        &[
+            ("cells", points.len() as f64),
+            ("segments", segments as f64),
+            ("wall_s", sim_wall),
+            ("events_per_sec", agg),
+        ],
+    );
+
+    match report.write("BENCH_scale.json") {
+        Ok(path) => eprintln!("scale record written to {path} ({wall:.1}s wall)"),
+        Err(e) => {
+            eprintln!("failed to write scale record: {e}");
+            std::process::exit(1);
+        }
+    }
+
+    if let Some(floor) = floor {
+        // The gate trips on a >30% regression against the checked-in
+        // floor, which is set well below typical machines so only a
+        // real algorithmic regression (not CI runner noise) fails.
+        let gate = 0.7 * floor;
+        if agg < gate {
+            eprintln!(
+                "REGRESSION: aggregate {agg:.0} events/s below gate {gate:.0} \
+                 (70% of floor {floor:.0})"
+            );
+            std::process::exit(1);
+        }
+        eprintln!("throughput gate passed: {agg:.0} events/s >= {gate:.0}");
+    }
+}

@@ -25,9 +25,14 @@
 //! - [`sweep`] — the parallel MTBF sweep driver: `(policy × MTBF ×
 //!   seed)` grid replayed through the plan cache and the DES,
 //!   producing per-policy effective-throughput curves
-//!   (`BENCH_sweep.json`).
+//!   (`BENCH_sweep.json`);
+//! - [`scale`] — the scale-sweep driver: timed wall-clock fleet runs
+//!   across growing mesh dimensions (up to 256x512), reporting engine
+//!   events/sec with an optional dense-path bit-identity verify
+//!   (`BENCH_scale.json`).
 
 pub mod mtbf;
+pub mod scale;
 pub mod scenario;
 pub mod sweep;
 
@@ -35,6 +40,7 @@ use crate::mesh::{FailedRegion, Mesh, Topology};
 use thiserror::Error;
 
 pub use mtbf::MtbfModel;
+pub use scale::{aggregate_events_per_sec, run_scale, ScaleConfig, ScaleError, ScalePoint};
 pub use scenario::{Scenario, ScenarioError};
 pub use sweep::{
     curves, prime_cache, run_fleet_sweep, run_sweep, CurvePoint, FleetSweepCell,

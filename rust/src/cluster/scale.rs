@@ -1,0 +1,287 @@
+//! Scale-sweep driver: wall-clock fleet throughput as one mesh grows
+//! toward 100k-chip scale.
+//!
+//! Each cell runs the event-driven wall-clock engine with cross-job
+//! link contention on an `nx x ny` mesh, measures the wall seconds of
+//! the whole simulation, and reports **events/sec** — integration
+//! segments processed per wall second ([`FleetSummary::segments`]) —
+//! the engine-throughput figure `BENCH_scale.json` tracks across the
+//! mesh grid. Cells run sequentially (never in parallel) so every
+//! timing sees an otherwise idle process.
+//!
+//! With [`ScaleConfig::verify`] every cell is replayed through the
+//! dense full-recompute reference path
+//! (`FleetConfig::sparse_occupancy = false`) and any bit-level
+//! divergence fails the sweep — the same differential contract
+//! `rust/tests/scale_equivalence.rs` enforces.
+//!
+//! [`FleetSummary::segments`]: crate::sched::FleetSummary::segments
+
+use super::{ClusterEvent, TimedEvent};
+use crate::mesh::FailedRegion;
+use crate::sched::{
+    run_fleet, ClockMode, ContentionModel, FleetConfig, FleetError, FleetRun, JobPolicy,
+    WorkloadModel,
+};
+use std::time::Instant;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum ScaleError {
+    #[error("fleet: {0}")]
+    Fleet(#[from] FleetError),
+    #[error("sparse/dense divergence on the {nx}x{ny} cell: {what}")]
+    Divergence { nx: usize, ny: usize, what: String },
+}
+
+/// Scale-sweep configuration: the mesh grid plus the per-cell fleet
+/// shape knobs shared by every cell.
+#[derive(Debug, Clone)]
+pub struct ScaleConfig {
+    /// Mesh dimensions to sweep, run in order.
+    pub meshes: Vec<(usize, usize)>,
+    /// Fleet horizon per cell (fleet steps).
+    pub horizon: u64,
+    /// Gradient payload per job, f32 elements (small by default: the
+    /// cell cost under measurement is the fleet engine, not the DES).
+    pub payload: usize,
+    /// Workload seed.
+    pub seed: u64,
+    /// Replay every cell through the dense reference path and fail on
+    /// any bit-level divergence.
+    pub verify: bool,
+}
+
+impl ScaleConfig {
+    /// CI-sized sweep: up to the acceptance-scale 256x256 mesh
+    /// (65,536 chips).
+    pub fn quick() -> Self {
+        Self {
+            meshes: vec![(16, 16), (32, 32), (64, 64), (256, 256)],
+            horizon: 120,
+            payload: 1 << 12,
+            seed: 1,
+            verify: false,
+        }
+    }
+
+    /// Full sweep: adds the intermediate squares and the 256x512
+    /// (131,072-chip) top cell.
+    pub fn full() -> Self {
+        Self {
+            meshes: vec![
+                (16, 16),
+                (32, 32),
+                (64, 64),
+                (128, 128),
+                (256, 256),
+                (128, 256),
+                (256, 512),
+            ],
+            horizon: 240,
+            payload: 1 << 12,
+            seed: 1,
+            verify: false,
+        }
+    }
+}
+
+/// One timed cell of the scale sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalePoint {
+    pub nx: usize,
+    pub ny: usize,
+    pub chips: usize,
+    /// Jobs the workload generated for the cell.
+    pub jobs: usize,
+    pub completed: usize,
+    /// Integration segments the engine processed.
+    pub segments: u64,
+    pub contention_epochs: u64,
+    /// Wall seconds of the (sparse-path) simulation.
+    pub wall_s: f64,
+    /// `segments / wall_s` — the engine-throughput metric.
+    pub events_per_sec: f64,
+    pub goodput: f64,
+    pub mean_utilization: f64,
+    pub max_dilation: f64,
+}
+
+/// The per-cell fleet: wall-clock + contention + backfill, with the
+/// job count growing with the mesh edge (capped so placement stays
+/// cheap relative to the engine under test). Failures come from a
+/// fixed scripted timeline rather than `MtbfModel`: the MTBF site
+/// picker runs a feasibility plan for every even-aligned board on the
+/// mesh, which is O(mesh²) per failure and would dominate the timing
+/// at the 256x256+ cells. The script still exercises the recovery
+/// paths (pauses, migrations, epoch-signature changes) the sparse
+/// engine must replay bit-identically.
+fn cell_config(nx: usize, ny: usize, cfg: &ScaleConfig) -> FleetConfig {
+    let jobs = (((nx * ny) as f64).sqrt() as usize / 4).clamp(4, 32);
+    let horizon = cfg.horizon;
+    let mut c = FleetConfig::quick();
+    c.nx = nx;
+    c.ny = ny;
+    c.horizon = horizon;
+    c.payload = cfg.payload;
+    c.compute_s = 0.02;
+    c.workload = WorkloadModel {
+        seed: cfg.seed,
+        jobs,
+        mean_interarrival_steps: (horizon as f64 / (2.0 * jobs as f64)).max(1.0),
+        mean_duration_steps: horizon as f64 / 2.0,
+        min_duration_steps: horizon / 4,
+        shapes: vec![(4, 4), (8, 4), (8, 8)],
+        policies: vec![JobPolicy::Continue, JobPolicy::Migrate, JobPolicy::Adaptive],
+        scripted: Vec::new(),
+    };
+    c.mtbf = None;
+    let q = (horizon / 4).max(1);
+    c.events = vec![
+        TimedEvent { at_step: q, event: ClusterEvent::Fail(FailedRegion::board(0, 0)) },
+        TimedEvent { at_step: q + 2, event: ClusterEvent::Fail(FailedRegion::board(4, 4)) },
+        TimedEvent { at_step: 2 * q, event: ClusterEvent::Repair(FailedRegion::board(0, 0)) },
+        TimedEvent { at_step: 3 * q, event: ClusterEvent::Repair(FailedRegion::board(4, 4)) },
+    ];
+    c.policy = None;
+    c.clock = ClockMode::WallClock;
+    c.contention = Some(ContentionModel::tpu_default());
+    c.backfill = true;
+    c
+}
+
+/// Compare two runs of the same cell for bit-identity; `Err` carries
+/// the first divergence found.
+fn runs_equivalent(sparse: &FleetRun, dense: &FleetRun) -> Result<(), String> {
+    if sparse.events != dense.events {
+        return Err("event trace diverged".to_string());
+    }
+    let (a, b) = (&sparse.summary, &dense.summary);
+    if a.goodput.to_bits() != b.goodput.to_bits() {
+        return Err(format!("goodput {} vs {}", a.goodput, b.goodput));
+    }
+    if a.mean_utilization.to_bits() != b.mean_utilization.to_bits() {
+        return Err(format!("utilization {} vs {}", a.mean_utilization, b.mean_utilization));
+    }
+    if a.mean_dilation.to_bits() != b.mean_dilation.to_bits()
+        || a.max_dilation.to_bits() != b.max_dilation.to_bits()
+    {
+        return Err("dilation diverged".to_string());
+    }
+    if a.contention_epochs != b.contention_epochs || a.segments != b.segments {
+        return Err(format!(
+            "epochs/segments {}:{} vs {}:{}",
+            a.contention_epochs, a.segments, b.contention_epochs, b.segments
+        ));
+    }
+    if sparse.jobs.len() != dense.jobs.len() {
+        return Err("job count diverged".to_string());
+    }
+    for (x, y) in sparse.jobs.iter().zip(&dense.jobs) {
+        if x.completed_at != y.completed_at
+            || x.migrations != y.migrations
+            || x.waited_steps != y.waited_steps
+        {
+            return Err(format!("job {} outcome diverged", x.id));
+        }
+    }
+    if sparse.samples.len() != dense.samples.len() {
+        return Err("sample count diverged".to_string());
+    }
+    for (x, y) in sparse.samples.iter().zip(&dense.samples) {
+        if x.step != y.step
+            || x.goodput.to_bits() != y.goodput.to_bits()
+            || x.utilization.to_bits() != y.utilization.to_bits()
+            || x.max_dilation.to_bits() != y.max_dilation.to_bits()
+        {
+            return Err(format!("sample at step {} diverged", x.step));
+        }
+    }
+    if sparse.hotspots.len() != dense.hotspots.len() {
+        return Err("hotspot count diverged".to_string());
+    }
+    for (x, y) in sparse.hotspots.iter().zip(&dense.hotspots) {
+        if (x.x, x.y, x.dir) != (y.x, y.y, y.dir)
+            || x.mean_occupancy.to_bits() != y.mean_occupancy.to_bits()
+        {
+            return Err(format!("hotspot ({},{}) dir {} diverged", x.x, x.y, x.dir));
+        }
+    }
+    Ok(())
+}
+
+/// Run the sweep: one timed sparse-path fleet per mesh (plus an
+/// untimed dense replay under `verify`), in the configured order.
+pub fn run_scale(cfg: &ScaleConfig) -> Result<Vec<ScalePoint>, ScaleError> {
+    let mut out = Vec::with_capacity(cfg.meshes.len());
+    for &(nx, ny) in &cfg.meshes {
+        let fleet_cfg = cell_config(nx, ny, cfg);
+        let t0 = Instant::now();
+        let run = run_fleet(&fleet_cfg)?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        if cfg.verify {
+            let mut dense_cfg = fleet_cfg.clone();
+            dense_cfg.sparse_occupancy = false;
+            let dense = run_fleet(&dense_cfg)?;
+            if let Err(what) = runs_equivalent(&run, &dense) {
+                return Err(ScaleError::Divergence { nx, ny, what });
+            }
+        }
+        let s = &run.summary;
+        out.push(ScalePoint {
+            nx,
+            ny,
+            chips: nx * ny,
+            jobs: s.arrivals,
+            completed: s.completed,
+            segments: s.segments,
+            contention_epochs: s.contention_epochs,
+            wall_s,
+            events_per_sec: if wall_s > 0.0 { s.segments as f64 / wall_s } else { 0.0 },
+            goodput: s.goodput,
+            mean_utilization: s.mean_utilization,
+            max_dilation: s.max_dilation,
+        });
+    }
+    Ok(out)
+}
+
+/// Sweep-aggregate throughput: total segments over total wall seconds
+/// (the figure the CI regression floor gates on — less noisy than any
+/// single cell).
+pub fn aggregate_events_per_sec(points: &[ScalePoint]) -> f64 {
+    let segments: u64 = points.iter().map(|p| p.segments).sum();
+    let wall: f64 = points.iter().map(|p| p.wall_s).sum();
+    if wall > 0.0 {
+        segments as f64 / wall
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_sweep_times_cells_and_verifies() {
+        let cfg = ScaleConfig {
+            meshes: vec![(16, 16)],
+            horizon: 60,
+            payload: 1 << 11,
+            seed: 3,
+            verify: true,
+        };
+        let points = run_scale(&cfg).expect("sparse and dense paths agree");
+        assert_eq!(points.len(), 1);
+        let p = &points[0];
+        assert_eq!((p.nx, p.ny, p.chips), (16, 16, 256));
+        assert!(p.jobs >= 4);
+        assert!(p.segments >= cfg.horizon, "at least one segment per step");
+        assert!(p.wall_s > 0.0);
+        assert!(p.events_per_sec > 0.0);
+        assert!(p.goodput > 0.0);
+        assert!(aggregate_events_per_sec(&points) > 0.0);
+        assert_eq!(aggregate_events_per_sec(&[]), 0.0);
+    }
+}

@@ -528,6 +528,116 @@ impl CompiledSchedule {
         assert!(self.has_exec, "direct classification only exists on executable plans");
         self.steps[i].direct
     }
+
+    /// Seal the executable view of this plan into a [`FlatPlan`]: one
+    /// contiguous arena per kind (transfers, partitions, partition
+    /// membership) with `u32` offsets, so the executor's steady-state
+    /// traversal is cache-linear over dense POD arrays instead of
+    /// chasing one heap allocation per step and per partition. Built
+    /// once and cached in the executor arena; cloning it is three
+    /// memcpys. Panics on simulation-only plans and on plans whose
+    /// indices exceed `u32` (payloads beyond 4 Gi elements).
+    pub(crate) fn seal(&self) -> FlatPlan {
+        assert!(self.has_exec, "only executable plans seal");
+        let n32 = |x: usize| u32::try_from(x).expect("flat plan field exceeds u32");
+        let mut transfers = Vec::with_capacity(self.num_transfers());
+        let mut partitions = Vec::new();
+        let mut transfer_ids = Vec::new();
+        let mut steps = Vec::with_capacity(self.steps.len());
+        for step in &self.steps {
+            let t0 = n32(transfers.len());
+            for t in &step.transfers {
+                transfers.push(FlatTransfer {
+                    src: n32(t.src),
+                    dst: n32(t.dst),
+                    lo: n32(t.lo),
+                    hi: n32(t.hi),
+                    stage: n32(t.stage),
+                    add: t.op == OpKind::Add,
+                });
+            }
+            let p0 = n32(partitions.len());
+            for p in &step.partitions {
+                let i0 = n32(transfer_ids.len());
+                transfer_ids.extend(p.transfer_ids.iter().map(|&i| t0 + i));
+                partitions.push(FlatPartition { ids: (i0, n32(transfer_ids.len())) });
+            }
+            steps.push(FlatStep {
+                transfers: (t0, n32(transfers.len())),
+                partitions: (p0, n32(partitions.len())),
+                direct: step.direct,
+                elems: step.elems,
+                write_conflict: step.write_conflict,
+            });
+        }
+        FlatPlan {
+            mesh: self.mesh,
+            hash: self.hash,
+            transfers,
+            partitions,
+            transfer_ids,
+            steps,
+        }
+    }
+}
+
+/// Arena-lowered executable plan: every transfer, partition and
+/// partition-membership id of the whole schedule lives in one dense
+/// array per kind, with per-step `(start, end)` `u32` ranges. The
+/// executor traverses these arrays linearly; nothing in the hot loop
+/// dereferences a per-step or per-partition heap allocation. Identity
+/// is `(hash, mesh)`, exactly like the legacy lowering cache.
+#[derive(Debug, Clone)]
+pub struct FlatPlan {
+    pub(crate) mesh: Mesh,
+    pub(crate) hash: u64,
+    /// All steps' transfers, flat, in schedule order.
+    pub(crate) transfers: Vec<FlatTransfer>,
+    /// All steps' write partitions, flat.
+    pub(crate) partitions: Vec<FlatPartition>,
+    /// Flat partition membership: indices into [`Self::transfers`].
+    pub(crate) transfer_ids: Vec<u32>,
+    pub(crate) steps: Vec<FlatStep>,
+}
+
+/// POD transfer record of the sealed arena (20 bytes, `Copy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct FlatTransfer {
+    pub(crate) src: u32,
+    pub(crate) dst: u32,
+    pub(crate) lo: u32,
+    pub(crate) hi: u32,
+    pub(crate) stage: u32,
+    /// `true` = accumulate, `false` = copy.
+    pub(crate) add: bool,
+}
+
+impl FlatTransfer {
+    #[inline]
+    pub(crate) fn len(&self) -> usize {
+        (self.hi - self.lo) as usize
+    }
+}
+
+/// One write partition: a `(start, end)` range into
+/// [`FlatPlan::transfer_ids`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct FlatPartition {
+    pub(crate) ids: (u32, u32),
+}
+
+/// One step of the sealed arena: ranges into the flat arrays plus the
+/// per-step execution flags.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct FlatStep {
+    /// Range into [`FlatPlan::transfers`].
+    pub(crate) transfers: (u32, u32),
+    /// Range into [`FlatPlan::partitions`].
+    pub(crate) partitions: (u32, u32),
+    pub(crate) direct: bool,
+    /// Total elements moved (parallelism threshold input).
+    pub(crate) elems: usize,
+    pub(crate) write_conflict: Option<usize>,
 }
 
 /// Reusable link-routes of a previous plan, keyed by (src, dst)
@@ -911,6 +1021,49 @@ mod tests {
         // (BFS fallback routes are excluded from splicing by design).
         assert!(report.routes_spliced > 0);
         assert!(report.routes_spliced > report.routes_resolved, "{report:?}");
+    }
+
+    #[test]
+    fn sealed_arena_mirrors_nested_plan() {
+        // The flat arena must be a faithful re-layout: same transfers
+        // in the same order, same partition membership (shifted into
+        // global ids), same per-step flags — so the executor's flat
+        // traversal visits exactly what the nested oracle visits.
+        let topo = Topology::with_failure(8, 8, FailedRegion::host(2, 2));
+        let sched = build_schedule(Scheme::FaultTolerant, &topo, 2048).unwrap();
+        let plan = CompiledSchedule::compile_exec(&sched, topo.mesh);
+        let flat = plan.seal();
+        assert_eq!(flat.hash, plan.hash);
+        assert_eq!(flat.mesh, plan.mesh);
+        assert_eq!(flat.steps.len(), plan.steps.len());
+        let (mut t_total, mut p_total) = (0usize, 0usize);
+        for (fs, s) in flat.steps.iter().zip(&plan.steps) {
+            assert_eq!(fs.direct, s.direct);
+            assert_eq!(fs.elems, s.elems);
+            assert_eq!(fs.write_conflict, s.write_conflict);
+            let fts = &flat.transfers[fs.transfers.0 as usize..fs.transfers.1 as usize];
+            assert_eq!(fts.len(), s.transfers.len());
+            for (ft, t) in fts.iter().zip(&s.transfers) {
+                assert_eq!((ft.src as usize, ft.dst as usize), (t.src, t.dst));
+                assert_eq!(
+                    (ft.lo as usize, ft.hi as usize, ft.stage as usize),
+                    (t.lo, t.hi, t.stage)
+                );
+                assert_eq!(ft.add, t.op == OpKind::Add);
+                assert_eq!(ft.len(), t.len());
+            }
+            let fps = &flat.partitions[fs.partitions.0 as usize..fs.partitions.1 as usize];
+            assert_eq!(fps.len(), s.partitions.len());
+            for (fp, p) in fps.iter().zip(&s.partitions) {
+                let ids = &flat.transfer_ids[fp.ids.0 as usize..fp.ids.1 as usize];
+                let want: Vec<u32> = p.transfer_ids.iter().map(|&i| fs.transfers.0 + i).collect();
+                assert_eq!(ids, want.as_slice());
+            }
+            t_total += fts.len();
+            p_total += fps.len();
+        }
+        assert_eq!(t_total, flat.transfers.len(), "step ranges tile the transfer arena");
+        assert_eq!(p_total, flat.partitions.len(), "step ranges tile the partition arena");
     }
 
     #[test]

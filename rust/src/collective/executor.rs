@@ -10,18 +10,26 @@
 //!
 //! Two execution paths share the compiled plan:
 //!
-//! - [`execute_compiled`] — the production path. Each step's transfers
-//!   are grouped into the plan's per-destination *write partitions* and
-//!   applied in parallel with scoped threads when the step moves enough
-//!   data. Within a partition writes happen in schedule order and each
-//!   buffer is written by exactly one thread, while direct-step reads
-//!   touch only ranges no transfer writes (that is what *direct*
-//!   means), so results are **bit-identical** to the serial reference
-//!   regardless of thread count — asserted by
-//!   `tests/executor_equivalence.rs`.
+//! - [`execute_compiled`] — the production path. On first use the plan
+//!   is *sealed* into a [`FlatPlan`] arena cached in the
+//!   [`ExecutorArena`] (keyed by content hash + mesh): all transfers,
+//!   partitions and partition membership ids in one dense POD array
+//!   each, addressed by `u32` ranges, so the steady-state loop walks
+//!   contiguous memory instead of per-step/per-partition heap
+//!   allocations. Each step's transfers are grouped into the plan's
+//!   per-destination *write partitions* and applied in parallel with
+//!   scoped threads when the step moves enough data. Within a
+//!   partition writes happen in schedule order and each buffer is
+//!   written by exactly one thread, while direct-step reads touch only
+//!   ranges no transfer writes (that is what *direct* means), so
+//!   results are **bit-identical** to the serial reference regardless
+//!   of thread count — asserted by `tests/executor_equivalence.rs`,
+//!   which thereby also differential-tests the sealed arena against
+//!   the nested layout.
 //! - [`execute_compiled_serial`] — the straight-line reference
-//!   implementation (the seed executor's semantics), kept both as
-//!   documentation and as the differential-testing oracle.
+//!   implementation (the seed executor's semantics) over the *nested*
+//!   plan layout, kept both as documentation and as the
+//!   differential-testing oracle for the flat path.
 //!
 //! The legacy [`execute`] entry point lowers on first use and caches
 //! the plan in the [`ExecutorArena`], keyed by
@@ -29,7 +37,7 @@
 //! no longer collide the cache the way the old
 //! `(num_steps, payload, total_bytes)` fingerprint could.
 
-use super::compiled::{CompiledSchedule, CompiledStep, Partition};
+use super::compiled::{CompiledSchedule, FlatPartition, FlatPlan, FlatTransfer};
 use super::kernel;
 use super::schedule::{OpKind, Schedule};
 use crate::mesh::{Coord, Mesh};
@@ -101,12 +109,17 @@ impl NodeBuffers {
 }
 
 /// Reusable executor state: the staging arena (presized once from the
-/// compiled max step footprint) plus the cached lowering used by the
-/// legacy [`execute`] entry point.
+/// compiled max step footprint), the sealed [`FlatPlan`] the parallel
+/// path traverses, and the cached lowering used by the legacy
+/// [`execute`] entry point.
 #[derive(Debug, Default)]
 pub struct ExecutorArena {
     stage: Vec<f32>,
     plan: Option<CompiledSchedule>,
+    /// Sealed arena view of the last executed plan, keyed by
+    /// (content hash, mesh) — re-sealed only when a different plan
+    /// arrives, so steady-state training steps pay zero seal cost.
+    flat: Option<FlatPlan>,
 }
 
 impl ExecutorArena {
@@ -117,6 +130,14 @@ impl ExecutorArena {
     fn reserve(&mut self, plan: &CompiledSchedule) {
         if self.stage.len() < plan.max_stage_len {
             self.stage.resize(plan.max_stage_len, 0.0);
+        }
+    }
+
+    fn ensure_flat(&mut self, plan: &CompiledSchedule) {
+        let stale =
+            !matches!(&self.flat, Some(f) if f.hash == plan.hash && f.mesh == plan.mesh);
+        if stale {
+            self.flat = Some(plan.seal());
         }
     }
 }
@@ -226,35 +247,33 @@ impl RawBufs {
     }
 }
 
-/// Apply one write partition of a step. `stage` is the step's staged
-/// source snapshot (unused for direct steps).
+/// Apply one write partition of a step from the sealed arena. `stage`
+/// is the step's staged source snapshot (unused for direct steps).
 ///
 /// Safety: the caller must ensure no other thread writes this
 /// partition's destination buffer and (for direct steps) that the
 /// plan's direct classification holds, which makes every read range
 /// disjoint from every concurrently written range.
-unsafe fn apply_partition(
-    step: &CompiledStep,
-    part: &Partition,
+unsafe fn apply_partition_flat(
+    flat: &FlatPlan,
+    part: FlatPartition,
+    direct: bool,
     ptrs: &RawBufs,
     stage: &[f32],
 ) {
-    for &ti in &part.transfer_ids {
-        let t = &step.transfers[ti as usize];
+    for &ti in &flat.transfer_ids[part.ids.0 as usize..part.ids.1 as usize] {
+        let t = flat.transfers[ti as usize];
         let len = t.len();
-        let dst = ptrs.write(t.dst, t.lo, len);
-        if step.direct {
-            let src = ptrs.read(t.src, t.lo, len);
-            match t.op {
-                OpKind::Copy => kernel::copy(dst, src),
-                OpKind::Add => kernel::add(dst, src),
-            }
+        let dst = ptrs.write(t.dst as usize, t.lo as usize, len);
+        let src: &[f32] = if direct {
+            ptrs.read(t.src as usize, t.lo as usize, len)
         } else {
-            let src = &stage[t.stage..t.stage + len];
-            match t.op {
-                OpKind::Copy => kernel::copy(dst, src),
-                OpKind::Add => kernel::add(dst, src),
-            }
+            &stage[t.stage as usize..t.stage as usize + len]
+        };
+        if t.add {
+            kernel::add(dst, src);
+        } else {
+            kernel::copy(dst, src);
         }
     }
 }
@@ -264,11 +283,11 @@ unsafe fn apply_partition(
 ///
 /// Safety: caller must ensure no concurrent writers to the node
 /// buffers (staging is a pure read phase).
-unsafe fn stage_step(step: &CompiledStep, ptrs: &RawBufs, stage: &mut [f32]) {
-    for t in &step.transfers {
+unsafe fn stage_step_flat(transfers: &[FlatTransfer], ptrs: &RawBufs, stage: &mut [f32]) {
+    for t in transfers {
         let len = t.len();
-        let src = ptrs.read(t.src, t.lo, len);
-        stage[t.stage..t.stage + len].copy_from_slice(src);
+        let src = ptrs.read(t.src as usize, t.lo as usize, len);
+        stage[t.stage as usize..t.stage as usize + len].copy_from_slice(src);
     }
 }
 
@@ -281,49 +300,56 @@ pub fn execute_compiled_with(
 ) -> Result<(), ExecError> {
     validate_plan(plan, bufs)?;
     arena.reserve(plan);
+    arena.ensure_flat(plan);
     let threads = opts.effective_threads();
     let ptrs = RawBufs::new(&mut bufs.bufs);
-    for step in &plan.steps {
+    let ExecutorArena { stage, flat, .. } = arena;
+    let flat = flat.as_ref().expect("flat plan just ensured");
+    for step in &flat.steps {
         #[cfg(debug_assertions)]
         if let Some(dst) = step.write_conflict {
             return Err(ExecError::WriteConflict(plan.mesh.coord_of(dst)));
         }
         if !step.direct {
+            let transfers =
+                &flat.transfers[step.transfers.0 as usize..step.transfers.1 as usize];
             // Safety: read-only phase over the node buffers.
-            unsafe { stage_step(step, &ptrs, &mut arena.stage) };
+            unsafe { stage_step_flat(transfers, &ptrs, &mut stage[..]) };
         }
-        let stage: &[f32] = &arena.stage;
+        let stage: &[f32] = &stage[..];
+        let parts = &flat.partitions[step.partitions.0 as usize..step.partitions.1 as usize];
+        let direct = step.direct;
         // Scale the worker count with the step's data volume (one
         // worker per `par_min_elems` elements) so mid-size steps spawn
         // 2-3 threads rather than the full complement — scoped-thread
         // spawn/join costs tens of microseconds and would otherwise
         // erode the win on steps with ~1 ms of memory traffic.
         let by_volume = step.elems / opts.par_min_elems.max(1);
-        let workers = threads.min(step.partitions.len()).min(by_volume);
+        let workers = threads.min(parts.len()).min(by_volume);
         if workers > 1 {
             std::thread::scope(|scope| {
                 for w in 0..workers {
                     let ptrs = &ptrs;
                     scope.spawn(move || {
                         let mut p = w;
-                        while p < step.partitions.len() {
+                        while p < parts.len() {
                             // Safety: partitions write pairwise-distinct
                             // buffers and each is handled by exactly one
                             // worker (`p ≡ w mod workers`); direct-step
                             // reads are disjoint from all writes by the
                             // compiled classification.
-                            unsafe { apply_partition(step, &step.partitions[p], ptrs, stage) };
+                            unsafe { apply_partition_flat(flat, parts[p], direct, ptrs, stage) };
                             p += workers;
                         }
                     });
                 }
             });
         } else {
-            for part in &step.partitions {
+            for &part in parts {
                 // Safety: single-threaded apply; partition writes are
                 // exclusive trivially, staged reads come from the
                 // snapshot, direct reads are disjoint from writes.
-                unsafe { apply_partition(step, part, &ptrs, stage) };
+                unsafe { apply_partition_flat(flat, part, direct, &ptrs, stage) };
             }
         }
     }

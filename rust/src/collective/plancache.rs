@@ -148,6 +148,35 @@ impl PlanCacheStats {
             self.splice_steps_hit as f64 / self.splice_steps_total as f64
         }
     }
+
+    /// Counters accumulated since `base` was snapshotted — the per-run
+    /// view of a long-lived cache. The counters are cumulative over the
+    /// cache's lifetime, so fleet runs sharing one [`SharedPlanCache`]
+    /// (e.g. the per-policy comparison behind `BENCH_fleet.json`) must
+    /// delta against the snapshot taken when the run started, or every
+    /// run after the first reports the earlier runs' traffic too.
+    pub fn delta(&self, base: &PlanCacheStats) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits.saturating_sub(base.hits),
+            misses: self.misses.saturating_sub(base.misses),
+            full_compiles: self.full_compiles.saturating_sub(base.full_compiles),
+            incremental_compiles: self
+                .incremental_compiles
+                .saturating_sub(base.incremental_compiles),
+            incremental_fallbacks: self
+                .incremental_fallbacks
+                .saturating_sub(base.incremental_fallbacks),
+            validation_evictions: self
+                .validation_evictions
+                .saturating_sub(base.validation_evictions),
+            evictions: self.evictions.saturating_sub(base.evictions),
+            compile_s: (self.compile_s - base.compile_s).max(0.0),
+            splice_steps_total: self.splice_steps_total.saturating_sub(base.splice_steps_total),
+            splice_steps_hit: self.splice_steps_hit.saturating_sub(base.splice_steps_hit),
+            persist_loaded: self.persist_loaded.saturating_sub(base.persist_loaded),
+            persist_rejected: self.persist_rejected.saturating_sub(base.persist_rejected),
+        }
+    }
 }
 
 #[derive(Clone)]
@@ -747,6 +776,24 @@ mod tests {
         let s = shared.stats();
         assert_eq!((s.hits, s.misses), (1, 1));
         assert_eq!(other.len(), 1);
+    }
+
+    #[test]
+    fn stats_delta_isolates_one_runs_traffic() {
+        // Two "runs" against one cache: the second run's delta must
+        // count only its own lookups, not the first run's.
+        let mut cache = PlanCache::new(8);
+        let topo = Topology::with_failure(6, 6, FailedRegion::board(2, 2));
+        cache.get(Scheme::FaultTolerant, &topo, 2048).unwrap();
+        let base = cache.stats().clone();
+        assert_eq!((base.hits, base.misses), (0, 1));
+        cache.get(Scheme::FaultTolerant, &topo, 2048).unwrap();
+        cache.get(Scheme::FaultTolerant, &topo, 2048).unwrap();
+        let d = cache.stats().delta(&base);
+        assert_eq!((d.hits, d.misses), (2, 0));
+        assert_eq!(d.full_compiles, 0);
+        assert_eq!(d.compile_s, 0.0, "hits never compile");
+        assert!((d.hit_rate() - 1.0).abs() < 1e-12);
     }
 
     #[test]

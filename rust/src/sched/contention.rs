@@ -37,7 +37,6 @@
 
 use super::placer::Rect;
 use crate::mesh::{Coord, Dir, Mesh};
-use std::collections::HashMap;
 
 /// Contention model parameters.
 #[derive(Debug, Clone, Copy)]
@@ -100,6 +99,23 @@ pub struct ShareReport {
     pub contended: Vec<EdgeCharge>,
 }
 
+/// Sum `(slot, value)` contributions into one entry per slot, sorted
+/// by slot — the sorted-run replacement for hash-map accumulation on
+/// the sparse touched-edge set. The sort is stable, so each slot's f64
+/// additions happen in emission order and the sums are bit-identical
+/// to in-order `map[slot] += value` accumulation.
+pub(crate) fn accumulate_sorted(mut pairs: Vec<(usize, f64)>) -> Vec<(usize, f64)> {
+    pairs.sort_by_key(|p| p.0);
+    let mut out: Vec<(usize, f64)> = Vec::with_capacity(pairs.len());
+    for (slot, v) in pairs {
+        match out.last_mut() {
+            Some(last) if last.0 == slot => last.1 += v,
+            _ => out.push((slot, v)),
+        }
+    }
+    out
+}
+
 /// Build a job's cluster-level [`JobLoad`] from the per-link busy
 /// seconds of its compiled plan's DES replay (`local_busy` uses the
 /// job-local `rect.w x rect.h` mesh's dense link slots,
@@ -118,7 +134,11 @@ pub fn job_load(
     let cluster = Mesh::new(nx, ny);
     let local = Mesh::new(rect.w, rect.h);
     let unit = compute_s.max(1e-12);
-    let mut charge: HashMap<usize, f64> = HashMap::new();
+    // Emit (touched slot, contribution) pairs and merge them with one
+    // stable sort — only edges the plan actually occupies appear, so
+    // the work is proportional to the plan's footprint, never the
+    // cluster mesh.
+    let mut emitted: Vec<(usize, f64)> = Vec::with_capacity(local_busy.len() * 16);
     for &(slot, busy_s) in local_busy {
         if busy_s <= 0.0 {
             continue;
@@ -134,7 +154,7 @@ pub fn job_load(
         };
         let own = cluster.node_index(from) * 4 + dir.index();
         let reverse = cluster.node_index(to) * 4 + dir.opposite().index();
-        *charge.entry(own).or_insert(0.0) += cost;
+        emitted.push((own, cost));
         if model.adjacency_frac > 0.0 {
             let spill = model.adjacency_frac * cost;
             for endpoint in [from, to] {
@@ -144,15 +164,14 @@ pub fn job_load(
                     let inward = cluster.node_index(peer) * 4 + d.opposite().index();
                     for s in [out, inward] {
                         if s != own && s != reverse {
-                            *charge.entry(s).or_insert(0.0) += spill;
+                            emitted.push((s, spill));
                         }
                     }
                 }
             }
         }
     }
-    let mut edges: Vec<(usize, f64)> = charge.into_iter().collect();
-    edges.sort_unstable_by_key(|e| e.0);
+    let edges = accumulate_sorted(emitted);
     let cap = if step_s > 0.0 { (compute_s / step_s).min(1.0) } else { 0.0 };
     JobLoad { cap, edges }
 }
@@ -165,17 +184,33 @@ pub fn job_load(
 pub fn fair_shares(capacity: f64, loads: &[JobLoad]) -> ShareReport {
     let n = loads.len();
     let cap = capacity.max(1e-9);
-    let mut by_slot: HashMap<usize, Vec<(usize, f64)>> = HashMap::new();
+    // Group contributions by slot with one stable sort over the
+    // touched edges (each job's edge list is already slot-sorted and
+    // duplicate-free, so within a slot the run is in job order —
+    // exactly the order hash-map grouping would have pushed).
+    let mut triples: Vec<(usize, usize, f64)> = Vec::new();
     for (j, l) in loads.iter().enumerate() {
         for &(slot, c) in &l.edges {
             if c > 0.0 {
-                by_slot.entry(slot).or_default().push((j, c));
+                triples.push((slot, j, c));
             }
         }
     }
-    let mut edges: Vec<(usize, Vec<(usize, f64)>)> =
-        by_slot.into_iter().filter(|(_, contrib)| contrib.len() >= 2).collect();
-    edges.sort_unstable_by_key(|e| e.0);
+    triples.sort_by_key(|t| t.0);
+    let mut edges: Vec<(usize, Vec<(usize, f64)>)> = Vec::new();
+    let mut i = 0;
+    while i < triples.len() {
+        let slot = triples[i].0;
+        let mut contrib: Vec<(usize, f64)> = Vec::new();
+        while i < triples.len() && triples[i].0 == slot {
+            contrib.push((triples[i].1, triples[i].2));
+            i += 1;
+        }
+        // Edges charged by a single job never constrain.
+        if contrib.len() >= 2 {
+            edges.push((slot, contrib));
+        }
+    }
 
     let mut x = vec![0.0f64; n];
     let mut active = vec![false; n];
@@ -304,6 +339,23 @@ mod tests {
         let rep = fair_shares(1.0, &loads);
         assert!((rep.rates[0] - 0.2).abs() < 1e-9, "{:?}", rep.rates);
         assert!((rep.rates[1] - 0.8).abs() < 1e-9, "{:?}", rep.rates);
+    }
+
+    #[test]
+    fn accumulate_sorted_matches_in_order_map_accumulation() {
+        // Bit-identity of the sorted-run merge with classic hash-map
+        // accumulation: per slot, additions happen in emission order.
+        let pairs = vec![(3, 0.1), (1, 0.2), (3, 0.3), (1, 0.4), (2, 0.5), (3, 0.7)];
+        let mut map: std::collections::HashMap<usize, f64> = Default::default();
+        for &(s, v) in &pairs {
+            *map.entry(s).or_insert(0.0) += v;
+        }
+        let out = accumulate_sorted(pairs);
+        assert!(out.windows(2).all(|w| w[0].0 < w[1].0));
+        assert_eq!(out.len(), map.len());
+        for (s, v) in out {
+            assert_eq!(v.to_bits(), map[&s].to_bits(), "slot {s}");
+        }
     }
 
     #[test]

@@ -10,8 +10,10 @@
 //!   step, where `step_s` is the DES-simulated fault-tolerant
 //!   allreduce on the job's sub-mesh plus the modelled compute.
 //! - [`ClockMode::WallClock`] — the event-driven engine. Cluster
-//!   events and job arrivals merge into one global time-ordered heap
-//!   on a continuous `f64` timeline; between events each job
+//!   events and job arrivals merge into one globally time-sorted
+//!   timeline, drained in same-instant batches with a cursor (the
+//!   timeline is fixed up front, so no heap is needed) on a
+//!   continuous `f64` clock; between events each job
 //!   integrates progress at its own effective rate, with pauses
 //!   consumed continuously. Progress integration splits at integer
 //!   fleet-step boundaries — the grid utilization/goodput/queue-wait
@@ -42,14 +44,13 @@ use super::placer::{self, Rect};
 use super::workload::WorkloadModel;
 use super::{FleetError, JobPolicy, JobSpec};
 use crate::cluster::{ClusterEvent, ClusterState, EventQueue, MtbfModel, TimedEvent};
-use crate::collective::{PlanCache, PlanError, Scheme};
+use crate::collective::{PlanCache, PlanCacheStats, PlanError, Scheme};
 use crate::coordinator::policy::{effective_throughput, CandidateCost, EventRateEstimator};
 use crate::mesh::{FailedRegion, Topology};
 use crate::perfmodel::steptime;
 use crate::perfmodel::CandidatePrediction;
 use crate::simnet::{simulate_plan, LinkModel};
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{HashMap, VecDeque};
 
 /// Which time model drives the fleet.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -123,6 +124,13 @@ pub struct FleetConfig {
     /// Cross-job link contention (wall-clock engine only; `None`
     /// disables the accounting entirely).
     pub contention: Option<ContentionModel>,
+    /// Sparse-occupancy fast paths for the contention engine:
+    /// per-placement link-load memoization, epoch-to-epoch skips when
+    /// the placement signature is unchanged, and touched-slot hotspot
+    /// extraction. `false` forces the dense full-recompute reference
+    /// path; both are bit-identical
+    /// (`rust/tests/scale_equivalence.rs`).
+    pub sparse_occupancy: bool,
     /// Admit later queued jobs around a blocked FIFO head. Safe by
     /// construction: backfill only runs when the head is unplaceable,
     /// and obstacles only grow as backfills commit, so no backfilled
@@ -153,6 +161,7 @@ impl FleetConfig {
             seed_cache: None,
             clock: ClockMode::RoundRobin,
             contention: None,
+            sparse_occupancy: true,
             backfill: false,
         }
     }
@@ -179,6 +188,7 @@ impl FleetConfig {
             seed_cache: None,
             clock: ClockMode::RoundRobin,
             contention: None,
+            sparse_occupancy: true,
             backfill: false,
         }
     }
@@ -281,13 +291,38 @@ struct StepSim {
     busy: Vec<(usize, f64)>,
 }
 
+/// Sub-mesh simulation memo key: `(w, h, sorted local holes)`.
+type SimKey = (usize, usize, Vec<Rect>);
+
+/// Link-load memo key: the sub-mesh simulation key plus the
+/// rectangle's cluster origin. `contention::job_load` is a pure
+/// function of exactly these inputs (the busy vector and step time
+/// come from the immutable sim memo entry for the same key), so
+/// entries never need invalidation — a moved or reshaped job simply
+/// reads a different key.
+type LoadKey = (SimKey, usize, usize);
+
+/// One link epoch's placement signature: per running job (in order)
+/// its rectangle, sub-mesh sim key, schedulability, and paused flag —
+/// every input the fair-share split depends on. Equal signatures imply
+/// bit-identical epoch outputs.
+type EpochSig = Vec<(Rect, SimKey, bool, bool)>;
+
 struct Fleet<'a> {
     cfg: &'a FleetConfig,
     cluster: ClusterState,
     cache: PlanCache,
     /// Step-time memo per (w, h, sorted local holes): each distinct
     /// sub-mesh topology is simulated once.
-    sim_memo: HashMap<(usize, usize, Vec<Rect>), StepSim>,
+    sim_memo: HashMap<SimKey, StepSim>,
+    /// Cluster-level link-load memo (sparse-occupancy path): one
+    /// [`contention::job_load`] translation per distinct (sub-mesh,
+    /// origin) placement, reused across link epochs.
+    load_memo: HashMap<LoadKey, contention::JobLoad>,
+    /// Plan-cache counters at construction; [`FleetSummary::cache`]
+    /// reports the delta so runs sharing a seed cache (or a warm-start
+    /// file) record only their own traffic.
+    stats_base: PlanCacheStats,
     link: LinkModel,
     estimator: EventRateEstimator,
     queue: VecDeque<Job>,
@@ -315,8 +350,23 @@ struct Fleet<'a> {
     max_dilation: f64,
     /// Current epoch's charged occupancy per cluster link slot.
     epoch_charge: Vec<(usize, f64)>,
+    /// Placement signature of the last fully computed link epoch,
+    /// with its granted dilations and diagnostic figures — the
+    /// unchanged-placement skip replays these instead of re-splitting.
+    last_epoch_sig: Option<EpochSig>,
+    last_epoch_dil: Vec<f64>,
+    last_epoch_max: f64,
+    last_epoch_share: f64,
     /// Time-integrated charged occupancy per cluster link slot.
     link_occ: Vec<f64>,
+    /// Slots ever charged into `link_occ`, first-touch order (may hold
+    /// duplicates when a zero-magnitude charge precedes a real one;
+    /// deduplicated at extraction).
+    occ_touched: Vec<u32>,
+    /// Integration segments processed (round-robin steps or wall-clock
+    /// segments) — the events/sec denominator `BENCH_scale.json`
+    /// reports against.
+    segments: u64,
     samples: Vec<UtilSample>,
     events_log: Vec<(u64, String)>,
 }
@@ -328,11 +378,14 @@ impl<'a> Fleet<'a> {
             None => PlanCache::new(cfg.cache_cap),
         };
         cache.set_verification(cfg.verify);
+        let stats_base = cache.stats().clone();
         Self {
             cfg,
             cluster: ClusterState::new(cfg.nx, cfg.ny),
             cache,
             sim_memo: HashMap::new(),
+            load_memo: HashMap::new(),
+            stats_base,
             link: LinkModel::tpu_v3(),
             estimator: EventRateEstimator::new(2.0 * cfg.horizon as f64),
             queue: VecDeque::new(),
@@ -355,7 +408,13 @@ impl<'a> Fleet<'a> {
             dilation_weight: 0.0,
             max_dilation: 1.0,
             epoch_charge: Vec::new(),
+            last_epoch_sig: None,
+            last_epoch_dil: Vec::new(),
+            last_epoch_max: 1.0,
+            last_epoch_share: 1.0,
             link_occ: vec![0.0; cfg.nx * cfg.ny * 4],
+            occ_touched: Vec::new(),
+            segments: 0,
             samples: Vec::new(),
             events_log: Vec::new(),
         }
@@ -374,7 +433,7 @@ impl<'a> Fleet<'a> {
         self.running[i].holes.iter().map(|h| placer::to_local(&r, h)).collect()
     }
 
-    fn sim_key(w: usize, h: usize, holes: &[Rect]) -> (usize, usize, Vec<Rect>) {
+    fn sim_key(w: usize, h: usize, holes: &[Rect]) -> SimKey {
         let mut key_holes = holes.to_vec();
         key_holes.sort_unstable();
         (w, h, key_holes)
@@ -383,7 +442,7 @@ impl<'a> Fleet<'a> {
     /// Ensure the simulation record for a hole-carrying `w x h`
     /// sub-mesh is memoized; `Ok(false)` = not schedulable (e.g. the
     /// holes break the pair-row planner or disconnect the sub-mesh).
-    fn ensure_sim(&mut self, key: &(usize, usize, Vec<Rect>)) -> Result<bool, FleetError> {
+    fn ensure_sim(&mut self, key: &SimKey) -> Result<bool, FleetError> {
         if self.sim_memo.contains_key(key) {
             return Ok(true);
         }
@@ -879,17 +938,14 @@ impl<'a> Fleet<'a> {
         if self.cfg.clock != ClockMode::WallClock {
             return Ok(());
         }
-        self.epoch_charge.clear();
         if self.running.is_empty() {
+            self.epoch_charge.clear();
+            self.last_epoch_sig = None;
             return Ok(());
         }
-        // Pass 1 (mutable): memoize every running job's simulation.
-        // Pass 2 (shared borrows only): build loads straight from the
-        // memo — no per-epoch clones of the busy vectors. A paused job
-        // (mid restart/rebuild) streams no allreduce traffic, so it
-        // charges nothing and sees no dilation; `advance_to` cuts a
-        // fresh epoch the moment its pause expires.
-        let mut keys = Vec::with_capacity(self.running.len());
+        // Pass 1 (mutable): memoize every running job's simulation and
+        // collect the epoch's placement signature.
+        let mut keys: EpochSig = Vec::with_capacity(self.running.len());
         for i in 0..self.running.len() {
             let rect = self.rect(i);
             let local = self.local_holes(i);
@@ -897,10 +953,47 @@ impl<'a> Fleet<'a> {
             let ok = self.ensure_sim(&key)?;
             keys.push((rect, key, ok, self.running[i].pause > 0.0));
         }
+        // Unchanged placement signature ⇒ unchanged loads, and the
+        // fair share is a pure function of the loads: replay the
+        // stored epoch outputs instead of re-splitting. (The dense
+        // reference path recomputes every epoch.)
+        if self.cfg.sparse_occupancy && self.last_epoch_sig.as_ref() == Some(&keys) {
+            for (j, &d) in self.running.iter_mut().zip(&self.last_epoch_dil) {
+                j.dilation = d;
+            }
+            self.contention_epochs += 1;
+            if self.last_epoch_max > 1.0 + 1e-9 {
+                let n = self.contention_epochs;
+                let (epoch_max, epoch_share) = (self.last_epoch_max, self.last_epoch_share);
+                self.log(format!(
+                    "contention epoch {n}: max dilation {epoch_max:.3} \
+                     (implied allreduce share {epoch_share:.3})"
+                ));
+            }
+            return Ok(());
+        }
+        // Pass 2 (shared borrows only): build loads straight from the
+        // memos — no per-epoch clones of the busy vectors, and on the
+        // sparse path no re-translation of a placement already seen. A
+        // paused job (mid restart/rebuild) streams no allreduce
+        // traffic, so it charges nothing and sees no dilation;
+        // `advance_to` cuts a fresh epoch the moment its pause expires.
+        let empty = || contention::JobLoad { cap: 0.0, edges: Vec::new() };
         let mut loads = Vec::with_capacity(keys.len());
         for (rect, key, ok, paused) in &keys {
-            let load = match (*ok, *paused, self.sim_memo.get(key)) {
-                (true, false, Some(sim)) => contention::job_load(
+            if !*ok || *paused {
+                // Paused, or (defensively) unschedulable/not memoized.
+                loads.push(empty());
+                continue;
+            }
+            if self.cfg.sparse_occupancy {
+                if let Some(l) = self.load_memo.get(&(key.clone(), rect.x0, rect.y0)) {
+                    loads.push(l.clone());
+                    continue;
+                }
+            }
+            let load = match self.sim_memo.get(key) {
+                Some(sim) => contention::job_load(
                     self.cfg.nx,
                     self.cfg.ny,
                     rect,
@@ -909,9 +1002,11 @@ impl<'a> Fleet<'a> {
                     self.cfg.compute_s,
                     &model,
                 ),
-                // Paused, or (defensively) unschedulable/not memoized.
-                _ => contention::JobLoad { cap: 0.0, edges: Vec::new() },
+                None => empty(),
             };
+            if self.cfg.sparse_occupancy {
+                self.load_memo.insert((key.clone(), rect.x0, rect.y0), load.clone());
+            }
             loads.push(load);
         }
         let report = contention::fair_shares(model.capacity, &loads);
@@ -919,6 +1014,7 @@ impl<'a> Fleet<'a> {
         let mut max_d = self.max_dilation;
         let mut epoch_max = 1.0f64;
         let mut epoch_share = 1.0f64;
+        let mut dils = Vec::with_capacity(loads.len());
         for ((j, load), &x) in self.running.iter_mut().zip(&loads).zip(&report.rates) {
             let q = load.cap;
             // The fair share grants a whole-step rate x <= q, so the
@@ -926,6 +1022,7 @@ impl<'a> Fleet<'a> {
             // x == q bit-for-bit and stays at 1.0).
             let d = if q > 0.0 && x > 0.0 { (q / x).max(1.0) } else { 1.0 };
             j.dilation = d;
+            dils.push(d);
             if d > epoch_max {
                 // Physically the stretch lives in the bandwidth-bound
                 // allreduce term; record the implied share of the most
@@ -939,16 +1036,20 @@ impl<'a> Fleet<'a> {
         }
         self.max_dilation = max_d;
         // Charged occupancy at the granted rates, for the hotspot
-        // integral (all charged edges, not only contended ones).
-        let mut charge: HashMap<usize, f64> = HashMap::new();
+        // integral (all charged edges, not only contended ones) —
+        // merged with one stable sort over the touched edges, which is
+        // bit-identical to in-order map accumulation.
+        let mut emitted: Vec<(usize, f64)> = Vec::new();
         for (i, load) in loads.iter().enumerate() {
             for &(slot, c) in &load.edges {
-                *charge.entry(slot).or_insert(0.0) += report.rates[i] * c;
+                emitted.push((slot, report.rates[i] * c));
             }
         }
-        let mut flat: Vec<(usize, f64)> = charge.into_iter().collect();
-        flat.sort_unstable_by_key(|e| e.0);
-        self.epoch_charge = flat;
+        self.epoch_charge = contention::accumulate_sorted(emitted);
+        self.last_epoch_sig = Some(keys);
+        self.last_epoch_dil = dils;
+        self.last_epoch_max = epoch_max;
+        self.last_epoch_share = epoch_share;
         self.contention_epochs += 1;
         if epoch_max > 1.0 + 1e-9 {
             let n = self.contention_epochs;
@@ -964,6 +1065,7 @@ impl<'a> Fleet<'a> {
     /// whether any job completed (freed space → admission
     /// opportunity).
     fn advance(&mut self) -> bool {
+        self.segments += 1;
         let live = self.cluster.live_chips() as f64;
         let mut util = 0.0f64;
         let mut good = 0.0f64;
@@ -1011,6 +1113,7 @@ impl<'a> Fleet<'a> {
     /// contract with the round-robin engine. Returns indices of jobs
     /// whose work finished (ascending).
     fn advance_segment(&mut self, dt: f64) -> Vec<usize> {
+        self.segments += 1;
         let live = self.cluster.live_chips() as f64;
         let mut util = 0.0f64;
         let mut good = 0.0f64;
@@ -1044,7 +1147,11 @@ impl<'a> Fleet<'a> {
         self.dilation_time += dil_time;
         self.dilation_weight += dil_weight;
         let link_occ = &mut self.link_occ;
+        let occ_touched = &mut self.occ_touched;
         for &(slot, occ) in &self.epoch_charge {
+            if link_occ[slot] == 0.0 {
+                occ_touched.push(slot as u32);
+            }
             link_occ[slot] += occ * dt;
         }
         finished
@@ -1201,8 +1308,18 @@ impl<'a> Fleet<'a> {
         let jcts: Vec<f64> = jobs.iter().filter_map(|j| j.jct()).map(|x| x as f64).collect();
         let (mean_jct, median_jct) = mean_median(&jcts);
         let h = self.cfg.horizon.max(1) as f64;
-        let mut hot_idx: Vec<usize> =
-            (0..self.link_occ.len()).filter(|&s| self.link_occ[s] > 0.0).collect();
+        // Hotspot extraction: the sparse path scans only the charged
+        // slots (after an ascending sort + dedup it visits exactly the
+        // positive slots the dense scan would, in the same order); the
+        // dense reference walks the whole mesh.
+        let mut hot_idx: Vec<usize> = if self.cfg.sparse_occupancy {
+            let mut touched = self.occ_touched.clone();
+            touched.sort_unstable();
+            touched.dedup();
+            touched.into_iter().map(|s| s as usize).filter(|&s| self.link_occ[s] > 0.0).collect()
+        } else {
+            (0..self.link_occ.len()).filter(|&s| self.link_occ[s] > 0.0).collect()
+        };
         hot_idx.sort_by(|&a, &b| self.link_occ[b].total_cmp(&self.link_occ[a]).then(a.cmp(&b)));
         let hotspots: Vec<LinkHotspot> = hot_idx
             .iter()
@@ -1241,7 +1358,8 @@ impl<'a> Fleet<'a> {
                 mean_dilation,
                 max_dilation: self.max_dilation.max(1.0),
                 contention_epochs: self.contention_epochs,
-                cache: self.cache.stats().clone(),
+                segments: self.segments,
+                cache: self.cache.stats().delta(&self.stats_base),
             },
             jobs,
             samples: self.samples,
@@ -1252,8 +1370,8 @@ impl<'a> Fleet<'a> {
     }
 }
 
-/// One entry of the wall-clock engine's global event heap. Cluster
-/// events sort before arrivals at equal times (matching the
+/// One entry of the wall-clock engine's global event timeline.
+/// Cluster events sort before arrivals at equal times (matching the
 /// round-robin loop's per-step order), `seq` preserves source order
 /// within a kind.
 #[derive(Debug)]
@@ -1369,8 +1487,14 @@ fn run_round_robin(
 }
 
 /// The event-driven wall-clock engine: cluster events and arrivals
-/// merge into one time-ordered heap; between events, jobs integrate
-/// progress on their own (possibly contention-dilated) timelines.
+/// merge into one time-ordered timeline; between events, jobs
+/// integrate progress on their own (possibly contention-dilated)
+/// timelines. The timeline is fixed before the loop starts (nothing
+/// is ever inserted mid-run), so it is sorted once and drained with a
+/// cursor — every same-instant batch comes off in one pass with no
+/// per-event heap maintenance. `WallEntry`'s total order (time, rank,
+/// seq with unique seq) makes the sorted order identical to the heap
+/// pop order it replaced.
 fn run_wall_clock(
     cfg: &FleetConfig,
     label: String,
@@ -1378,7 +1502,7 @@ fn run_wall_clock(
     timeline: Vec<TimedEvent>,
     arrivals: usize,
 ) -> Result<(FleetRun, PlanCache), FleetError> {
-    let mut heap: BinaryHeap<Reverse<WallEntry>> = BinaryHeap::new();
+    let mut entries: Vec<WallEntry> = Vec::new();
     let mut seq = 0u64;
     // Drain through EventQueue so equal-time cluster events keep the
     // exact stable order the round-robin loop replays.
@@ -1387,30 +1511,33 @@ fn run_wall_clock(
         if ev.at_step >= cfg.horizon {
             continue;
         }
-        heap.push(Reverse(WallEntry {
+        entries.push(WallEntry {
             time: ev.at_step as f64,
             rank: 0,
             seq,
             kind: WallKind::Cluster(ev.event),
-        }));
+        });
         seq += 1;
     }
     for spec in specs {
         if spec.arrival_step >= cfg.horizon {
             continue;
         }
-        heap.push(Reverse(WallEntry {
+        entries.push(WallEntry {
             time: spec.arrival_step as f64,
             rank: 1,
             seq,
             kind: WallKind::Arrival(spec),
-        }));
+        });
         seq += 1;
     }
+    entries.sort_unstable();
 
     let mut fleet = Fleet::new(cfg);
     let horizon = cfg.horizon as f64;
-    while let Some(Reverse(entry)) = heap.pop() {
+    let mut it = entries.into_iter().peekable();
+    loop {
+        let Some(entry) = it.next() else { break };
         let t = entry.time;
         if t < fleet.now {
             return Err(FleetError::Invariant {
@@ -1423,8 +1550,8 @@ fn run_wall_clock(
         apply_entry(&mut fleet, entry)?;
         // Batch every same-time entry before admission so a multi-event
         // instant behaves exactly like one round-robin step.
-        while heap.peek().is_some_and(|Reverse(e)| e.time == t) {
-            let Reverse(e) = heap.pop().expect("peeked");
+        while it.peek().is_some_and(|e| e.time == t) {
+            let e = it.next().expect("peeked");
             apply_entry(&mut fleet, e)?;
         }
         fleet.try_admit()?;
@@ -1550,6 +1677,36 @@ mod tests {
         for (x, y) in rr.jobs.iter().zip(&wall.jobs) {
             assert_eq!(x.completed_at, y.completed_at);
             assert_eq!(x.waited_steps, y.waited_steps);
+        }
+    }
+
+    #[test]
+    fn sparse_occupancy_matches_dense_reference() {
+        // In-module smoke version of the scale differential
+        // (`rust/tests/scale_equivalence.rs` runs the multi-seed
+        // version): load memoization, epoch skips and touched-slot
+        // hotspot extraction must not change a single bit.
+        let mut dense = tiny_cfg();
+        dense.clock = ClockMode::WallClock;
+        dense.contention = Some(ContentionModel::stressed());
+        dense.events =
+            vec![fail_at(40, Rect::new(0, 0, 2, 2)), repair_at(90, Rect::new(0, 0, 2, 2))];
+        dense.policy = Some(JobPolicy::Adaptive);
+        dense.sparse_occupancy = false;
+        let mut sparse = dense.clone();
+        sparse.sparse_occupancy = true;
+        let a = run_fleet(&dense).unwrap();
+        let b = run_fleet(&sparse).unwrap();
+        assert_eq!(a.events, b.events, "event trace must match bit-for-bit");
+        assert_eq!(a.summary.goodput.to_bits(), b.summary.goodput.to_bits());
+        assert_eq!(a.summary.mean_dilation.to_bits(), b.summary.mean_dilation.to_bits());
+        assert_eq!(a.summary.max_dilation.to_bits(), b.summary.max_dilation.to_bits());
+        assert_eq!(a.summary.contention_epochs, b.summary.contention_epochs);
+        assert_eq!(a.summary.segments, b.summary.segments);
+        assert_eq!(a.hotspots.len(), b.hotspots.len());
+        for (x, y) in a.hotspots.iter().zip(&b.hotspots) {
+            assert_eq!((x.x, x.y, x.dir), (y.x, y.y, y.dir));
+            assert_eq!(x.mean_occupancy.to_bits(), y.mean_occupancy.to_bits());
         }
     }
 

@@ -98,6 +98,14 @@ pub struct FleetSummary {
     pub max_dilation: f64,
     /// Contention fair-share recomputations (link epochs).
     pub contention_epochs: u64,
+    /// Simulation segments processed (round-robin steps or wall-clock
+    /// integration segments) — the event count behind the engine's
+    /// events/sec throughput metric (`BENCH_scale.json`).
+    pub segments: u64,
+    /// Per-run plan-cache counters: the shared cache's cumulative
+    /// stats deltaed against a snapshot taken when the run started, so
+    /// runs sharing one `SharedPlanCache` report only their own
+    /// traffic.
     pub cache: PlanCacheStats,
 }
 
@@ -159,6 +167,7 @@ pub fn push_run(report: &mut JsonReport, run: &FleetRun) {
             ("mean_dilation", s.mean_dilation),
             ("max_dilation", s.max_dilation),
             ("contention_epochs", s.contention_epochs as f64),
+            ("segments", s.segments as f64),
             ("cache_hit_rate", s.cache.hit_rate()),
             ("incremental_compiles", s.cache.incremental_compiles as f64),
             ("step_splice_rate", s.cache.step_splice_rate()),

@@ -37,9 +37,9 @@
 //!   first) when the queue head still does not fit. A FIFO-blocked
 //!   head can optionally be **backfilled** around
 //!   (`FleetConfig::backfill`). The wall-clock mode steps jobs
-//!   asynchronously on a continuous timeline (global time-ordered
-//!   event heap) and, with contention enabled, dilates step times per
-//!   link epoch;
+//!   asynchronously on a continuous timeline (one globally
+//!   time-sorted event schedule, drained in same-instant batches)
+//!   and, with contention enabled, dilates step times per link epoch;
 //! - [`contention`] — cross-job link contention: each job's compiled
 //!   plan charges per-edge occupancy (plus router-adjacency
 //!   spillover), and edges shared by several jobs split their budget

@@ -2,21 +2,36 @@
 
 use crate::mesh::{Link, Mesh};
 
-/// Dense per-link counters (indexed by [`Mesh::link_index`]).
+/// Per-link counters: dense arrays (indexed by [`Mesh::link_index`])
+/// plus a sparse index of the slots actually touched, so queries and
+/// occupancy extraction scale with the traffic footprint rather than
+/// the mesh — on a 256x512 fleet mesh a small job touches a few
+/// hundred of the ~half-million slots.
 #[derive(Debug, Clone)]
 pub struct LinkStats {
     mesh: Mesh,
     bytes: Vec<u64>,
     busy_s: Vec<f64>,
     transfers: Vec<u32>,
+    /// Dense slots recorded at least once, in first-touch order. A
+    /// slot is appended exactly when its transfer count goes 0 -> 1,
+    /// so this can never miss a charged slot.
+    touched: Vec<u32>,
 }
 
 impl LinkStats {
     pub fn new(mesh: Mesh) -> Self {
         let n = mesh.num_link_slots();
-        Self { mesh, bytes: vec![0; n], busy_s: vec![0.0; n], transfers: vec![0; n] }
+        Self {
+            mesh,
+            bytes: vec![0; n],
+            busy_s: vec![0.0; n],
+            transfers: vec![0; n],
+            touched: Vec::new(),
+        }
     }
 
+    #[inline]
     pub fn record(&mut self, link: Link, bytes: u64, busy_s: f64) {
         self.record_idx(self.mesh.link_index(link), bytes, busy_s);
     }
@@ -24,7 +39,11 @@ impl LinkStats {
     /// Record by dense link index ([`Mesh::link_index`]) — the hot path
     /// for the simulator, which carries cached link ids and must not
     /// reconstruct `Link` values per transfer per call.
+    #[inline]
     pub fn record_idx(&mut self, idx: usize, bytes: u64, busy_s: f64) {
+        if self.transfers[idx] == 0 {
+            self.touched.push(idx as u32);
+        }
         self.bytes[idx] += bytes;
         self.busy_s[idx] += busy_s;
         self.transfers[idx] += 1;
@@ -45,11 +64,18 @@ impl LinkStats {
     }
 
     /// `(dense link slot, busy seconds)` for every link that carried
-    /// traffic — the per-link occupancy accounting the fleet's
-    /// cross-job contention model charges outside the DES
-    /// (`sched::contention::job_load`).
+    /// traffic, ascending by slot — the per-link occupancy accounting
+    /// the fleet's cross-job contention model charges outside the DES
+    /// (`sched::contention::job_load`). Walks the sparse touched
+    /// index, not the full mesh: same slots, same order, same values
+    /// as the dense scan it replaced.
     pub fn busy_slots(&self) -> impl Iterator<Item = (usize, f64)> + '_ {
-        self.busy_s.iter().enumerate().filter(|(_, &b)| b > 0.0).map(|(i, &b)| (i, b))
+        let mut slots = self.touched.clone();
+        slots.sort_unstable();
+        slots
+            .into_iter()
+            .map(|i| (i as usize, self.busy_s[i as usize]))
+            .filter(|&(_, b)| b > 0.0)
     }
 
     pub fn transfers_on(&self, link: Link) -> u32 {
@@ -57,23 +83,29 @@ impl LinkStats {
     }
 
     pub fn total_bytes(&self) -> u64 {
-        self.bytes.iter().sum()
+        self.touched.iter().map(|&i| self.bytes[i as usize]).sum()
     }
 
     /// Highest per-link byte count (the bottleneck link's load).
     pub fn max_bytes(&self) -> u64 {
-        self.bytes.iter().copied().max().unwrap_or(0)
+        self.touched.iter().map(|&i| self.bytes[i as usize]).max().unwrap_or(0)
     }
 
     /// Busiest link's busy time; with the makespan this gives the
     /// bottleneck utilisation.
     pub fn max_busy_s(&self) -> f64 {
-        self.busy_s.iter().copied().fold(0.0, f64::max)
+        self.touched.iter().map(|&i| self.busy_s[i as usize]).fold(0.0, f64::max)
     }
 
     /// Number of links that carried any traffic.
     pub fn links_used(&self) -> usize {
-        self.bytes.iter().filter(|&&b| b > 0).count()
+        self.touched.iter().filter(|&&i| self.bytes[i as usize] > 0).count()
+    }
+
+    /// Number of distinct link slots recorded at least once (any
+    /// bytes/busy value) — the size of the sparse index.
+    pub fn links_touched(&self) -> usize {
+        self.touched.len()
     }
 }
 
@@ -109,5 +141,37 @@ mod tests {
         assert!((slots[0].1 - 2e-6).abs() < 1e-15);
         assert!((s.busy_on(l) - 2e-6).abs() < 1e-15);
         assert_eq!(s.mesh(), &mesh);
+        assert_eq!(s.links_touched(), 1);
+    }
+
+    #[test]
+    fn touched_index_matches_dense_scan() {
+        // The sparse index must report exactly the slots a dense scan
+        // would, ascending, with identical values — recorded here out
+        // of slot order and with repeats.
+        let mesh = Mesh::new(4, 3);
+        let mut s = LinkStats::new(mesh);
+        let links = [
+            Link::new(Coord::new(2, 1), Coord::new(3, 1)),
+            Link::new(Coord::new(0, 0), Coord::new(1, 0)),
+            Link::new(Coord::new(2, 1), Coord::new(3, 1)),
+            Link::new(Coord::new(1, 2), Coord::new(1, 1)),
+        ];
+        for (k, l) in links.iter().enumerate() {
+            s.record(*l, 64 * (k as u64 + 1), 1e-7 * (k as f64 + 1.0));
+        }
+        let sparse: Vec<(usize, f64)> = s.busy_slots().collect();
+        let dense: Vec<(usize, f64)> = (0..mesh.num_link_slots())
+            .map(|i| (i, s.busy_s[i]))
+            .filter(|&(_, b)| b > 0.0)
+            .collect();
+        assert_eq!(sparse.len(), dense.len());
+        for (a, b) in sparse.iter().zip(&dense) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
+        assert_eq!(s.links_touched(), 3);
+        assert_eq!(s.links_used(), 3);
+        assert_eq!(s.total_bytes(), 64 + 128 + 192 + 256);
     }
 }

@@ -1,0 +1,221 @@
+//! Differential/property suite for the sparse-occupancy scale engine
+//! (ISSUE 6):
+//!
+//! - **Differential**: the sparse-occupancy fast paths (per-placement
+//!   link-load memoization, epoch delta-skips, touched-slot hotspot
+//!   extraction) reproduce the dense full-recompute reference
+//!   bit-for-bit — event trace, per-job outcomes, goodput/utilization/
+//!   dilation bits, sampled curves, epoch/segment counts and link
+//!   hotspots — across >= 3 seeds with live MTBF timelines and
+//!   stressed contention, plus a randomized property sweep over
+//!   engine knobs.
+//! - **Property**: the `LinkStats` first-touch slot index never misses
+//!   a charged edge — for random record sequences the sparse
+//!   `busy_slots()` walk equals the dense full-array scan exactly
+//!   (same slots, same order, same bits).
+//! - **Kernel differential**: the blocked/unrolled reduce kernels
+//!   match their plain-loop scalar oracles bit-for-bit on odd lengths
+//!   and unaligned slice offsets.
+
+use meshreduce::cluster::MtbfModel;
+use meshreduce::collective::kernel;
+use meshreduce::mesh::{Coord, Dir, Link, Mesh};
+use meshreduce::sched::{
+    run_fleet, ClockMode, ContentionModel, FleetConfig, FleetRun, JobPolicy, WorkloadModel,
+};
+use meshreduce::simnet::LinkStats;
+use meshreduce::util::prop::{prop_check, Config};
+use meshreduce::util::rng::SplitMix64;
+
+/// Wall-clock fleet with stressed contention, mixed policies, backfill
+/// and a live MTBF timeline — every sparse fast path gets exercised:
+/// placements repeat (load memo), quiet stretches repeat signatures
+/// (epoch skips), failures/repairs break them (invalidation-by-
+/// signature), and the hotspot extraction walks the touched index.
+fn contended_cfg(seed: u64) -> FleetConfig {
+    let mut cfg = FleetConfig::quick();
+    cfg.nx = 8;
+    cfg.ny = 8;
+    cfg.horizon = 160;
+    cfg.payload = 1 << 14;
+    cfg.compute_s = 1e-3;
+    cfg.workload = WorkloadModel {
+        seed,
+        jobs: 4,
+        mean_interarrival_steps: 12.0,
+        mean_duration_steps: 60.0,
+        min_duration_steps: 30,
+        shapes: vec![(4, 4), (4, 2), (2, 2)],
+        policies: JobPolicy::ALL.to_vec(),
+        scripted: Vec::new(),
+    };
+    cfg.policy = None; // mixed per-job policies
+    cfg.mtbf = Some(MtbfModel::board(seed.wrapping_mul(31).wrapping_add(7), 30.0, 15.0));
+    cfg.clock = ClockMode::WallClock;
+    cfg.contention = Some(ContentionModel::stressed());
+    cfg.backfill = true;
+    cfg
+}
+
+/// Full bit-identity check between the sparse run and its dense
+/// reference: everything the engine reports, down to float bits.
+fn assert_runs_bit_identical(sparse: &FleetRun, dense: &FleetRun) {
+    assert_eq!(sparse.events, dense.events, "placement/event trace diverged");
+    assert_eq!(sparse.jobs.len(), dense.jobs.len());
+    for (a, b) in sparse.jobs.iter().zip(&dense.jobs) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.completed_at, b.completed_at, "job {} completion", a.id);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.shrinks, b.shrinks);
+        assert_eq!(a.ft_continues, b.ft_continues);
+        assert_eq!(a.waited_steps, b.waited_steps, "job {} waited", a.id);
+    }
+    let (s, d) = (&sparse.summary, &dense.summary);
+    assert_eq!(s.goodput.to_bits(), d.goodput.to_bits());
+    assert_eq!(s.mean_utilization.to_bits(), d.mean_utilization.to_bits());
+    assert_eq!(s.mean_dilation.to_bits(), d.mean_dilation.to_bits());
+    assert_eq!(s.max_dilation.to_bits(), d.max_dilation.to_bits());
+    assert_eq!(s.contention_epochs, d.contention_epochs, "epoch count diverged");
+    assert_eq!(s.segments, d.segments, "segment count diverged");
+    assert_eq!(s.queue_waits, d.queue_waits);
+    assert_eq!(s.backfills, d.backfills);
+    assert_eq!(s.transitions, d.transitions);
+    assert_eq!(sparse.samples.len(), dense.samples.len());
+    for (a, b) in sparse.samples.iter().zip(&dense.samples) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+        assert_eq!(a.goodput.to_bits(), b.goodput.to_bits());
+        assert_eq!(a.max_dilation.to_bits(), b.max_dilation.to_bits());
+        assert_eq!((a.running, a.queued), (b.running, b.queued));
+    }
+    assert_eq!(sparse.hotspots.len(), dense.hotspots.len(), "hotspot count diverged");
+    for (a, b) in sparse.hotspots.iter().zip(&dense.hotspots) {
+        assert_eq!((a.x, a.y, a.dir), (b.x, b.y, b.dir), "hotspot slot diverged");
+        assert_eq!(
+            a.mean_occupancy.to_bits(),
+            b.mean_occupancy.to_bits(),
+            "hotspot ({},{}) occupancy diverged",
+            a.x,
+            a.y
+        );
+    }
+}
+
+#[test]
+fn sparse_occupancy_is_bit_identical_to_dense_across_seeds() {
+    for seed in [11u64, 23, 37] {
+        let mut dense_cfg = contended_cfg(seed);
+        dense_cfg.sparse_occupancy = false;
+        let sparse_cfg = contended_cfg(seed);
+        assert!(sparse_cfg.sparse_occupancy, "quick() defaults the fast paths on");
+        let dense = run_fleet(&dense_cfg).expect("dense reference");
+        let sparse = run_fleet(&sparse_cfg).expect("sparse engine");
+        assert_runs_bit_identical(&sparse, &dense);
+        // The scenario actually exercised the engine: contention epochs
+        // ran and the touched-index extraction had hotspots to report.
+        assert!(sparse.summary.contention_epochs > 0, "seed {seed}: no epochs");
+        assert!(sparse.summary.segments > 0);
+        assert!(!sparse.hotspots.is_empty(), "seed {seed}: no hotspots recorded");
+    }
+}
+
+#[test]
+fn prop_sparse_and_dense_fleets_agree() {
+    // Randomized engine knobs: job count, horizon, payload, contention
+    // model on/off, backfill on/off — the sparse run must stay
+    // bit-identical to the dense reference on every draw.
+    let config = Config { cases: 20, seed: 0x5CA1_E0DD };
+    prop_check("sparse/dense fleet equivalence", config, |rng: &mut SplitMix64| {
+        let mut cfg = contended_cfg(rng.next_u64());
+        cfg.horizon = 80 + rng.next_below(80);
+        cfg.payload = 1 << (10 + rng.next_below(4));
+        cfg.workload.jobs = 2 + rng.next_below(3) as usize;
+        if rng.next_below(4) == 0 {
+            cfg.contention = Some(ContentionModel::tpu_default());
+        }
+        cfg.backfill = rng.next_below(2) == 1;
+        let mut dense_cfg = cfg.clone();
+        dense_cfg.sparse_occupancy = false;
+        let sparse = run_fleet(&cfg).expect("sparse engine");
+        let dense = run_fleet(&dense_cfg).expect("dense reference");
+        assert_runs_bit_identical(&sparse, &dense);
+    });
+}
+
+#[test]
+fn prop_touched_index_never_misses_a_charged_edge() {
+    // Random record sequences (repeats, out-of-order slots, zero-busy
+    // records) on small meshes: the sparse busy_slots() walk must
+    // report exactly the positive slots a dense full-array scan finds,
+    // ascending, bit-identical — i.e. the first-touch index can never
+    // miss a charged edge, and never invents one.
+    let config = Config { cases: 64, seed: 0x70C4_ED1D };
+    prop_check("touched-slot index completeness", config, |rng: &mut SplitMix64| {
+        let nx = 2 + rng.next_below(5) as usize;
+        let ny = 1 + rng.next_below(4) as usize;
+        let mesh = Mesh::new(nx, ny);
+        let mut stats = LinkStats::new(mesh);
+        let mut charged = vec![0.0f64; mesh.num_link_slots()];
+        for _ in 0..rng.next_below(48) {
+            let from = Coord::new(
+                rng.next_below(nx as u64) as usize,
+                rng.next_below(ny as u64) as usize,
+            );
+            let dir = Dir::ALL[rng.next_below(4) as usize];
+            let Some(to) = mesh.step(from, dir) else {
+                continue; // mesh border: no link in that direction
+            };
+            let link = Link::new(from, to);
+            // Occasional zero-busy records: they must enter the index
+            // (the slot was touched) but never surface as charged.
+            let busy = if rng.next_below(5) == 0 { 0.0 } else { 1e-7 * (1.0 + rng.next_f64()) };
+            stats.record(link, 64 + rng.next_below(1 << 12), busy);
+            charged[mesh.link_index(link)] += busy;
+        }
+        let sparse: Vec<(usize, f64)> = stats.busy_slots().collect();
+        let dense: Vec<(usize, f64)> = charged
+            .iter()
+            .enumerate()
+            .filter(|&(_, &b)| b > 0.0)
+            .map(|(i, &b)| (i, b))
+            .collect();
+        assert_eq!(sparse.len(), dense.len(), "sparse walk missed or invented slots");
+        for (a, b) in sparse.iter().zip(&dense) {
+            assert_eq!(a.0, b.0, "slot order diverged");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "slot {} charge diverged", a.0);
+        }
+        // The index covers every charged slot (it may be larger:
+        // zero-busy touches are indexed but filtered).
+        assert!(stats.links_touched() >= dense.len());
+    });
+}
+
+#[test]
+fn blocked_kernels_match_scalar_oracles_on_odd_and_unaligned_lengths() {
+    // Odd lengths hit every remainder path (full blocks, LANES-wide
+    // tail, scalar tail); offset views exercise base addresses no
+    // longer block-aligned. f32 += is elementwise, so blocked and
+    // scalar must agree to the bit.
+    let n = 4 * 64 + 13;
+    let src: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.37).sin() * 3.0).collect();
+    let base: Vec<f32> = (0..n).map(|i| (i as f32) * 0.125 - 7.0).collect();
+    for len in [0usize, 1, 2, 15, 16, 17, 63, 64, 65, 129, 255, n] {
+        let mut got = base[..len].to_vec();
+        let mut want = base[..len].to_vec();
+        kernel::add(&mut got, &src[..len]);
+        kernel::add_scalar_ref(&mut want, &src[..len]);
+        assert_eq!(got, want, "add len={len}");
+        let mut got = vec![0.0f32; len];
+        let mut want = vec![0.0f32; len];
+        kernel::copy(&mut got, &src[..len]);
+        kernel::copy_scalar_ref(&mut want, &src[..len]);
+        assert_eq!(got, want, "copy len={len}");
+    }
+    for off in [1usize, 3, 7, 17, 33, 65] {
+        let mut got = base.clone();
+        let mut want = base.clone();
+        kernel::add(&mut got[off..], &src[off..]);
+        kernel::add_scalar_ref(&mut want[off..], &src[off..]);
+        assert_eq!(got, want, "add off={off}");
+    }
+}
