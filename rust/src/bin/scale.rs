@@ -6,13 +6,19 @@
 //!     cargo run --release --bin scale -- --quick --verify \
 //!         --baseline ci/scale_floor.txt                  # CI gate
 //!     cargo run --release --bin scale -- --meshes 32x32,128x128 --horizon 200 --seed 7
+//!     cargo run --release --bin scale -- --mtbf 40 --profile   # MTBF axis + phase breakdown
 //!
 //! Every cell runs the event-driven wall-clock engine with cross-job
-//! link contention and sparse-occupancy fast paths enabled, and is
-//! timed end to end; **events/sec** is integration segments processed
-//! per wall second. Under `--verify` each cell is replayed through
-//! the dense full-recompute reference path and any bit-level
-//! divergence exits non-zero.
+//! link contention and the sparse-occupancy / incremental-placer fast
+//! paths enabled, and is timed end to end; **events/sec** is
+//! integration segments processed per wall second. `--mtbf MEAN`
+//! replaces the scripted failure timeline with a seeded MTBF
+//! board-failure process (mean repair = half the failure mean).
+//! Under `--verify` each cell is replayed through the dense
+//! full-recompute reference paths and any bit-level divergence exits
+//! non-zero. `--profile` adds the per-phase wall-time breakdown
+//! (placement, site-pick, contention, drain, executor) to the output
+//! and the bench record.
 //!
 //! Writes `BENCH_scale.json` (override with `MESHREDUCE_BENCH_JSON`):
 //! one `scale_<nx>x<ny>` entry per cell (chips, jobs, segments,
@@ -53,6 +59,14 @@ fn main() {
     if let Some(s) = get("--seed").and_then(|s| s.parse().ok()) {
         cfg.seed = s;
     }
+    if has("--mtbf") {
+        let Some(mean) = get("--mtbf").and_then(|s| s.parse::<f64>().ok()) else {
+            eprintln!("unparseable --mtbf (use e.g. --mtbf 40)");
+            std::process::exit(2);
+        };
+        cfg.mtbf = Some(mean);
+    }
+    let profile = has("--profile");
     let floor = get("--baseline").map(|path| {
         let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
             eprintln!("cannot read baseline floor {path}: {e}");
@@ -70,12 +84,13 @@ fn main() {
     });
 
     eprintln!(
-        "scale: {} cells up to {:?}, horizon {} steps, seed {}, verify={}",
+        "scale: {} cells up to {:?}, horizon {} steps, seed {}, verify={}, mtbf={:?}",
         cfg.meshes.len(),
         cfg.meshes.iter().max_by_key(|&&(x, y)| x * y).copied().unwrap_or((0, 0)),
         cfg.horizon,
         cfg.seed,
         cfg.verify,
+        cfg.mtbf,
     );
 
     let t0 = std::time::Instant::now();
@@ -106,41 +121,68 @@ fn main() {
             p.events_per_sec,
             p.goodput,
         );
-        report.push(
-            &format!("scale_{}x{}", p.nx, p.ny),
-            p.wall_s,
-            0.0,
-            &[
-                ("nx", p.nx as f64),
-                ("ny", p.ny as f64),
-                ("chips", p.chips as f64),
-                ("jobs", p.jobs as f64),
-                ("completed", p.completed as f64),
-                ("segments", p.segments as f64),
-                ("contention_epochs", p.contention_epochs as f64),
-                ("wall_s", p.wall_s),
-                ("events_per_sec", p.events_per_sec),
-                ("goodput", p.goodput),
-                ("mean_utilization", p.mean_utilization),
-                ("max_dilation", p.max_dilation),
-            ],
-        );
+        if profile {
+            println!(
+                "{:<9} placement {:.4}s  site-pick {:.4}s  contention {:.4}s  \
+                 drain {:.4}s  executor {:.4}s",
+                "",
+                p.profile.placement_s,
+                p.profile.site_pick_s,
+                p.profile.contention_s,
+                p.profile.drain_s,
+                p.profile.executor_s,
+            );
+        }
+        let mut kv: Vec<(&str, f64)> = vec![
+            ("nx", p.nx as f64),
+            ("ny", p.ny as f64),
+            ("chips", p.chips as f64),
+            ("jobs", p.jobs as f64),
+            ("completed", p.completed as f64),
+            ("segments", p.segments as f64),
+            ("contention_epochs", p.contention_epochs as f64),
+            ("wall_s", p.wall_s),
+            ("events_per_sec", p.events_per_sec),
+            ("goodput", p.goodput),
+            ("mean_utilization", p.mean_utilization),
+            ("max_dilation", p.max_dilation),
+        ];
+        if profile {
+            kv.push(("placement_s", p.profile.placement_s));
+            kv.push(("site_pick_s", p.profile.site_pick_s));
+            kv.push(("contention_s", p.profile.contention_s));
+            kv.push(("drain_s", p.profile.drain_s));
+            kv.push(("executor_s", p.profile.executor_s));
+        }
+        report.push(&format!("scale_{}x{}", p.nx, p.ny), p.wall_s, 0.0, &kv);
     }
     let agg = aggregate_events_per_sec(&points);
     let segments: u64 = points.iter().map(|p| p.segments).sum();
     let sim_wall: f64 = points.iter().map(|p| p.wall_s).sum();
     println!("\naggregate: {segments} segments in {sim_wall:.3}s = {agg:.0} events/s");
-    report.push(
-        "scale_total",
-        sim_wall,
-        0.0,
-        &[
-            ("cells", points.len() as f64),
-            ("segments", segments as f64),
-            ("wall_s", sim_wall),
-            ("events_per_sec", agg),
-        ],
-    );
+    let mut total_kv: Vec<(&str, f64)> = vec![
+        ("cells", points.len() as f64),
+        ("segments", segments as f64),
+        ("wall_s", sim_wall),
+        ("events_per_sec", agg),
+    ];
+    if profile {
+        let placement: f64 = points.iter().map(|p| p.profile.placement_s).sum();
+        let site_pick: f64 = points.iter().map(|p| p.profile.site_pick_s).sum();
+        let contention: f64 = points.iter().map(|p| p.profile.contention_s).sum();
+        let drain: f64 = points.iter().map(|p| p.profile.drain_s).sum();
+        let executor: f64 = points.iter().map(|p| p.profile.executor_s).sum();
+        println!(
+            "profile:   placement {placement:.4}s  site-pick {site_pick:.4}s  \
+             contention {contention:.4}s  drain {drain:.4}s  executor {executor:.4}s"
+        );
+        total_kv.push(("placement_s", placement));
+        total_kv.push(("site_pick_s", site_pick));
+        total_kv.push(("contention_s", contention));
+        total_kv.push(("drain_s", drain));
+        total_kv.push(("executor_s", executor));
+    }
+    report.push("scale_total", sim_wall, 0.0, &total_kv);
 
     match report.write("BENCH_scale.json") {
         Ok(path) => eprintln!("scale record written to {path} ({wall:.1}s wall)"),

@@ -14,11 +14,39 @@
 //! degraded mesh stays connected *and* fault-tolerant-schedulable
 //! (`ft_plan` succeeds), which mirrors the paper's assumption that
 //! failed regions are board/host shaped and leave a usable mesh.
+//!
+//! Two site-validity engines produce that filter
+//! ([`MtbfModel::fast_pick`]):
+//!
+//! - the **dense reference** replans every even-aligned site — a full
+//!   `Topology` build plus `ft_plan` per candidate, O(mesh²) per
+//!   failure arrival;
+//! - the **fast picker** evaluates the exact closed form of the same
+//!   predicate. For even-aligned disjoint regions on an `nx >= 2`,
+//!   even-`ny >= 2` mesh, `ft_plan` succeeds iff the live set stays
+//!   connected and at least one row-pair strip remains fully live (the
+//!   planner's remaining failure modes are unreachable: a blue strip
+//!   is fully live, so every column offers a forward target, and every
+//!   ring segment has >= 2 distinct nodes). Disjointness and surviving
+//!   blue strips are O(1) prefix-sum queries; connectivity uses the
+//!   isolated-rectangle shortcut (a site whose 1-cell inflation
+//!   touches neither mesh border nor any hole cannot disconnect a
+//!   connected live set — the live ring around it reroutes any path)
+//!   and an exact coordinate-compressed BFS for the few border/
+//!   near-hole sites. Valid-site sets are memoized per open-failure
+//!   set (keyed like the plan cache), so repeated cluster states —
+//!   the common case between repairs — are amortized O(1). The fast
+//!   picker emits sites in the dense enumeration order and draws with
+//!   the same single RNG call, so timelines are **seeded-identical**
+//!   to the dense reference (`rust/tests/site_picker.rs`); irregular
+//!   shapes (odd dims, odd `ny`, degenerate meshes) fall back to the
+//!   dense path.
 
 use super::{ClusterEvent, ClusterState, TimedEvent};
 use crate::mesh::FailedRegion;
 use crate::rings::fault_tolerant::ft_plan;
 use crate::util::rng::SplitMix64;
+use std::collections::HashMap;
 
 /// Parameters of the failure/repair process.
 #[derive(Debug, Clone, Copy)]
@@ -32,17 +60,34 @@ pub struct MtbfModel {
     /// Shape of each failed region (board `2x2`, host `4x2`, ...).
     pub region_w: usize,
     pub region_h: usize,
+    /// Use the incremental site picker (seeded-identical to the dense
+    /// per-site replan, which remains as the differential reference).
+    pub fast_pick: bool,
 }
 
 impl MtbfModel {
     /// Board-failure (2x2) process.
     pub fn board(seed: u64, mean_failure_steps: f64, mean_repair_steps: f64) -> Self {
-        Self { seed, mean_failure_steps, mean_repair_steps, region_w: 2, region_h: 2 }
+        Self {
+            seed,
+            mean_failure_steps,
+            mean_repair_steps,
+            region_w: 2,
+            region_h: 2,
+            fast_pick: true,
+        }
     }
 
     /// Host-failure (4x2) process — the shape of the paper's evaluation.
     pub fn host(seed: u64, mean_failure_steps: f64, mean_repair_steps: f64) -> Self {
-        Self { seed, mean_failure_steps, mean_repair_steps, region_w: 4, region_h: 2 }
+        Self {
+            seed,
+            mean_failure_steps,
+            mean_repair_steps,
+            region_w: 4,
+            region_h: 2,
+            fast_pick: true,
+        }
     }
 
     /// Sample the failure/repair timeline for an `nx x ny` mesh over
@@ -52,6 +97,20 @@ impl MtbfModel {
         let mut rng = SplitMix64::new(self.seed);
         let mut state = ClusterState::new(nx, ny);
         let mut events: Vec<TimedEvent> = Vec::new();
+        // The closed-form predicate is exact only for even-aligned
+        // regions on a planner-legal mesh; anything irregular keeps the
+        // dense per-site replan.
+        let fast_ok = self.fast_pick
+            && nx >= 2
+            && ny >= 2
+            && ny % 2 == 0
+            && self.region_w >= 2
+            && self.region_w % 2 == 0
+            && self.region_h >= 2
+            && self.region_h % 2 == 0;
+        // Valid-site sets per open-failure set. Between repairs the
+        // cluster revisits the same states, so most picks are a lookup.
+        let mut memo: HashMap<Vec<FailedRegion>, Vec<FailedRegion>> = HashMap::new();
         // (repair step, region) for currently-open holes.
         let mut open: Vec<(u64, FailedRegion)> = Vec::new();
         let mut t = 0u64;
@@ -71,7 +130,12 @@ impl MtbfModel {
                     break;
                 }
             }
-            let Some(region) = self.pick_site(&mut rng, &state) else {
+            let picked = if fast_ok {
+                self.pick_site_fast(&mut rng, &state, &mut memo)
+            } else {
+                self.pick_site(&mut rng, &state)
+            };
+            let Some(region) = picked else {
                 continue; // mesh too degraded for another hole right now
             };
             state.fail(region).expect("site was validated");
@@ -91,6 +155,10 @@ impl MtbfModel {
     /// Uniformly pick an even-aligned site whose failure keeps the mesh
     /// connected and fault-tolerant-schedulable. `None` when no site
     /// qualifies (e.g. every remaining strip is already broken).
+    ///
+    /// This is the **dense reference**: it replans every candidate from
+    /// scratch. [`Self::pick_site_fast`] must stay seeded-identical to
+    /// it (`rust/tests/site_picker.rs`).
     fn pick_site(&self, rng: &mut SplitMix64, state: &ClusterState) -> Option<FailedRegion> {
         let (w, h) = (self.region_w, self.region_h);
         if w > state.nx || h > state.ny {
@@ -117,6 +185,183 @@ impl MtbfModel {
             Some(sites[rng.usize_in(0, sites.len())])
         }
     }
+
+    /// Fast site pick: closed-form validity predicate plus a valid-site
+    /// memo keyed by the open-failure set. Emits sites in the same
+    /// enumeration order and draws with the same single RNG call as
+    /// [`Self::pick_site`], so timelines are seeded-identical. Only
+    /// called when `generate`'s `fast_ok` gate holds (even-aligned
+    /// shape on a planner-legal mesh).
+    fn pick_site_fast(
+        &self,
+        rng: &mut SplitMix64,
+        state: &ClusterState,
+        memo: &mut HashMap<Vec<FailedRegion>, Vec<FailedRegion>>,
+    ) -> Option<FailedRegion> {
+        let (w, h) = (self.region_w, self.region_h);
+        if w > state.nx || h > state.ny {
+            return None; // dense path returns before any RNG draw too
+        }
+        let mut key = state.failed_regions().to_vec();
+        key.sort_unstable();
+        let sites = memo.entry(key).or_insert_with(|| valid_sites_fast(state, w, h));
+        if sites.is_empty() {
+            None
+        } else {
+            Some(sites[rng.usize_in(0, sites.len())])
+        }
+    }
+}
+
+/// All even-aligned `w x h` sites whose failure keeps the live set
+/// connected with at least one fully-live row-pair strip — the exact
+/// closed form of "`can_fail` and `ft_plan` succeeds" for even-aligned
+/// disjoint regions (see the module docs). Sites are returned in the
+/// dense enumeration order: `y0` ascending by 2, then `x0` ascending
+/// by 2.
+fn valid_sites_fast(state: &ClusterState, w: usize, h: usize) -> Vec<FailedRegion> {
+    let (nx, ny) = (state.nx, state.ny);
+    let failed = state.failed_regions();
+    // Failed-cell mask and 2-D prefix sums: O(1) "failed cells inside
+    // [x0,x1) x [y0,y1)" queries.
+    let mut mask = vec![0u32; nx * ny];
+    for r in failed {
+        for y in r.y0..r.y1().min(ny) {
+            for x in r.x0..r.x1().min(nx) {
+                mask[y * nx + x] = 1;
+            }
+        }
+    }
+    let mut pre = vec![0u32; (nx + 1) * (ny + 1)];
+    for y in 0..ny {
+        for x in 0..nx {
+            pre[(y + 1) * (nx + 1) + x + 1] =
+                mask[y * nx + x] + pre[y * (nx + 1) + x + 1] + pre[(y + 1) * (nx + 1) + x]
+                    - pre[y * (nx + 1) + x];
+        }
+    }
+    // Evaluation order keeps every intermediate non-negative: the
+    // corner prefixes satisfy pre[y1][x1] >= pre[y0][x1] and
+    // pre[y1][x1] + pre[y0][x0] >= pre[y0][x1] + pre[y1][x0].
+    let count = |x0: usize, y0: usize, x1: usize, y1: usize| -> u32 {
+        (pre[y1 * (nx + 1) + x1] + pre[y0 * (nx + 1) + x0])
+            - pre[y0 * (nx + 1) + x1]
+            - pre[y1 * (nx + 1) + x0]
+    };
+    // Blue strips: row pairs [2k, 2k+2) with no failed cell. Prefix
+    // counts give "does any blue strip survive outside [y0, y0+h)" in
+    // O(1) per site.
+    let half = ny / 2;
+    let mut blue_pre = vec![0u32; half + 1];
+    for k in 0..half {
+        blue_pre[k + 1] = blue_pre[k] + u32::from(count(0, 2 * k, nx, 2 * k + 2) == 0);
+    }
+    let num_blue = blue_pre[half];
+    let base_connected = live_connected(nx, ny, failed);
+    let mut scratch = failed.to_vec();
+    let mut sites = Vec::new();
+    for y0 in (0..=ny - h).step_by(2) {
+        for x0 in (0..=nx - w).step_by(2) {
+            // Disjoint from every open hole (`can_fail`).
+            if count(x0, y0, x0 + w, y0 + h) != 0 {
+                continue;
+            }
+            // A blue strip must survive outside the new hole's rows.
+            // The hole is row-pair aligned, so it breaks exactly the
+            // strips k in [y0/2, (y0+h)/2).
+            if num_blue - (blue_pre[(y0 + h) / 2] - blue_pre[y0 / 2]) == 0 {
+                continue;
+            }
+            let region = FailedRegion::new(x0, y0, w, h);
+            // Connectivity: an isolated site (1-cell inflation touches
+            // neither mesh border nor any failed cell) cannot disconnect
+            // a connected live set — the live ring around it reroutes
+            // any path through it. Everything else gets an exact BFS.
+            let interior = x0 > 0
+                && y0 > 0
+                && x0 + w < nx
+                && y0 + h < ny
+                && count(x0 - 1, y0 - 1, x0 + w + 1, y0 + h + 1) == 0;
+            let ok = if interior && base_connected {
+                true
+            } else {
+                scratch.push(region);
+                let c = live_connected(nx, ny, &scratch);
+                scratch.pop();
+                c
+            };
+            if ok {
+                sites.push(region);
+            }
+        }
+    }
+    sites
+}
+
+/// Is the mesh minus the union of `rects` connected? Exact, on the
+/// coordinate-compressed grid (cells between distinct rectangle edges
+/// are uniformly live or blocked, and compressed adjacency preserves
+/// cell adjacency). An empty live set counts as connected, matching
+/// `Topology::is_connected`.
+fn live_connected(nx: usize, ny: usize, rects: &[FailedRegion]) -> bool {
+    let mut xs = vec![0, nx];
+    let mut ys = vec![0, ny];
+    for r in rects {
+        xs.push(r.x0.min(nx));
+        xs.push(r.x1().min(nx));
+        ys.push(r.y0.min(ny));
+        ys.push(r.y1().min(ny));
+    }
+    xs.sort_unstable();
+    xs.dedup();
+    ys.sort_unstable();
+    ys.dedup();
+    let (cw, ch) = (xs.len() - 1, ys.len() - 1);
+    let mut blocked = vec![false; cw * ch];
+    for r in rects {
+        let i0 = xs.partition_point(|&v| v < r.x0.min(nx));
+        let i1 = xs.partition_point(|&v| v < r.x1().min(nx));
+        let j0 = ys.partition_point(|&v| v < r.y0.min(ny));
+        let j1 = ys.partition_point(|&v| v < r.y1().min(ny));
+        for j in j0..j1 {
+            for b in blocked[j * cw + i0..j * cw + i1].iter_mut() {
+                *b = true;
+            }
+        }
+    }
+    let total_live = blocked.iter().filter(|&&b| !b).count();
+    if total_live == 0 {
+        return true;
+    }
+    let start = blocked.iter().position(|&b| !b).expect("a live cell exists");
+    let mut seen = vec![false; cw * ch];
+    seen[start] = true;
+    let mut stack = vec![start];
+    let mut reached = 0usize;
+    while let Some(c) = stack.pop() {
+        reached += 1;
+        let (i, j) = (c % cw, c / cw);
+        let mut neigh: [Option<usize>; 4] = [None; 4];
+        if i > 0 {
+            neigh[0] = Some(c - 1);
+        }
+        if i + 1 < cw {
+            neigh[1] = Some(c + 1);
+        }
+        if j > 0 {
+            neigh[2] = Some(c - cw);
+        }
+        if j + 1 < ch {
+            neigh[3] = Some(c + cw);
+        }
+        for n in neigh.into_iter().flatten() {
+            if !blocked[n] && !seen[n] {
+                seen[n] = true;
+                stack.push(n);
+            }
+        }
+    }
+    reached == total_live
 }
 
 /// Exponential step count with the given mean, at least 1. Shared

@@ -6,22 +6,33 @@
 //! the whole simulation, and reports **events/sec** — integration
 //! segments processed per wall second ([`FleetSummary::segments`]) —
 //! the engine-throughput figure `BENCH_scale.json` tracks across the
-//! mesh grid. Cells run sequentially (never in parallel) so every
-//! timing sees an otherwise idle process.
+//! mesh grid. The **timed** sparse cells run sequentially (never in
+//! parallel) so every timing sees an otherwise idle process; the
+//! untimed `--verify` dense replays fan out across worker threads
+//! through the sweep's `par_map` harness afterwards.
 //!
 //! With [`ScaleConfig::verify`] every cell is replayed through the
-//! dense full-recompute reference path
-//! (`FleetConfig::sparse_occupancy = false`) and any bit-level
-//! divergence fails the sweep — the same differential contract
-//! `rust/tests/scale_equivalence.rs` enforces.
+//! dense full-recompute reference paths
+//! (`FleetConfig::sparse_occupancy = false`,
+//! `FleetConfig::fast_placer = false`, and — on meshes small enough
+//! for the O(mesh²)-per-failure replan — `MtbfModel::fast_pick =
+//! false`) and any bit-level divergence fails the sweep — the same
+//! differential contract `rust/tests/scale_equivalence.rs` and
+//! `rust/tests/site_picker.rs` enforce.
+//!
+//! With [`ScaleConfig::mtbf`] the scripted timeline is replaced by a
+//! seeded `MtbfModel` board-failure process — the paper's
+//! availability workload — which the incremental site picker makes
+//! tractable at the 256x512 cell.
 //!
 //! [`FleetSummary::segments`]: crate::sched::FleetSummary::segments
 
-use super::{ClusterEvent, TimedEvent};
+use super::sweep::par_map;
+use super::{ClusterEvent, MtbfModel, TimedEvent};
 use crate::mesh::FailedRegion;
 use crate::sched::{
-    run_fleet, ClockMode, ContentionModel, FleetConfig, FleetError, FleetRun, JobPolicy,
-    WorkloadModel,
+    run_fleet, ClockMode, ContentionModel, FleetConfig, FleetError, FleetProfile, FleetRun,
+    JobPolicy, WorkloadModel,
 };
 use std::time::Instant;
 use thiserror::Error;
@@ -50,6 +61,10 @@ pub struct ScaleConfig {
     /// Replay every cell through the dense reference path and fail on
     /// any bit-level divergence.
     pub verify: bool,
+    /// Mean steps between failures: drive cells with a seeded
+    /// [`MtbfModel`] board-failure process (mean repair = half the
+    /// failure mean) instead of the scripted timeline.
+    pub mtbf: Option<f64>,
 }
 
 impl ScaleConfig {
@@ -62,6 +77,7 @@ impl ScaleConfig {
             payload: 1 << 12,
             seed: 1,
             verify: false,
+            mtbf: None,
         }
     }
 
@@ -82,6 +98,7 @@ impl ScaleConfig {
             payload: 1 << 12,
             seed: 1,
             verify: false,
+            mtbf: None,
         }
     }
 }
@@ -105,17 +122,19 @@ pub struct ScalePoint {
     pub goodput: f64,
     pub mean_utilization: f64,
     pub max_dilation: f64,
+    /// Per-phase wall-time breakdown of the sparse run (`--profile`).
+    pub profile: FleetProfile,
 }
 
 /// The per-cell fleet: wall-clock + contention + backfill, with the
 /// job count growing with the mesh edge (capped so placement stays
 /// cheap relative to the engine under test). Failures come from a
-/// fixed scripted timeline rather than `MtbfModel`: the MTBF site
-/// picker runs a feasibility plan for every even-aligned board on the
-/// mesh, which is O(mesh²) per failure and would dominate the timing
-/// at the 256x256+ cells. The script still exercises the recovery
-/// paths (pauses, migrations, epoch-signature changes) the sparse
-/// engine must replay bit-identically.
+/// fixed scripted timeline by default, or — with
+/// [`ScaleConfig::mtbf`] — from a seeded `MtbfModel` board process,
+/// which the incremental site picker keeps O(live sites) per failure
+/// even at the 256x512 cell. Both exercise the recovery paths
+/// (pauses, migrations, epoch-signature changes) the sparse engine
+/// must replay bit-identically.
 fn cell_config(nx: usize, ny: usize, cfg: &ScaleConfig) -> FleetConfig {
     let jobs = (((nx * ny) as f64).sqrt() as usize / 4).clamp(4, 32);
     let horizon = cfg.horizon;
@@ -135,14 +154,19 @@ fn cell_config(nx: usize, ny: usize, cfg: &ScaleConfig) -> FleetConfig {
         policies: vec![JobPolicy::Continue, JobPolicy::Migrate, JobPolicy::Adaptive],
         scripted: Vec::new(),
     };
-    c.mtbf = None;
-    let q = (horizon / 4).max(1);
-    c.events = vec![
-        TimedEvent { at_step: q, event: ClusterEvent::Fail(FailedRegion::board(0, 0)) },
-        TimedEvent { at_step: q + 2, event: ClusterEvent::Fail(FailedRegion::board(4, 4)) },
-        TimedEvent { at_step: 2 * q, event: ClusterEvent::Repair(FailedRegion::board(0, 0)) },
-        TimedEvent { at_step: 3 * q, event: ClusterEvent::Repair(FailedRegion::board(4, 4)) },
-    ];
+    if let Some(mean) = cfg.mtbf {
+        c.mtbf = Some(MtbfModel::board(cfg.seed, mean, mean * 0.5));
+        c.events = Vec::new();
+    } else {
+        c.mtbf = None;
+        let q = (horizon / 4).max(1);
+        c.events = vec![
+            TimedEvent { at_step: q, event: ClusterEvent::Fail(FailedRegion::board(0, 0)) },
+            TimedEvent { at_step: q + 2, event: ClusterEvent::Fail(FailedRegion::board(4, 4)) },
+            TimedEvent { at_step: 2 * q, event: ClusterEvent::Repair(FailedRegion::board(0, 0)) },
+            TimedEvent { at_step: 3 * q, event: ClusterEvent::Repair(FailedRegion::board(4, 4)) },
+        ];
+    }
     c.policy = None;
     c.clock = ClockMode::WallClock;
     c.contention = Some(ContentionModel::tpu_default());
@@ -210,40 +234,65 @@ fn runs_equivalent(sparse: &FleetRun, dense: &FleetRun) -> Result<(), String> {
     Ok(())
 }
 
-/// Run the sweep: one timed sparse-path fleet per mesh (plus an
-/// untimed dense replay under `verify`), in the configured order.
+/// Run the sweep: one timed sparse-path fleet per mesh, strictly
+/// sequential; under `verify`, untimed dense replays then fan out
+/// across worker threads and any bit-level divergence fails the
+/// sweep.
 pub fn run_scale(cfg: &ScaleConfig) -> Result<Vec<ScalePoint>, ScaleError> {
-    let mut out = Vec::with_capacity(cfg.meshes.len());
+    let mut runs: Vec<(usize, usize, FleetRun, f64)> = Vec::with_capacity(cfg.meshes.len());
     for &(nx, ny) in &cfg.meshes {
         let fleet_cfg = cell_config(nx, ny, cfg);
         let t0 = Instant::now();
         let run = run_fleet(&fleet_cfg)?;
         let wall_s = t0.elapsed().as_secs_f64();
-        if cfg.verify {
-            let mut dense_cfg = fleet_cfg.clone();
+        runs.push((nx, ny, run, wall_s));
+    }
+    if cfg.verify {
+        let denses = par_map(0, &cfg.meshes, |(nx, ny)| {
+            let mut dense_cfg = cell_config(nx, ny, cfg);
             dense_cfg.sparse_occupancy = false;
-            let dense = run_fleet(&dense_cfg)?;
-            if let Err(what) = runs_equivalent(&run, &dense) {
-                return Err(ScaleError::Divergence { nx, ny, what });
+            dense_cfg.fast_placer = false;
+            if let Some(m) = dense_cfg.mtbf.as_mut() {
+                // The dense site picker replans every even-aligned
+                // board — O(mesh²) per failure — so the full-strength
+                // picker differential stays on small meshes; larger
+                // cells keep the fast picker (its own differential
+                // suite is `rust/tests/site_picker.rs`) and still
+                // verify the placer and occupancy engines densely.
+                if nx * ny <= 4096 {
+                    m.fast_pick = false;
+                }
+            }
+            run_fleet(&dense_cfg)
+        });
+        for ((nx, ny, run, _), dense) in runs.iter().zip(denses) {
+            let dense = dense?;
+            if let Err(what) = runs_equivalent(run, &dense) {
+                return Err(ScaleError::Divergence { nx: *nx, ny: *ny, what });
             }
         }
-        let s = &run.summary;
-        out.push(ScalePoint {
-            nx,
-            ny,
-            chips: nx * ny,
-            jobs: s.arrivals,
-            completed: s.completed,
-            segments: s.segments,
-            contention_epochs: s.contention_epochs,
-            wall_s,
-            events_per_sec: if wall_s > 0.0 { s.segments as f64 / wall_s } else { 0.0 },
-            goodput: s.goodput,
-            mean_utilization: s.mean_utilization,
-            max_dilation: s.max_dilation,
-        });
     }
-    Ok(out)
+    Ok(runs
+        .into_iter()
+        .map(|(nx, ny, run, wall_s)| {
+            let s = &run.summary;
+            ScalePoint {
+                nx,
+                ny,
+                chips: nx * ny,
+                jobs: s.arrivals,
+                completed: s.completed,
+                segments: s.segments,
+                contention_epochs: s.contention_epochs,
+                wall_s,
+                events_per_sec: if wall_s > 0.0 { s.segments as f64 / wall_s } else { 0.0 },
+                goodput: s.goodput,
+                mean_utilization: s.mean_utilization,
+                max_dilation: s.max_dilation,
+                profile: run.profile,
+            }
+        })
+        .collect())
 }
 
 /// Sweep-aggregate throughput: total segments over total wall seconds
@@ -271,6 +320,7 @@ mod tests {
             payload: 1 << 11,
             seed: 3,
             verify: true,
+            mtbf: None,
         };
         let points = run_scale(&cfg).expect("sparse and dense paths agree");
         assert_eq!(points.len(), 1);
@@ -283,5 +333,26 @@ mod tests {
         assert!(p.goodput > 0.0);
         assert!(aggregate_events_per_sec(&points) > 0.0);
         assert_eq!(aggregate_events_per_sec(&[]), 0.0);
+    }
+
+    #[test]
+    fn mtbf_axis_verifies_on_a_small_cell() {
+        // 16x16 is under the 4096-chip cutoff, so the dense replay
+        // disables all three fast engines — occupancy, placer, and
+        // site picker — making this a full-reference differential of
+        // the MTBF-driven cell.
+        let cfg = ScaleConfig {
+            meshes: vec![(16, 16)],
+            horizon: 80,
+            payload: 1 << 11,
+            seed: 5,
+            verify: true,
+            mtbf: Some(20.0),
+        };
+        let points = run_scale(&cfg).expect("fast and dense engines agree on the MTBF axis");
+        let p = &points[0];
+        assert!(p.segments >= cfg.horizon);
+        assert!(p.profile.site_pick_s > 0.0, "the MTBF generator was timed");
+        assert!(p.profile.placement_s > 0.0, "placement queries were timed");
     }
 }

@@ -323,6 +323,7 @@ pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, Swe
         mean_repair_steps: mtbf * mttr_frac,
         region_w: region.0,
         region_h: region.1,
+        fast_pick: true,
     };
     let events = model.generate(nx, ny, cfg.horizon);
     let ckpt_every = cfg.checkpoint_every.max(1);
@@ -506,8 +507,10 @@ pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, Swe
 /// Fan independent sweep cells across scoped worker threads
 /// (`threads == 0` = available parallelism, capped at 16). Results
 /// come back in input order, so determinism is untouched by
-/// scheduling. Shared by [`run_sweep`] and [`run_fleet_sweep`].
-fn par_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+/// scheduling. Shared by [`run_sweep`], [`run_fleet_sweep`], and the
+/// scale harness's untimed `--verify` dense replays
+/// (`super::scale`).
+pub(crate) fn par_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
 where
     T: Copy + Sync,
     R: Send,

@@ -39,7 +39,9 @@
 //! relies on.
 
 use super::contention::{self, ContentionModel};
-use super::metrics::{mean_median, FleetRun, FleetSummary, JobOutcome, LinkHotspot, UtilSample};
+use super::metrics::{
+    mean_median, FleetProfile, FleetRun, FleetSummary, JobOutcome, LinkHotspot, UtilSample,
+};
 use super::placer::{self, Rect};
 use super::workload::WorkloadModel;
 use super::{FleetError, JobPolicy, JobSpec};
@@ -51,6 +53,7 @@ use crate::perfmodel::steptime;
 use crate::perfmodel::CandidatePrediction;
 use crate::simnet::{simulate_plan, LinkModel};
 use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
 
 /// Which time model drives the fleet.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -136,6 +139,12 @@ pub struct FleetConfig {
     /// and obstacles only grow as backfills commit, so no backfilled
     /// start precedes a feasible head placement it could have blocked.
     pub backfill: bool,
+    /// Incremental placement index ([`placer::PlacementIndex`]):
+    /// maintain the obstacle strips across place/free/fail/repair and
+    /// answer placement queries in O(affected strips) instead of a full
+    /// mesh rescan. `false` forces the dense scan reference path; both
+    /// are bit-identical (`rust/tests/fleet_placement.rs`).
+    pub fast_placer: bool,
 }
 
 impl FleetConfig {
@@ -163,6 +172,7 @@ impl FleetConfig {
             contention: None,
             sparse_occupancy: true,
             backfill: false,
+            fast_placer: true,
         }
     }
 
@@ -190,6 +200,7 @@ impl FleetConfig {
             contention: None,
             sparse_occupancy: true,
             backfill: false,
+            fast_placer: true,
         }
     }
 }
@@ -369,6 +380,13 @@ struct Fleet<'a> {
     segments: u64,
     samples: Vec<UtilSample>,
     events_log: Vec<(u64, String)>,
+    /// Incremental placement index (`FleetConfig::fast_placer`); kept
+    /// in lockstep with failed regions + running rectangles and
+    /// cross-checked by `check_invariants`.
+    pidx: Option<placer::PlacementIndex>,
+    /// Per-phase wall-time accumulators (`FleetRun::profile`). Never
+    /// read by the simulation, so profiling cannot perturb determinism.
+    prof: FleetProfile,
 }
 
 impl<'a> Fleet<'a> {
@@ -417,6 +435,8 @@ impl<'a> Fleet<'a> {
             segments: 0,
             samples: Vec::new(),
             events_log: Vec::new(),
+            pidx: cfg.fast_placer.then(|| placer::PlacementIndex::new(cfg.nx, cfg.ny)),
+            prof: FleetProfile::default(),
         }
     }
 
@@ -487,6 +507,33 @@ impl<'a> Fleet<'a> {
         obs
     }
 
+    /// Place a `w x h` job against the current obstacles, excluding
+    /// running job `skip` (`usize::MAX` excludes nobody). Fast path:
+    /// query the placement index, briefly lifting `skip`'s rectangle
+    /// out. Dense path: rebuild the obstacle list and scan. Both are
+    /// bit-identical (`rust/tests/fleet_placement.rs`).
+    fn place_excluding(&mut self, skip: usize, w: usize, h: usize) -> Option<Rect> {
+        let t0 = Instant::now();
+        let got = if self.pidx.is_some() {
+            let skip_rect =
+                self.running.get(skip).map(|j| j.rect.expect("running job has a rectangle"));
+            let idx = self.pidx.as_mut().expect("fast path checked");
+            if let Some(r) = skip_rect {
+                idx.remove(&r);
+            }
+            let got = idx.place_oriented(w, h);
+            if let Some(r) = skip_rect {
+                idx.add(&r);
+            }
+            got
+        } else {
+            let obs = self.obstacles_excluding(skip);
+            placer::place_oriented(self.cfg.nx, self.cfg.ny, &obs, w, h)
+        };
+        self.prof.placement_s += t0.elapsed().as_secs_f64();
+        got
+    }
+
     /// Effective throughput of a candidate over the expected horizon
     /// to the next event (the fleet-level adaptive comparison).
     fn eff(&self, workers: usize, step_s: f64, one_off_s: f64, rollback_steps: f64) -> f64 {
@@ -512,6 +559,9 @@ impl<'a> Fleet<'a> {
             return Err(FleetError::Unschedulable(job.spec.id, rect.w, rect.h));
         };
         job.rect = Some(rect);
+        if let Some(idx) = self.pidx.as_mut() {
+            idx.add(&rect);
+        }
         job.holes.clear();
         job.workers = rect.num_chips();
         job.rate = self.cfg.compute_s / s;
@@ -534,8 +584,7 @@ impl<'a> Fleet<'a> {
             let Some((w, h)) = self.queue.front().map(|j| (j.spec.w, j.spec.h)) else {
                 return Ok(());
             };
-            let obs = self.obstacles_excluding(usize::MAX);
-            match placer::place_oriented(self.cfg.nx, self.cfg.ny, &obs, w, h) {
+            match self.place_excluding(usize::MAX, w, h) {
                 Some(rect) => {
                     let mut job = self.queue.pop_front().expect("queue head exists");
                     self.start_job(&mut job, rect)?;
@@ -554,8 +603,7 @@ impl<'a> Fleet<'a> {
                 let j = &self.queue[i];
                 (j.spec.w, j.spec.h, j.spec.id)
             };
-            let obs = self.obstacles_excluding(usize::MAX);
-            match placer::place_oriented(self.cfg.nx, self.cfg.ny, &obs, w, h) {
+            match self.place_excluding(usize::MAX, w, h) {
                 Some(rect) => {
                     let mut job = self.queue.remove(i).expect("index checked");
                     self.start_job(&mut job, rect)?;
@@ -605,6 +653,13 @@ impl<'a> Fleet<'a> {
             RestartKind::Shrink => self.cfg.restart_steps,
             RestartKind::Migrate => self.cfg.restart_steps + self.cfg.migrate_steps,
         };
+        if self.pidx.is_some() {
+            let old = self.running[i].rect.expect("running job has a rectangle");
+            let idx = self.pidx.as_mut().expect("fast path checked");
+            let _removed = idx.remove(&old);
+            debug_assert!(_removed, "restart_on lifts an indexed rectangle");
+            idx.add(&target);
+        }
         let j = &mut self.running[i];
         j.progress -= rb;
         j.rect = Some(target);
@@ -664,14 +719,18 @@ impl<'a> Fleet<'a> {
                     let s = &self.running[i].spec;
                     (s.w, s.h)
                 };
-                let obs = self.obstacles_excluding(i);
-                match placer::place_oriented(self.cfg.nx, self.cfg.ny, &obs, w, h) {
+                match self.place_excluding(i, w, h) {
                     Some(target) => self.restart_on(i, target, RestartKind::Migrate),
                     None => Ok(false),
                 }
             }
             Action::Wait => {
                 let mut j = self.running.remove(i);
+                if let Some(idx) = self.pidx.as_mut() {
+                    let old = j.rect.expect("running job has a rectangle");
+                    let _removed = idx.remove(&old);
+                    debug_assert!(_removed, "wait releases an indexed rectangle");
+                }
                 let rb = self.rollback_of(j.progress);
                 self.goodput_sum -= j.workers as f64 * rb;
                 j.progress -= rb;
@@ -722,8 +781,7 @@ impl<'a> Fleet<'a> {
                 let s = &self.running[i].spec;
                 (s.w, s.h)
             };
-            let obs = self.obstacles_excluding(i);
-            if let Some(t) = placer::place_oriented(self.cfg.nx, self.cfg.ny, &obs, w, h) {
+            if let Some(t) = self.place_excluding(i, w, h) {
                 if let Some(s) = self.step_time(t.w, t.h, &[])? {
                     let one_off = (self.cfg.restart_steps + self.cfg.migrate_steps) * s;
                     cands.push((self.eff(t.num_chips(), s, one_off, rb), Action::Migrate));
@@ -781,6 +839,9 @@ impl<'a> Fleet<'a> {
 
     fn on_fail(&mut self, region: FailedRegion) -> Result<(), FleetError> {
         self.cluster.fail(region)?;
+        if let Some(idx) = self.pidx.as_mut() {
+            idx.add(&region);
+        }
         self.estimator.observe(self.step);
         self.transitions += 1;
         self.log(format!("fail {region:?}"));
@@ -800,6 +861,10 @@ impl<'a> Fleet<'a> {
 
     fn on_repair(&mut self, region: FailedRegion) -> Result<(), FleetError> {
         self.cluster.repair(region)?;
+        if let Some(idx) = self.pidx.as_mut() {
+            let _removed = idx.remove(&region);
+            debug_assert!(_removed, "repair clears an indexed failed region");
+        }
         self.estimator.observe(self.step);
         self.transitions += 1;
         self.log(format!("repair {region:?}"));
@@ -843,9 +908,7 @@ impl<'a> Fleet<'a> {
             if cur.num_chips() >= sw * sh {
                 continue;
             }
-            let obs = self.obstacles_excluding(i);
-            let Some(target) = placer::place_oriented(self.cfg.nx, self.cfg.ny, &obs, sw, sh)
-            else {
+            let Some(target) = self.place_excluding(i, sw, sh) else {
                 continue;
             };
             let grow = match policy {
@@ -881,21 +944,44 @@ impl<'a> Fleet<'a> {
         let Some((hw, hh)) = self.queue.front().map(|j| (j.spec.w, j.spec.h)) else {
             return Ok(());
         };
+        let t0 = Instant::now();
         let mut order: Vec<usize> = (0..self.running.len()).collect();
         order.sort_by_key(|&i| std::cmp::Reverse(self.rect(i).num_chips()));
+        // Trial layout: failed regions plus progressively committed
+        // trial rectangles. The fast path plans on a scratch index (the
+        // live one still describes the current layout until the commit
+        // below goes through restart_on/start_job).
         let mut obs: Vec<Rect> = self.cluster.failed_regions().to_vec();
+        let mut scratch = self.cfg.fast_placer.then(|| {
+            let mut idx = placer::PlacementIndex::new(self.cfg.nx, self.cfg.ny);
+            for r in &obs {
+                idx.add(r);
+            }
+            idx
+        });
         let mut placed: Vec<(usize, Rect)> = Vec::new();
         for &i in &order {
             let r = self.rect(i);
-            let Some(nr) = placer::place_oriented(self.cfg.nx, self.cfg.ny, &obs, r.w, r.h)
-            else {
+            let got = match &scratch {
+                Some(idx) => idx.place_oriented(r.w, r.h),
+                None => placer::place_oriented(self.cfg.nx, self.cfg.ny, &obs, r.w, r.h),
+            };
+            let Some(nr) = got else {
+                self.prof.placement_s += t0.elapsed().as_secs_f64();
                 return Ok(()); // compaction itself fails; keep layout
             };
+            if let Some(idx) = scratch.as_mut() {
+                idx.add(&nr);
+            }
             obs.push(nr);
             placed.push((i, nr));
         }
-        let Some(head_rect) = placer::place_oriented(self.cfg.nx, self.cfg.ny, &obs, hw, hh)
-        else {
+        let head_got = match &scratch {
+            Some(idx) => idx.place_oriented(hw, hh),
+            None => placer::place_oriented(self.cfg.nx, self.cfg.ny, &obs, hw, hh),
+        };
+        self.prof.placement_s += t0.elapsed().as_secs_f64();
+        let Some(head_rect) = head_got else {
             return Ok(()); // compaction would not admit the head
         };
         // Commit: move every job whose rectangle changed, then admit
@@ -916,7 +1002,8 @@ impl<'a> Fleet<'a> {
     }
 
     fn handle_event(&mut self, ev: TimedEvent) -> Result<(), FleetError> {
-        match ev.event {
+        let t0 = Instant::now();
+        let res = match ev.event {
             ClusterEvent::Fail(r) => self.on_fail(r),
             ClusterEvent::Repair(r) => self.on_repair(r),
             ClusterEvent::CheckpointTick | ClusterEvent::Stop => {
@@ -924,7 +1011,9 @@ impl<'a> Fleet<'a> {
                 // stop is a single-job concept the fleet ignores.
                 Ok(())
             }
-        }
+        };
+        self.prof.drain_s += t0.elapsed().as_secs_f64();
+        res
     }
 
     /// Recompute the link epoch: charge every running job's compiled
@@ -932,6 +1021,13 @@ impl<'a> Fleet<'a> {
     /// max-min fairly. No-op unless the wall-clock engine runs with
     /// contention enabled.
     fn refresh_contention(&mut self) -> Result<(), FleetError> {
+        let t0 = Instant::now();
+        let res = self.refresh_contention_inner();
+        self.prof.contention_s += t0.elapsed().as_secs_f64();
+        res
+    }
+
+    fn refresh_contention_inner(&mut self) -> Result<(), FleetError> {
         let Some(model) = self.cfg.contention else {
             return Ok(());
         };
@@ -1065,6 +1161,7 @@ impl<'a> Fleet<'a> {
     /// whether any job completed (freed space → admission
     /// opportunity).
     fn advance(&mut self) -> bool {
+        let t0 = Instant::now();
         self.segments += 1;
         let live = self.cluster.live_chips() as f64;
         let mut util = 0.0f64;
@@ -1099,11 +1196,17 @@ impl<'a> Fleet<'a> {
         let any = !finished.is_empty();
         for i in finished.into_iter().rev() {
             let mut job = self.running.remove(i);
+            if let Some(idx) = self.pidx.as_mut() {
+                let old = job.rect.expect("running job has a rectangle");
+                let _removed = idx.remove(&old);
+                debug_assert!(_removed, "completion releases an indexed rectangle");
+            }
             job.completed_at = Some(self.step + 1);
             let (id, migrations) = (job.spec.id, job.migrations);
             self.log(format!("job {id} completes ({migrations} migrations)"));
             self.done.push(job);
         }
+        self.prof.executor_s += t0.elapsed().as_secs_f64();
         any
     }
 
@@ -1113,6 +1216,7 @@ impl<'a> Fleet<'a> {
     /// contract with the round-robin engine. Returns indices of jobs
     /// whose work finished (ascending).
     fn advance_segment(&mut self, dt: f64) -> Vec<usize> {
+        let t0 = Instant::now();
         self.segments += 1;
         let live = self.cluster.live_chips() as f64;
         let mut util = 0.0f64;
@@ -1154,6 +1258,7 @@ impl<'a> Fleet<'a> {
             }
             link_occ[slot] += occ * dt;
         }
+        self.prof.executor_s += t0.elapsed().as_secs_f64();
         finished
     }
 
@@ -1216,6 +1321,11 @@ impl<'a> Fleet<'a> {
             let completed_any = !finished.is_empty();
             for i in finished.into_iter().rev() {
                 let mut job = self.running.remove(i);
+                if let Some(idx) = self.pidx.as_mut() {
+                    let old = job.rect.expect("running job has a rectangle");
+                    let _removed = idx.remove(&old);
+                    debug_assert!(_removed, "completion releases an indexed rectangle");
+                }
                 job.completed_at = Some(t1.ceil() as u64);
                 let (id, migrations) = (job.spec.id, job.migrations);
                 self.log(format!("job {id} completes ({migrations} migrations)"));
@@ -1247,6 +1357,21 @@ impl<'a> Fleet<'a> {
         let rects: Vec<Rect> = self.running.iter().map(|j| j.rect.expect("running")).collect();
         placer::check_rects(self.cfg.nx, self.cfg.ny, &rects)
             .map_err(|e| fail(e.to_string()))?;
+        // The placement index must mirror failed regions + running
+        // rectangles exactly (as a multiset; order is maintenance
+        // history).
+        if let Some(idx) = &self.pidx {
+            let mut indexed = idx.obstacles().to_vec();
+            let mut expected: Vec<Rect> = self.cluster.failed_regions().to_vec();
+            expected.extend(rects.iter().copied());
+            indexed.sort_unstable();
+            expected.sort_unstable();
+            if indexed != expected {
+                return Err(fail(format!(
+                    "placement index desynced: indexed {indexed:?} vs expected {expected:?}"
+                )));
+            }
+        }
         // Every live-failure/job overlap must be a registered hole of
         // exactly that job.
         for f in self.cluster.failed_regions() {
@@ -1365,6 +1490,7 @@ impl<'a> Fleet<'a> {
             samples: self.samples,
             hotspots,
             events: self.events_log,
+            profile: self.prof,
         };
         (run, self.cache)
     }
@@ -1436,13 +1562,18 @@ pub fn run_with_cache(cfg: &FleetConfig) -> Result<(FleetRun, PlanCache), FleetE
     }
     let arrivals = specs.len();
     let mut timeline = cfg.events.clone();
+    let mut site_pick_s = 0.0;
     if let Some(m) = &cfg.mtbf {
+        let t0 = Instant::now();
         timeline.extend(m.generate(cfg.nx, cfg.ny, cfg.horizon));
+        site_pick_s = t0.elapsed().as_secs_f64();
     }
-    match cfg.clock {
+    let (mut run, cache) = match cfg.clock {
         ClockMode::RoundRobin => run_round_robin(cfg, label, specs, timeline, arrivals),
         ClockMode::WallClock => run_wall_clock(cfg, label, specs, timeline, arrivals),
-    }
+    }?;
+    run.profile.site_pick_s = site_pick_s;
+    Ok((run, cache))
 }
 
 /// The legacy single-clock loop (the differential reference).
@@ -1707,6 +1838,33 @@ mod tests {
         for (x, y) in a.hotspots.iter().zip(&b.hotspots) {
             assert_eq!((x.x, x.y, x.dir), (y.x, y.y, y.dir));
             assert_eq!(x.mean_occupancy.to_bits(), y.mean_occupancy.to_bits());
+        }
+    }
+
+    #[test]
+    fn fast_placer_matches_dense_scan_reference() {
+        // In-module smoke version of the placement-index differential
+        // (`rust/tests/fleet_placement.rs` runs the property version):
+        // the incremental index and the full obstacle rescan must
+        // produce bit-identical fleets, including queue-waits and
+        // defragmentation.
+        let mut dense = tiny_cfg();
+        dense.mtbf = Some(MtbfModel::board(9, 25.0, 40.0));
+        dense.policy = Some(JobPolicy::Adaptive);
+        dense.backfill = true;
+        dense.fast_placer = false;
+        let mut fast = dense.clone();
+        fast.fast_placer = true;
+        let a = run_fleet(&dense).unwrap();
+        let b = run_fleet(&fast).unwrap();
+        assert_eq!(a.events, b.events, "placement trace must match bit-for-bit");
+        assert_eq!(a.summary.goodput.to_bits(), b.summary.goodput.to_bits());
+        assert_eq!(a.summary.mean_utilization.to_bits(), b.summary.mean_utilization.to_bits());
+        assert_eq!(a.summary.migrations, b.summary.migrations);
+        assert_eq!(a.summary.queue_waits, b.summary.queue_waits);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.completed_at, y.completed_at);
+            assert_eq!(x.waited_steps, y.waited_steps);
         }
     }
 

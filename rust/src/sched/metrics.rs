@@ -109,6 +109,30 @@ pub struct FleetSummary {
     pub cache: PlanCacheStats,
 }
 
+/// Per-phase wall-time breakdown of one fleet run (`bin/scale.rs
+/// --profile`). Phases are measured around the engine's code paths
+/// with `Instant` accumulators that never feed back into the
+/// simulation, so profiling does not perturb determinism. Phases can
+/// nest (recovery placement inside drain counts toward both
+/// `placement_s` and `drain_s`); each figure answers "how much wall
+/// time did this code path cost", not "do the figures sum to the
+/// total".
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FleetProfile {
+    /// Placement queries: arrivals, backfill, migrate/recover targets,
+    /// grow-back, and defrag trial placements.
+    pub placement_s: f64,
+    /// MTBF timeline generation — dominated by the failure-site picker.
+    pub site_pick_s: f64,
+    /// Contention fair-share recomputations (link epochs).
+    pub contention_s: f64,
+    /// Fail/repair event drains (includes recovery placement).
+    pub drain_s: f64,
+    /// Step execution: round-robin stepping or wall-clock segment
+    /// integration.
+    pub executor_s: f64,
+}
+
 /// One fleet run: summary + per-job outcomes + sampled curves + link
 /// hotspots + the annotated event log.
 #[derive(Debug, Clone)]
@@ -122,6 +146,8 @@ pub struct FleetRun {
     /// when contention accounting is off).
     pub hotspots: Vec<LinkHotspot>,
     pub events: Vec<(u64, String)>,
+    /// Wall-time breakdown (excluded from run-equivalence checks).
+    pub profile: FleetProfile,
 }
 
 /// Mean and median of a (small) sample.

@@ -19,7 +19,11 @@
 //!   job's local coordinates — the fault-tolerant planner's
 //!   precondition. [`placer::largest_clear_rect`] is the exact
 //!   boundary-grid max-empty-rectangle over arbitrary obstacle sets
-//!   (failed regions *and* placed jobs);
+//!   (failed regions *and* placed jobs).
+//!   [`placer::PlacementIndex`] maintains the obstacle set in
+//!   horizontal strips across place/free/fail/repair so each query
+//!   touches only affected strips instead of rescanning the mesh —
+//!   gated by `FleetConfig::fast_placer`, bit-identical to the scans;
 //! - [`fleet`] — the deterministic fleet engines. Both clock modes
 //!   ([`fleet::ClockMode`]) consume the existing `cluster::EventQueue`
 //!   and route each fail/repair to the affected job's [`JobPolicy`]:
@@ -74,8 +78,10 @@ use thiserror::Error;
 pub use contention::{fair_shares, job_load, ContentionModel, EdgeCharge, JobLoad, ShareReport};
 pub use fleet::{compare_policies, run_fleet, run_with_cache, ClockMode, FleetConfig};
 pub use job::{TrainedFleet, TrainedFleetConfig, TrainedJob};
-pub use metrics::{FleetRun, FleetSummary, JobOutcome, LinkHotspot, UtilSample};
-pub use placer::{largest_clear_rect, place, place_oriented, Rect};
+pub use metrics::{FleetProfile, FleetRun, FleetSummary, JobOutcome, LinkHotspot, UtilSample};
+pub use placer::{
+    largest_clear_rect, largest_clear_rect_scan, place, place_oriented, PlacementIndex, Rect,
+};
 pub use workload::WorkloadModel;
 
 #[derive(Debug, Error)]

@@ -17,7 +17,22 @@
 //!   boundary grid (every maximal empty rectangle has its edges on
 //!   obstacle boundaries or the mesh edge). `largest_submesh` in
 //!   `coordinator::policy` is the failed-regions-only special case and
-//!   delegates here.
+//!   delegates here. The default implementation answers each candidate
+//!   clearance with an O(1) blocked-cell prefix-sum query over the
+//!   compressed boundary grid; [`largest_clear_rect_scan`] keeps the
+//!   per-candidate obstacle scan as the bit-identical dense reference.
+//! - [`PlacementIndex`] — a persistent incremental form of the same
+//!   obstacle set for the fleet's per-event placement queries
+//!   (`FleetConfig::fast_placer`). Obstacles are maintained across
+//!   place/free/fail/repair in a partition of the mesh into y-strips,
+//!   each holding the sorted x-intervals of the obstacles crossing it,
+//!   so an update touches only the affected strips and a clearance
+//!   probe walks only the strips the candidate rectangle spans —
+//!   instead of rebuilding the obstacle list and scanning all of it on
+//!   every query. Queries are bit-identical to the scan-based [`place`]
+//!   / [`place_oriented`] / [`largest_clear_rect`] over the same
+//!   obstacle multiset (`rust/tests/fleet_placement.rs` holds the
+//!   differential property suite).
 
 use crate::mesh::FailedRegion;
 use thiserror::Error;
@@ -169,6 +184,88 @@ pub fn largest_clear_rect(
     ys.sort_unstable();
     ys.dedup();
 
+    // Every obstacle edge is a compressed-grid line, so each obstacle
+    // (clipped to the mesh) covers whole compressed cells and a
+    // candidate is clear iff its blocked-cell count is zero — an O(1)
+    // prefix-sum query replacing the per-candidate obstacle scan of
+    // [`largest_clear_rect_scan`]. Candidate order and the
+    // strictly-greater `(area, width)` key are identical, so the
+    // winner matches the scan bit for bit.
+    let cw = xs.len() - 1;
+    let ch = ys.len() - 1;
+    let mut blocked = vec![0i64; cw * ch];
+    for r in obstacles {
+        let ix0 = xs.partition_point(|&v| v < r.x0.min(nx));
+        let ix1 = xs.partition_point(|&v| v < r.x1().min(nx));
+        let iy0 = ys.partition_point(|&v| v < r.y0.min(ny));
+        let iy1 = ys.partition_point(|&v| v < r.y1().min(ny));
+        for cell_y in iy0..iy1 {
+            for cell_x in ix0..ix1 {
+                blocked[cell_y * cw + cell_x] = 1;
+            }
+        }
+    }
+    // pre[j * (cw + 1) + i] = blocked cells in [0, i) x [0, j).
+    let mut pre = vec![0i64; (cw + 1) * (ch + 1)];
+    for cell_y in 0..ch {
+        for cell_x in 0..cw {
+            pre[(cell_y + 1) * (cw + 1) + cell_x + 1] = blocked[cell_y * cw + cell_x]
+                + pre[cell_y * (cw + 1) + cell_x + 1]
+                + pre[(cell_y + 1) * (cw + 1) + cell_x]
+                - pre[cell_y * (cw + 1) + cell_x];
+        }
+    }
+    let blocked_in = |i0: usize, i1: usize, j0: usize, j1: usize| {
+        pre[j1 * (cw + 1) + i1] + pre[j0 * (cw + 1) + i0]
+            - pre[j0 * (cw + 1) + i1]
+            - pre[j1 * (cw + 1) + i0]
+    };
+
+    let mut best = (0, 0, 0, 0);
+    let mut best_key = (0usize, 0usize);
+    for (i, &x0) in xs.iter().enumerate() {
+        for (di, &x1) in xs[i + 1..].iter().enumerate() {
+            for (j, &y0) in ys.iter().enumerate() {
+                for (dj, &y1) in ys[j + 1..].iter().enumerate() {
+                    if blocked_in(i, i + 1 + di, j, j + 1 + dj) > 0 {
+                        continue;
+                    }
+                    let (w, h) = (x1 - x0, y1 - y0);
+                    let key = (w * h, w);
+                    if key > best_key {
+                        best_key = key;
+                        best = (x0, y0, w, h);
+                    }
+                }
+            }
+        }
+    }
+    best
+}
+
+/// The dense reference for [`largest_clear_rect`]: the same boundary
+/// grid and candidate order, with each candidate's clearance answered
+/// by a full obstacle scan. Kept for the differential property suite
+/// (`rust/tests/fleet_placement.rs`); the two are bit-identical on any
+/// obstacle multiset.
+pub fn largest_clear_rect_scan(
+    nx: usize,
+    ny: usize,
+    obstacles: &[Rect],
+) -> (usize, usize, usize, usize) {
+    let mut xs = vec![0, nx];
+    let mut ys = vec![0, ny];
+    for r in obstacles {
+        xs.push(r.x0.min(nx));
+        xs.push(r.x1().min(nx));
+        ys.push(r.y0.min(ny));
+        ys.push(r.y1().min(ny));
+    }
+    xs.sort_unstable();
+    xs.dedup();
+    ys.sort_unstable();
+    ys.dedup();
+
     let clear = |x0: usize, y0: usize, x1: usize, y1: usize| {
         let candidate = Rect::new(x0, y0, x1 - x0, y1 - y0);
         obstacles.iter().all(|r| !r.overlaps(&candidate))
@@ -212,6 +309,201 @@ pub fn even_shrink(r: &Rect) -> Option<Rect> {
         return None;
     }
     Some(Rect::new(x0, y0, w, h))
+}
+
+/// One y-strip of the [`PlacementIndex`]: the half-open row band
+/// `[y0, y1)` and the x-intervals of every obstacle crossing it,
+/// sorted by `(x0, x1)`. The intervals form a *multiset* and may
+/// overlap each other — the fleet's obstacle set mixes failed regions
+/// with job rectangles, and a failed region can sit inside a running
+/// job's rectangle.
+#[derive(Debug, Clone)]
+struct Strip {
+    y0: usize,
+    y1: usize,
+    xs: Vec<(usize, usize)>,
+}
+
+/// Persistent incremental obstacle index for placement queries.
+///
+/// Maintains the obstacle multiset across place/free/fail/repair with
+/// O(affected strips) updates: the mesh's y-range is partitioned into
+/// strips whose boundaries are exactly the y-edges of obstacles ever
+/// added, and each strip holds the sorted x-intervals of the obstacles
+/// crossing it. Strips are only ever split (never re-merged), so a
+/// removal finds its intervals in precisely the strips its insertion
+/// wrote — the strip count stays bounded by the mesh height.
+///
+/// [`PlacementIndex::place`], [`PlacementIndex::place_oriented`] and
+/// [`PlacementIndex::largest_clear_rect`] are bit-identical to the
+/// scan-based free functions over [`PlacementIndex::obstacles`]: the
+/// candidate corner set is derived from the same obstacle multiset
+/// (sorted + deduped, so construction order is irrelevant) and the
+/// strip walk answers exactly the all-obstacles disjointness predicate
+/// the scan evaluates.
+#[derive(Debug, Clone)]
+pub struct PlacementIndex {
+    nx: usize,
+    ny: usize,
+    obstacles: Vec<Rect>,
+    /// Partition of `[0, ny)`, ascending and contiguous.
+    strips: Vec<Strip>,
+}
+
+impl PlacementIndex {
+    /// Empty index over an `nx x ny` mesh.
+    pub fn new(nx: usize, ny: usize) -> Self {
+        let strips =
+            if ny > 0 { vec![Strip { y0: 0, y1: ny, xs: Vec::new() }] } else { Vec::new() };
+        Self { nx, ny, obstacles: Vec::new(), strips }
+    }
+
+    /// The current obstacle multiset (arbitrary order).
+    pub fn obstacles(&self) -> &[Rect] {
+        &self.obstacles
+    }
+
+    /// Split the strip containing `y` so that `y` becomes a strip
+    /// boundary. No-op when it already is one (or lies outside the
+    /// mesh).
+    fn split_at(&mut self, y: usize) {
+        if y == 0 || y >= self.ny {
+            return;
+        }
+        if let Some(i) = self.strips.iter().position(|s| s.y0 < y && y < s.y1) {
+            let upper_xs = self.strips[i].xs.clone();
+            let upper_y1 = self.strips[i].y1;
+            self.strips[i].y1 = y;
+            self.strips.insert(i + 1, Strip { y0: y, y1: upper_y1, xs: upper_xs });
+        }
+    }
+
+    /// Add one obstacle. O(affected strips).
+    pub fn add(&mut self, r: &Rect) {
+        debug_assert!(
+            r.x1() <= self.nx && r.y1() <= self.ny,
+            "obstacle {r:?} leaves the {}x{} mesh",
+            self.nx,
+            self.ny
+        );
+        self.obstacles.push(*r);
+        self.split_at(r.y0);
+        self.split_at(r.y1());
+        let iv = (r.x0, r.x1());
+        for s in self.strips.iter_mut() {
+            // After splitting, every strip is fully inside or fully
+            // outside the obstacle's row range.
+            if s.y0 >= r.y0 && s.y1 <= r.y1() {
+                let pos = s.xs.partition_point(|&e| e < iv);
+                s.xs.insert(pos, iv);
+            }
+        }
+    }
+
+    /// Remove one instance of an obstacle previously added; `false`
+    /// when the rectangle is not in the index. O(affected strips).
+    pub fn remove(&mut self, r: &Rect) -> bool {
+        let Some(pos) = self.obstacles.iter().position(|o| o == r) else {
+            return false;
+        };
+        self.obstacles.swap_remove(pos);
+        // The boundaries at r.y0 / r.y1() still exist (strips never
+        // re-merge), so the splits below are defensive no-ops.
+        self.split_at(r.y0);
+        self.split_at(r.y1());
+        let iv = (r.x0, r.x1());
+        for s in self.strips.iter_mut() {
+            if s.y0 >= r.y0 && s.y1 <= r.y1() {
+                let p = s.xs.partition_point(|&e| e < iv);
+                debug_assert!(s.xs.get(p) == Some(&iv), "indexed obstacle missing its interval");
+                if s.xs.get(p) == Some(&iv) {
+                    s.xs.remove(p);
+                }
+            }
+        }
+        true
+    }
+
+    /// Whether `r` intersects no indexed obstacle: walk only the
+    /// strips `r` spans, and within each only the intervals starting
+    /// left of `r`'s right edge.
+    fn is_clear(&self, r: &Rect) -> bool {
+        for s in &self.strips {
+            if s.y1 <= r.y0 {
+                continue;
+            }
+            if s.y0 >= r.y1() {
+                break;
+            }
+            for &(x0, x1) in &s.xs {
+                if x0 >= r.x1() {
+                    break;
+                }
+                if x1 > r.x0 {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Bit-identical to [`place`] over [`Self::obstacles`]: same
+    /// boundary-grid candidate set and `(y, x)` order, with each
+    /// candidate's clearance answered by the strip walk instead of a
+    /// full obstacle scan.
+    pub fn place(&self, w: usize, h: usize) -> Option<Rect> {
+        if w == 0 || h == 0 || w > self.nx || h > self.ny {
+            return None;
+        }
+        let mut xs: Vec<usize> = vec![0, even_down(self.nx - w)];
+        let mut ys: Vec<usize> = vec![0, even_down(self.ny - h)];
+        for ob in &self.obstacles {
+            xs.push(even_up(ob.x1()));
+            xs.push(even_down(ob.x0.saturating_sub(w)));
+            ys.push(even_up(ob.y1()));
+            ys.push(even_down(ob.y0.saturating_sub(h)));
+        }
+        xs.retain(|&x| x + w <= self.nx);
+        ys.retain(|&y| y + h <= self.ny);
+        xs.sort_unstable();
+        xs.dedup();
+        ys.sort_unstable();
+        ys.dedup();
+        for &y in &ys {
+            for &x in &xs {
+                let r = Rect::new(x, y, w, h);
+                if self.is_clear(&r) {
+                    return Some(r);
+                }
+            }
+        }
+        None
+    }
+
+    /// Bit-identical to [`place_oriented`] over [`Self::obstacles`].
+    pub fn place_oriented(&self, w: usize, h: usize) -> Option<Rect> {
+        let a = self.place(w, h);
+        if w == h {
+            return a;
+        }
+        let b = self.place(h, w);
+        match (a, b) {
+            (Some(ra), Some(rb)) => {
+                if (rb.y0, rb.x0) < (ra.y0, ra.x0) {
+                    Some(rb)
+                } else {
+                    Some(ra)
+                }
+            }
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Bit-identical to [`largest_clear_rect`] over
+    /// [`Self::obstacles`].
+    pub fn largest_clear_rect(&self) -> (usize, usize, usize, usize) {
+        largest_clear_rect(self.nx, self.ny, &self.obstacles)
+    }
 }
 
 #[cfg(test)]
@@ -307,6 +599,66 @@ mod tests {
         let obs = [Rect::new(0, 0, 2, 2), Rect::new(4, 0, 4, 8)];
         let (x0, y0, w, h) = largest_clear_rect(8, 8, &obs);
         assert_eq!((x0, y0, w, h), (0, 2, 4, 6));
+        assert_eq!(largest_clear_rect_scan(8, 8, &obs), (x0, y0, w, h));
+    }
+
+    #[test]
+    fn prop_prefix_sum_clear_rect_matches_scan() {
+        // The O(1)-clearance implementation must reproduce the dense
+        // per-candidate scan bit-for-bit, including on *overlapping*
+        // obstacles (failed regions can sit inside job rectangles).
+        prop("largest_clear_rect == scan", |rng| {
+            let nx = rng.usize_in(1, 12);
+            let ny = rng.usize_in(1, 12);
+            let mut obs: Vec<Rect> = Vec::new();
+            for _ in 0..rng.usize_in(0, 6) {
+                let w = rng.usize_in(1, 5).min(nx);
+                let h = rng.usize_in(1, 5).min(ny);
+                let x0 = rng.usize_in(0, nx - w + 1);
+                let y0 = rng.usize_in(0, ny - h + 1);
+                obs.push(Rect::new(x0, y0, w, h)); // overlaps allowed
+            }
+            assert_eq!(
+                largest_clear_rect(nx, ny, &obs),
+                largest_clear_rect_scan(nx, ny, &obs),
+                "{nx}x{ny} among {obs:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn prop_placement_index_tracks_the_scan_under_churn() {
+        // Random add/remove sequences (duplicates and overlaps
+        // allowed): after every update the index answers place /
+        // place_oriented / largest_clear_rect exactly like the dense
+        // scan over the same obstacle multiset.
+        prop("placement index == dense scan", |rng| {
+            let nx = 2 * rng.usize_in(2, 8);
+            let ny = 2 * rng.usize_in(2, 8);
+            let mut idx = PlacementIndex::new(nx, ny);
+            let mut obs: Vec<Rect> = Vec::new();
+            for _ in 0..rng.usize_in(2, 12) {
+                if obs.is_empty() || rng.usize_in(0, 3) > 0 {
+                    let w = (2 * rng.usize_in(1, 4)).min(nx);
+                    let h = (2 * rng.usize_in(1, 4)).min(ny);
+                    let x0 = even_down(rng.usize_in(0, nx - w + 1));
+                    let y0 = even_down(rng.usize_in(0, ny - h + 1));
+                    let r = Rect::new(x0, y0, w, h);
+                    idx.add(&r);
+                    obs.push(r);
+                } else {
+                    let r = obs.remove(rng.usize_in(0, obs.len()));
+                    assert!(idx.remove(&r), "indexed obstacle must be removable");
+                }
+                let w = 2 * rng.usize_in(1, 4);
+                let h = 2 * rng.usize_in(1, 4);
+                assert_eq!(idx.place(w, h), place(nx, ny, &obs, w, h));
+                assert_eq!(idx.place_oriented(w, h), place_oriented(nx, ny, &obs, w, h));
+                assert_eq!(idx.largest_clear_rect(), largest_clear_rect_scan(nx, ny, &obs));
+            }
+            let whole = Rect::new(0, 0, nx, ny);
+            assert!(!idx.remove(&whole) || obs.contains(&whole));
+        });
     }
 
     #[test]

@@ -12,7 +12,8 @@
 
 use meshreduce::cluster::{ClusterEvent, MtbfModel};
 use meshreduce::sched::{
-    compare_policies, run_fleet, FleetConfig, JobPolicy, JobSpec, Rect, TrainedFleet,
+    compare_policies, largest_clear_rect, largest_clear_rect_scan, place, place_oriented,
+    run_fleet, FleetConfig, JobPolicy, JobSpec, PlacementIndex, Rect, TrainedFleet,
     TrainedFleetConfig, WorkloadModel,
 };
 use meshreduce::util::prop::{prop_check, Config};
@@ -44,6 +45,73 @@ fn prop_random_fleets_never_violate_placement_invariants() {
         let run = run_fleet(&cfg).expect("fleet run must stay invariant-clean");
         assert!(run.summary.mean_utilization >= 0.0);
         assert!(run.summary.goodput.is_finite());
+    });
+}
+
+/// Brute placement oracle: first clear even-aligned position, bottom
+/// row first then left — the semantics `place` (and therefore the
+/// incremental index) must reproduce exactly.
+fn place_brute(nx: usize, ny: usize, obstacles: &[Rect], w: usize, h: usize) -> Option<Rect> {
+    if w == 0 || h == 0 || w > nx || h > ny {
+        return None;
+    }
+    for y in (0..=ny - h).step_by(2) {
+        for x in (0..=nx - w).step_by(2) {
+            let r = Rect::new(x, y, w, h);
+            if obstacles.iter().all(|ob| !ob.overlaps(&r)) {
+                return Some(r);
+            }
+        }
+    }
+    None
+}
+
+#[test]
+fn prop_placement_index_matches_brute_and_scan_under_churn() {
+    // Randomized fail/repair/place/free sequences: after every update
+    // the incremental index must answer placement queries exactly as
+    // the brute even-position scan and the full boundary-grid scan do.
+    // Overlapping obstacles are deliberately allowed (a failed region
+    // inside a running job's rectangle is the fleet's normal state).
+    let config = Config { cases: 30, seed: 0x1DEC5 };
+    prop_check("placement index churn", config, |rng| {
+        let nx = 2 * rng.usize_in(2, 9); // even, 4..16
+        let ny = 2 * rng.usize_in(2, 9);
+        let mut idx = PlacementIndex::new(nx, ny);
+        let mut obs: Vec<Rect> = Vec::new();
+        for _ in 0..rng.usize_in(4, 20) {
+            let add = obs.is_empty() || rng.next_f64() < 0.65;
+            if add {
+                // fail / place: a new even-aligned obstacle.
+                let w = 2 * rng.usize_in(1, 4);
+                let h = 2 * rng.usize_in(1, 4);
+                if w > nx || h > ny {
+                    continue;
+                }
+                let x0 = 2 * rng.usize_in(0, (nx - w) / 2 + 1);
+                let y0 = 2 * rng.usize_in(0, (ny - h) / 2 + 1);
+                let r = Rect::new(x0, y0, w, h);
+                idx.add(&r);
+                obs.push(r);
+            } else {
+                // repair / free: drop a random live obstacle.
+                let r = obs.remove(rng.usize_in(0, obs.len()));
+                assert!(idx.remove(&r), "indexed obstacle must be removable");
+            }
+            for &(w, h) in &[(2, 2), (4, 2), (2, 4), (4, 4), (6, 4)] {
+                let brute = place_brute(nx, ny, &obs, w, h);
+                assert_eq!(idx.place(w, h), brute, "{nx}x{ny} place {w}x{h} vs brute");
+                assert_eq!(place(nx, ny, &obs, w, h), brute, "{nx}x{ny} scan {w}x{h} vs brute");
+                assert_eq!(
+                    idx.place_oriented(w, h),
+                    place_oriented(nx, ny, &obs, w, h),
+                    "{nx}x{ny} oriented {w}x{h}"
+                );
+            }
+            let scan = largest_clear_rect_scan(nx, ny, &obs);
+            assert_eq!(idx.largest_clear_rect(), scan, "{nx}x{ny} clear-rect vs scan");
+            assert_eq!(largest_clear_rect(nx, ny, &obs), scan, "{nx}x{ny} fast vs scan");
+        }
     });
 }
 
