@@ -7,6 +7,12 @@
 //!     cargo run --release --bin fleet -- --clock wall --contention --backfill
 //!     cargo run --release --bin fleet -- --mesh 16x32 --jobs 8 --horizon 2000 \
 //!         --mtbf 250 --policies continue-ft,migrate,adaptive --plan-cache fleet.plans
+//!     cargo run --release --bin fleet -- --spares 2x2 --policies reconfigure,adaptive
+//!
+//! `--spares RxC` provisions R spare rows and C spare columns beyond
+//! the logical mesh: failures strike the physical mesh, and the
+//! healing planner (`mesh::heal`) retires failed rows/columns onto the
+//! spare budget when the affected jobs' policies vote for it.
 //!
 //! `--clock wall` runs the event-driven wall-clock engine (jobs step
 //! asynchronously); `--contention` adds cross-job link contention
@@ -73,6 +79,10 @@ fn main() {
     if let Some(h) = get("--horizon").and_then(|s| s.parse().ok()) {
         cfg.horizon = h;
     }
+    if let Some((rows, cols)) = get("--spares").and_then(parse_mesh) {
+        cfg.spare_rows = rows;
+        cfg.spare_cols = cols;
+    }
     if let Some(s) = get("--seed").and_then(|s| s.parse::<u64>().ok()) {
         cfg.workload.seed = s;
         if let Some(m) = &mut cfg.mtbf {
@@ -102,10 +112,12 @@ fn main() {
 
     let mtbf = cfg.mtbf.as_ref().map(|m| m.mean_failure_steps).unwrap_or(f64::INFINITY);
     eprintln!(
-        "fleet: {}x{} mesh, {} jobs, horizon {} steps, MTBF {:.0}, policies {:?}, \
-         clock={}, contention={}, backfill={}, verify={}",
+        "fleet: {}x{} mesh (+{}r{}c spares), {} jobs, horizon {} steps, MTBF {:.0}, \
+         policies {:?}, clock={}, contention={}, backfill={}, verify={}",
         cfg.nx,
         cfg.ny,
+        cfg.spare_rows,
+        cfg.spare_cols,
         cfg.workload.jobs,
         cfg.horizon,
         mtbf,

@@ -5,15 +5,22 @@
 //!     cargo run --release --bin sweep -- --quick       # reduced CI grid
 //!     cargo run --release --bin sweep -- --verify      # gate: cache hits == fresh compiles
 //!     cargo run --release --bin sweep -- --contour     # MTBF x MTTR x region-shape grid
+//!     cargo run --release --bin sweep -- --reconfig    # spare-ratio x MTBF healing sweep
 //!     cargo run --release --bin sweep -- --mesh 16x32 --seeds 8 \
 //!         --mtbf 400,200,100 --mttr 0.25,0.5,1.0 --region 2x2,4x2,2x4 \
 //!         --horizon 2000 --threads 8 --plan-cache sweep.plans
 //!
 //! Writes `BENCH_sweep.json` (override with `MESHREDUCE_BENCH_JSON`):
-//! one entry per `(policy, MTBF, MTTR, region, seed)` point with
-//! effective throughput, normalized throughput, transition count and
-//! plan-cache counters, plus one `curve_*` entry per
-//! `(policy, MTBF, MTTR, region)` aggregate — the §Sweep contour grid.
+//! one entry per `(policy, MTBF, MTTR, region, spares, seed)` point
+//! with effective throughput, normalized throughput, transition count
+//! and plan-cache counters, plus one `curve_*` entry per
+//! `(policy, MTBF, MTTR, region, spares)` aggregate — the §Sweep
+//! contour grid. `--reconfig` runs the spare-ratio x MTBF grid
+//! instead, writes `BENCH_reconfig.json`, and **gates** on the healing
+//! regime: some spared cell must have Reconfigure beating
+//! fault-tolerant continue on mean effective throughput with Adaptive
+//! matching it (non-zero exit otherwise — the §Reconfiguration CI
+//! contract).
 //! With `--verify`, any cached plan that diverges from a fresh compile
 //! aborts with a non-zero exit (the CI gate for cache soundness).
 //! With `--plan-cache PATH`, points warm-start from PATH when it
@@ -39,7 +46,14 @@ fn main() {
     let has = |key: &str| args.iter().any(|a| a == key);
 
     let quick = has("--quick") || std::env::var("MESHREDUCE_BENCH_QUICK").is_ok();
-    let mut cfg = if quick {
+    let reconfig = has("--reconfig");
+    let mut cfg = if reconfig {
+        if quick {
+            SweepConfig::reconfig_quick()
+        } else {
+            SweepConfig::reconfig()
+        }
+    } else if quick {
         SweepConfig::quick()
     } else if has("--contour") {
         SweepConfig::contour()
@@ -96,7 +110,7 @@ fn main() {
 
     eprintln!(
         "MTBF sweep: {}x{} mesh, horizon {} steps, {} seeds x {} MTBF x {} MTTR x {} regions \
-         x {} policies ({} points), payload {} f32, verify={}",
+         x {} spare-sets x {} policies ({} points), payload {} f32, verify={}",
         cfg.nx,
         cfg.ny,
         cfg.horizon,
@@ -104,6 +118,7 @@ fn main() {
         cfg.mtbf_points.len(),
         cfg.mttr_fracs.len(),
         cfg.regions.len(),
+        cfg.spare_sets.len(),
         cfg.policies.len(),
         cfg.grid_size(),
         cfg.payload,
@@ -122,43 +137,57 @@ fn main() {
 
     let mut report = JsonReport::new();
     println!(
-        "\n{:<16} {:>8} {:>6} {:>7} {:>6} {:>12} {:>10} {:>12} {:>9} {:>12}",
+        "\n{:<16} {:>8} {:>6} {:>7} {:>7} {:>6} {:>12} {:>10} {:>12} {:>8} {:>9} {:>12}",
         "policy",
         "mtbf",
         "mttr",
         "region",
+        "spares",
         "seed",
         "eff (w-st/s)",
         "normalized",
         "transitions",
+        "rewires",
         "hit-rate",
         "compiles"
     );
     for p in &points {
         let s = &p.cache;
         println!(
-            "{:<16} {:>8.0} {:>6.2} {:>4}x{:<2} {:>6} {:>12.1} {:>10.4} {:>12} {:>9.3} {:>7}f/{:>2}i",
+            "{:<16} {:>8.0} {:>6.2} {:>4}x{:<2} {:>4}r{:<2} {:>6} {:>12.1} {:>10.4} {:>12} \
+             {:>8} {:>9.3} {:>7}f/{:>2}i",
             p.policy.name(),
             p.mtbf_steps,
             p.mttr_frac,
             p.region.0,
             p.region.1,
+            p.spares.0,
+            p.spares.1,
             p.seed,
             p.eff_throughput,
             p.normalized(),
             p.transitions,
+            p.rewires,
             s.hit_rate(),
             s.full_compiles,
             s.incremental_compiles,
         );
+        // The spares suffix appears only on spared points, so unspared
+        // grids keep their historical entry names.
+        let sp = if p.spares == (0, 0) {
+            String::new()
+        } else {
+            format!("_sp{}r{}c", p.spares.0, p.spares.1)
+        };
         report.push(
             &format!(
-                "{}_mtbf{:.0}_mttr{:.2}_{}x{}_seed{}",
+                "{}_mtbf{:.0}_mttr{:.2}_{}x{}{}_seed{}",
                 p.policy.name(),
                 p.mtbf_steps,
                 p.mttr_frac,
                 p.region.0,
                 p.region.1,
+                sp,
                 p.seed
             ),
             if p.eff_throughput > 0.0 { 1.0 / p.eff_throughput } else { 0.0 },
@@ -170,8 +199,11 @@ fn main() {
                 ("mttr_frac", p.mttr_frac),
                 ("region_w", p.region.0 as f64),
                 ("region_h", p.region.1 as f64),
+                ("spare_rows", p.spares.0 as f64),
+                ("spare_cols", p.spares.1 as f64),
                 ("seed", p.seed as f64),
                 ("transitions", p.transitions as f64),
+                ("rewires", p.rewires as f64),
                 ("min_workers", p.min_workers as f64),
                 ("cache_hits", s.hits as f64),
                 ("cache_misses", s.misses as f64),
@@ -185,27 +217,36 @@ fn main() {
     }
 
     println!("\nper-policy curves (mean over seeds):");
-    for c in curves(&points) {
+    let curve_points = curves(&points);
+    for c in &curve_points {
         println!(
-            "  {:<16} mtbf {:>6.0} mttr {:>4.2} region {}x{}: eff {:>10.1} w-steps/s \
-             ({:.4} of healthy), cache hit-rate {:.3}",
+            "  {:<16} mtbf {:>6.0} mttr {:>4.2} region {}x{} spares {}r{}c: eff {:>10.1} \
+             w-steps/s ({:.4} of healthy), cache hit-rate {:.3}",
             c.policy.name(),
             c.mtbf_steps,
             c.mttr_frac,
             c.region.0,
             c.region.1,
+            c.spares.0,
+            c.spares.1,
             c.mean_eff,
             c.mean_normalized,
             c.mean_hit_rate,
         );
+        let sp = if c.spares == (0, 0) {
+            String::new()
+        } else {
+            format!("_sp{}r{}c", c.spares.0, c.spares.1)
+        };
         report.push(
             &format!(
-                "curve_{}_mtbf{:.0}_mttr{:.2}_{}x{}",
+                "curve_{}_mtbf{:.0}_mttr{:.2}_{}x{}{}",
                 c.policy.name(),
                 c.mtbf_steps,
                 c.mttr_frac,
                 c.region.0,
-                c.region.1
+                c.region.1,
+                sp
             ),
             if c.mean_eff > 0.0 { 1.0 / c.mean_eff } else { 0.0 },
             0.0,
@@ -216,10 +257,54 @@ fn main() {
                 ("mttr_frac", c.mttr_frac),
                 ("region_w", c.region.0 as f64),
                 ("region_h", c.region.1 as f64),
+                ("spare_rows", c.spares.0 as f64),
+                ("spare_cols", c.spares.1 as f64),
                 ("seeds", c.seeds as f64),
                 ("mean_cache_hit_rate", c.mean_hit_rate),
             ],
         );
+    }
+
+    // The §Reconfiguration acceptance gate: the grid must contain a
+    // spared (MTBF, spare-set) cell where healing beats fault-tolerant
+    // continue on mean effective throughput AND Adaptive captures it
+    // (i.e. Adaptive is not stuck below FT there).
+    if reconfig {
+        let mut regime = false;
+        for c in &curve_points {
+            if c.policy != RecoveryPolicy::Reconfigure || c.spares == (0, 0) {
+                continue;
+            }
+            let peer = |p: RecoveryPolicy| {
+                curve_points.iter().find(|o| {
+                    o.policy == p
+                        && o.mtbf_steps == c.mtbf_steps
+                        && o.mttr_frac == c.mttr_frac
+                        && o.region == c.region
+                        && o.spares == c.spares
+                })
+            };
+            let (Some(ft), Some(ad)) =
+                (peer(RecoveryPolicy::FaultTolerant), peer(RecoveryPolicy::Adaptive))
+            else {
+                continue;
+            };
+            if c.mean_eff > ft.mean_eff && ad.mean_eff >= ft.mean_eff {
+                eprintln!(
+                    "healing regime: mtbf {:.0} spares {}r{}c — reconfigure {:.1} > \
+                     continue-ft {:.1} w-steps/s, adaptive {:.1}",
+                    c.mtbf_steps, c.spares.0, c.spares.1, c.mean_eff, ft.mean_eff, ad.mean_eff
+                );
+                regime = true;
+            }
+        }
+        if !regime {
+            eprintln!(
+                "reconfig gate FAILED: no spared cell where reconfigure beats continue-ft \
+                 with adaptive capturing the win"
+            );
+            std::process::exit(1);
+        }
     }
 
     if let Some(path) = cache_path {
@@ -235,7 +320,8 @@ fn main() {
         }
     }
 
-    match report.write("BENCH_sweep.json") {
+    let bench = if reconfig { "BENCH_reconfig.json" } else { "BENCH_sweep.json" };
+    match report.write(bench) {
         Ok(path) => eprintln!("\nsweep record written to {path} ({wall:.1}s wall)"),
         Err(e) => {
             eprintln!("failed to write sweep record: {e}");

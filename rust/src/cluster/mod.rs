@@ -57,6 +57,11 @@ pub enum ClusterEvent {
     /// Take a checkpoint now (scenario-driven, in addition to any
     /// periodic cadence).
     CheckpointTick,
+    /// Operator-forced reconfiguration: re-run the healing planner now
+    /// (scenario-driven; consumers without spares treat it as a no-op).
+    /// Cluster health is unchanged — healing remaps logical
+    /// coordinates, it does not repair chips.
+    Reconfig,
     /// Operator stop: halt the job regardless of policy.
     Stop,
 }
@@ -67,6 +72,7 @@ impl ClusterEvent {
             ClusterEvent::Fail(_) => "fail",
             ClusterEvent::Repair(_) => "repair",
             ClusterEvent::CheckpointTick => "checkpoint",
+            ClusterEvent::Reconfig => "reconfig",
             ClusterEvent::Stop => "stop",
         }
     }
@@ -166,13 +172,14 @@ impl ClusterState {
         }
     }
 
-    /// Apply any event. `CheckpointTick`/`Stop` do not change cluster
-    /// health and are accepted as no-ops (the coordinator acts on them).
+    /// Apply any event. `CheckpointTick`/`Reconfig`/`Stop` do not
+    /// change cluster health and are accepted as no-ops (the
+    /// coordinator acts on them).
     pub fn apply(&mut self, event: &ClusterEvent) -> Result<(), ClusterError> {
         match *event {
             ClusterEvent::Fail(r) => self.fail(r),
             ClusterEvent::Repair(r) => self.repair(r),
-            ClusterEvent::CheckpointTick | ClusterEvent::Stop => Ok(()),
+            ClusterEvent::CheckpointTick | ClusterEvent::Reconfig | ClusterEvent::Stop => Ok(()),
         }
     }
 }

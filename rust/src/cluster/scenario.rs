@@ -15,12 +15,16 @@
 //!
 //! - `mesh NXxNY` (optional) pins the mesh the scenario was written
 //!   for; loaders can check it against the job's mesh.
+//! - `spares R C` (optional) provisions `R` spare rows and `C` spare
+//!   columns for reconfigurable-mesh healing ([`crate::mesh::heal`]);
+//!   consumers without healing support may ignore it.
 //! - `at STEP fail X0,Y0 WxH` / `at STEP repair X0,Y0 WxH` add a
 //!   [`ClusterEvent::Fail`]/[`ClusterEvent::Repair`] of the region with
 //!   origin `(X0, Y0)` and size `W x H`. Repairs name the full region
 //!   so they match the original failure exactly.
-//! - `at STEP checkpoint` and `at STEP stop` schedule a
-//!   [`ClusterEvent::CheckpointTick`] / [`ClusterEvent::Stop`].
+//! - `at STEP checkpoint`, `at STEP reconfig` and `at STEP stop`
+//!   schedule a [`ClusterEvent::CheckpointTick`] /
+//!   [`ClusterEvent::Reconfig`] / [`ClusterEvent::Stop`].
 //! - `after DELTA <event>` schedules relative to the previous event's
 //!   step (`0` before any event), so dense scripts need no arithmetic:
 //!   `at 10 fail 2,4 4x2` / `after 12 repair 2,4 4x2` repairs at 22.
@@ -53,6 +57,10 @@ pub enum ScenarioError {
 pub struct Scenario {
     /// `(nx, ny)` from a `mesh` directive, if present.
     pub mesh: Option<(usize, usize)>,
+    /// `(spare_rows, spare_cols)` from a `spares` directive, if
+    /// present: spare capacity provisioned for reconfigurable-mesh
+    /// healing.
+    pub spares: Option<(usize, usize)>,
     /// Events in script order (not necessarily sorted by step; the
     /// [`super::EventQueue`] sorts stably).
     pub events: Vec<TimedEvent>,
@@ -100,6 +108,12 @@ fn parse_event(
             }
             Ok(ClusterEvent::CheckpointTick)
         }
+        Some("reconfig") => {
+            if toks.len() > 1 {
+                return Err(bad("no trailing tokens"));
+            }
+            Ok(ClusterEvent::Reconfig)
+        }
         Some("stop") => {
             if toks.len() > 1 {
                 return Err(bad("no trailing tokens"));
@@ -135,8 +149,17 @@ impl Scenario {
                         .ok_or_else(|| ScenarioError::Malformed(ln, "mesh", "mesh NXxNY"))?;
                     sc.mesh = Some(spec);
                 }
+                "spares" => {
+                    let rows = toks.get(1).and_then(|w| w.parse().ok());
+                    let cols = toks.get(2).and_then(|w| w.parse().ok());
+                    let spec = match (rows, cols) {
+                        (Some(r), Some(c)) if toks.len() == 3 => (r, c),
+                        _ => return Err(ScenarioError::Malformed(ln, "spares", "spares R C")),
+                    };
+                    sc.spares = Some(spec);
+                }
                 "at" => {
-                    const USAGE: &str = "at STEP <fail|repair|checkpoint|stop> ...";
+                    const USAGE: &str = "at STEP <fail|repair|checkpoint|reconfig|stop> ...";
                     let step: u64 = toks
                         .get(1)
                         .and_then(|w| w.parse().ok())
@@ -146,7 +169,7 @@ impl Scenario {
                     last_step = step;
                 }
                 "after" => {
-                    const USAGE: &str = "after DELTA <fail|repair|checkpoint|stop> ...";
+                    const USAGE: &str = "after DELTA <fail|repair|checkpoint|reconfig|stop> ...";
                     let delta: u64 = toks
                         .get(1)
                         .and_then(|w| w.parse().ok())
@@ -158,7 +181,7 @@ impl Scenario {
                     last_step = step;
                 }
                 "every" => {
-                    const USAGE: &str = "every DELTA <fail|repair|checkpoint|stop> ... xK";
+                    const USAGE: &str = "every DELTA <fail|repair|checkpoint|reconfig|stop> ... xK";
                     let bad = || ScenarioError::Malformed(ln, "every", USAGE);
                     let delta: u64 = toks.get(1).and_then(|w| w.parse().ok()).ok_or_else(bad)?;
                     let count: u64 = toks
@@ -196,6 +219,9 @@ impl Scenario {
         if let Some((nx, ny)) = self.mesh {
             let _ = writeln!(out, "mesh {nx}x{ny}");
         }
+        if let Some((r, c)) = self.spares {
+            let _ = writeln!(out, "spares {r} {c}");
+        }
         for ev in &self.events {
             let _ = match ev.event {
                 ClusterEvent::Fail(r) => {
@@ -205,6 +231,7 @@ impl Scenario {
                     writeln!(out, "at {} repair {},{} {}x{}", ev.at_step, r.x0, r.y0, r.w, r.h)
                 }
                 ClusterEvent::CheckpointTick => writeln!(out, "at {} checkpoint", ev.at_step),
+                ClusterEvent::Reconfig => writeln!(out, "at {} reconfig", ev.at_step),
                 ClusterEvent::Stop => writeln!(out, "at {} stop", ev.at_step),
             };
         }
@@ -225,10 +252,12 @@ mod tests {
     const SAMPLE: &str = "\
 # comments survive nowhere, directives everywhere
 mesh 8x8
+spares 1 2
 
 at 10 fail 2,4 4x2   # host dies
 at 16 fail 6,0 2x2
 at 22 repair 2,4 4x2
+at 24 reconfig
 at 26 checkpoint
 at 40 stop
 ";
@@ -237,7 +266,8 @@ at 40 stop
     fn parses_all_directives() {
         let sc = Scenario::parse(SAMPLE).unwrap();
         assert_eq!(sc.mesh, Some((8, 8)));
-        assert_eq!(sc.events.len(), 5);
+        assert_eq!(sc.spares, Some((1, 2)));
+        assert_eq!(sc.events.len(), 6);
         assert_eq!(
             sc.events[0],
             TimedEvent { at_step: 10, event: ClusterEvent::Fail(FailedRegion::host(2, 4)) }
@@ -246,8 +276,9 @@ at 40 stop
             sc.events[2],
             TimedEvent { at_step: 22, event: ClusterEvent::Repair(FailedRegion::host(2, 4)) }
         );
-        assert_eq!(sc.events[3].event, ClusterEvent::CheckpointTick);
-        assert_eq!(sc.events[4], TimedEvent { at_step: 40, event: ClusterEvent::Stop });
+        assert_eq!(sc.events[3], TimedEvent { at_step: 24, event: ClusterEvent::Reconfig });
+        assert_eq!(sc.events[4].event, ClusterEvent::CheckpointTick);
+        assert_eq!(sc.events[5], TimedEvent { at_step: 40, event: ClusterEvent::Stop });
     }
 
     #[test]
@@ -261,9 +292,10 @@ at 40 stop
 
     #[test]
     fn errors_carry_line_numbers() {
+        const AT_USAGE: &str = "at STEP <fail|repair|checkpoint|reconfig|stop> ...";
         assert_eq!(
             Scenario::parse("at 3 explode\n"),
-            Err(ScenarioError::Malformed(1, "at", "at STEP <fail|repair|checkpoint|stop> ..."))
+            Err(ScenarioError::Malformed(1, "at", AT_USAGE))
         );
         assert_eq!(
             Scenario::parse("mesh 8x8\nwarp 9\n"),
@@ -271,7 +303,7 @@ at 40 stop
         );
         assert_eq!(
             Scenario::parse("at ten stop\n"),
-            Err(ScenarioError::Malformed(1, "at", "at STEP <fail|repair|checkpoint|stop> ..."))
+            Err(ScenarioError::Malformed(1, "at", AT_USAGE))
         );
         assert_eq!(
             Scenario::parse("at 3 fail 2,2\n"),
@@ -281,6 +313,33 @@ at 40 stop
             Scenario::parse("at 3 stop now\n"),
             Err(ScenarioError::Malformed(1, "at", "no trailing tokens"))
         );
+        assert_eq!(
+            Scenario::parse("at 3 reconfig all\n"),
+            Err(ScenarioError::Malformed(1, "at", "no trailing tokens"))
+        );
+        assert_eq!(
+            Scenario::parse("spares 1\n"),
+            Err(ScenarioError::Malformed(1, "spares", "spares R C"))
+        );
+        assert_eq!(
+            Scenario::parse("spares 1 2 3\n"),
+            Err(ScenarioError::Malformed(1, "spares", "spares R C"))
+        );
+    }
+
+    #[test]
+    fn spares_and_reconfig_roundtrip() {
+        // Satellite (d): the healing directives survive render/parse
+        // exactly, including via the relative forms.
+        let text = "spares 2 1\nat 5 fail 0,0 2x2\nafter 3 reconfig\nevery 10 reconfig x2\n";
+        let sc = Scenario::parse(text).unwrap();
+        assert_eq!(sc.spares, Some((2, 1)));
+        let steps: Vec<u64> = sc.events.iter().map(|e| e.at_step).collect();
+        assert_eq!(steps, vec![5, 8, 18, 28]);
+        assert!(sc.events[1..].iter().all(|e| e.event == ClusterEvent::Reconfig));
+        let rendered = sc.render();
+        assert_eq!(Scenario::parse(&rendered).unwrap(), sc);
+        assert_eq!(Scenario::parse(&rendered).unwrap().render(), rendered);
     }
 
     #[test]
@@ -320,7 +379,7 @@ at 40 stop
             Err(ScenarioError::Malformed(
                 1,
                 "after",
-                "after DELTA <fail|repair|checkpoint|stop> ..."
+                "after DELTA <fail|repair|checkpoint|reconfig|stop> ..."
             ))
         );
         // Missing repetition suffix.
@@ -329,7 +388,7 @@ at 40 stop
             Err(ScenarioError::Malformed(
                 1,
                 "every",
-                "every DELTA <fail|repair|checkpoint|stop> ... xK"
+                "every DELTA <fail|repair|checkpoint|reconfig|stop> ... xK"
             ))
         );
         // Zero repetitions rejected.
@@ -338,7 +397,7 @@ at 40 stop
             Err(ScenarioError::Malformed(
                 1,
                 "every",
-                "every DELTA <fail|repair|checkpoint|stop> ... xK"
+                "every DELTA <fail|repair|checkpoint|reconfig|stop> ... xK"
             ))
         );
         // Event errors inside a relative form carry its usage string.

@@ -34,10 +34,10 @@ use crate::collective::{PlanCache, PlanCacheStats, PlanError, Scheme};
 use crate::coordinator::policy::{
     effective_throughput, largest_submesh, CandidateCost, EventRateEstimator, RecoveryPolicy,
 };
-use crate::mesh::{FailedRegion, Topology};
+use crate::mesh::{heal, FailedRegion, LinkRemap, Topology};
 use crate::perfmodel::CandidatePrediction;
 use crate::sched::{run_fleet, ClockMode, ContentionModel, FleetConfig, FleetError};
-use crate::simnet::{simulate_plan, LinkModel, SimError};
+use crate::simnet::{simulate_plan, simulate_plan_remapped, LinkModel, SimError};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -81,6 +81,19 @@ pub struct SweepConfig {
     pub rebuild_steps: f64,
     /// Modelled pause (in steps) for a restart, beyond rollback.
     pub restart_steps: f64,
+    /// Spare provisioning sets `(spare_rows, spare_cols)` — the
+    /// reconfiguration sweep axis. The physical mesh each cell samples
+    /// failures on is `(nx + spare_cols) x (ny + spare_rows)`; the job
+    /// always runs `nx x ny` logical workers, so effective throughput
+    /// is comparable across spare sets (spares are idle provisioned
+    /// hardware). `[(0, 0)]` (the default) reproduces the unspared
+    /// sweep bit-for-bit.
+    pub spare_sets: Vec<(usize, usize)>,
+    /// Modelled one-off pause (in steps) whenever the healing planner
+    /// changes the link remap: bypass switches flip and the chips
+    /// newly mapped into the logical rectangle copy parameters from a
+    /// live data-parallel peer (no rollback — replicas survive).
+    pub rewire_steps: f64,
     /// Worker threads; 0 = available parallelism (capped at 16).
     pub threads: usize,
     /// Plan-cache capacity per point.
@@ -116,6 +129,8 @@ impl SweepConfig {
             regions: vec![(4, 2)],
             rebuild_steps: 1.0,
             restart_steps: 5.0,
+            spare_sets: vec![(0, 0)],
+            rewire_steps: 10.0,
             threads: 0,
             cache_cap: 64,
             verify: false,
@@ -161,6 +176,8 @@ impl SweepConfig {
             regions: vec![(2, 2)],
             rebuild_steps: 1.0,
             restart_steps: 5.0,
+            spare_sets: vec![(0, 0)],
+            rewire_steps: 10.0,
             threads: 0,
             cache_cap: 32,
             verify: false,
@@ -168,11 +185,40 @@ impl SweepConfig {
         }
     }
 
+    /// The §Reconfiguration contour grid: spare-ratio x MTBF, charting
+    /// where healing beats fault-tolerant rings (`BENCH_reconfig.json`).
+    pub fn reconfig() -> Self {
+        let mut cfg = Self::paper_scale();
+        cfg.seeds = (0..4).collect();
+        cfg.mtbf_points = vec![400.0, 200.0, 100.0, 50.0];
+        cfg.spare_sets = vec![(0, 0), (0, 2), (2, 0), (2, 2), (4, 4)];
+        cfg.policies = vec![
+            RecoveryPolicy::FaultTolerant,
+            RecoveryPolicy::Reconfigure,
+            RecoveryPolicy::Adaptive,
+        ];
+        cfg
+    }
+
+    /// Reduced reconfiguration grid for CI and tests.
+    pub fn reconfig_quick() -> Self {
+        let mut cfg = Self::quick();
+        cfg.mtbf_points = vec![80.0, 40.0];
+        cfg.spare_sets = vec![(0, 0), (2, 2)];
+        cfg.policies = vec![
+            RecoveryPolicy::FaultTolerant,
+            RecoveryPolicy::Reconfigure,
+            RecoveryPolicy::Adaptive,
+        ];
+        cfg
+    }
+
     pub fn grid_size(&self) -> usize {
         self.policies.len()
             * self.mtbf_points.len()
             * self.mttr_fracs.len()
             * self.regions.len()
+            * self.spare_sets.len()
             * self.seeds.len()
     }
 }
@@ -184,16 +230,21 @@ pub struct SweepCell {
     pub mtbf_steps: f64,
     pub mttr_frac: f64,
     pub region: (usize, usize),
+    /// `(spare_rows, spare_cols)` provisioned beyond the logical mesh.
+    pub spares: (usize, usize),
     pub seed: u64,
 }
 
-/// One replayed `(policy, MTBF, MTTR fraction, region, seed)` cell.
+/// One replayed `(policy, MTBF, MTTR fraction, region, spares, seed)`
+/// cell.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
     pub policy: RecoveryPolicy,
     pub mtbf_steps: f64,
     pub mttr_frac: f64,
     pub region: (usize, usize),
+    /// `(spare_rows, spare_cols)` provisioned beyond the logical mesh.
+    pub spares: (usize, usize),
     pub seed: u64,
     /// Worker-steps per wall second delivered over the horizon.
     pub eff_throughput: f64,
@@ -201,6 +252,9 @@ pub struct SweepPoint {
     pub full_throughput: f64,
     /// Fail/repair events replayed.
     pub transitions: u64,
+    /// Link-remap changes adopted (healing rewires), each paying
+    /// `SweepConfig::rewire_steps`.
+    pub rewires: u64,
     /// Smallest live worker count the policy trained with.
     pub min_workers: usize,
     /// Plan-cache counters of this point's replay.
@@ -218,23 +272,25 @@ impl SweepPoint {
     }
 }
 
-/// One (policy, MTBF, MTTR fraction, region) aggregate across seeds —
-/// a point of the per-policy effective-throughput curve (and of the
-/// §Sweep contour when MTTR/region axes are swept).
+/// One (policy, MTBF, MTTR fraction, region, spares) aggregate across
+/// seeds — a point of the per-policy effective-throughput curve (and
+/// of the §Sweep / §Reconfiguration contours when the MTTR, region or
+/// spare axes are swept).
 #[derive(Debug, Clone)]
 pub struct CurvePoint {
     pub policy: RecoveryPolicy,
     pub mtbf_steps: f64,
     pub mttr_frac: f64,
     pub region: (usize, usize),
+    pub spares: (usize, usize),
     pub seeds: usize,
     pub mean_eff: f64,
     pub mean_normalized: f64,
     pub mean_hit_rate: f64,
 }
 
-/// Aggregate sweep points into per-(policy, MTBF, MTTR, region) curve
-/// points, in first-seen order.
+/// Aggregate sweep points into per-(policy, MTBF, MTTR, region,
+/// spares) curve points, in first-seen order.
 pub fn curves(points: &[SweepPoint]) -> Vec<CurvePoint> {
     let mut out: Vec<CurvePoint> = Vec::new();
     for p in points {
@@ -243,6 +299,7 @@ pub fn curves(points: &[SweepPoint]) -> Vec<CurvePoint> {
                 && c.mtbf_steps == p.mtbf_steps
                 && c.mttr_frac == p.mttr_frac
                 && c.region == p.region
+                && c.spares == p.spares
         }) {
             Some(i) => i,
             None => {
@@ -251,6 +308,7 @@ pub fn curves(points: &[SweepPoint]) -> Vec<CurvePoint> {
                     mtbf_steps: p.mtbf_steps,
                     mttr_frac: p.mttr_frac,
                     region: p.region,
+                    spares: p.spares,
                     seeds: 0,
                     mean_eff: 0.0,
                     mean_normalized: 0.0,
@@ -282,6 +340,10 @@ struct Replay<'a> {
     cfg: &'a SweepConfig,
     cache: PlanCache,
     sim_memo: HashMap<(usize, usize, Vec<FailedRegion>), f64>,
+    /// Remapped step times, keyed by topology *and* remap: equal
+    /// logical topologies under different heals have different
+    /// bypass-span costs.
+    remap_memo: HashMap<(Vec<FailedRegion>, LinkRemap), f64>,
     link: LinkModel,
 }
 
@@ -292,7 +354,13 @@ impl<'a> Replay<'a> {
             None => PlanCache::new(cfg.cache_cap),
         };
         cache.set_verification(cfg.verify);
-        Self { cfg, cache, sim_memo: HashMap::new(), link: LinkModel::tpu_v3() }
+        Self {
+            cfg,
+            cache,
+            sim_memo: HashMap::new(),
+            remap_memo: HashMap::new(),
+            link: LinkModel::tpu_v3(),
+        }
     }
 
     /// Predicted seconds per training step on `topo`: modelled compute
@@ -309,14 +377,53 @@ impl<'a> Replay<'a> {
         self.sim_memo.insert(key, step);
         Ok(step)
     }
+
+    /// [`Self::step_time`] on a healed (remapped) logical topology:
+    /// the plan compiles against the logical rectangle — no FT detours
+    /// for healed failures — but the DES prices every logical link at
+    /// its physical bypass span. The identity remap short-circuits to
+    /// the plain path (bit-identical by construction).
+    fn step_time_remapped(
+        &mut self,
+        topo: &Topology,
+        remap: &LinkRemap,
+    ) -> Result<f64, SweepError> {
+        if remap.is_identity() {
+            return self.step_time(topo);
+        }
+        let plan =
+            self.cache.get_remapped(Scheme::FaultTolerant, topo, self.cfg.payload, Some(remap))?;
+        let mut failed = topo.failed_regions().to_vec();
+        failed.sort_unstable();
+        let key = (failed, remap.clone());
+        if let Some(&s) = self.remap_memo.get(&key) {
+            return Ok(s);
+        }
+        let sim = simulate_plan_remapped(&plan, &self.link, remap)?;
+        let step = self.cfg.compute_s + sim.makespan_s;
+        self.remap_memo.insert(key, step);
+        Ok(step)
+    }
 }
 
 /// Replay one sweep cell. Deterministic: equal inputs give equal
 /// outputs bit-for-bit (only the cache's wall-clock compile counters
 /// vary run to run).
+///
+/// With spares provisioned, failures are sampled on the *physical*
+/// `(nx + spare_cols) x (ny + spare_rows)` mesh while the job runs
+/// `nx x ny` logical workers: non-reconfiguring policies see the
+/// failure set through the identity-prefix remap (failures on spare
+/// rows/columns are invisible — that hardware sits idle), and
+/// [`RecoveryPolicy::Reconfigure`] re-runs the healing planner on
+/// every event, paying `rewire_steps` whenever the adopted remap
+/// changes. `spares == (0, 0)` reproduces the unspared replay
+/// bit-for-bit.
 pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, SweepError> {
-    let SweepCell { policy, mtbf_steps: mtbf, mttr_frac, region, seed } = cell;
+    let SweepCell { policy, mtbf_steps: mtbf, mttr_frac, region, spares, seed } = cell;
     let (nx, ny) = (cfg.nx, cfg.ny);
+    let (spare_rows, spare_cols) = spares;
+    let (pnx, pny) = (nx + spare_cols, ny + spare_rows);
     let model = MtbfModel {
         seed,
         mean_failure_steps: mtbf,
@@ -325,7 +432,7 @@ pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, Swe
         region_h: region.1,
         fast_pick: true,
     };
-    let events = model.generate(nx, ny, cfg.horizon);
+    let events = model.generate(pnx, pny, cfg.horizon);
     let ckpt_every = cfg.checkpoint_every.max(1);
 
     let mut replay = Replay::new(cfg);
@@ -333,14 +440,19 @@ pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, Swe
     let full_workers = nx * ny;
     let full_throughput = full_workers as f64 / healthy_step;
 
-    let mut cluster = ClusterState::new(nx, ny);
+    let mut cluster = ClusterState::new(pnx, pny);
     let mut estimator = EventRateEstimator::new(2.0 * mtbf);
+    // The adopted logical-to-physical remap (identity prefix until a
+    // heal is adopted; stays the prefix forever when `spares == (0, 0)`
+    // or the policy never heals).
+    let mut cur_remap = LinkRemap::with_spares(nx, ny, spare_cols, spare_rows);
     let mut workers = full_workers;
     let mut step_s = healthy_step;
     let mut stopped = false;
     let mut submesh: Option<(usize, usize, usize, usize)> = None;
     let (mut useful, mut wall) = (0.0f64, 0.0f64);
     let mut transitions = 0u64;
+    let mut rewires = 0u64;
     let mut min_workers = full_workers;
     let mut prev_t = 0u64;
 
@@ -364,13 +476,22 @@ pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, Swe
 
         match policy {
             RecoveryPolicy::FaultTolerant => {
-                let topo = cluster.topology();
-                step_s = replay.step_time(&topo)?;
-                workers = topo.live_count();
-                // Transition pause: ring rebuild + plan fetch, modelled
-                // in steps for determinism (the measured compile
-                // latency is reported via the cache stats).
-                wall += cfg.rebuild_steps * step_s;
+                let holes = cur_remap.visible_holes(cluster.failed_regions());
+                let topo = Topology::with_failures(nx, ny, holes);
+                if spares != (0, 0) && topo.has_failures() && !topo.is_connected() {
+                    // Accumulated holes cut the logical prefix apart
+                    // (the physical mesh stays connected through the
+                    // idle spares this policy cannot use).
+                    stopped = true;
+                    workers = 0;
+                } else {
+                    step_s = replay.step_time_remapped(&topo, &cur_remap)?;
+                    workers = topo.live_count();
+                    // Transition pause: ring rebuild + plan fetch,
+                    // modelled in steps for determinism (the measured
+                    // compile latency is reported via the cache stats).
+                    wall += cfg.rebuild_steps * step_s;
+                }
             }
             RecoveryPolicy::Stop => {
                 if matches!(ev.event, ClusterEvent::Fail(_)) {
@@ -379,12 +500,14 @@ pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, Swe
                 }
             }
             RecoveryPolicy::SubMesh => {
-                let sub = largest_submesh(nx, ny, cluster.failed_regions());
+                let holes = cur_remap.visible_holes(cluster.failed_regions());
+                let sub = largest_submesh(nx, ny, &holes);
                 let needs_restart = match (&ev.event, submesh) {
                     (ClusterEvent::Fail(r), Some(sm)) => {
-                        r.overlaps(&FailedRegion::new(sm.0, sm.1, sm.2, sm.3))
+                        let sm = FailedRegion::new(sm.0, sm.1, sm.2, sm.3);
+                        cur_remap.logical_image(r).is_some_and(|img| img.overlaps(&sm))
                     }
-                    (ClusterEvent::Fail(_), None) => true,
+                    (ClusterEvent::Fail(r), None) => cur_remap.logical_image(r).is_some(),
                     (ClusterEvent::Repair(_), _) => sub.2 * sub.3 > workers,
                     _ => false,
                 };
@@ -396,31 +519,82 @@ pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, Swe
                         step_s = replay.step_time(&Topology::full(sub.2, sub.3))?;
                         workers = sub.2 * sub.3;
                         wall += (rollback + cfg.restart_steps) * step_s;
-                        submesh = if cluster.has_failures() { Some(sub) } else { None };
+                        submesh = if holes.is_empty() { None } else { Some(sub) };
                     }
+                }
+            }
+            RecoveryPolicy::Reconfigure => {
+                // Re-run the healing planner on the full accumulated
+                // failure set: spares absorb what the budgets allow,
+                // the rest stays as logical holes for the FT fallback.
+                let outcome = heal(pnx, pny, nx, ny, cluster.failed_regions());
+                let holes = outcome.remap.visible_holes(cluster.failed_regions());
+                let topo = Topology::with_failures(nx, ny, holes);
+                if topo.has_failures() && !topo.is_connected() {
+                    stopped = true;
+                    workers = 0;
+                } else {
+                    let s = replay.step_time_remapped(&topo, &outcome.remap)?;
+                    workers = topo.live_count();
+                    if outcome.remap != cur_remap {
+                        // One-off rewire: bypass switches flip and the
+                        // newly mapped chips copy parameters from a
+                        // live data-parallel peer (no rollback).
+                        wall += (cfg.rewire_steps + cfg.rebuild_steps) * s;
+                        cur_remap = outcome.remap;
+                        rewires += 1;
+                    } else {
+                        wall += cfg.rebuild_steps * s;
+                    }
+                    step_s = s;
                 }
             }
             RecoveryPolicy::Adaptive => {
                 let horizon_steps = estimator.expected_gap_steps();
-                let topo = cluster.topology();
+                let ft_holes = cur_remap.visible_holes(cluster.failed_regions());
+                let topo = Topology::with_failures(nx, ny, ft_holes.clone());
                 // Only genuine schedulability errors mean "candidate
                 // not viable"; anything else (cache divergence under
                 // --verify, simulation failures) must fail the point
                 // so the CI gate actually gates.
-                let ft = match replay.step_time(&topo) {
-                    Ok(s) => Some((topo.live_count(), s)),
-                    Err(SweepError::Plan(PlanError::Build(_))) => None,
-                    Err(e) => return Err(e),
+                let ft = if spares != (0, 0) && topo.has_failures() && !topo.is_connected() {
+                    None
+                } else {
+                    match replay.step_time_remapped(&topo, &cur_remap) {
+                        Ok(s) => Some((topo.live_count(), s)),
+                        Err(SweepError::Plan(PlanError::Build(_))) => None,
+                        Err(e) => return Err(e),
+                    }
                 };
-                let sub = largest_submesh(nx, ny, cluster.failed_regions());
+                let sub = largest_submesh(nx, ny, &ft_holes);
                 let sm = if sub.2 >= 2 && sub.3 >= 2 {
-                    match replay.step_time(&Topology::full(sub.2, sub.3)) {
+                    let sub_remap = cur_remap.submap(sub.0, sub.1, sub.2, sub.3);
+                    match replay.step_time_remapped(&Topology::full(sub.2, sub.3), &sub_remap) {
                         Ok(s) => Some((sub.2 * sub.3, s)),
                         Err(SweepError::Plan(PlanError::Build(_))) => None,
                         Err(e) => return Err(e),
                     }
                 } else {
                     None
+                };
+                // The reconfigure candidate: what the healing planner
+                // would adopt now. Skipped entirely with no spares
+                // (it would coincide with fault-tolerant continue).
+                let rc = if spares == (0, 0) {
+                    None
+                } else {
+                    let outcome = heal(pnx, pny, nx, ny, cluster.failed_regions());
+                    let rc_holes = outcome.remap.visible_holes(cluster.failed_regions());
+                    let rc_topo = Topology::with_failures(nx, ny, rc_holes);
+                    if rc_topo.has_failures() && !rc_topo.is_connected() {
+                        None
+                    } else {
+                        match replay.step_time_remapped(&rc_topo, &outcome.remap) {
+                            Ok(s) => Some((rc_topo.live_count(), s, outcome.remap)),
+                            Err(SweepError::Plan(PlanError::Build(_))) => None,
+                            Err(e) => return Err(e),
+                        }
+                    }
                 };
                 let eff = |w: usize, s: f64, cost: &CandidateCost| {
                     let pred = CandidatePrediction {
@@ -443,19 +617,29 @@ pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, Swe
                     };
                     eff(w, s, &cost)
                 });
-                let chose_ft = match (ft_eff, sm_eff) {
-                    (Some(f), Some(m)) => f >= m,
-                    (Some(_), None) => true,
-                    (None, Some(_)) => false,
-                    (None, None) => {
-                        stopped = true;
-                        workers = 0;
-                        min_workers = 0;
-                        continue;
-                    }
-                };
-                if chose_ft {
-                    let (w, s) = ft.expect("chose_ft implies ft candidate");
+                let rc_eff = rc.as_ref().map(|&(w, s, ref remap)| {
+                    let one_off = if *remap != cur_remap {
+                        (cfg.rewire_steps + cfg.rebuild_steps) * s
+                    } else {
+                        cfg.rebuild_steps * s
+                    };
+                    let cost = CandidateCost { one_off_s: one_off, rollback_steps: 0.0 };
+                    eff(w, s, &cost)
+                });
+                // Highest predicted effective throughput wins; ties
+                // prefer fault-tolerant continue, then reconfigure
+                // (fewer moving parts first).
+                let f = ft_eff.unwrap_or(f64::NEG_INFINITY);
+                let r = rc_eff.unwrap_or(f64::NEG_INFINITY);
+                let m = sm_eff.unwrap_or(f64::NEG_INFINITY);
+                if ft_eff.is_none() && rc_eff.is_none() && sm_eff.is_none() {
+                    stopped = true;
+                    workers = 0;
+                    min_workers = 0;
+                    continue;
+                }
+                if ft_eff.is_some() && f >= r && f >= m {
+                    let (w, s) = ft.expect("checked ft candidate");
                     if submesh.is_some() {
                         // Leaving a sub-mesh is a restart onto the
                         // degraded full mesh.
@@ -466,11 +650,26 @@ pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, Swe
                     submesh = None;
                     workers = w;
                     step_s = s;
+                } else if rc_eff.is_some() && r >= m {
+                    let (w, s, remap) = rc.expect("checked rc candidate");
+                    if submesh.is_some() {
+                        wall += (rollback + cfg.restart_steps) * s;
+                    }
+                    if remap != cur_remap {
+                        wall += (cfg.rewire_steps + cfg.rebuild_steps) * s;
+                        cur_remap = remap;
+                        rewires += 1;
+                    } else if submesh.is_none() {
+                        wall += cfg.rebuild_steps * s;
+                    }
+                    submesh = None;
+                    workers = w;
+                    step_s = s;
                 } else {
-                    let (w, s) = sm.expect("!chose_ft implies sub-mesh candidate");
+                    let (w, s) = sm.expect("no better candidate implies sub-mesh");
                     if submesh != Some(sub) {
                         wall += (rollback + cfg.restart_steps) * s;
-                        submesh = if cluster.has_failures() { Some(sub) } else { None };
+                        submesh = if ft_holes.is_empty() { None } else { Some(sub) };
                         workers = w;
                         step_s = s;
                     }
@@ -495,10 +694,12 @@ pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, Swe
         mtbf_steps: mtbf,
         mttr_frac,
         region,
+        spares,
         seed,
         eff_throughput,
         full_throughput,
         transitions,
+        rewires,
         min_workers,
         cache: replay.cache.stats().clone(),
     })
@@ -549,7 +750,8 @@ where
         .collect()
 }
 
-/// Run the full `(policy × MTBF × MTTR × region × seed)` grid across
+/// Run the full `(policy × MTBF × MTTR × region × spares × seed)` grid
+/// across
 /// scoped worker threads. Points are independent (each owns its plan
 /// cache, cloned from the optional warm-start seed), so the output is
 /// deterministic regardless of thread scheduling; results come back in
@@ -560,8 +762,17 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepPoint>, SweepError> {
         for &mtbf_steps in &cfg.mtbf_points {
             for &mttr_frac in &cfg.mttr_fracs {
                 for &region in &cfg.regions {
-                    for &seed in &cfg.seeds {
-                        grid.push(SweepCell { policy, mtbf_steps, mttr_frac, region, seed });
+                    for &spares in &cfg.spare_sets {
+                        for &seed in &cfg.seeds {
+                            grid.push(SweepCell {
+                                policy,
+                                mtbf_steps,
+                                mttr_frac,
+                                region,
+                                spares,
+                                seed,
+                            });
+                        }
                     }
                 }
             }
@@ -847,6 +1058,68 @@ mod tests {
             assert!(p.max_dilation >= p.mean_dilation - 1e-9);
             assert!(p.goodput.is_finite());
         }
+    }
+
+    #[test]
+    fn reconfigure_without_spares_replays_fault_tolerant_bit_for_bit() {
+        // Zero spare budget: the healer can retire nothing, the remap
+        // stays the identity, and the Reconfigure policy must degrade
+        // to fault-tolerant continue exactly.
+        let mut cfg = tiny_cfg();
+        cfg.policies = vec![RecoveryPolicy::FaultTolerant, RecoveryPolicy::Reconfigure];
+        let points = run_sweep(&cfg).unwrap();
+        assert_eq!(points.len(), 2);
+        let ft = &points[0];
+        let rc = &points[1];
+        assert_eq!(rc.policy, RecoveryPolicy::Reconfigure);
+        assert_eq!(rc.rewires, 0, "no spares, nothing to rewire");
+        assert_eq!(ft.eff_throughput.to_bits(), rc.eff_throughput.to_bits());
+        assert_eq!(ft.min_workers, rc.min_workers);
+        assert_eq!(ft.transitions, rc.transitions);
+    }
+
+    #[test]
+    fn spared_reconfigure_heals_the_logical_mesh() {
+        let mut cfg = SweepConfig::reconfig_quick();
+        cfg.horizon = 160;
+        cfg.mtbf_points = vec![40.0];
+        cfg.seeds = vec![1, 2];
+        cfg.payload = 1 << 12;
+        let points = run_sweep(&cfg).unwrap();
+        assert_eq!(points.len(), cfg.grid_size());
+        // Unspared cells can never adopt a remap.
+        assert!(points.iter().filter(|p| p.spares == (0, 0)).all(|p| p.rewires == 0));
+        let spared: Vec<_> = points.iter().filter(|p| p.spares == (2, 2)).collect();
+        assert!(
+            spared
+                .iter()
+                .filter(|p| p.policy == RecoveryPolicy::Reconfigure)
+                .any(|p| p.rewires > 0),
+            "a failure-dense spared timeline must adopt at least one heal"
+        );
+        // Healing keeps the job on the full logical rectangle, so the
+        // smallest worker count Reconfigure ever trains with is at
+        // least fault-tolerant continue's (which keeps holes).
+        for &seed in &cfg.seeds {
+            let by = |pol: RecoveryPolicy| {
+                spared
+                    .iter()
+                    .find(|p| p.policy == pol && p.seed == seed)
+                    .expect("cell present")
+            };
+            let ft = by(RecoveryPolicy::FaultTolerant);
+            let rc = by(RecoveryPolicy::Reconfigure);
+            assert!(
+                rc.min_workers >= ft.min_workers,
+                "seed {seed}: healed min {} < FT min {}",
+                rc.min_workers,
+                ft.min_workers
+            );
+        }
+        // The curves carry the spare axis through aggregation.
+        let cs = curves(&points);
+        assert_eq!(cs.len(), cfg.policies.len() * cfg.spare_sets.len());
+        assert!(cs.iter().any(|c| c.spares == (2, 2)));
     }
 
     #[test]

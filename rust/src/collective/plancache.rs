@@ -36,7 +36,7 @@
 
 use super::allreduce::{build_ft_schedule, build_schedule, BuildError, Scheme};
 use super::compiled::{CompileError, CompiledSchedule, SpliceReport};
-use crate::mesh::{FailedRegion, Topology};
+use crate::mesh::{FailedRegion, LinkRemap, Topology};
 use crate::rings::fault_tolerant::{ft_plan, ft_plan_incremental, FtPlan};
 use crate::simnet::validate_routes;
 use std::collections::HashMap;
@@ -58,9 +58,20 @@ pub enum PlanError {
 }
 
 /// Cache identity of a compiled plan: the topology fingerprint (mesh
-/// dims + canonically sorted failed regions) plus scheme and payload.
-/// Two topologies with equal fingerprints have identical live sets and
-/// links, hence identical schedules and plans.
+/// dims + canonically sorted failed regions) plus scheme and payload,
+/// plus — for plans serving a **healed** reconfigurable mesh
+/// (`mesh::remap`) — the link remap. Two topologies with equal
+/// fingerprints have identical live sets and links, hence identical
+/// schedules and plans.
+///
+/// The remap dimension exists even though a healed rectangle compiles
+/// to exactly the plan of a pristine rectangle (the healed-vs-pristine
+/// bit-identity property, tested in `rust/tests/reconfig_differential.rs`):
+/// the *identity* of an entry — which physical chips its logical
+/// routes actually cross, and hence what a persisted cache replayed on
+/// a differently-healed cluster would validate against — depends on
+/// the remap, so entries produced under different remaps must not
+/// collide.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct PlanKey {
     pub nx: usize,
@@ -69,13 +80,33 @@ pub struct PlanKey {
     pub failed: Vec<FailedRegion>,
     pub scheme: Scheme,
     pub payload: usize,
+    /// Link remap the plan was compiled under (`None` = the physical
+    /// mesh, no reconfiguration layer).
+    pub remap: Option<LinkRemap>,
 }
 
 impl PlanKey {
     pub fn fingerprint(scheme: Scheme, topo: &Topology, payload: usize) -> PlanKey {
+        Self::fingerprint_remapped(scheme, topo, payload, None)
+    }
+
+    /// Fingerprint including the link-remap dimension.
+    pub fn fingerprint_remapped(
+        scheme: Scheme,
+        topo: &Topology,
+        payload: usize,
+        remap: Option<&LinkRemap>,
+    ) -> PlanKey {
         let mut failed = topo.failed_regions().to_vec();
         failed.sort_unstable();
-        PlanKey { nx: topo.mesh.nx, ny: topo.mesh.ny, failed, scheme, payload }
+        PlanKey {
+            nx: topo.mesh.nx,
+            ny: topo.mesh.ny,
+            failed,
+            scheme,
+            payload,
+            remap: remap.cloned(),
+        }
     }
 
     /// Reconstruct the topology this key fingerprints.
@@ -275,7 +306,24 @@ impl PlanCache {
         topo: &Topology,
         payload: usize,
     ) -> Result<Arc<CompiledSchedule>, PlanError> {
-        let key = PlanKey::fingerprint(scheme, topo, payload);
+        self.get_remapped(scheme, topo, payload, None)
+    }
+
+    /// [`get`](Self::get) with the link-remap fingerprint dimension:
+    /// `topo` is the **logical** topology (the healed rectangle, plus
+    /// any unhealed holes) and `remap` the reconfiguration layer it
+    /// runs under. The compiled plan itself is remap-independent —
+    /// healed plans compile against the logical rectangle with no FT
+    /// detours — but entries under distinct remaps are distinct cache
+    /// (and persistence) identities.
+    pub fn get_remapped(
+        &mut self,
+        scheme: Scheme,
+        topo: &Topology,
+        payload: usize,
+        remap: Option<&LinkRemap>,
+    ) -> Result<Arc<CompiledSchedule>, PlanError> {
+        let key = PlanKey::fingerprint_remapped(scheme, topo, payload, remap);
         self.tick += 1;
         if let Some(slot) = self.slots.get_mut(&key) {
             slot.last_used = self.tick;
@@ -479,6 +527,17 @@ impl SharedPlanCache {
         payload: usize,
     ) -> Result<Arc<CompiledSchedule>, PlanError> {
         self.lock().get(scheme, topo, payload)
+    }
+
+    /// [`PlanCache::get_remapped`] under the shared lock.
+    pub fn get_remapped(
+        &self,
+        scheme: Scheme,
+        topo: &Topology,
+        payload: usize,
+        remap: Option<&LinkRemap>,
+    ) -> Result<Arc<CompiledSchedule>, PlanError> {
+        self.lock().get_remapped(scheme, topo, payload, remap)
     }
 
     /// Snapshot of the shared cache's counters.

@@ -11,7 +11,9 @@
 //! entries  u64
 //! per entry:
 //!   key:   nx, ny u64 · scheme u8 · payload u64 ·
-//!          region count u64 · regions (x0, y0, w, h u64)
+//!          region count u64 · regions (x0, y0, w, h u64) ·
+//!          remap flag u8 · [phys_nx, phys_ny u64 ·
+//!          col map len u64 + values · row map len u64 + values]
 //!   plan:  the full CompiledSchedule — transfers, partitions,
 //!          staging layout, cached routes, flags, content hash
 //! ```
@@ -33,7 +35,7 @@
 use super::{PlanCache, PlanKey, Slot};
 use crate::collective::compiled::CompiledSchedule;
 use crate::collective::{OpKind, Scheme};
-use crate::mesh::{Dir, FailedRegion, Mesh, Topology};
+use crate::mesh::{Dir, FailedRegion, LinkRemap, Mesh, Topology};
 use crate::simnet::validate_routes;
 use std::fs;
 use std::io::{self, Read, Write};
@@ -41,7 +43,10 @@ use std::path::Path;
 use std::sync::Arc;
 
 const MAGIC: u64 = 0x4d45_5348_504c_414e; // "MESHPLAN"
-const VERSION: u32 = 1;
+// v2: keys carry an optional link remap (reconfigurable-mesh healing);
+// v1 files predate the dimension and are refused, not silently
+// reinterpreted as remap-free.
+const VERSION: u32 = 2;
 
 /// Sanity caps applied while reading: a corrupt length field must fail
 /// cleanly instead of attempting a huge allocation.
@@ -145,7 +150,53 @@ fn write_key<W: Write>(w: &mut W, key: &PlanKey) -> io::Result<()> {
         w_usize(w, r.w)?;
         w_usize(w, r.h)?;
     }
+    match &key.remap {
+        None => w_u8(w, 0)?,
+        Some(m) => {
+            w_u8(w, 1)?;
+            w_usize(w, m.phys_nx())?;
+            w_usize(w, m.phys_ny())?;
+            w_usize(w, m.col_map().len())?;
+            for &x in m.col_map() {
+                w_usize(w, x)?;
+            }
+            w_usize(w, m.row_map().len())?;
+            for &y in m.row_map() {
+                w_usize(w, y)?;
+            }
+        }
+    }
     Ok(())
+}
+
+/// Read an optional [`LinkRemap`] for a key with logical dims
+/// `nx x ny`, rejecting anything [`LinkRemap::try_from_maps`] would
+/// not accept plus dimension mismatches against the key.
+fn read_remap<R: Read>(r: &mut R, nx: usize, ny: usize) -> io::Result<Option<LinkRemap>> {
+    match r_u8(r)? {
+        0 => Ok(None),
+        1 => {
+            let phys_nx = r_len(r, MAX_DIM)?;
+            let phys_ny = r_len(r, MAX_DIM)?;
+            let ncols = r_len(r, MAX_DIM)?;
+            let mut col_map = Vec::with_capacity(ncols);
+            for _ in 0..ncols {
+                col_map.push(r_len(r, MAX_DIM)?);
+            }
+            let nrows = r_len(r, MAX_DIM)?;
+            let mut row_map = Vec::with_capacity(nrows);
+            for _ in 0..nrows {
+                row_map.push(r_len(r, MAX_DIM)?);
+            }
+            if ncols != nx || nrows != ny {
+                return Err(bad("remap dims disagree with key"));
+            }
+            let remap = LinkRemap::try_from_maps(phys_nx, phys_ny, col_map, row_map)
+                .ok_or_else(|| bad("malformed link remap"))?;
+            Ok(Some(remap))
+        }
+        _ => Err(bad("unknown remap flag")),
+    }
 }
 
 fn read_key<R: Read>(r: &mut R) -> io::Result<PlanKey> {
@@ -168,7 +219,8 @@ fn read_key<R: Read>(r: &mut R) -> io::Result<PlanKey> {
         }
         failed.push(FailedRegion::new(x0, y0, w, h));
     }
-    Ok(PlanKey { nx, ny, failed, scheme, payload })
+    let remap = read_remap(r, nx, ny)?;
+    Ok(PlanKey { nx, ny, failed, scheme, payload, remap })
 }
 
 fn write_plan<W: Write>(w: &mut W, p: &CompiledSchedule) -> io::Result<()> {

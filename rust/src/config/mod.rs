@@ -248,7 +248,7 @@ script = \"at 10 fail 2,4 4x2\\nat 16 fail 6,0 2x2\\nat 22 repair 2,4 4x2\"
         assert_eq!(job.events[0].event, ClusterEvent::Fail(FailedRegion::host(2, 4)));
         assert_eq!(job.events[2].event, ClusterEvent::Repair(FailedRegion::host(2, 4)));
         // Round-trip: rendering the parsed timeline reparses equal.
-        let sc = Scenario { mesh: Some((8, 8)), events: job.events.clone() };
+        let sc = Scenario { mesh: Some((8, 8)), spares: None, events: job.events.clone() };
         assert_eq!(Scenario::parse(&sc.render()).unwrap(), sc);
     }
 

@@ -21,6 +21,11 @@
 //!   regions (the paper's "sub-mesh jobs" alternative);
 //! - [`RecoveryPolicy::Stop`]: halt (the "wait for the fire fighter"
 //!   baseline);
+//! - [`RecoveryPolicy::Reconfigure`]: heal the mesh onto spare
+//!   rows/columns ([`crate::mesh::heal`]); in this live coordinator —
+//!   which has no spare hardware — it degrades to fault-tolerant
+//!   continue, with the healing economics modelled in
+//!   [`crate::cluster::sweep`] and [`crate::sched::fleet`];
 //! - [`RecoveryPolicy::Adaptive`]: predict the step time of both
 //!   continue-vs-restart candidates with `perfmodel::steptime` and pick
 //!   the higher effective throughput (Chameleon-style runtime policy
@@ -365,6 +370,14 @@ impl Coordinator {
             RecoveryPolicy::FaultTolerant => self.continue_fault_tolerant(region),
             RecoveryPolicy::SubMesh => self.submesh_after_failure(region),
             RecoveryPolicy::Stop => Err(CoordError::Stopped(self.trainer.step)),
+            // The live coordinator drives a real trainer on the logical
+            // mesh and has no spare hardware to retire rows onto;
+            // healing economics (spare budgets, rewire costs, span
+            // dilation) are modelled in `cluster::sweep` and
+            // `sched::fleet`. Here the policy degrades to the paper's
+            // fault-tolerant continue — exactly the fallback healing
+            // takes when spares are exhausted.
+            RecoveryPolicy::Reconfigure => self.continue_fault_tolerant(region),
             RecoveryPolicy::Adaptive => {
                 let Some(chose_ft) = self.adaptive_choose() else {
                     return Err(CoordError::Stopped(self.trainer.step));
@@ -417,7 +430,9 @@ impl Coordinator {
 
     fn handle_repair(&mut self, region: FailedRegion) -> Result<(), CoordError> {
         match self.cfg.policy {
-            RecoveryPolicy::FaultTolerant => self.rejoin_fault_tolerant(region),
+            RecoveryPolicy::FaultTolerant | RecoveryPolicy::Reconfigure => {
+                self.rejoin_fault_tolerant(region)
+            }
             RecoveryPolicy::Stop => {
                 let note = format!("repair {region:?} ignored (stop policy)");
                 self.trainer.metrics.annotate(self.trainer.step, note);
@@ -481,6 +496,14 @@ impl Coordinator {
                 Ok(())
             }
             ClusterEvent::Stop => Err(CoordError::Stopped(self.trainer.step)),
+            ClusterEvent::Reconfig => {
+                // No spares to heal onto here (see handle_failure);
+                // record the request and continue.
+                self.trainer
+                    .metrics
+                    .annotate(self.trainer.step, "reconfig requested (no spares; no-op)");
+                Ok(())
+            }
             ClusterEvent::Fail(region) => {
                 self.cluster.fail(region)?;
                 self.estimator.observe(ev.at_step);

@@ -16,17 +16,25 @@ pub enum RecoveryPolicy {
     SubMesh,
     /// Halt the job.
     Stop,
-    /// Pick fault-tolerant-continue vs. sub-mesh-restart per event by
-    /// perfmodel-predicted training throughput on the candidate
-    /// topologies.
+    /// Heal the mesh: retire the failed chip's physical row or column
+    /// onto provisioned spares and rewire boundary links
+    /// ([`crate::mesh::heal`]), so the logical topology stays a full
+    /// rectangle and collectives need no fault-tolerant detours. Pays a
+    /// one-off rewire + recompile cost; falls back to fault-tolerant
+    /// rings for failures the spare budget cannot absorb.
+    Reconfigure,
+    /// Pick fault-tolerant-continue vs. sub-mesh-restart vs.
+    /// reconfigure per event by perfmodel-predicted training throughput
+    /// on the candidate topologies.
     Adaptive,
 }
 
 impl RecoveryPolicy {
-    pub const ALL: [RecoveryPolicy; 4] = [
+    pub const ALL: [RecoveryPolicy; 5] = [
         RecoveryPolicy::FaultTolerant,
         RecoveryPolicy::SubMesh,
         RecoveryPolicy::Stop,
+        RecoveryPolicy::Reconfigure,
         RecoveryPolicy::Adaptive,
     ];
 
@@ -35,6 +43,7 @@ impl RecoveryPolicy {
             RecoveryPolicy::FaultTolerant => "fault-tolerant",
             RecoveryPolicy::SubMesh => "sub-mesh",
             RecoveryPolicy::Stop => "stop",
+            RecoveryPolicy::Reconfigure => "reconfigure",
             RecoveryPolicy::Adaptive => "adaptive",
         }
     }

@@ -10,6 +10,9 @@
 //! - [`coords`]  — coordinates, directions, links;
 //! - [`topology`] — the mesh + failed regions = the *live* topology;
 //! - [`failure`] — contiguous failed regions (2x2 board, 4x2 host, ...);
+//! - [`remap`] — spare rows/columns and bypass link remapping: the
+//!   reconfigurable-mesh healing layer that keeps the logical topology
+//!   a full rectangle after failures (arXiv 2511.08381);
 //! - [`routing`] — dimension-order routing and the non-minimal
 //!   route-around used when a failed region blocks a DOR path (Fig 2);
 //! - [`vc`] — channel-dependency-graph cycle check backing the paper's
@@ -17,11 +20,13 @@
 
 pub mod coords;
 pub mod failure;
+pub mod remap;
 pub mod routing;
 pub mod topology;
 pub mod vc;
 
 pub use coords::{Coord, Dir, Link, Mesh};
 pub use failure::{FailedRegion, RegionShape};
+pub use remap::{heal, HealOutcome, LinkRemap};
 pub use routing::{route, route_dor, route_traced, RouteError};
 pub use topology::Topology;

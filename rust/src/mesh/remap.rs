@@ -1,0 +1,485 @@
+//! Reconfigurable-mesh healing: spare rows/columns and bypass link
+//! remapping (ROADMAP "Reconfigurable mesh"; grounded in "Fault
+//! Tolerant Reconfigurable ML Multiprocessor", arXiv 2511.08381).
+//!
+//! The paper keeps a job alive by routing allreduce traffic *around*
+//! holes; the reconfigurable alternative *heals* the topology instead:
+//! the machine is provisioned with spare columns and rows beyond the
+//! logical mesh, and when a chip fails its whole physical column (or
+//! row) is taken out of service — boundary links are rewired to bypass
+//! it — so the **logical** topology stays a full `nx x ny` rectangle
+//! and collectives need no fault-tolerant detours at all.
+//!
+//! [`LinkRemap`] is the layer between logical and physical
+//! coordinates: two separable, strictly monotone axis maps
+//! (`col_map`, `row_map`) from the logical rectangle onto a physical
+//! `phys_nx x phys_ny` mesh. Bypassing is not free — a logical link
+//! whose endpoints map `g+1` physical columns apart crosses `g`
+//! bypassed chips, each adding one hop of latency
+//! ([`LinkRemap::link_spans`] prices this for the DES;
+//! bandwidth is unaffected because bypass channels cut through).
+//!
+//! [`heal`] is the planner: given the physical failure set it picks,
+//! per failed region, whether to retire the region's columns or its
+//! rows (whichever costs fewer *new* exclusions, ties to columns),
+//! within the spare budgets. Regions that fit neither budget stay
+//! **unhealed** — they keep holes in the logical rectangle
+//! ([`LinkRemap::logical_image`]) and the caller degrades to the
+//! fault-tolerant route-around, which is exactly the graceful path the
+//! fleet takes when spares run out.
+
+use super::coords::{Coord, Dir, Mesh};
+use super::failure::FailedRegion;
+
+/// Logical-to-physical coordinate remap with separable monotone axis
+/// maps. Equal remaps are interchangeable, so the derive set makes a
+/// `LinkRemap` usable as a plan-cache fingerprint dimension
+/// (`collective::plancache`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinkRemap {
+    phys_nx: usize,
+    phys_ny: usize,
+    /// `col_map[lx]` = physical column of logical column `lx`;
+    /// strictly increasing, values in `[0, phys_nx)`.
+    col_map: Vec<usize>,
+    /// `row_map[ly]` = physical row of logical row `ly`.
+    row_map: Vec<usize>,
+}
+
+/// Result of the healing planner: the remap plus the physical regions
+/// the spare budgets could not absorb.
+#[derive(Debug, Clone)]
+pub struct HealOutcome {
+    pub remap: LinkRemap,
+    /// Physical failed regions whose columns/rows were *not* retired;
+    /// their [`LinkRemap::logical_image`] holes remain in the logical
+    /// rectangle and need fault-tolerant treatment.
+    pub unhealed: Vec<FailedRegion>,
+}
+
+impl HealOutcome {
+    /// Did the planner absorb every failure (logical rectangle fully
+    /// live)?
+    pub fn fully_healed(&self) -> bool {
+        self.unhealed.is_empty()
+    }
+}
+
+impl LinkRemap {
+    /// The identity remap: logical and physical meshes coincide.
+    pub fn identity(nx: usize, ny: usize) -> Self {
+        Self::with_spares(nx, ny, 0, 0)
+    }
+
+    /// Identity-prefix remap onto a physical mesh provisioned with
+    /// `spare_cols` extra columns and `spare_rows` extra rows.
+    pub fn with_spares(nx: usize, ny: usize, spare_cols: usize, spare_rows: usize) -> Self {
+        assert!(nx >= 1 && ny >= 1, "degenerate logical mesh {nx}x{ny}");
+        Self {
+            phys_nx: nx + spare_cols,
+            phys_ny: ny + spare_rows,
+            col_map: (0..nx).collect(),
+            row_map: (0..ny).collect(),
+        }
+    }
+
+    /// Build from explicit axis maps. Panics unless both maps are
+    /// strictly increasing and in range (the invariant every consumer
+    /// relies on; persisted remaps are re-checked on load instead).
+    pub fn from_maps(
+        phys_nx: usize,
+        phys_ny: usize,
+        col_map: Vec<usize>,
+        row_map: Vec<usize>,
+    ) -> Self {
+        Self::try_from_maps(phys_nx, phys_ny, col_map, row_map)
+            .expect("malformed link remap")
+    }
+
+    /// Non-panicking [`from_maps`](Self::from_maps) for untrusted input
+    /// (persisted plan-cache keys): `None` if the maps are malformed.
+    pub fn try_from_maps(
+        phys_nx: usize,
+        phys_ny: usize,
+        col_map: Vec<usize>,
+        row_map: Vec<usize>,
+    ) -> Option<Self> {
+        let r = Self { phys_nx, phys_ny, col_map, row_map };
+        r.maps_well_formed().then_some(r)
+    }
+
+    /// Strictly increasing, non-empty, in-range axis maps?
+    pub fn maps_well_formed(&self) -> bool {
+        let ok = |map: &[usize], bound: usize| {
+            !map.is_empty()
+                && map.windows(2).all(|w| w[0] < w[1])
+                && *map.last().expect("non-empty") < bound
+        };
+        ok(&self.col_map, self.phys_nx) && ok(&self.row_map, self.phys_ny)
+    }
+
+    pub fn nx(&self) -> usize {
+        self.col_map.len()
+    }
+
+    pub fn ny(&self) -> usize {
+        self.row_map.len()
+    }
+
+    pub fn phys_nx(&self) -> usize {
+        self.phys_nx
+    }
+
+    pub fn phys_ny(&self) -> usize {
+        self.phys_ny
+    }
+
+    pub fn col_map(&self) -> &[usize] {
+        &self.col_map
+    }
+
+    pub fn row_map(&self) -> &[usize] {
+        &self.row_map
+    }
+
+    /// No spares and identity maps — the remap changes nothing.
+    pub fn is_identity(&self) -> bool {
+        self.phys_nx == self.nx()
+            && self.phys_ny == self.ny()
+            && self.col_map.iter().enumerate().all(|(i, &p)| i == p)
+            && self.row_map.iter().enumerate().all(|(i, &p)| i == p)
+    }
+
+    /// Physical chip of a logical coordinate.
+    pub fn to_physical(&self, c: Coord) -> Coord {
+        Coord::new(self.col_map[c.x], self.row_map[c.y])
+    }
+
+    /// The logical rectangle a *physical* region maps back onto, if
+    /// any. Monotone axis maps make the preimage of a physical
+    /// rectangle a logical rectangle; `None` means the region lies
+    /// entirely on retired/spare columns or rows — the failure is
+    /// invisible to the logical mesh.
+    pub fn logical_image(&self, phys: &FailedRegion) -> Option<FailedRegion> {
+        let axis = |map: &[usize], lo: usize, hi: usize| -> Option<(usize, usize)> {
+            let start = map.partition_point(|&p| p < lo);
+            let end = map.partition_point(|&p| p < hi);
+            (start < end).then_some((start, end - start))
+        };
+        let (x0, w) = axis(&self.col_map, phys.x0, phys.x1())?;
+        let (y0, h) = axis(&self.row_map, phys.y0, phys.y1())?;
+        Some(FailedRegion::new(x0, y0, w, h))
+    }
+
+    /// The logical holes this remap leaves visible: the logical images
+    /// of every failed physical region (healed regions map to `None`).
+    /// Disjoint physical regions have disjoint images — the axis maps
+    /// are strictly monotone — so the result is a valid failure set.
+    pub fn visible_holes(&self, failed: &[FailedRegion]) -> Vec<FailedRegion> {
+        failed.iter().filter_map(|r| self.logical_image(r)).collect()
+    }
+
+    /// Do the mapped logical chips dodge every region in `failed`?
+    /// (The healed-rectangle validation: a fully healed remap maps the
+    /// whole logical rectangle onto live physical chips.)
+    pub fn covers_live(&self, failed: &[FailedRegion]) -> bool {
+        failed.iter().all(|r| self.logical_image(r).is_none())
+    }
+
+    /// Physical hops of the logical unit link leaving `c` in direction
+    /// `d` (1 = physically adjacent; `g+1` = bypasses `g` retired
+    /// chips). Panics if the step leaves the logical mesh.
+    pub fn link_span(&self, c: Coord, d: Dir) -> usize {
+        match d {
+            Dir::East => self.col_map[c.x + 1] - self.col_map[c.x],
+            Dir::West => self.col_map[c.x] - self.col_map[c.x - 1],
+            Dir::North => self.row_map[c.y + 1] - self.row_map[c.y],
+            Dir::South => self.row_map[c.y] - self.row_map[c.y - 1],
+        }
+    }
+
+    /// Per-link-slot physical hop counts for the DES, indexed like
+    /// `Mesh::link_index` on the **logical** mesh (off-mesh slots get
+    /// 1). Distinct logical links bypass disjoint physical segments
+    /// (the maps are monotone and separable), so pricing the extra
+    /// hops per logical link keeps the contention accounting exact.
+    pub fn link_spans(&self, mesh: &Mesh) -> Vec<u32> {
+        assert_eq!(
+            (mesh.nx, mesh.ny),
+            (self.nx(), self.ny()),
+            "span table for a different logical mesh"
+        );
+        let mut spans = vec![1u32; mesh.num_link_slots()];
+        for c in mesh.coords() {
+            for d in Dir::ALL {
+                if mesh.step(c, d).is_some() {
+                    let slot = mesh.node_index(c) * 4 + d.index();
+                    spans[slot] = self.link_span(c, d) as u32;
+                }
+            }
+        }
+        spans
+    }
+
+    /// Total bypassed physical chips across both axes — 0 iff every
+    /// logical link is physically adjacent.
+    pub fn bypassed_chips(&self) -> usize {
+        let gaps = |map: &[usize]| -> usize {
+            map.windows(2).map(|w| w[1] - w[0] - 1).sum::<usize>()
+        };
+        gaps(&self.col_map) + gaps(&self.row_map)
+    }
+
+    /// Largest physical span of any logical link (1 on the identity).
+    pub fn max_span(&self) -> usize {
+        let m = |map: &[usize]| map.windows(2).map(|w| w[1] - w[0]).max().unwrap_or(1);
+        m(&self.col_map).max(m(&self.row_map))
+    }
+
+    /// Restriction of the remap to a logical sub-rectangle (a fleet
+    /// job's allocation): same physical spans, origin shifted to 0.
+    pub fn submap(&self, x0: usize, y0: usize, w: usize, h: usize) -> LinkRemap {
+        assert!(w >= 1 && h >= 1 && x0 + w <= self.nx() && y0 + h <= self.ny());
+        let base_x = self.col_map[x0];
+        let base_y = self.row_map[y0];
+        let col_map: Vec<usize> = self.col_map[x0..x0 + w].iter().map(|p| p - base_x).collect();
+        let row_map: Vec<usize> = self.row_map[y0..y0 + h].iter().map(|p| p - base_y).collect();
+        let (pnx, pny) = (col_map[w - 1] + 1, row_map[h - 1] + 1);
+        LinkRemap { phys_nx: pnx, phys_ny: pny, col_map, row_map }
+    }
+}
+
+/// The healing planner. Maps a logical `nx x ny` rectangle onto the
+/// physical `phys_nx x phys_ny` mesh so that as many of `failed`'s
+/// regions as the spare budgets allow are absorbed by retiring whole
+/// physical columns or rows.
+///
+/// Deterministic greedy: regions are visited in canonical sorted
+/// order; each is absorbed on the axis needing fewer *new* exclusions
+/// (ties to columns), provided the axis budget
+/// (`phys_nx - nx` columns / `phys_ny - ny` rows) is not exceeded.
+/// Exclusions are shared — two regions on the same columns cost those
+/// columns once. Regions that fit neither budget are returned in
+/// `unhealed` (their logical holes remain; callers fall back to
+/// fault-tolerant rings). The logical maps are the first `nx`
+/// non-excluded columns and first `ny` non-excluded rows.
+///
+/// Panics if the logical rectangle does not fit the physical mesh.
+pub fn heal(
+    phys_nx: usize,
+    phys_ny: usize,
+    nx: usize,
+    ny: usize,
+    failed: &[FailedRegion],
+) -> HealOutcome {
+    assert!(nx >= 1 && ny >= 1 && nx <= phys_nx && ny <= phys_ny, "logical exceeds physical");
+    let col_budget = phys_nx - nx;
+    let row_budget = phys_ny - ny;
+    let mut excl_cols = vec![false; phys_nx];
+    let mut excl_rows = vec![false; phys_ny];
+    let (mut cols_used, mut rows_used) = (0usize, 0usize);
+
+    let mut regions: Vec<FailedRegion> = failed.to_vec();
+    regions.sort_unstable();
+    let mut unhealed = Vec::new();
+    for r in regions {
+        let new_cols = (r.x0..r.x1().min(phys_nx)).filter(|&x| !excl_cols[x]).count();
+        let new_rows = (r.y0..r.y1().min(phys_ny)).filter(|&y| !excl_rows[y]).count();
+        let can_cols = cols_used + new_cols <= col_budget;
+        let can_rows = rows_used + new_rows <= row_budget;
+        let take_cols = match (can_cols, can_rows) {
+            (true, true) => new_cols <= new_rows,
+            (true, false) => true,
+            (false, true) => false,
+            (false, false) => {
+                unhealed.push(r);
+                continue;
+            }
+        };
+        if take_cols {
+            for x in r.x0..r.x1().min(phys_nx) {
+                excl_cols[x] = true;
+            }
+            cols_used += new_cols;
+        } else {
+            for y in r.y0..r.y1().min(phys_ny) {
+                excl_rows[y] = true;
+            }
+            rows_used += new_rows;
+        }
+    }
+
+    let col_map: Vec<usize> =
+        (0..phys_nx).filter(|&x| !excl_cols[x]).take(nx).collect();
+    let row_map: Vec<usize> =
+        (0..phys_ny).filter(|&y| !excl_rows[y]).take(ny).collect();
+    debug_assert_eq!(col_map.len(), nx);
+    debug_assert_eq!(row_map.len(), ny);
+    let remap = LinkRemap { phys_nx, phys_ny, col_map, row_map };
+    debug_assert!(remap.maps_well_formed());
+    HealOutcome { remap, unhealed }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop;
+
+    #[test]
+    fn identity_maps_and_spans() {
+        let r = LinkRemap::identity(4, 3);
+        assert!(r.is_identity());
+        assert!(r.maps_well_formed());
+        assert_eq!(r.to_physical(Coord::new(2, 1)), Coord::new(2, 1));
+        assert_eq!(r.bypassed_chips(), 0);
+        assert_eq!(r.max_span(), 1);
+        let spans = r.link_spans(&Mesh::new(4, 3));
+        assert!(spans.iter().all(|&s| s == 1));
+    }
+
+    #[test]
+    fn with_spares_is_identity_prefix() {
+        let r = LinkRemap::with_spares(4, 4, 2, 1);
+        assert_eq!((r.phys_nx(), r.phys_ny()), (6, 5));
+        assert!(!r.is_identity()); // spares provisioned
+        assert_eq!(r.col_map(), &[0, 1, 2, 3]);
+        assert_eq!(r.bypassed_chips(), 0);
+    }
+
+    #[test]
+    fn heal_board_retires_its_columns() {
+        // 10x8 physical, 8x8 logical (2 spare cols). A 2x2 board at
+        // (2,2) costs 2 new column exclusions = the whole budget.
+        let out = heal(10, 8, 8, 8, &[FailedRegion::board(2, 2)]);
+        assert!(out.fully_healed());
+        let r = &out.remap;
+        assert_eq!(r.col_map(), &[0, 1, 4, 5, 6, 7, 8, 9]);
+        assert_eq!(r.row_map(), &[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert!(r.covers_live(&[FailedRegion::board(2, 2)]));
+        // The link from logical column 1 to 2 bypasses 2 chips.
+        assert_eq!(r.link_span(Coord::new(1, 0), Dir::East), 3);
+        assert_eq!(r.link_span(Coord::new(2, 0), Dir::West), 3);
+        assert_eq!(r.bypassed_chips(), 2); // columns 2 and 3 retired
+        assert_eq!(r.max_span(), 3);
+    }
+
+    #[test]
+    fn heal_prefers_cheaper_axis() {
+        // A 4x2 host: retiring rows (2 new) beats columns (4 new).
+        let out = heal(10, 10, 8, 8, &[FailedRegion::host(2, 2)]);
+        assert!(out.fully_healed());
+        assert_eq!(out.remap.row_map(), &[0, 1, 4, 5, 6, 7, 8, 9]);
+        assert_eq!(out.remap.col_map(), &[0, 1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn heal_shares_exclusions_between_aligned_regions() {
+        // Two boards on the same columns cost those columns once.
+        let failed = [FailedRegion::board(2, 0), FailedRegion::board(2, 4)];
+        let out = heal(10, 8, 8, 8, &failed);
+        assert!(out.fully_healed());
+        assert!(out.remap.covers_live(&failed));
+        assert_eq!(out.remap.col_map(), &[0, 1, 4, 5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn heal_exhausted_budget_reports_unhealed() {
+        // 1 spare column, 0 spare rows: a 2-wide board fits neither
+        // budget and stays unhealed.
+        let failed = [FailedRegion::board(2, 2)];
+        let out = heal(9, 8, 8, 8, &failed);
+        assert!(!out.fully_healed());
+        assert_eq!(out.unhealed, vec![FailedRegion::board(2, 2)]);
+        // The identity-prefix maps still cover the logical rectangle;
+        // the hole's logical image is where FT rings must detour.
+        let img = out.remap.logical_image(&failed[0]).expect("hole visible");
+        assert_eq!(img, FailedRegion::board(2, 2));
+    }
+
+    #[test]
+    fn heal_partial_absorbs_what_fits() {
+        // Budget for one board's columns; the second (different cols,
+        // different rows) stays unhealed.
+        let failed = [FailedRegion::board(0, 0), FailedRegion::board(4, 4)];
+        let out = heal(10, 8, 8, 8, &failed);
+        assert_eq!(out.unhealed.len(), 1);
+        assert_eq!(out.unhealed[0], FailedRegion::board(4, 4));
+        assert!(out.remap.logical_image(&failed[0]).is_none());
+        assert!(out.remap.logical_image(&failed[1]).is_some());
+    }
+
+    #[test]
+    fn logical_image_of_spare_only_region_is_none() {
+        let r = LinkRemap::with_spares(4, 4, 2, 0);
+        // Physical columns 4..6 are spare; a failure there is invisible.
+        assert_eq!(r.logical_image(&FailedRegion::new(4, 0, 2, 2)), None);
+        // A failure on mapped columns is visible at the logical coords.
+        assert_eq!(
+            r.logical_image(&FailedRegion::new(1, 1, 2, 2)),
+            Some(FailedRegion::new(1, 1, 2, 2))
+        );
+    }
+
+    #[test]
+    fn submap_preserves_spans() {
+        let out = heal(10, 8, 8, 8, &[FailedRegion::board(2, 2)]);
+        let sub = out.remap.submap(1, 0, 4, 4);
+        assert_eq!(sub.nx(), 4);
+        assert_eq!(sub.col_map(), &[0, 3, 4, 5]);
+        assert_eq!(sub.link_span(Coord::new(0, 0), Dir::East), 3);
+        let ident = LinkRemap::identity(8, 8).submap(2, 2, 4, 4);
+        assert!(ident.is_identity());
+    }
+
+    #[test]
+    fn prop_heal_outcome_is_sound() {
+        prop("heal sound", |rng| {
+            let nx = 2 * rng.usize_in(2, 6);
+            let ny = 2 * rng.usize_in(2, 6);
+            let (sc, sr) = (rng.usize_in(0, 5), rng.usize_in(0, 5));
+            let (pnx, pny) = (nx + sc, ny + sr);
+            let mut failed: Vec<FailedRegion> = Vec::new();
+            for _ in 0..rng.usize_in(0, 4) {
+                let (w, h) = *rng.choose(&[(2, 2), (4, 2), (2, 4)]);
+                if w > pnx || h > pny {
+                    continue;
+                }
+                let x0 = 2 * rng.usize_in(0, (pnx - w) / 2 + 1).min((pnx - w) / 2);
+                let y0 = 2 * rng.usize_in(0, (pny - h) / 2 + 1).min((pny - h) / 2);
+                let r = FailedRegion::new(x0, y0, w, h);
+                if failed.iter().all(|o| !o.overlaps(&r)) {
+                    failed.push(r);
+                }
+            }
+            let out = heal(pnx, pny, nx, ny, &failed);
+            assert!(out.remap.maps_well_formed());
+            assert_eq!(out.remap.nx(), nx);
+            assert_eq!(out.remap.ny(), ny);
+            // Healed regions are invisible; every unhealed region is in
+            // the input set.
+            for r in &failed {
+                if !out.unhealed.contains(r) {
+                    assert!(out.remap.logical_image(r).is_none(), "healed {r:?} visible");
+                }
+            }
+            for r in &out.unhealed {
+                assert!(failed.contains(r));
+            }
+            // With no failures the planner returns the identity prefix.
+            if failed.is_empty() {
+                assert_eq!(out.remap, LinkRemap::with_spares(nx, ny, sc, sr));
+            }
+            // Span table is consistent with per-link spans.
+            let mesh = Mesh::new(nx, ny);
+            let spans = out.remap.link_spans(&mesh);
+            for c in mesh.coords() {
+                for d in Dir::ALL {
+                    if mesh.step(c, d).is_some() {
+                        let slot = mesh.node_index(c) * 4 + d.index();
+                        assert_eq!(spans[slot] as usize, out.remap.link_span(c, d));
+                    }
+                }
+            }
+        });
+    }
+}

@@ -48,10 +48,10 @@ use super::{FleetError, JobPolicy, JobSpec};
 use crate::cluster::{ClusterEvent, ClusterState, EventQueue, MtbfModel, TimedEvent};
 use crate::collective::{PlanCache, PlanCacheStats, PlanError, Scheme};
 use crate::coordinator::policy::{effective_throughput, CandidateCost, EventRateEstimator};
-use crate::mesh::{FailedRegion, Topology};
+use crate::mesh::{heal, FailedRegion, LinkRemap, Mesh, Topology};
 use crate::perfmodel::steptime;
 use crate::perfmodel::CandidatePrediction;
-use crate::simnet::{simulate_plan, LinkModel};
+use crate::simnet::{simulate_plan, simulate_plan_remapped, LinkModel};
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
@@ -145,6 +145,20 @@ pub struct FleetConfig {
     /// mesh rescan. `false` forces the dense scan reference path; both
     /// are bit-identical (`rust/tests/fleet_placement.rs`).
     pub fast_placer: bool,
+    /// Spare physical rows provisioned beyond the logical `nx x ny`
+    /// mesh for reconfigurable-mesh healing ([`crate::mesh::heal`]).
+    /// The physical mesh failures are sampled on is
+    /// `(nx + spare_cols) x (ny + spare_rows)`; jobs place on the
+    /// logical mesh only. `0, 0` (the default) disables healing and
+    /// reproduces the unspared fleet bit-for-bit.
+    pub spare_rows: usize,
+    /// Spare physical columns (see [`Self::spare_rows`]).
+    pub spare_cols: usize,
+    /// One-off pause (fleet steps) charged to every running job when a
+    /// heal changes the adopted link remap: bypass switches flip and
+    /// chips newly mapped into the logical mesh copy parameters from a
+    /// live data-parallel peer (no rollback — replicas survive).
+    pub rewire_steps: f64,
 }
 
 impl FleetConfig {
@@ -173,6 +187,9 @@ impl FleetConfig {
             sparse_occupancy: true,
             backfill: false,
             fast_placer: true,
+            spare_rows: 0,
+            spare_cols: 0,
+            rewire_steps: 10.0,
         }
     }
 
@@ -201,7 +218,21 @@ impl FleetConfig {
             sparse_occupancy: true,
             backfill: false,
             fast_placer: true,
+            spare_rows: 0,
+            spare_cols: 0,
+            rewire_steps: 10.0,
         }
+    }
+
+    /// Physical mesh dimensions: the logical mesh plus provisioned
+    /// spares.
+    pub fn phys_dims(&self) -> (usize, usize) {
+        (self.nx + self.spare_cols, self.ny + self.spare_rows)
+    }
+
+    /// Are spare rows/columns provisioned (healing enabled)?
+    pub fn has_spares(&self) -> bool {
+        self.spare_rows + self.spare_cols > 0
     }
 }
 
@@ -302,8 +333,11 @@ struct StepSim {
     busy: Vec<(usize, f64)>,
 }
 
-/// Sub-mesh simulation memo key: `(w, h, sorted local holes)`.
-type SimKey = (usize, usize, Vec<Rect>);
+/// Sub-mesh simulation memo key: `(w, h, sorted local holes, link
+/// spans)`. The span vector is the job rectangle's slice of the global
+/// link remap (empty for the identity remap), so equal shapes under
+/// different heals simulate — and memoize — separately.
+type SimKey = (usize, usize, Vec<Rect>, Vec<u32>);
 
 /// Link-load memo key: the sub-mesh simulation key plus the
 /// rectangle's cluster origin. `contention::job_load` is a pure
@@ -321,7 +355,20 @@ type EpochSig = Vec<(Rect, SimKey, bool, bool)>;
 
 struct Fleet<'a> {
     cfg: &'a FleetConfig,
+    /// The **logical** cluster ledger jobs place on: with spares
+    /// provisioned it holds the visible images of physical failures
+    /// under the adopted remap, otherwise the physical failures
+    /// themselves.
     cluster: ClusterState,
+    /// The physical ledger (logical mesh + provisioned spares);
+    /// `None` when no spares are provisioned.
+    phys: Option<ClusterState>,
+    /// Adopted logical-to-physical link remap (identity prefix until a
+    /// heal is adopted; always the identity with no spares).
+    remap: LinkRemap,
+    /// Heals adopted (remap changes), each pausing every running job
+    /// for `FleetConfig::rewire_steps`.
+    rewires: u64,
     cache: PlanCache,
     /// Step-time memo per (w, h, sorted local holes): each distinct
     /// sub-mesh topology is simulated once.
@@ -397,9 +444,13 @@ impl<'a> Fleet<'a> {
         };
         cache.set_verification(cfg.verify);
         let stats_base = cache.stats().clone();
+        let (pnx, pny) = cfg.phys_dims();
         Self {
             cfg,
             cluster: ClusterState::new(cfg.nx, cfg.ny),
+            phys: cfg.has_spares().then(|| ClusterState::new(pnx, pny)),
+            remap: LinkRemap::with_spares(cfg.nx, cfg.ny, cfg.spare_cols, cfg.spare_rows),
+            rewires: 0,
             cache,
             sim_memo: HashMap::new(),
             load_memo: HashMap::new(),
@@ -453,16 +504,35 @@ impl<'a> Fleet<'a> {
         self.running[i].holes.iter().map(|h| placer::to_local(&r, h)).collect()
     }
 
-    fn sim_key(w: usize, h: usize, holes: &[Rect]) -> SimKey {
+    /// The rectangle's slice of the global link remap, `None` when the
+    /// slice is contiguous (no bypasses cross the rectangle — the
+    /// plain unremapped path applies, sharing plan fingerprints and
+    /// memo entries with unspared runs).
+    fn submap_for(&self, r: &Rect) -> Option<LinkRemap> {
+        if self.remap.is_identity() {
+            return None;
+        }
+        let sub = self.remap.submap(r.x0, r.y0, r.w, r.h);
+        (!sub.is_identity()).then_some(sub)
+    }
+
+    fn sim_key(w: usize, h: usize, holes: &[Rect], remap: Option<&LinkRemap>) -> SimKey {
         let mut key_holes = holes.to_vec();
         key_holes.sort_unstable();
-        (w, h, key_holes)
+        let spans = match remap {
+            Some(m) => m.link_spans(&Mesh::new(w, h)),
+            None => Vec::new(),
+        };
+        (w, h, key_holes, spans)
     }
 
     /// Ensure the simulation record for a hole-carrying `w x h`
     /// sub-mesh is memoized; `Ok(false)` = not schedulable (e.g. the
     /// holes break the pair-row planner or disconnect the sub-mesh).
-    fn ensure_sim(&mut self, key: &SimKey) -> Result<bool, FleetError> {
+    /// With a (non-trivial) remap slice the plan still compiles
+    /// against the clean logical rectangle, but the DES prices every
+    /// logical link at its physical bypass span.
+    fn ensure_sim(&mut self, key: &SimKey, remap: Option<&LinkRemap>) -> Result<bool, FleetError> {
         if self.sim_memo.contains_key(key) {
             return Ok(true);
         }
@@ -470,9 +540,13 @@ impl<'a> Fleet<'a> {
         if !topo.is_connected() {
             return Ok(false);
         }
-        match self.cache.get(Scheme::FaultTolerant, &topo, self.cfg.payload) {
+        let got = self.cache.get_remapped(Scheme::FaultTolerant, &topo, self.cfg.payload, remap);
+        match got {
             Ok(plan) => {
-                let report = simulate_plan(&plan, &self.link)?;
+                let report = match remap {
+                    Some(m) => simulate_plan_remapped(&plan, &self.link, m)?,
+                    None => simulate_plan(&plan, &self.link)?,
+                };
                 let step_s = self.cfg.compute_s + report.makespan_s;
                 let busy: Vec<(usize, f64)> = report.links.busy_slots().collect();
                 self.sim_memo.insert(key.clone(), StepSim { step_s, busy });
@@ -483,12 +557,27 @@ impl<'a> Fleet<'a> {
         }
     }
 
-    /// Predicted seconds per training step on a hole-carrying `w x h`
-    /// sub-mesh: modelled compute + simulated FT allreduce through the
-    /// shared plan cache. `None` = not schedulable.
-    fn step_time(&mut self, w: usize, h: usize, holes: &[Rect]) -> Result<Option<f64>, FleetError> {
-        let key = Self::sim_key(w, h, holes);
-        if !self.ensure_sim(&key)? {
+    /// Predicted seconds per training step on a hole-carrying
+    /// rectangle of the logical mesh: modelled compute + simulated FT
+    /// allreduce through the shared plan cache, under the adopted
+    /// remap's bypass spans. `None` = not schedulable.
+    fn step_time(&mut self, rect: &Rect, holes: &[Rect]) -> Result<Option<f64>, FleetError> {
+        let sub = self.submap_for(rect);
+        self.step_time_under(sub.as_ref(), rect.w, rect.h, holes)
+    }
+
+    /// [`Self::step_time`] under an explicit remap slice (the heal
+    /// arbitration compares candidate remaps that are not yet
+    /// adopted).
+    fn step_time_under(
+        &mut self,
+        remap: Option<&LinkRemap>,
+        w: usize,
+        h: usize,
+        holes: &[Rect],
+    ) -> Result<Option<f64>, FleetError> {
+        let key = Self::sim_key(w, h, holes, remap);
+        if !self.ensure_sim(&key, remap)? {
             return Ok(None);
         }
         Ok(self.sim_memo.get(&key).map(|s| s.step_s))
@@ -555,7 +644,7 @@ impl<'a> Fleet<'a> {
     }
 
     fn start_job(&mut self, job: &mut Job, rect: Rect) -> Result<(), FleetError> {
-        let Some(s) = self.step_time(rect.w, rect.h, &[])? else {
+        let Some(s) = self.step_time(&rect, &[])? else {
             return Err(FleetError::Unschedulable(job.spec.id, rect.w, rect.h));
         };
         job.rect = Some(rect);
@@ -638,7 +727,7 @@ impl<'a> Fleet<'a> {
         target: Rect,
         kind: RestartKind,
     ) -> Result<bool, FleetError> {
-        let Some(s) = self.step_time(target.w, target.h, &[])? else {
+        let Some(s) = self.step_time(&target, &[])? else {
             return Ok(false);
         };
         let (progress, old_workers) = {
@@ -692,7 +781,7 @@ impl<'a> Fleet<'a> {
             Action::Ft => {
                 let rect = self.rect(i);
                 let local = self.local_holes(i);
-                let Some(s) = self.step_time(rect.w, rect.h, &local)? else {
+                let Some(s) = self.step_time(&rect, &local)? else {
                     return Ok(false);
                 };
                 let holes_chips: usize =
@@ -769,7 +858,7 @@ impl<'a> Fleet<'a> {
         let local = self.local_holes(i);
         let rb = self.rollback_of(self.running[i].progress);
         let mut cands: Vec<(f64, Action)> = Vec::new();
-        if let Some(s) = self.step_time(rect.w, rect.h, &local)? {
+        if let Some(s) = self.step_time(&rect, &local)? {
             let holes_chips: usize = self.running[i].holes.iter().map(|h| h.num_chips()).sum();
             let workers = rect.num_chips().saturating_sub(holes_chips);
             if workers > 0 {
@@ -782,14 +871,14 @@ impl<'a> Fleet<'a> {
                 (s.w, s.h)
             };
             if let Some(t) = self.place_excluding(i, w, h) {
-                if let Some(s) = self.step_time(t.w, t.h, &[])? {
+                if let Some(s) = self.step_time(&t, &[])? {
                     let one_off = (self.cfg.restart_steps + self.cfg.migrate_steps) * s;
                     cands.push((self.eff(t.num_chips(), s, one_off, rb), Action::Migrate));
                 }
             }
         }
         if let Some(t) = self.shrink_target(i) {
-            if let Some(s) = self.step_time(t.w, t.h, &[])? {
+            if let Some(s) = self.step_time(&t, &[])? {
                 let one_off = self.cfg.restart_steps * s;
                 cands.push((self.eff(t.num_chips(), s, one_off, rb), Action::Shrink));
             }
@@ -833,17 +922,33 @@ impl<'a> Fleet<'a> {
             JobPolicy::Shrink => self.recover_with(i, &[Action::Shrink]),
             JobPolicy::Migrate => self.recover_with(i, &[Action::Migrate, Action::Shrink]),
             JobPolicy::Wait => self.recover_with(i, &[]),
+            // By recovery time the healing planner has already run on
+            // the physical ledger: any hole still visible means spares
+            // were exhausted (or never provisioned), so the job
+            // degrades gracefully to the continue-FT ladder.
+            JobPolicy::Reconfigure => {
+                self.recover_with(i, &[Action::Ft, Action::Shrink, Action::Migrate])
+            }
             JobPolicy::Adaptive => self.adaptive_recover(i),
         }
     }
 
     fn on_fail(&mut self, region: FailedRegion) -> Result<(), FleetError> {
+        self.estimator.observe(self.step);
+        self.transitions += 1;
+        self.apply_fail(region)
+    }
+
+    /// Surface a **logical** failure: register holes with the affected
+    /// jobs and run their recovery policies. (The observation/counter
+    /// bookkeeping lives in the per-event wrappers so the spared
+    /// remap-diff path can replay several logical changes per physical
+    /// event without inflating the estimator.)
+    fn apply_fail(&mut self, region: FailedRegion) -> Result<(), FleetError> {
         self.cluster.fail(region)?;
         if let Some(idx) = self.pidx.as_mut() {
             idx.add(&region);
         }
-        self.estimator.observe(self.step);
-        self.transitions += 1;
         self.log(format!("fail {region:?}"));
         // Descending order: a queue-wait decision removes its own
         // index and leaves lower ones valid.
@@ -860,13 +965,24 @@ impl<'a> Fleet<'a> {
     }
 
     fn on_repair(&mut self, region: FailedRegion) -> Result<(), FleetError> {
+        self.estimator.observe(self.step);
+        self.transitions += 1;
+        self.apply_repair(region)?;
+        self.grow_back()?;
+        self.try_admit()?;
+        self.defragment()?;
+        Ok(())
+    }
+
+    /// Clear a **logical** failure and rejoin the jobs holding a piece
+    /// of it. Callers follow up with grow-back/admission/defrag once
+    /// per batch.
+    fn apply_repair(&mut self, region: FailedRegion) -> Result<(), FleetError> {
         self.cluster.repair(region)?;
         if let Some(idx) = self.pidx.as_mut() {
             let _removed = idx.remove(&region);
             debug_assert!(_removed, "repair clears an indexed failed region");
         }
-        self.estimator.observe(self.step);
-        self.transitions += 1;
         self.log(format!("repair {region:?}"));
         // Jobs holding a piece of the repaired region rejoin in place.
         for i in (0..self.running.len()).rev() {
@@ -876,7 +992,7 @@ impl<'a> Fleet<'a> {
             }
             self.running[i].holes.retain(|h| !h.overlaps(&region));
             let local = self.local_holes(i);
-            if let Some(s) = self.step_time(rect.w, rect.h, &local)? {
+            if let Some(s) = self.step_time(&rect, &local)? {
                 let holes_chips: usize =
                     self.running[i].holes.iter().map(|h| h.num_chips()).sum();
                 let j = &mut self.running[i];
@@ -890,9 +1006,142 @@ impl<'a> Fleet<'a> {
                 self.recover(i)?;
             }
         }
-        self.grow_back()?;
-        self.try_admit()?;
-        self.defragment()?;
+        Ok(())
+    }
+
+    /// A failure on the **physical** mesh (spares provisioned): ledger
+    /// it, re-run the healing planner, and surface whatever logical
+    /// holes the (possibly re-adopted) remap leaves visible.
+    fn on_phys_fail(&mut self, region: FailedRegion) -> Result<(), FleetError> {
+        self.estimator.observe(self.step);
+        self.transitions += 1;
+        self.phys.as_mut().expect("spared path").fail(region)?;
+        self.log(format!("fail {region:?} (physical)"));
+        self.maybe_reconfigure(false)
+    }
+
+    /// A physical repair: ledger it and re-run the healing planner —
+    /// repaired rows/columns let the healer hand spares back.
+    fn on_phys_repair(&mut self, region: FailedRegion) -> Result<(), FleetError> {
+        self.estimator.observe(self.step);
+        self.transitions += 1;
+        self.phys.as_mut().expect("spared path").repair(region)?;
+        self.log(format!("repair {region:?} (physical)"));
+        self.maybe_reconfigure(false)
+    }
+
+    /// Re-run the healing planner on the physical ledger and adopt its
+    /// remap if the affected jobs vote for it (`force` skips the vote —
+    /// the scenario `reconfig` event). Either way, the logical cluster
+    /// is re-synced to the visible holes of the remap in force.
+    fn maybe_reconfigure(&mut self, force: bool) -> Result<(), FleetError> {
+        let phys = self.phys.as_ref().expect("spared path");
+        let (pnx, pny) = (phys.nx, phys.ny);
+        let outcome = heal(pnx, pny, self.cfg.nx, self.cfg.ny, phys.failed_regions());
+        if outcome.remap != self.remap && (force || self.heal_vote(&outcome.remap)?) {
+            self.remap = outcome.remap;
+            self.rewires += 1;
+            // Every running job pauses while the bypass switches flip;
+            // chips newly mapped into a rectangle copy parameters from
+            // a live data-parallel peer, so nobody rolls back.
+            for j in &mut self.running {
+                j.pause += self.cfg.rewire_steps;
+            }
+            let (n, bypassed, unhealed) =
+                (self.rewires, self.remap.bypassed_chips(), outcome.unhealed.len());
+            self.log(format!(
+                "reconfigured: heal #{n} bypasses {bypassed} chips ({unhealed} regions unhealed)"
+            ));
+        }
+        self.sync_visible()
+    }
+
+    /// Do the jobs whose holes a candidate remap would change want it?
+    /// A `Reconfigure` job always votes yes; an `Adaptive` job votes
+    /// yes when the healed candidate's predicted effective throughput
+    /// (one-off rewire + rebuild, no rollback) beats fault-tolerant
+    /// continue under the current remap. Unaffected jobs abstain.
+    fn heal_vote(&mut self, candidate: &LinkRemap) -> Result<bool, FleetError> {
+        let phys_failed = self.phys.as_ref().expect("spared path").failed_regions().to_vec();
+        let cur_vis = self.remap.visible_holes(&phys_failed);
+        let new_vis = candidate.visible_holes(&phys_failed);
+        let local_of = |rect: &Rect, vis: &[FailedRegion]| -> Vec<Rect> {
+            let mut cuts: Vec<Rect> = vis
+                .iter()
+                .filter_map(|h| placer::intersect(rect, h))
+                .map(|c| placer::to_local(rect, &c))
+                .collect();
+            cuts.sort_unstable();
+            cuts
+        };
+        let mut adaptive: Vec<(Rect, Vec<Rect>, Vec<Rect>)> = Vec::new();
+        for i in 0..self.running.len() {
+            let rect = self.rect(i);
+            let cur_local = local_of(&rect, &cur_vis);
+            let new_local = local_of(&rect, &new_vis);
+            if cur_local == new_local {
+                continue;
+            }
+            match self.running[i].spec.policy {
+                JobPolicy::Reconfigure => return Ok(true),
+                JobPolicy::Adaptive => adaptive.push((rect, cur_local, new_local)),
+                _ => {}
+            }
+        }
+        let hole_chips = |hs: &[Rect]| hs.iter().map(|h| h.num_chips()).sum::<usize>();
+        for (rect, cur_local, new_local) in adaptive {
+            let cur_sub = self.submap_for(&rect);
+            let ft_s = self.step_time_under(cur_sub.as_ref(), rect.w, rect.h, &cur_local)?;
+            let new_sub = {
+                let s = candidate.submap(rect.x0, rect.y0, rect.w, rect.h);
+                (!s.is_identity()).then_some(s)
+            };
+            let heal_s = self.step_time_under(new_sub.as_ref(), rect.w, rect.h, &new_local)?;
+            let ft_eff = ft_s.and_then(|s| {
+                let w = rect.num_chips().saturating_sub(hole_chips(&cur_local));
+                (w > 0).then(|| self.eff(w, s, self.cfg.rebuild_steps * s, 0.0))
+            });
+            let heal_eff = heal_s.and_then(|s| {
+                let w = rect.num_chips().saturating_sub(hole_chips(&new_local));
+                let one_off = (self.cfg.rewire_steps + self.cfg.rebuild_steps) * s;
+                (w > 0).then(|| self.eff(w, s, one_off, 0.0))
+            });
+            match (heal_eff, ft_eff) {
+                (Some(h), Some(f)) if h > f => return Ok(true),
+                (Some(_), None) => return Ok(true),
+                _ => {}
+            }
+        }
+        Ok(false)
+    }
+
+    /// Diff the logical cluster against the visible holes of the remap
+    /// in force and replay the difference through the normal logical
+    /// fail/repair paths (jobs rejoin healed holes, keep or recover
+    /// remaining ones). Repairs run before fails so the transient
+    /// ledger never holds overlapping regions.
+    fn sync_visible(&mut self) -> Result<(), FleetError> {
+        let phys = self.phys.as_ref().expect("spared path");
+        let mut want = self.remap.visible_holes(phys.failed_regions());
+        want.sort_unstable();
+        let mut have = self.cluster.failed_regions().to_vec();
+        have.sort_unstable();
+        let repairs: Vec<FailedRegion> =
+            have.iter().filter(|r| !want.contains(r)).copied().collect();
+        let fails: Vec<FailedRegion> =
+            want.iter().filter(|r| !have.contains(r)).copied().collect();
+        let repaired_any = !repairs.is_empty();
+        for r in repairs {
+            self.apply_repair(r)?;
+        }
+        for r in fails {
+            self.apply_fail(r)?;
+        }
+        if repaired_any {
+            self.grow_back()?;
+            self.try_admit()?;
+            self.defragment()?;
+        }
         Ok(())
     }
 
@@ -915,8 +1164,8 @@ impl<'a> Fleet<'a> {
                 JobPolicy::Adaptive => {
                     let rb = self.rollback_of(self.running[i].progress);
                     let local = self.local_holes(i);
-                    let cur_s = self.step_time(cur.w, cur.h, &local)?;
-                    let tgt_s = self.step_time(target.w, target.h, &[])?;
+                    let cur_s = self.step_time(&cur, &local)?;
+                    let tgt_s = self.step_time(&target, &[])?;
                     match (cur_s, tgt_s) {
                         (Some(cs), Some(ts)) => {
                             let one_off = (self.cfg.restart_steps + self.cfg.migrate_steps) * ts;
@@ -1004,8 +1253,30 @@ impl<'a> Fleet<'a> {
     fn handle_event(&mut self, ev: TimedEvent) -> Result<(), FleetError> {
         let t0 = Instant::now();
         let res = match ev.event {
-            ClusterEvent::Fail(r) => self.on_fail(r),
-            ClusterEvent::Repair(r) => self.on_repair(r),
+            ClusterEvent::Fail(r) => {
+                if self.phys.is_some() {
+                    self.on_phys_fail(r)
+                } else {
+                    self.on_fail(r)
+                }
+            }
+            ClusterEvent::Repair(r) => {
+                if self.phys.is_some() {
+                    self.on_phys_repair(r)
+                } else {
+                    self.on_repair(r)
+                }
+            }
+            ClusterEvent::Reconfig => {
+                // Operator-forced heal: adopt the planner's remap
+                // without polling the affected jobs. Meaningless
+                // without spares.
+                if self.phys.is_some() {
+                    self.maybe_reconfigure(true)
+                } else {
+                    Ok(())
+                }
+            }
             ClusterEvent::CheckpointTick | ClusterEvent::Stop => {
                 // Checkpoints are an implicit cadence here; operator
                 // stop is a single-job concept the fleet ignores.
@@ -1045,8 +1316,9 @@ impl<'a> Fleet<'a> {
         for i in 0..self.running.len() {
             let rect = self.rect(i);
             let local = self.local_holes(i);
-            let key = Self::sim_key(rect.w, rect.h, &local);
-            let ok = self.ensure_sim(&key)?;
+            let sub = self.submap_for(&rect);
+            let key = Self::sim_key(rect.w, rect.h, &local, sub.as_ref());
+            let ok = self.ensure_sim(&key, sub.as_ref())?;
             keys.push((rect, key, ok, self.running[i].pause > 0.0));
         }
         // Unchanged placement signature ⇒ unchanged loads, and the
@@ -1480,6 +1752,7 @@ impl<'a> Fleet<'a> {
                 queue_waits: self.queue_waits,
                 backfills: self.backfills,
                 transitions: self.transitions,
+                rewires: self.rewires,
                 mean_dilation,
                 max_dilation: self.max_dilation.max(1.0),
                 contention_epochs: self.contention_epochs,
@@ -1565,7 +1838,10 @@ pub fn run_with_cache(cfg: &FleetConfig) -> Result<(FleetRun, PlanCache), FleetE
     let mut site_pick_s = 0.0;
     if let Some(m) = &cfg.mtbf {
         let t0 = Instant::now();
-        timeline.extend(m.generate(cfg.nx, cfg.ny, cfg.horizon));
+        // Failures strike the *physical* mesh — spare rows/columns are
+        // just as mortal as the logical rectangle they protect.
+        let (gx, gy) = cfg.phys_dims();
+        timeline.extend(m.generate(gx, gy, cfg.horizon));
         site_pick_s = t0.elapsed().as_secs_f64();
     }
     let (mut run, cache) = match cfg.clock {
@@ -1906,6 +2182,71 @@ mod tests {
         let placements =
             run.events.iter().filter(|(_, e)| e.starts_with("job 0 placed")).count();
         assert!(placements >= 2, "events: {:?}", run.events);
+    }
+
+    #[test]
+    fn reconfigure_without_spares_matches_continue() {
+        // Containment: with no spares provisioned, Reconfigure's
+        // degraded ladder IS continue-FT — the runs must be
+        // bit-identical (satellite: graceful degradation).
+        let mut cfg = tiny_cfg();
+        cfg.events = vec![fail_at(40, Rect::new(0, 0, 2, 2)), repair_at(90, Rect::new(0, 0, 2, 2))];
+        cfg.policy = Some(JobPolicy::Continue);
+        let cont = run_fleet(&cfg).unwrap();
+        cfg.policy = Some(JobPolicy::Reconfigure);
+        let reco = run_fleet(&cfg).unwrap();
+        assert_eq!(cont.events, reco.events, "trace must match bit-for-bit");
+        assert_eq!(cont.summary.goodput.to_bits(), reco.summary.goodput.to_bits());
+        assert_eq!(
+            cont.summary.mean_utilization.to_bits(),
+            reco.summary.mean_utilization.to_bits()
+        );
+        assert_eq!(cont.summary.rewires, 0);
+        assert_eq!(reco.summary.rewires, 0);
+    }
+
+    #[test]
+    fn spared_fleet_heals_then_degrades_when_spares_run_out() {
+        // 8x8 logical + 2 spare columns (10x8 physical). First board
+        // failure retires two physical columns — the heal absorbs it
+        // and no job sees a hole. The second and third failures exceed
+        // the spare budget, so their logical images surface and the
+        // Reconfigure jobs degrade gracefully to continue-FT. The run
+        // must complete (invariants are Err-checked every step).
+        let mut cfg = tiny_cfg();
+        cfg.spare_cols = 2;
+        cfg.policy = Some(JobPolicy::Reconfigure);
+        cfg.events = vec![
+            fail_at(30, Rect::new(0, 0, 2, 2)),
+            fail_at(70, Rect::new(4, 0, 2, 2)),
+            fail_at(100, Rect::new(6, 4, 2, 2)),
+        ];
+        let run = run_fleet(&cfg).unwrap();
+        assert_eq!(run.summary.rewires, 1, "events: {:?}", run.events);
+        assert!(run.events.iter().any(|(_, e)| e.starts_with("reconfigured")));
+        // The healed failure never surfaced as a logical hole (the
+        // only x0:0 fail line is the physical one)...
+        assert!(!run.events.iter().any(|(_, e)| e.starts_with("fail")
+            && e.contains("x0: 0,")
+            && !e.contains("physical")));
+        // ...but the over-budget ones did, and FT absorbed them.
+        assert!(run.summary.ft_continues > 0, "events: {:?}", run.events);
+        assert!(run.summary.goodput > 0.0);
+    }
+
+    #[test]
+    fn spared_fleet_run_is_deterministic() {
+        let mut cfg = tiny_cfg();
+        cfg.spare_cols = 2;
+        cfg.spare_rows = 2;
+        cfg.policy = Some(JobPolicy::Adaptive);
+        cfg.mtbf = Some(MtbfModel::board(11, 25.0, 40.0));
+        let a = run_fleet(&cfg).unwrap();
+        let b = run_fleet(&cfg).unwrap();
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.summary.goodput.to_bits(), b.summary.goodput.to_bits());
+        assert_eq!(a.summary.rewires, b.summary.rewires);
+        assert_eq!(a.summary.transitions, b.summary.transitions);
     }
 
     #[test]

@@ -278,7 +278,13 @@ impl TrainedFleet {
                     let rect = self.jobs[i].rect;
                     let Some(cut) = placer::intersect(&rect, &region) else { continue };
                     match self.jobs[i].spec.policy {
-                        JobPolicy::Continue => self.jobs[i].continue_ft(cut)?,
+                        // The trained fleet provisions no spares, so a
+                        // reconfigure vote degrades to continue-FT —
+                        // the same fallback the simulated engine takes
+                        // with the spare budget exhausted.
+                        JobPolicy::Continue | JobPolicy::Reconfigure => {
+                            self.jobs[i].continue_ft(cut)?
+                        }
                         JobPolicy::Shrink => self.shrink_job(i, cut)?,
                         // Queue-wait has no meaning for a lockstep
                         // trained fleet; approximate with migrate.
@@ -300,7 +306,8 @@ impl TrainedFleet {
                     }
                 }
             }
-            ClusterEvent::CheckpointTick | ClusterEvent::Stop => {}
+            // No spares here: a forced reconfigure has nothing to heal.
+            ClusterEvent::Reconfig | ClusterEvent::CheckpointTick | ClusterEvent::Stop => {}
         }
         self.check_invariants()
     }

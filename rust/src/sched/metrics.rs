@@ -91,6 +91,9 @@ pub struct FleetSummary {
     pub backfills: u64,
     /// Fail/repair events replayed.
     pub transitions: u64,
+    /// Heals adopted (link-remap changes), each pausing every running
+    /// job for `FleetConfig::rewire_steps`.
+    pub rewires: u64,
     /// Job-time-weighted mean cross-job contention dilation (1.0 when
     /// contention is off or never binds).
     pub mean_dilation: f64,
@@ -190,6 +193,7 @@ pub fn push_run(report: &mut JsonReport, run: &FleetRun) {
             ("queue_waits", s.queue_waits as f64),
             ("backfills", s.backfills as f64),
             ("transitions", s.transitions as f64),
+            ("rewires", s.rewires as f64),
             ("mean_dilation", s.mean_dilation),
             ("max_dilation", s.max_dilation),
             ("contention_epochs", s.contention_epochs as f64),

@@ -118,17 +118,24 @@ pub enum JobPolicy {
     Migrate,
     /// Release the rectangle and wait in the queue until placeable.
     Wait,
+    /// Vote for reconfigurable-mesh healing: retire the failed chips'
+    /// physical rows/columns onto the fleet's spare budget
+    /// ([`crate::mesh::heal`]) so the job's logical rectangle stays
+    /// hole-free; degrades to continue-FT when spares are exhausted or
+    /// the fleet has none provisioned.
+    Reconfigure,
     /// Pick among the above per event by predicted effective
     /// throughput over the expected time-to-next-event.
     Adaptive,
 }
 
 impl JobPolicy {
-    pub const ALL: [JobPolicy; 5] = [
+    pub const ALL: [JobPolicy; 6] = [
         JobPolicy::Continue,
         JobPolicy::Shrink,
         JobPolicy::Migrate,
         JobPolicy::Wait,
+        JobPolicy::Reconfigure,
         JobPolicy::Adaptive,
     ];
 
@@ -138,6 +145,7 @@ impl JobPolicy {
             JobPolicy::Shrink => "shrink",
             JobPolicy::Migrate => "migrate",
             JobPolicy::Wait => "wait",
+            JobPolicy::Reconfigure => "reconfigure",
             JobPolicy::Adaptive => "adaptive",
         }
     }

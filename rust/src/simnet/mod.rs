@@ -20,5 +20,7 @@ pub mod sim;
 pub mod stats;
 
 pub use link::LinkModel;
-pub use sim::{simulate, simulate_plan, validate_routes, SimError, SimReport};
+pub use sim::{
+    simulate, simulate_plan, simulate_plan_remapped, validate_routes, SimError, SimReport,
+};
 pub use stats::LinkStats;

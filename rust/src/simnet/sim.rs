@@ -11,7 +11,7 @@ use super::link::LinkModel;
 use super::stats::LinkStats;
 use crate::collective::compiled::{CompileError, CompiledSchedule};
 use crate::collective::Schedule;
-use crate::mesh::{Dir, Link, RouteError, Topology};
+use crate::mesh::{Dir, Link, LinkRemap, RouteError, Topology};
 use thiserror::Error;
 
 #[derive(Debug, Error)]
@@ -122,6 +122,34 @@ pub fn validate_routes(plan: &CompiledSchedule, topo: &Topology) -> Result<(), S
 /// replays the admission/contention logic, which depends on the mutable
 /// per-call link and node clocks.
 pub fn simulate_plan(plan: &CompiledSchedule, model: &LinkModel) -> Result<SimReport, SimError> {
+    simulate_plan_spanned(plan, model, None)
+}
+
+/// Simulate a plan compiled against a **healed** logical rectangle
+/// (`mesh::remap`): identical to [`simulate_plan`] except that each
+/// logical link is priced at its physical hop count under `remap` — a
+/// link bypassing `g` retired chips pays `g` extra hops of latency.
+/// Bandwidth terms are unchanged (bypass channels cut through at full
+/// rate), and contention stays exact because distinct logical links
+/// bypass disjoint physical segments. With an identity remap the
+/// result is bit-identical to [`simulate_plan`].
+pub fn simulate_plan_remapped(
+    plan: &CompiledSchedule,
+    model: &LinkModel,
+    remap: &LinkRemap,
+) -> Result<SimReport, SimError> {
+    if (plan.mesh.nx, plan.mesh.ny) != (remap.nx(), remap.ny()) {
+        return Err(SimError::MeshMismatch(plan.mesh.nx, plan.mesh.ny, remap.nx(), remap.ny()));
+    }
+    let spans = remap.link_spans(&plan.mesh);
+    simulate_plan_spanned(plan, model, Some(&spans))
+}
+
+fn simulate_plan_spanned(
+    plan: &CompiledSchedule,
+    model: &LinkModel,
+    spans: Option<&[u32]>,
+) -> Result<SimReport, SimError> {
     if !plan.has_routes {
         return Err(SimError::NoRoutes);
     }
@@ -159,7 +187,10 @@ pub fn simulate_plan(plan: &CompiledSchedule, model: &LinkModel) -> Result<SimRe
             let t = &step.transfers[i];
             let (rs, re) = step.routes[i];
             let route_links = &plan.link_ids[rs..re];
-            let hops = route_links.len();
+            let hops = match spans {
+                None => route_links.len(),
+                Some(s) => route_links.iter().map(|&l| s[l] as usize).sum(),
+            };
             let bytes = 4 * t.len() as u64;
             let dep = node_prev[t.src].max(node_prev[t.dst]);
             let start = route_links.iter().map(|&l| link_free[l]).fold(dep, f64::max);

@@ -1,0 +1,166 @@
+//! Reconfigurable-mesh healing differentials.
+//!
+//! 1. **Healed == pristine, bit for bit.** A fully healed mesh (spare
+//!    rows/columns absorb every failure through [`heal`]) compiles
+//!    against the logical rectangle — the plan must equal the plan of
+//!    a same-size pristine rectangle exactly (schedule, partitions,
+//!    hash), and executing it must produce bit-identical buffers under
+//!    both executors across ≥3 seeds. Healing is a *link-layer* fix:
+//!    nothing about the collective may change.
+//! 2. **Remap-fingerprinted persistence.** Cache entries keyed by a
+//!    link remap round-trip through `PlanCache::{save, load}`; a
+//!    malformed or mismatched remap in the file is an `InvalidData`
+//!    error (never a panic), and a remapped entry never serves a
+//!    remap-free lookup.
+
+use meshreduce::collective::verify::{expected_sum, int_buffer};
+use meshreduce::collective::{
+    execute_compiled_serial, execute_compiled_with, ExecOptions, ExecutorArena, NodeBuffers,
+    PlanCache, Scheme,
+};
+use meshreduce::mesh::{heal, FailedRegion, Topology};
+use std::fs;
+use std::path::PathBuf;
+
+/// Healing scenarios that fully absorb their failures: (physical dims,
+/// logical dims, physical failed regions).
+fn healed_cases() -> Vec<((usize, usize), (usize, usize), Vec<FailedRegion>)> {
+    vec![
+        // Two spare columns absorb a board on the west edge.
+        ((10, 8), (8, 8), vec![FailedRegion::new(0, 0, 2, 2)]),
+        // Two spare rows absorb an interior board.
+        ((8, 10), (8, 8), vec![FailedRegion::new(2, 2, 2, 2)]),
+        // Mixed budget: one board onto columns, one onto rows.
+        ((10, 10), (8, 8), vec![FailedRegion::new(4, 0, 2, 2), FailedRegion::new(0, 4, 2, 2)]),
+    ]
+}
+
+#[test]
+fn healed_plan_is_bit_identical_to_pristine_rectangle() {
+    let payload = 4096;
+    for ((pnx, pny), (nx, ny), failed) in healed_cases() {
+        let outcome = heal(pnx, pny, nx, ny, &failed);
+        assert!(outcome.fully_healed(), "case {pnx}x{pny} -> {nx}x{ny} must heal fully");
+        let remap = outcome.remap;
+        assert!(remap.visible_holes(&failed).is_empty());
+
+        // Healed: the logical topology is the full rectangle.
+        let topo = Topology::full(nx, ny);
+        let mut cache = PlanCache::new(4);
+        let healed = cache
+            .get_remapped(Scheme::FaultTolerant, &topo, payload, Some(&remap))
+            .expect("healed compile");
+        let mut pristine_cache = PlanCache::new(4);
+        let pristine = pristine_cache
+            .get(Scheme::FaultTolerant, &topo, payload)
+            .expect("pristine compile");
+        assert_eq!(*healed, *pristine, "healed plan must equal the pristine rectangle's plan");
+
+        // Same cache, both fingerprints: the two keys are distinct
+        // entries (no cross-contamination), yet hold equal plans.
+        let also_pristine = cache.get(Scheme::FaultTolerant, &topo, payload).unwrap();
+        assert_eq!(cache.stats().misses, 2, "remap is a fingerprint dimension");
+        assert_eq!(*healed, *also_pristine);
+
+        // Executing the healed plan delivers the exact global sum,
+        // bit-identical across the serial and parallel executors.
+        for seed in [11u64, 42, 77] {
+            let fill = || {
+                let mut bufs = NodeBuffers::new(topo.mesh);
+                for node in topo.live_nodes() {
+                    bufs.insert(node, int_buffer(node, payload, seed));
+                }
+                bufs
+            };
+            let mut serial = fill();
+            execute_compiled_serial(&healed, &mut serial, &mut ExecutorArena::new())
+                .expect("serial");
+            let opts = ExecOptions { threads: 3, par_min_elems: 1 };
+            let mut parallel = fill();
+            execute_compiled_with(&healed, &mut parallel, &mut ExecutorArena::new(), &opts)
+                .expect("parallel");
+            let want = expected_sum(&topo, payload, seed);
+            for node in topo.live_nodes() {
+                assert_eq!(serial.get(node).unwrap(), parallel.get(node).unwrap());
+                assert_eq!(serial.get(node).unwrap(), want.as_slice(), "seed {seed}");
+            }
+        }
+    }
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("meshreduce_reconfig_{name}_{}", std::process::id()))
+}
+
+/// One-entry cache: the healed 8x8 FT plan under the (0,0,2,2)-on-10x8
+/// heal, saved to disk. The remap's serialized layout (see persist.rs)
+/// puts the flag byte at offset 53 for this zero-region key.
+fn saved_remapped_cache(name: &str) -> (PathBuf, Vec<u8>, meshreduce::mesh::LinkRemap) {
+    let outcome = heal(10, 8, 8, 8, &[FailedRegion::new(0, 0, 2, 2)]);
+    assert!(outcome.fully_healed());
+    let remap = outcome.remap;
+    let mut cache = PlanCache::new(4);
+    cache
+        .get_remapped(Scheme::FaultTolerant, &Topology::full(8, 8), 1 << 10, Some(&remap))
+        .unwrap();
+    let path = temp_path(name);
+    let written = cache.save(&path, 1).unwrap();
+    assert_eq!(written, 1);
+    let bytes = fs::read(&path).unwrap();
+    (path, bytes, remap)
+}
+
+// Serialized offsets for the single-entry file above: 20-byte header,
+// key nx(8)·ny(8)·scheme(1)·payload(8)·region count(8) = offset 53 for
+// the remap flag, then phys dims (16), col-map len (8) at 70, col-map
+// values at 78.
+const REMAP_FLAG_OFF: usize = 53;
+const COL_MAP_OFF: usize = 78;
+
+#[test]
+fn remapped_cache_entry_round_trips() {
+    let (path, bytes, remap) = saved_remapped_cache("roundtrip");
+    assert_eq!(bytes[REMAP_FLAG_OFF], 1, "remap flag must be set on a remapped key");
+    let mut loaded = PlanCache::load(&path, 4).unwrap();
+    assert_eq!(loaded.stats().persist_loaded, 1);
+    assert_eq!(loaded.stats().persist_rejected, 0);
+    loaded
+        .get_remapped(Scheme::FaultTolerant, &Topology::full(8, 8), 1 << 10, Some(&remap))
+        .unwrap();
+    assert_eq!(loaded.stats().hits, 1, "persisted remapped entry must serve the first visit");
+    // The remap-free fingerprint is a different identity: a plain
+    // lookup of the same topology misses and compiles fresh.
+    loaded.get(Scheme::FaultTolerant, &Topology::full(8, 8), 1 << 10).unwrap();
+    assert_eq!(loaded.stats().hits, 1);
+    assert_eq!(loaded.stats().misses, 1, "remap-free key must not hit the remapped entry");
+    let _ = fs::remove_file(&path);
+}
+
+#[test]
+fn wrong_remap_bytes_error_without_panicking() {
+    // Unknown remap flag.
+    let (path, bytes, _) = saved_remapped_cache("flag");
+    let mut stomped = bytes.clone();
+    stomped[REMAP_FLAG_OFF] = 7;
+    fs::write(&path, &stomped).unwrap();
+    let err = PlanCache::load(&path, 4).expect_err("unknown remap flag must fail");
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+
+    // Non-monotone column map (first entry stomped to equal the
+    // second): LinkRemap::try_from_maps rejects it.
+    let mut stomped = bytes.clone();
+    let second = &bytes[COL_MAP_OFF + 8..COL_MAP_OFF + 16];
+    stomped[COL_MAP_OFF..COL_MAP_OFF + 8].copy_from_slice(second);
+    fs::write(&path, &stomped).unwrap();
+    let err = PlanCache::load(&path, 4).expect_err("non-monotone map must fail");
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+
+    // Truncation inside the remap maps.
+    fs::write(&path, &bytes[..COL_MAP_OFF + 20]).unwrap();
+    let err = PlanCache::load(&path, 4).expect_err("truncated remap must fail");
+    assert!(
+        matches!(err.kind(), std::io::ErrorKind::InvalidData | std::io::ErrorKind::UnexpectedEof),
+        "unexpected error kind: {err:?}"
+    );
+    let _ = fs::remove_file(&path);
+}
