@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Validate a Chrome/Perfetto trace-event JSON emitted by --trace.
+
+Checks, beyond "it parses":
+  - top-level shape: displayTimeUnit + a traceEvents list
+  - timestamps are monotone non-decreasing across the event stream
+  - complete ("X") spans have non-negative durations and nest properly
+    per (pid, tid) track
+  - async ("b"/"e") recovery spans are balanced per (pid, id) and each
+    end is at or after its begin
+  - the trace carries real content: at least one complete span, and at
+    least one recovery-category event (the fleet CI invocation runs
+    with failures, so recoveries must appear)
+
+Exits non-zero with a message on the first violation; prints a short
+summary on success.  Stdlib only.
+"""
+
+import json
+import sys
+
+EPS = 1e-6  # float slack when comparing microsecond stamps
+
+
+def fail(msg):
+    print(f"trace validation FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main(path):
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot load {path}: {e}")
+
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        fail("top level must be an object with a traceEvents list")
+    if doc.get("displayTimeUnit") not in ("ms", "ns"):
+        fail(f"unexpected displayTimeUnit {doc.get('displayTimeUnit')!r}")
+    events = doc["traceEvents"]
+    if not isinstance(events, list) or not events:
+        fail("traceEvents must be a non-empty list")
+
+    spans = 0
+    instants = 0
+    recovery_events = 0
+    last_ts = None
+    # Per-(pid, tid) stack of X-span end times for nesting checks.
+    open_spans = {}
+    # Per-(pid, id) stack of begin timestamps for async balance.
+    open_async = {}
+
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            fail(f"event {i} is not an object")
+        ph = ev.get("ph")
+        if ph == "M":
+            continue  # metadata records carry no timestamp ordering
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)):
+            fail(f"event {i} ({ev.get('name')!r}) has no numeric ts")
+        if last_ts is not None and ts < last_ts - EPS:
+            fail(f"event {i} ts {ts} precedes previous ts {last_ts}")
+        last_ts = ts
+        if ev.get("cat") == "recovery":
+            recovery_events += 1
+        track = (ev.get("pid"), ev.get("tid"))
+        if ph == "X":
+            spans += 1
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                fail(f"X span {i} ({ev.get('name')!r}) has bad dur {dur!r}")
+            stack = open_spans.setdefault(track, [])
+            # Pop finished enclosing spans, then require containment.
+            while stack and ts >= stack[-1] - EPS:
+                stack.pop()
+            if stack and ts + dur > stack[-1] + EPS:
+                fail(
+                    f"X span {i} ({ev.get('name')!r}) on track {track} "
+                    f"overflows its enclosing span"
+                )
+            stack.append(ts + dur)
+        elif ph == "b":
+            key = (ev.get("pid"), ev.get("id"))
+            open_async.setdefault(key, []).append(ts)
+        elif ph == "e":
+            key = (ev.get("pid"), ev.get("id"))
+            stack = open_async.get(key)
+            if not stack:
+                fail(f"async end {i} ({ev.get('name')!r}) id {key} has no begin")
+            begin = stack.pop()
+            if ts < begin - EPS:
+                fail(f"async end {i} at {ts} precedes its begin at {begin}")
+        elif ph == "i":
+            instants += 1
+        else:
+            fail(f"event {i} has unknown phase {ph!r}")
+
+    unclosed = [k for k, v in open_async.items() if v]
+    if unclosed:
+        fail(f"{len(unclosed)} async span(s) never ended, e.g. id {unclosed[0]}")
+    if spans == 0:
+        fail("trace contains no complete (X) spans")
+    if recovery_events == 0:
+        fail("trace contains no recovery-category events")
+
+    print(
+        f"trace OK: {len(events)} events, {spans} spans, {instants} instants, "
+        f"{recovery_events} recovery events"
+    )
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        print("usage: validate_trace.py TRACE.json", file=sys.stderr)
+        sys.exit(2)
+    main(sys.argv[1])

@@ -1,11 +1,26 @@
 //! Dev diagnostic: step-time breakdown of full vs fault-tolerant
 //! schedules at paper scale (32x32, ResNet payload). Used for the
 //! EXPERIMENTS.md §Perf iteration log.
+//!
+//! `--trace PATH` exports the per-schedule step timeline as
+//! Chrome/Perfetto trace-event JSON (one process track per schedule,
+//! one complete span per simulated step) — a quick way to eyeball
+//! where a schedule's makespan goes.
 use meshreduce::collective::{build_schedule, Scheme};
 use meshreduce::mesh::{FailedRegion, Topology};
+use meshreduce::obs::TraceHandle;
 use meshreduce::simnet::{simulate, LinkModel};
+use std::path::Path;
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let trace_path = args
+        .iter()
+        .position(|a| a == "--trace")
+        .and_then(|i| args.get(i + 1))
+        .map(|s| Path::new(s.as_str()).to_path_buf());
+    let trace = trace_path.as_ref().map(|_| TraceHandle::new());
+
     let link = LinkModel::tpu_v3();
     let payload = 25_560_000usize;
     let full = Topology::full(32, 32);
@@ -14,6 +29,17 @@ fn main() {
         let s = build_schedule(Scheme::FaultTolerant, topo, payload).unwrap();
         let t0 = std::time::Instant::now();
         let r = simulate(&s, topo, &link).unwrap();
+        if let Some(t) = &trace {
+            // One track per schedule; step k spans [sum(t_0..k), +t_k),
+            // simulated seconds rendered as microseconds.
+            let pid = t.alloc_pid(&format!("diag {name} 32x32"));
+            let mut at_us = 0.0;
+            for (i, &step_s) in r.step_times_s.iter().enumerate() {
+                let dur_us = step_s * 1e6;
+                t.span(pid, 0, &format!("step {i}"), at_us, dur_us, &[]);
+                at_us += dur_us;
+            }
+        }
         // top 10 step durations
         let mut st: Vec<(usize, f64)> = r.step_times_s.iter().copied().enumerate().collect();
         st.sort_by(|a,b| b.1.partial_cmp(&a.1).unwrap());
@@ -22,5 +48,18 @@ fn main() {
         println!("  top steps: {:?}", &st[..8.min(st.len())].iter().map(|(i,t)| (*i, (t*1e6) as u64)).collect::<Vec<_>>());
         let total_top: f64 = st.iter().take(50).map(|x| x.1).sum();
         println!("  sum top50 = {:.3}ms", total_top*1e3);
+    }
+    if let (Some(path), Some(t)) = (&trace_path, &trace) {
+        if let Err(e) = t.check_wellformed() {
+            eprintln!("trace is malformed: {e}");
+            std::process::exit(1);
+        }
+        match t.write(path) {
+            Ok(()) => eprintln!("trace written to {} ({} events)", path.display(), t.len()),
+            Err(e) => {
+                eprintln!("failed to write trace: {e}");
+                std::process::exit(1);
+            }
+        }
     }
 }

@@ -8,6 +8,14 @@
 //!     cargo run --release --bin fleet -- --mesh 16x32 --jobs 8 --horizon 2000 \
 //!         --mtbf 250 --policies continue-ft,migrate,adaptive --plan-cache fleet.plans
 //!     cargo run --release --bin fleet -- --spares 2x2 --policies reconfigure,adaptive
+//!     cargo run --release --bin fleet -- --quick --trace trace_fleet.json --profile
+//!
+//! `--trace PATH` exports a Chrome/Perfetto trace-event JSON of the
+//! run (job lifetime spans, recovery-phase spans, fleet events,
+//! plan-cache hits/compiles), validated for well-formedness before it
+//! is written; `--profile` prints the per-phase wall-time breakdown of
+//! each policy's run. Both are observers — results are bit-identical
+//! with them on or off.
 //!
 //! `--spares RxC` provisions R spare rows and C spare columns beyond
 //! the logical mesh: failures strike the physical mesh, and the
@@ -23,8 +31,11 @@
 //! one `fleet_<policy>` summary entry per policy (utilization, JCT,
 //! goodput, migration/shrink/backfill counts, contention dilation,
 //! plan-cache counters), `fleet_<policy>_t<step>`
-//! utilization/goodput/dilation curve samples, and
-//! `fleet_<policy>_hot<i>` per-link-hotspot entries (contention runs).
+//! utilization/goodput/dilation curve samples,
+//! `fleet_<policy>_hot<i>` per-link-hotspot entries (contention runs),
+//! and the typed metrics snapshot: one `fleet_<policy>_metrics` entry
+//! (counters + gauges) plus `fleet_<policy>_hist_<name>` entries for
+//! the recovery-latency, JCT and DES-makespan histograms.
 //!
 //! Exit is non-zero on any placement-invariant violation or (under
 //! `--verify`) plan-cache divergence — the CI gate. With
@@ -34,6 +45,7 @@
 //! first-visit compiles.
 
 use meshreduce::collective::PlanCache;
+use meshreduce::obs::TraceHandle;
 use meshreduce::sched::{
     metrics, run_with_cache, ClockMode, ContentionModel, FleetConfig, JobPolicy,
 };
@@ -109,6 +121,10 @@ fn main() {
     if let Some(path) = cache_path {
         cfg.seed_cache = PlanCache::load_warm_start(path, cfg.cache_cap);
     }
+    let trace_path = get("--trace").map(Path::new);
+    let trace = trace_path.map(|_| TraceHandle::new());
+    cfg.trace = trace.clone();
+    let profile = has("--profile");
 
     let mtbf = cfg.mtbf.as_ref().map(|m| m.mean_failure_steps).unwrap_or(f64::INFINITY);
     eprintln!(
@@ -194,6 +210,14 @@ fn main() {
                 h.mean_occupancy
             );
         }
+        if profile {
+            let pr = &run.profile;
+            println!(
+                "    profile: placement {:.3}s, site-pick {:.3}s, contention {:.3}s, \
+                 drain {:.3}s, executor {:.3}s",
+                pr.placement_s, pr.site_pick_s, pr.contention_s, pr.drain_s, pr.executor_s
+            );
+        }
     }
     if runs.len() >= 2 {
         let best = runs
@@ -204,6 +228,28 @@ fn main() {
             "\nbest goodput: {} ({:.1} worker-steps/fleet-step)",
             best.label, best.summary.goodput
         );
+    }
+
+    // Export the structured trace: well-formedness is part of the CI
+    // contract (spans nest, timestamps are finite), so a malformed
+    // trace fails the run.
+    if let (Some(path), Some(t)) = (trace_path, &trace) {
+        if let Err(e) = t.check_wellformed() {
+            eprintln!("trace is malformed: {e}");
+            std::process::exit(1);
+        }
+        match t.write(path) {
+            Ok(()) => eprintln!(
+                "trace written to {} ({} events, {} dropped)",
+                path.display(),
+                t.len(),
+                t.dropped()
+            ),
+            Err(e) => {
+                eprintln!("failed to write trace: {e}");
+                std::process::exit(1);
+            }
+        }
     }
 
     // Persist the warm cache for the next process (fleet or sweep).

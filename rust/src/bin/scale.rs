@@ -18,7 +18,10 @@
 //! full-recompute reference paths and any bit-level divergence exits
 //! non-zero. `--profile` adds the per-phase wall-time breakdown
 //! (placement, site-pick, contention, drain, executor) to the output
-//! and the bench record.
+//! and the bench record. `--trace PATH` exports a Chrome/Perfetto
+//! trace-event JSON of the timed cells (one process track per cell's
+//! fleet); tracing is a write-only observer, so results are
+//! bit-identical with it on or off.
 //!
 //! Writes `BENCH_scale.json` (override with `MESHREDUCE_BENCH_JSON`):
 //! one `scale_<nx>x<ny>` entry per cell (chips, jobs, segments,
@@ -28,7 +31,9 @@
 //! below 70% of the floor — the CI regression gate.
 
 use meshreduce::cluster::{aggregate_events_per_sec, run_scale, ScaleConfig};
+use meshreduce::obs::{Registry, TraceHandle};
 use meshreduce::util::bench::JsonReport;
+use std::path::Path;
 
 fn parse_mesh(s: &str) -> Option<(usize, usize)> {
     let (a, b) = s.split_once('x')?;
@@ -67,6 +72,9 @@ fn main() {
         cfg.mtbf = Some(mean);
     }
     let profile = has("--profile");
+    let trace_path = get("--trace").map(Path::new);
+    let trace = trace_path.map(|_| TraceHandle::new());
+    cfg.trace = trace.clone();
     let floor = get("--baseline").map(|path| {
         let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
             eprintln!("cannot read baseline floor {path}: {e}");
@@ -183,6 +191,41 @@ fn main() {
         total_kv.push(("executor_s", executor));
     }
     report.push("scale_total", sim_wall, 0.0, &total_kv);
+
+    // One coherent metrics snapshot for the sweep: deterministic
+    // engine counters plus wall-clock gauges and a per-cell
+    // events/sec histogram (`scale_metrics` / `scale_hist_*`).
+    let mut reg = Registry::new();
+    reg.inc("cells", points.len() as u64);
+    for p in &points {
+        reg.inc("segments", p.segments);
+        reg.inc("contention_epochs", p.contention_epochs);
+        reg.inc("jobs", p.jobs as u64);
+        reg.inc("completed", p.completed as u64);
+        reg.observe("cell_events_per_sec", p.events_per_sec);
+    }
+    reg.set_gauge("wall_s", sim_wall);
+    reg.set_gauge("events_per_sec", agg);
+    reg.push_to(&mut report, "scale");
+
+    if let (Some(path), Some(t)) = (trace_path, &trace) {
+        if let Err(e) = t.check_wellformed() {
+            eprintln!("trace is malformed: {e}");
+            std::process::exit(1);
+        }
+        match t.write(path) {
+            Ok(()) => eprintln!(
+                "trace written to {} ({} events, {} dropped)",
+                path.display(),
+                t.len(),
+                t.dropped()
+            ),
+            Err(e) => {
+                eprintln!("failed to write trace: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
 
     match report.write("BENCH_scale.json") {
         Ok(path) => eprintln!("scale record written to {path} ({wall:.1}s wall)"),

@@ -9,6 +9,13 @@
 //!     cargo run --release --bin sweep -- --mesh 16x32 --seeds 8 \
 //!         --mtbf 400,200,100 --mttr 0.25,0.5,1.0 --region 2x2,4x2,2x4 \
 //!         --horizon 2000 --threads 8 --plan-cache sweep.plans
+//!     cargo run --release --bin sweep -- --quick --trace trace_sweep.json --profile
+//!
+//! `--trace PATH` exports a Chrome/Perfetto trace-event JSON with one
+//! process track per sweep cell (cell span, fail/repair instants,
+//! plan-cache hits/compiles); `--profile` prints the wall-time split
+//! between step-time prediction and ledger replay. Both are observers
+//! — point results are bit-identical with them on or off.
 //!
 //! Writes `BENCH_sweep.json` (override with `MESHREDUCE_BENCH_JSON`):
 //! one entry per `(policy, MTBF, MTTR, region, spares, seed)` point
@@ -30,6 +37,7 @@
 use meshreduce::cluster::{curves, prime_cache, run_sweep, SweepConfig};
 use meshreduce::collective::PlanCache;
 use meshreduce::coordinator::policy::RecoveryPolicy;
+use meshreduce::obs::{Registry, TraceHandle};
 use meshreduce::util::bench::JsonReport;
 use std::path::Path;
 
@@ -107,6 +115,10 @@ fn main() {
     if let Some(path) = cache_path {
         cfg.seed_cache = PlanCache::load_warm_start(path, cfg.cache_cap);
     }
+    let trace_path = get("--trace").map(Path::new);
+    let trace = trace_path.map(|_| TraceHandle::new());
+    cfg.trace = trace.clone();
+    let profile = has("--profile");
 
     eprintln!(
         "MTBF sweep: {}x{} mesh, horizon {} steps, {} seeds x {} MTBF x {} MTTR x {} regions \
@@ -216,6 +228,36 @@ fn main() {
         );
     }
 
+    // One coherent metrics snapshot for the whole grid: deterministic
+    // counters plus wall-clock gauges and a normalized-throughput
+    // histogram, exported as `sweep_metrics` / `sweep_hist_*` entries.
+    let mut reg = Registry::new();
+    reg.inc("points", points.len() as u64);
+    for p in &points {
+        reg.inc("transitions", p.transitions);
+        reg.inc("rewires", p.rewires);
+        reg.inc("cache_hits", p.cache.hits);
+        reg.inc("cache_misses", p.cache.misses);
+        reg.inc("cache_full_compiles", p.cache.full_compiles);
+        reg.inc("cache_incremental_compiles", p.cache.incremental_compiles);
+        reg.observe("normalized_throughput_pct", p.normalized() * 100.0);
+        reg.set_gauge("replay_wall_s", reg.gauge("replay_wall_s").unwrap_or(0.0) + p.wall_s);
+        reg.set_gauge("predict_wall_s", reg.gauge("predict_wall_s").unwrap_or(0.0) + p.predict_s);
+    }
+    reg.push_to(&mut report, "sweep");
+    if profile {
+        let wall_sum: f64 = points.iter().map(|p| p.wall_s).sum();
+        let predict_sum: f64 = points.iter().map(|p| p.predict_s).sum();
+        println!(
+            "\nprofile: {:.3}s cell wall time total, {:.3}s in step-time prediction \
+             ({:.1}%), {:.3}s in ledger replay + policy arbitration",
+            wall_sum,
+            predict_sum,
+            if wall_sum > 0.0 { 100.0 * predict_sum / wall_sum } else { 0.0 },
+            (wall_sum - predict_sum).max(0.0),
+        );
+    }
+
     println!("\nper-policy curves (mean over seeds):");
     let curve_points = curves(&points);
     for c in &curve_points {
@@ -304,6 +346,25 @@ fn main() {
                  with adaptive capturing the win"
             );
             std::process::exit(1);
+        }
+    }
+
+    if let (Some(path), Some(t)) = (trace_path, &trace) {
+        if let Err(e) = t.check_wellformed() {
+            eprintln!("trace is malformed: {e}");
+            std::process::exit(1);
+        }
+        match t.write(path) {
+            Ok(()) => eprintln!(
+                "trace written to {} ({} events, {} dropped)",
+                path.display(),
+                t.len(),
+                t.dropped()
+            ),
+            Err(e) => {
+                eprintln!("failed to write trace: {e}");
+                std::process::exit(1);
+            }
         }
     }
 

@@ -65,6 +65,11 @@ pub struct ScaleConfig {
     /// [`MtbfModel`] board-failure process (mean repair = half the
     /// failure mean) instead of the scripted timeline.
     pub mtbf: Option<f64>,
+    /// Structured tracer sink (`--trace`): each timed cell's fleet
+    /// records onto its own process track. Write-only observer —
+    /// results are bit-identical with tracing on or off; the untimed
+    /// dense `--verify` replays never trace.
+    pub trace: Option<crate::obs::TraceHandle>,
 }
 
 impl ScaleConfig {
@@ -78,6 +83,7 @@ impl ScaleConfig {
             seed: 1,
             verify: false,
             mtbf: None,
+            trace: None,
         }
     }
 
@@ -99,6 +105,7 @@ impl ScaleConfig {
             seed: 1,
             verify: false,
             mtbf: None,
+            trace: None,
         }
     }
 }
@@ -171,6 +178,7 @@ fn cell_config(nx: usize, ny: usize, cfg: &ScaleConfig) -> FleetConfig {
     c.clock = ClockMode::WallClock;
     c.contention = Some(ContentionModel::tpu_default());
     c.backfill = true;
+    c.trace = cfg.trace.clone();
     c
 }
 
@@ -252,6 +260,9 @@ pub fn run_scale(cfg: &ScaleConfig) -> Result<Vec<ScalePoint>, ScaleError> {
             let mut dense_cfg = cell_config(nx, ny, cfg);
             dense_cfg.sparse_occupancy = false;
             dense_cfg.fast_placer = false;
+            // Reference replays are untimed checkers — keep their
+            // duplicate tracks out of the trace.
+            dense_cfg.trace = None;
             if let Some(m) = dense_cfg.mtbf.as_mut() {
                 // The dense site picker replans every even-aligned
                 // board — O(mesh²) per failure — so the full-strength
@@ -321,6 +332,7 @@ mod tests {
             seed: 3,
             verify: true,
             mtbf: None,
+            trace: None,
         };
         let points = run_scale(&cfg).expect("sparse and dense paths agree");
         assert_eq!(points.len(), 1);
@@ -348,6 +360,7 @@ mod tests {
             seed: 5,
             verify: true,
             mtbf: Some(20.0),
+            trace: None,
         };
         let points = run_scale(&cfg).expect("fast and dense engines agree on the MTBF axis");
         let p = &points[0];

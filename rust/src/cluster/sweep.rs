@@ -35,12 +35,14 @@ use crate::coordinator::policy::{
     effective_throughput, largest_submesh, CandidateCost, EventRateEstimator, RecoveryPolicy,
 };
 use crate::mesh::{heal, FailedRegion, LinkRemap, Topology};
+use crate::obs::STEP_US;
 use crate::perfmodel::CandidatePrediction;
 use crate::sched::{run_fleet, ClockMode, ContentionModel, FleetConfig, FleetError};
 use crate::simnet::{simulate_plan, simulate_plan_remapped, LinkModel, SimError};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 use thiserror::Error;
 
 #[derive(Debug, Error)]
@@ -104,6 +106,11 @@ pub struct SweepConfig {
     /// Warm-start cache cloned into every point (e.g. loaded from a
     /// plan-cache file; see `PlanCache::load`).
     pub seed_cache: Option<PlanCache>,
+    /// Structured tracer sink (`--trace`): each cell records onto its
+    /// own process track (the handle is `Send + Sync`, shared across
+    /// the worker threads). Write-only observer — results are
+    /// bit-identical with tracing on or off.
+    pub trace: Option<crate::obs::TraceHandle>,
 }
 
 impl SweepConfig {
@@ -135,6 +142,7 @@ impl SweepConfig {
             cache_cap: 64,
             verify: false,
             seed_cache: None,
+            trace: None,
         }
     }
 
@@ -182,6 +190,7 @@ impl SweepConfig {
             cache_cap: 32,
             verify: false,
             seed_cache: None,
+            trace: None,
         }
     }
 
@@ -259,6 +268,14 @@ pub struct SweepPoint {
     pub min_workers: usize,
     /// Plan-cache counters of this point's replay.
     pub cache: PlanCacheStats,
+    /// Wall seconds spent replaying this cell (measurement only —
+    /// never feeds back into the simulation, excluded from
+    /// determinism comparisons).
+    pub wall_s: f64,
+    /// Wall seconds inside step-time prediction (cache lookup +
+    /// simulation); the rest of `wall_s` is ledger replay and policy
+    /// arbitration. Measurement only, like `wall_s`.
+    pub predict_s: f64,
 }
 
 impl SweepPoint {
@@ -345,6 +362,9 @@ struct Replay<'a> {
     /// bypass-span costs.
     remap_memo: HashMap<(Vec<FailedRegion>, LinkRemap), f64>,
     link: LinkModel,
+    /// Wall seconds spent in step-time prediction (`Instant`
+    /// accumulator — never feeds back into the replay).
+    predict_s: f64,
 }
 
 impl<'a> Replay<'a> {
@@ -360,12 +380,22 @@ impl<'a> Replay<'a> {
             sim_memo: HashMap::new(),
             remap_memo: HashMap::new(),
             link: LinkModel::tpu_v3(),
+            predict_s: 0.0,
         }
     }
 
     /// Predicted seconds per training step on `topo`: modelled compute
-    /// plus the simulated fault-tolerant allreduce.
+    /// plus the simulated fault-tolerant allreduce. Timed wrapper
+    /// around the untimed inner so the identity-remap delegation in
+    /// [`Self::step_time_remapped`] never double-counts `predict_s`.
     fn step_time(&mut self, topo: &Topology) -> Result<f64, SweepError> {
+        let t0 = Instant::now();
+        let r = self.step_time_inner(topo);
+        self.predict_s += t0.elapsed().as_secs_f64();
+        r
+    }
+
+    fn step_time_inner(&mut self, topo: &Topology) -> Result<f64, SweepError> {
         let plan = self.cache.get(Scheme::FaultTolerant, topo, self.cfg.payload)?;
         let mut failed = topo.failed_regions().to_vec();
         failed.sort_unstable();
@@ -388,8 +418,19 @@ impl<'a> Replay<'a> {
         topo: &Topology,
         remap: &LinkRemap,
     ) -> Result<f64, SweepError> {
+        let t0 = Instant::now();
+        let r = self.step_time_remapped_inner(topo, remap);
+        self.predict_s += t0.elapsed().as_secs_f64();
+        r
+    }
+
+    fn step_time_remapped_inner(
+        &mut self,
+        topo: &Topology,
+        remap: &LinkRemap,
+    ) -> Result<f64, SweepError> {
         if remap.is_identity() {
-            return self.step_time(topo);
+            return self.step_time_inner(topo);
         }
         let plan =
             self.cache.get_remapped(Scheme::FaultTolerant, topo, self.cfg.payload, Some(remap))?;
@@ -420,7 +461,21 @@ impl<'a> Replay<'a> {
 /// changes. `spares == (0, 0)` reproduces the unspared replay
 /// bit-for-bit.
 pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, SweepError> {
+    let cell_t0 = Instant::now();
     let SweepCell { policy, mtbf_steps: mtbf, mttr_frac, region, spares, seed } = cell;
+    // One tracer process track per cell, named after its grid
+    // coordinates; the handle is shared across the sweep's worker
+    // threads (pid allocation is the only synchronised step).
+    let trace_pid = cfg.trace.as_ref().map(|t| {
+        t.alloc_pid(&format!(
+            "sweep {} mtbf={mtbf} mttr={mttr_frac} region={}x{} spares={}r{}c seed={seed}",
+            policy.name(),
+            region.0,
+            region.1,
+            spares.0,
+            spares.1,
+        ))
+    });
     let (nx, ny) = (cfg.nx, cfg.ny);
     let (spare_rows, spare_cols) = spares;
     let (pnx, pny) = (nx + spare_cols, ny + spare_rows);
@@ -436,6 +491,9 @@ pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, Swe
     let ckpt_every = cfg.checkpoint_every.max(1);
 
     let mut replay = Replay::new(cfg);
+    if let (Some(t), Some(pid)) = (&cfg.trace, trace_pid) {
+        replay.cache.set_trace(Some(t.clone()), pid);
+    }
     let healthy_step = replay.step_time(&Topology::full(nx, ny))?;
     let full_workers = nx * ny;
     let full_throughput = full_workers as f64 / healthy_step;
@@ -466,6 +524,12 @@ pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, Swe
             wall += dt * step_s;
         }
         prev_t = ev.at_step;
+        if let (Some(t), Some(pid)) = (&cfg.trace, trace_pid) {
+            // Stamp the cache's ambient clock so its plan-hit/compile
+            // instants land at this event's modelled time.
+            replay.cache.trace_now(ev.at_step as f64 * STEP_US);
+            t.instant(pid, 0, ev.event.name(), ev.at_step as f64 * STEP_US, &[]);
+        }
         cluster.apply(&ev.event).expect("MTBF timelines replay validly");
         if stopped {
             continue;
@@ -689,6 +753,24 @@ pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, Swe
     }
 
     let eff_throughput = if wall > 0.0 { useful / wall } else { 0.0 };
+    if let (Some(t), Some(pid)) = (&cfg.trace, trace_pid) {
+        // One complete span covering the cell's modelled horizon, with
+        // the headline outcome attached as args.
+        t.span(
+            pid,
+            0,
+            &format!("cell {}", policy.name()),
+            0.0,
+            cfg.horizon as f64 * STEP_US,
+            &[
+                ("transitions", transitions as f64),
+                ("rewires", rewires as f64),
+                ("min_workers", min_workers as f64),
+                ("eff_throughput", eff_throughput),
+            ],
+        );
+        replay.cache.set_trace(None, 0);
+    }
     Ok(SweepPoint {
         policy,
         mtbf_steps: mtbf,
@@ -702,6 +784,8 @@ pub fn replay_cell(cfg: &SweepConfig, cell: SweepCell) -> Result<SweepPoint, Swe
         rewires,
         min_workers,
         cache: replay.cache.stats().clone(),
+        wall_s: cell_t0.elapsed().as_secs_f64(),
+        predict_s: replay.predict_s,
     })
 }
 

@@ -232,6 +232,15 @@ pub struct PlanCache {
     /// context for the next adjacent topology.
     last: Option<PlanKey>,
     stats: PlanCacheStats,
+    /// Structured-trace sink ([`crate::obs`]): when set, hits,
+    /// validation evictions and compiles emit instants on the owner's
+    /// trace track. Write-only observer — never read by the cache.
+    trace: Option<crate::obs::TraceHandle>,
+    trace_pid: u32,
+    /// Ambient sim-time stamp (trace µs) for the next access, set by
+    /// the owning simulation via [`Self::trace_now`]. The cache has no
+    /// sim clock of its own.
+    trace_now_us: f64,
 }
 
 impl Default for PlanCache {
@@ -260,6 +269,29 @@ impl PlanCache {
             slots: HashMap::new(),
             last: None,
             stats: PlanCacheStats::default(),
+            trace: None,
+            trace_pid: 0,
+            trace_now_us: 0.0,
+        }
+    }
+
+    /// Attach a structured-trace sink: subsequent hits, validation
+    /// evictions and compiles emit instants on `(pid, tid 0)` stamped
+    /// with the time last given to [`Self::trace_now`].
+    pub fn set_trace(&mut self, trace: Option<crate::obs::TraceHandle>, pid: u32) {
+        self.trace = trace;
+        self.trace_pid = pid;
+    }
+
+    /// Advance the ambient sim-time stamp (trace µs) for upcoming
+    /// accesses. No-op cheap when no trace is attached.
+    pub fn trace_now(&mut self, now_us: f64) {
+        self.trace_now_us = now_us;
+    }
+
+    fn trace_instant(&self, name: &str) {
+        if let Some(t) = &self.trace {
+            t.instant(self.trace_pid, 0, name, self.trace_now_us, &[]);
         }
     }
 
@@ -332,6 +364,7 @@ impl PlanCache {
             // live chips on *this* topology.
             if validate_routes(&plan, topo).is_ok() {
                 self.stats.hits += 1;
+                self.trace_instant("plan-hit");
                 if self.verify {
                     let (fresh, _) = compile_full(scheme, topo, payload)?;
                     if *plan != fresh {
@@ -343,6 +376,7 @@ impl PlanCache {
             }
             self.slots.remove(&key);
             self.stats.validation_evictions += 1;
+            self.trace_instant("plan-evict");
         }
         self.stats.misses += 1;
         let (plan, ft) = self.compile_for(scheme, topo, payload)?;
@@ -379,6 +413,7 @@ impl PlanCache {
                         self.stats.incremental_compiles += 1;
                         self.stats.splice_steps_total += report.steps_total as u64;
                         self.stats.splice_steps_hit += report.steps_spliced as u64;
+                        self.trace_instant("plan-compile-incremental");
                         return Ok((plan, Some(Arc::new(ftp))));
                     }
                     // e.g. the delta makes the scheme unschedulable in a
@@ -392,6 +427,7 @@ impl PlanCache {
         let t0 = Instant::now();
         let (plan, ft) = compile_full(scheme, topo, payload)?;
         self.stats.compile_s += t0.elapsed().as_secs_f64();
+        self.trace_instant("plan-compile-full");
         Ok((plan, ft.map(Arc::new)))
     }
 

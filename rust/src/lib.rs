@@ -23,6 +23,7 @@ pub mod config;
 pub mod coordinator;
 pub mod figures;
 pub mod mesh;
+pub mod obs;
 pub mod perfmodel;
 pub mod simnet;
 pub mod rings;

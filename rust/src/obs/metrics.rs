@@ -1,0 +1,342 @@
+//! Typed metrics registry: counters, gauges, and log-bucketed
+//! histograms behind string names.
+//!
+//! The registry is the single snapshot a driver emits into its BENCH
+//! artifact, replacing the ad-hoc counter structs that each grew
+//! their own reporting path. Conventions:
+//!
+//! - **Counters** (`u64`) are deterministic event tallies (recoveries
+//!   by kind, DES simulations, cache hits, hotspot truncation). Equal
+//!   configs produce equal counters — the differential test relies on
+//!   this.
+//! - **Gauges** (`f64`) hold last-written values, including
+//!   wall-clock measurements (profile phase seconds). Gauges are
+//!   *excluded* from run-equivalence comparisons for exactly that
+//!   reason.
+//! - **Histograms** bucket deterministic modelled quantities
+//!   (recovery latencies in fleet steps, JCTs, DES makespans) on a
+//!   geometric grid with an overflow bucket; counts are conserved and
+//!   bounds strictly increase (property-tested).
+
+use std::collections::BTreeMap;
+
+use crate::util::bench::JsonReport;
+
+/// Fixed-bucket histogram: `bounds` are strictly increasing upper
+/// edges; `counts` has one extra slot for overflow, so
+/// `counts.len() == bounds.len() + 1` always holds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// Geometric bucket grid: upper edges `first, first*factor, ...`
+    /// (`n` of them) plus the overflow bucket. Requires `first > 0`
+    /// and `factor > 1` so the bounds strictly increase.
+    pub fn log_buckets(first: f64, factor: f64, n: usize) -> Self {
+        assert!(first > 0.0 && factor > 1.0 && n > 0, "log_buckets needs first>0, factor>1, n>0");
+        let mut bounds = Vec::with_capacity(n);
+        let mut edge = first;
+        for _ in 0..n {
+            bounds.push(edge);
+            edge *= factor;
+        }
+        let counts = vec![0; n + 1];
+        Histogram { bounds, counts, count: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Observe one value: it lands in the first bucket whose upper
+    /// edge is `>= v`, or in the overflow bucket.
+    pub fn observe(&mut self, v: f64) {
+        let idx =
+            self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Bucket upper edges (excludes the implicit overflow bucket).
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket counts; the final slot is the overflow bucket.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+}
+
+/// Named metrics: one registry per run (or per driver), merged into
+/// the BENCH artifact via [`Registry::push_to`].
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `by` to the named counter (created at 0).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set the named gauge to its latest value.
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Observe into the named histogram, creating it with the default
+    /// fleet-step grid (1..2^23 steps, factor 2) on first use.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.hists
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::log_buckets(1.0, 2.0, 24))
+            .observe(v);
+    }
+
+    /// Pre-register a histogram with a custom bucket grid.
+    pub fn register_hist(&mut self, name: &str, hist: Histogram) {
+        self.hists.entry(name.to_string()).or_insert(hist);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn histograms(&self) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.hists.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Merge another registry into this one: counters add, gauges
+    /// overwrite, histograms with matching grids merge bucket-wise.
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.hists {
+            match self.hists.get_mut(k) {
+                Some(mine) if mine.bounds == h.bounds => {
+                    for (c, o) in mine.counts.iter_mut().zip(&h.counts) {
+                        *c += o;
+                    }
+                    mine.count += h.count;
+                    mine.sum += h.sum;
+                    mine.min = mine.min.min(h.min);
+                    mine.max = mine.max.max(h.max);
+                }
+                Some(_) | None => {
+                    self.hists.insert(k.clone(), h.clone());
+                }
+            }
+        }
+    }
+
+    /// True when both runs recorded identical deterministic metrics:
+    /// equal counters and bit-equal histograms. Gauges carry
+    /// wall-clock measurements and are deliberately ignored.
+    pub fn deterministic_eq(&self, other: &Registry) -> bool {
+        if self.counters != other.counters || self.hists.len() != other.hists.len() {
+            return false;
+        }
+        self.hists.iter().zip(&other.hists).all(|((ka, a), (kb, b))| {
+            ka == kb
+                && a.bounds.iter().zip(&b.bounds).all(|(x, y)| x.to_bits() == y.to_bits())
+                && a.counts == b.counts
+                && a.count == b.count
+                && a.sum.to_bits() == b.sum.to_bits()
+        })
+    }
+
+    /// Emit the snapshot into a BENCH report: one `<prefix>_metrics`
+    /// entry carrying every counter and gauge, plus one
+    /// `<prefix>_hist_<name>` entry per histogram with its summary
+    /// stats and per-bucket edges (`le<i>`) and counts (`b<i>`).
+    pub fn push_to(&self, report: &mut JsonReport, prefix: &str) {
+        let mut kv: Vec<(String, f64)> = Vec::new();
+        for (k, v) in &self.counters {
+            kv.push((k.clone(), *v as f64));
+        }
+        for (k, v) in &self.gauges {
+            kv.push((k.clone(), *v));
+        }
+        if !kv.is_empty() {
+            let refs: Vec<(&str, f64)> = kv.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+            report.push(&format!("{prefix}_metrics"), 0.0, 0.0, &refs);
+        }
+        for (name, h) in &self.hists {
+            let mut hv: Vec<(String, f64)> = vec![
+                ("count".to_string(), h.count as f64),
+                ("sum".to_string(), h.sum),
+                ("mean".to_string(), h.mean()),
+                ("min".to_string(), h.min()),
+                ("max".to_string(), h.max()),
+            ];
+            for (i, (edge, c)) in h.bounds.iter().zip(&h.counts).enumerate() {
+                if *c > 0 {
+                    hv.push((format!("le{i}"), *edge));
+                    hv.push((format!("b{i}"), *c as f64));
+                }
+            }
+            let overflow = h.counts[h.bounds.len()];
+            if overflow > 0 {
+                hv.push(("overflow".to_string(), overflow as f64));
+            }
+            let refs: Vec<(&str, f64)> = hv.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+            report.push(&format!("{prefix}_hist_{name}"), 0.0, 0.0, &refs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_bucket_bounds_strictly_increase() {
+        let h = Histogram::log_buckets(1.0, 2.0, 24);
+        assert_eq!(h.bounds().len(), 24);
+        assert_eq!(h.counts().len(), 25);
+        for w in h.bounds().windows(2) {
+            assert!(w[0] < w[1], "bounds must strictly increase: {w:?}");
+        }
+    }
+
+    #[test]
+    fn histogram_counts_are_conserved() {
+        let mut h = Histogram::log_buckets(1.0, 2.0, 9);
+        let values = [0.0, 0.5, 1.0, 1.5, 3.0, 100.0, 1e9, 255.9, 256.0, 256.1];
+        for v in values {
+            h.observe(v);
+        }
+        let bucketed: u64 = h.counts().iter().sum();
+        assert_eq!(bucketed, h.count());
+        assert_eq!(h.count(), values.len() as u64);
+        // Values above the last edge (1 * 2^8 = 256) overflow.
+        assert_eq!(h.counts()[9], 2); // 1e9 and 256.1
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 1e9);
+    }
+
+    #[test]
+    fn zero_lands_in_first_bucket() {
+        let mut h = Histogram::log_buckets(1.0, 2.0, 4);
+        h.observe(0.0);
+        assert_eq!(h.counts()[0], 1);
+    }
+
+    #[test]
+    fn registry_roundtrip_and_determinism() {
+        let build = || {
+            let mut r = Registry::new();
+            r.inc("recoveries", 3);
+            r.inc("recoveries", 2);
+            r.observe("latency_steps", 7.0);
+            r.observe("latency_steps", 900.0);
+            r.set_gauge("wall_s", 1.25);
+            r
+        };
+        let a = build();
+        let mut b = build();
+        assert_eq!(a.counter("recoveries"), 5);
+        assert_eq!(a.histogram("latency_steps").unwrap().count(), 2);
+        assert!(a.deterministic_eq(&b));
+        // Gauges differ -> still deterministically equal.
+        b.set_gauge("wall_s", 99.0);
+        assert!(a.deterministic_eq(&b));
+        // Counters differ -> not equal.
+        b.inc("recoveries", 1);
+        assert!(!a.deterministic_eq(&b));
+    }
+
+    #[test]
+    fn merge_adds_counters_and_buckets() {
+        let mut a = Registry::new();
+        a.inc("n", 1);
+        a.observe("h", 2.0);
+        let mut b = Registry::new();
+        b.inc("n", 2);
+        b.observe("h", 1000.0);
+        a.merge(&b);
+        assert_eq!(a.counter("n"), 3);
+        let h = a.histogram("h").unwrap();
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), 1000.0);
+    }
+
+    #[test]
+    fn push_to_emits_metrics_and_hist_entries() {
+        let mut r = Registry::new();
+        r.inc("events", 4);
+        r.observe("lat", 3.0);
+        let mut report = JsonReport::new();
+        r.push_to(&mut report, "fleet_test");
+        let json = report.render();
+        assert!(json.contains("fleet_test_metrics"));
+        assert!(json.contains("fleet_test_hist_lat"));
+        assert!(json.contains("\"events\""));
+    }
+}

@@ -1,0 +1,33 @@
+//! Unified fleet observability: the structured tracer and the typed
+//! metrics registry every driver shares.
+//!
+//! Two substrates, one contract:
+//!
+//! - [`trace`] — a ring-buffered structured tracer recording spans and
+//!   instants stamped with **simulation time** (fleet steps mapped to
+//!   microseconds), exported as Chrome/Perfetto trace-event JSON by
+//!   the `fleet`, `sweep`, `scale` and `diag` binaries' `--trace`
+//!   flag. A [`TraceHandle`] is a cheap clonable handle; everything is
+//!   config-gated (`Option<TraceHandle>`) so the cost when off is one
+//!   branch per hook.
+//! - [`metrics`] — a typed [`Registry`] of counters, gauges and
+//!   log-bucketed histograms absorbing the ad-hoc counters previously
+//!   scattered across `PlanCacheStats`, `FleetSummary`,
+//!   `FleetProfile` and `simnet::LinkStats`, so each driver emits one
+//!   coherent metrics snapshot into its BENCH artifact.
+//!
+//! The contract (enforced by `rust/tests/obs_differential.rs`): both
+//! substrates are **write-only observers** of the simulation. Nothing
+//! the tracer or the registry records ever feeds back into a
+//! simulation decision, so runs with tracing on and off are
+//! bit-identical — the same differential discipline the sparse
+//! engines and the plan cache already follow. Deterministic values
+//! (counters, histograms of modelled quantities) are identical across
+//! equal-config runs; wall-clock measurements live in gauges, which
+//! run-equivalence checks exclude.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{Histogram, Registry};
+pub use trace::{TraceHandle, STEP_US};

@@ -1,0 +1,454 @@
+//! Ring-buffered structured tracer with Chrome/Perfetto trace-event
+//! JSON export.
+//!
+//! Records are stamped with **simulation time**: one fleet step maps
+//! to [`STEP_US`] microseconds on the trace clock, so a Perfetto
+//! timeline of a fleet run reads directly in fleet steps (1 step =
+//! 1 ms at the default `displayTimeUnit`). Drivers that already work
+//! in seconds (e.g. `diag` step times) convert with `secs * 1e6`.
+//!
+//! The tracer is a bounded ring: when full, the oldest records are
+//! evicted (and counted) rather than growing without bound, so a
+//! long sweep with tracing left on cannot exhaust memory. Process
+//! metadata (`alloc_pid`) lives outside the ring and is never
+//! evicted — a truncated trace still names every track.
+//!
+//! [`TraceHandle`] is `Clone + Send + Sync` (an `Arc<Mutex<..>>`), so
+//! the sweep driver's scoped worker threads can all record into one
+//! trace. Every hook in the simulator is gated on
+//! `Option<TraceHandle>`; the off-path cost is a single branch.
+//!
+//! Export uses four trace-event phases:
+//! - `"X"` complete spans (per-(pid,tid) duration events; must nest),
+//! - `"i"` thread-scoped instants,
+//! - `"b"`/`"e"` async nestable spans matched by `(category, id)` —
+//!   used for recovery events, which can overlap on one job track,
+//! - `"M"` `process_name` metadata.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Trace-clock microseconds per fleet step: 1 step = 1000 µs, so the
+/// default `displayTimeUnit: "ms"` shows one step per millisecond.
+pub const STEP_US: f64 = 1000.0;
+
+/// Ring capacity when none is given: enough for a quick fleet run's
+/// full event stream with room to spare, small enough (~6 MB upper
+/// bound) to leave on in long sweeps.
+const DEFAULT_CAPACITY: usize = 65_536;
+
+#[derive(Debug, Clone)]
+struct Record {
+    ph: char,
+    pid: u32,
+    tid: u32,
+    /// Async-span correlation id (phases `b`/`e` only).
+    id: u64,
+    ts_us: f64,
+    dur_us: f64,
+    name: String,
+    args: Vec<(&'static str, f64)>,
+}
+
+#[derive(Debug, Default)]
+struct Tracer {
+    ring: VecDeque<Record>,
+    capacity: usize,
+    /// (pid, display name) pairs; rendered as `process_name` metadata
+    /// ahead of the ring and never evicted.
+    procs: Vec<(u32, String)>,
+    next_pid: u32,
+    next_id: u64,
+    total: u64,
+    dropped: u64,
+}
+
+impl Tracer {
+    fn push(&mut self, rec: Record) {
+        self.total += 1;
+        if self.ring.len() >= self.capacity {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(rec);
+    }
+}
+
+/// Cheap clonable handle onto a shared [`Tracer`] ring.
+///
+/// All simulator hooks take `&Option<TraceHandle>` (or a clone); the
+/// handle is `Send + Sync` so `cluster::sweep`'s worker threads share
+/// one trace.
+#[derive(Clone)]
+pub struct TraceHandle(Arc<Mutex<Tracer>>);
+
+impl fmt::Debug for TraceHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let t = self.0.lock().expect("tracer lock");
+        f.debug_struct("TraceHandle")
+            .field("records", &t.ring.len())
+            .field("capacity", &t.capacity)
+            .field("total", &t.total)
+            .field("dropped", &t.dropped)
+            .finish()
+    }
+}
+
+impl Default for TraceHandle {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceHandle {
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    pub fn with_capacity(capacity: usize) -> Self {
+        TraceHandle(Arc::new(Mutex::new(Tracer {
+            capacity: capacity.max(1),
+            ..Tracer::default()
+        })))
+    }
+
+    /// Allocate a fresh Perfetto process track and name it.
+    pub fn alloc_pid(&self, name: &str) -> u32 {
+        let mut t = self.0.lock().expect("tracer lock");
+        t.next_pid += 1;
+        let pid = t.next_pid;
+        t.procs.push((pid, name.to_string()));
+        pid
+    }
+
+    /// Allocate a correlation id for one async (`b`/`e`) span pair.
+    pub fn alloc_id(&self) -> u64 {
+        let mut t = self.0.lock().expect("tracer lock");
+        t.next_id += 1;
+        t.next_id
+    }
+
+    /// Record a complete (`X`) span on `(pid, tid)`.
+    pub fn span(
+        &self,
+        pid: u32,
+        tid: u32,
+        name: &str,
+        ts_us: f64,
+        dur_us: f64,
+        args: &[(&'static str, f64)],
+    ) {
+        self.0.lock().expect("tracer lock").push(Record {
+            ph: 'X',
+            pid,
+            tid,
+            id: 0,
+            ts_us,
+            dur_us: dur_us.max(0.0),
+            name: name.to_string(),
+            args: args.to_vec(),
+        });
+    }
+
+    /// Record a thread-scoped instant (`i`) on `(pid, tid)`.
+    pub fn instant(
+        &self,
+        pid: u32,
+        tid: u32,
+        name: &str,
+        ts_us: f64,
+        args: &[(&'static str, f64)],
+    ) {
+        self.0.lock().expect("tracer lock").push(Record {
+            ph: 'i',
+            pid,
+            tid,
+            id: 0,
+            ts_us,
+            dur_us: 0.0,
+            name: name.to_string(),
+            args: args.to_vec(),
+        });
+    }
+
+    /// Open an async nestable span (`b`); close with [`Self::end`]
+    /// using the same `(pid, id)`.
+    pub fn begin(&self, pid: u32, tid: u32, name: &str, id: u64, ts_us: f64) {
+        self.0.lock().expect("tracer lock").push(Record {
+            ph: 'b',
+            pid,
+            tid,
+            id,
+            ts_us,
+            dur_us: 0.0,
+            name: name.to_string(),
+            args: Vec::new(),
+        });
+    }
+
+    /// Close the async span opened by [`Self::begin`] with `(pid, id)`.
+    pub fn end(&self, pid: u32, tid: u32, name: &str, id: u64, ts_us: f64) {
+        self.0.lock().expect("tracer lock").push(Record {
+            ph: 'e',
+            pid,
+            tid,
+            id,
+            ts_us,
+            dur_us: 0.0,
+            name: name.to_string(),
+            args: Vec::new(),
+        });
+    }
+
+    /// Records currently held in the ring (excludes evicted ones).
+    pub fn len(&self) -> usize {
+        self.0.lock().expect("tracer lock").ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Records evicted from the ring because it was full.
+    pub fn dropped(&self) -> u64 {
+        self.0.lock().expect("tracer lock").dropped
+    }
+
+    /// Total records ever pushed (held + evicted).
+    pub fn total(&self) -> u64 {
+        self.0.lock().expect("tracer lock").total
+    }
+
+    /// Render the Chrome trace-event JSON document.
+    ///
+    /// Ring records are stably sorted by timestamp so the exported
+    /// `traceEvents` stream is globally monotone (sweep threads append
+    /// out of order; Perfetto tolerates that but our CI validator and
+    /// `chrome://tracing`'s importer are happier sorted). `M` metadata
+    /// comes first at ts 0.
+    pub fn render_json(&self) -> String {
+        let t = self.0.lock().expect("tracer lock");
+        let mut recs: Vec<&Record> = t.ring.iter().collect();
+        recs.sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us));
+        let mut out = String::with_capacity(128 + recs.len() * 96);
+        out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+        let mut first = true;
+        for (pid, name) in &t.procs {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "{{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":{pid},\"tid\":0,\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                json_escape(name)
+            ));
+        }
+        for r in recs {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "{{\"ph\":\"{}\",\"name\":\"{}\",\"pid\":{},\"tid\":{},\"ts\":{}",
+                r.ph,
+                json_escape(&r.name),
+                r.pid,
+                r.tid,
+                json_num(r.ts_us)
+            ));
+            match r.ph {
+                'X' => out.push_str(&format!(",\"dur\":{},\"cat\":\"sim\"", json_num(r.dur_us))),
+                'i' => out.push_str(",\"s\":\"t\",\"cat\":\"sim\""),
+                'b' | 'e' => {
+                    out.push_str(&format!(",\"cat\":\"recovery\",\"id\":\"{}\"", r.id));
+                }
+                _ => {}
+            }
+            if !r.args.is_empty() {
+                out.push_str(",\"args\":{");
+                for (i, (k, v)) in r.args.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(&format!("\"{}\":{}", json_escape(k), json_num(*v)));
+                }
+                out.push('}');
+            }
+            out.push('}');
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Write the rendered JSON document to `path`.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.render_json().as_bytes())
+    }
+
+    /// Structural self-check mirroring the CI validator: finite
+    /// non-negative timestamps, `X` spans properly nested per
+    /// `(pid, tid)`, and `b`/`e` pairs balanced per `(pid, id)` with
+    /// the end at or after the begin.
+    pub fn check_wellformed(&self) -> Result<(), String> {
+        let t = self.0.lock().expect("tracer lock");
+        let mut recs: Vec<&Record> = t.ring.iter().collect();
+        // Same primary order as the export; longer spans first at
+        // equal start so a parent opens before its zero-gap child.
+        recs.sort_by(|a, b| {
+            a.ts_us.total_cmp(&b.ts_us).then(b.dur_us.total_cmp(&a.dur_us))
+        });
+        let mut stacks: std::collections::BTreeMap<(u32, u32), Vec<f64>> =
+            std::collections::BTreeMap::new();
+        let mut open: std::collections::BTreeMap<(u32, u64), f64> =
+            std::collections::BTreeMap::new();
+        const EPS: f64 = 1e-6;
+        for r in recs {
+            if !r.ts_us.is_finite() || r.ts_us < 0.0 {
+                return Err(format!("record '{}' has bad ts {}", r.name, r.ts_us));
+            }
+            match r.ph {
+                'X' => {
+                    if !r.dur_us.is_finite() || r.dur_us < 0.0 {
+                        return Err(format!("span '{}' has bad dur {}", r.name, r.dur_us));
+                    }
+                    let stack = stacks.entry((r.pid, r.tid)).or_default();
+                    while let Some(&end) = stack.last() {
+                        if end <= r.ts_us + EPS {
+                            stack.pop();
+                        } else {
+                            break;
+                        }
+                    }
+                    if let Some(&end) = stack.last() {
+                        if r.ts_us + r.dur_us > end + EPS {
+                            return Err(format!(
+                                "span '{}' [{}, {}] overflows its parent (ends {})",
+                                r.name,
+                                r.ts_us,
+                                r.ts_us + r.dur_us,
+                                end
+                            ));
+                        }
+                    }
+                    stack.push(r.ts_us + r.dur_us);
+                }
+                'b' => {
+                    if open.insert((r.pid, r.id), r.ts_us).is_some() {
+                        return Err(format!("async id {} begun twice", r.id));
+                    }
+                }
+                'e' => match open.remove(&(r.pid, r.id)) {
+                    Some(begin_ts) if r.ts_us + EPS >= begin_ts => {}
+                    Some(begin_ts) => {
+                        return Err(format!(
+                            "async '{}' ends at {} before its begin {}",
+                            r.name, r.ts_us, begin_ts
+                        ));
+                    }
+                    None => return Err(format!("async id {} ended without begin", r.id)),
+                },
+                _ => {}
+            }
+        }
+        if let Some(((_, id), _)) = open.into_iter().next() {
+            return Err(format!("async id {id} begun but never ended"));
+        }
+        Ok(())
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON has no NaN/Infinity literals; clamp non-finite to 0.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        let t = TraceHandle::with_capacity(4);
+        for i in 0..10 {
+            t.instant(1, 0, &format!("e{i}"), i as f64, &[]);
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dropped(), 6);
+        assert_eq!(t.total(), 10);
+        let json = t.render_json();
+        assert!(json.contains("\"e9\""));
+        assert!(!json.contains("\"e5\""));
+    }
+
+    #[test]
+    fn render_is_valid_and_sorted() {
+        let t = TraceHandle::new();
+        let pid = t.alloc_pid("fleet test");
+        t.span(pid, 1, "job 1", 0.0, 5000.0, &[("workers", 16.0)]);
+        t.instant(pid, 0, "arrive", 2000.0, &[]);
+        t.span(pid, 1, "inner", 1000.0, 500.0, &[]);
+        let json = t.render_json();
+        assert!(json.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+        assert!(json.ends_with("]}"));
+        assert!(json.contains("\"process_name\""));
+        // Sorted: the instant at 2000 comes after the span at 1000.
+        let inner = json.find("\"inner\"").unwrap();
+        let arrive = json.find("\"arrive\"").unwrap();
+        assert!(inner < arrive);
+        t.check_wellformed().expect("wellformed");
+    }
+
+    #[test]
+    fn nesting_violation_is_detected() {
+        let t = TraceHandle::new();
+        t.span(1, 1, "a", 0.0, 100.0, &[]);
+        t.span(1, 1, "b", 50.0, 100.0, &[]); // overlaps, not nested
+        assert!(t.check_wellformed().is_err());
+    }
+
+    #[test]
+    fn async_spans_balance() {
+        let t = TraceHandle::new();
+        let id = t.alloc_id();
+        t.begin(1, 2, "recover", id, 10.0);
+        t.end(1, 2, "recover", id, 40.0);
+        t.check_wellformed().expect("balanced");
+        let id2 = t.alloc_id();
+        t.begin(1, 2, "recover", id2, 50.0);
+        assert!(t.check_wellformed().is_err()); // never ended
+    }
+
+    #[test]
+    fn escape_and_nonfinite_args() {
+        let t = TraceHandle::new();
+        t.instant(1, 0, "say \"hi\"\n", 0.0, &[("bad", f64::NAN)]);
+        let json = t.render_json();
+        assert!(json.contains("say \\\"hi\\\"\\n"));
+        assert!(json.contains("\"bad\":0"));
+    }
+}

@@ -15,5 +15,6 @@ pub use mlperf::{paper_rows, PaperRow, Workload};
 pub use steptime::{
     allreduce_time_cached, allreduce_time_s, allreduce_time_shared, contended_step_s,
     contention_dilation, contention_share, predict_candidate, predict_candidate_cached,
-    predict_candidate_shared, predict_row, CandidatePrediction, RowPrediction, StepModel,
+    predict_candidate_shared, predict_row, CandidatePrediction, RecoveryPhases, RowPrediction,
+    StepModel,
 };

@@ -55,6 +55,37 @@ impl StepModel {
     }
 }
 
+/// Modelled latency breakdown for one fleet recovery event, in fleet
+/// steps: detect → policy decision → heal/recompile/migrate → resume.
+///
+/// The fleet simulator charges heal (the configured pause: rebuild,
+/// restart+migrate, or rewire steps) and resume (rolled-back job
+/// steps divided by the post-recovery step rate). Detection and
+/// policy decision are currently modelled as instantaneous — the
+/// fields exist so the observability layer records the full phase
+/// vector now and the Adaptive policy can consume *measured* values
+/// for them later without a schema change.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RecoveryPhases {
+    /// Failure detection latency (modelled 0 today).
+    pub detect_steps: f64,
+    /// Policy arbitration latency (modelled 0 today).
+    pub decide_steps: f64,
+    /// Healing: rebuild / restart(+migrate) / rewire pause charged to
+    /// the job, fleet steps.
+    pub heal_steps: f64,
+    /// Recomputation of rolled-back progress at the post-recovery
+    /// step rate, fleet steps.
+    pub resume_steps: f64,
+}
+
+impl RecoveryPhases {
+    /// End-to-end detect→resume latency, fleet steps.
+    pub fn total_steps(&self) -> f64 {
+        self.detect_steps + self.decide_steps + self.heal_steps + self.resume_steps
+    }
+}
+
 /// The model's output for one paper row: full-mesh (calibrated) and
 /// fault-tolerant (predicted) step models.
 #[derive(Debug, Clone, Copy)]
@@ -359,5 +390,17 @@ mod tests {
         assert!(slowdown > 1.0 && slowdown < 1.08, "slowdown {slowdown}");
         let eff = p.predicted_rel_eff();
         assert!(eff > 0.90 && eff < 1.05, "eff {eff}");
+    }
+
+    #[test]
+    fn recovery_phases_total_sums_all_four() {
+        let p = RecoveryPhases {
+            detect_steps: 1.0,
+            decide_steps: 2.0,
+            heal_steps: 30.0,
+            resume_steps: 4.5,
+        };
+        assert_eq!(p.total_steps(), 37.5);
+        assert_eq!(RecoveryPhases::default().total_steps(), 0.0);
     }
 }

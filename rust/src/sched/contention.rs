@@ -99,6 +99,19 @@ pub struct ShareReport {
     pub contended: Vec<EdgeCharge>,
 }
 
+impl ShareReport {
+    /// Number of contended edges (≥ 2 jobs charging) in this epoch.
+    pub fn contended_edges(&self) -> usize {
+        self.contended.len()
+    }
+
+    /// Highest charged occupancy over the contended edges, 0.0 when
+    /// nothing contends.
+    pub fn peak_occupancy(&self) -> f64 {
+        self.contended.iter().map(|e| e.occupancy).fold(0.0, f64::max)
+    }
+}
+
 /// Sum `(slot, value)` contributions into one entry per slot, sorted
 /// by slot — the sorted-run replacement for hash-map accumulation on
 /// the sparse touched-edge set. The sort is stable, so each slot's f64
@@ -379,5 +392,21 @@ mod tests {
         assert_eq!(cross_cost, Some(0.5 * 0.02 / 0.04));
         // Sorted by slot, no duplicates.
         assert!(l.edges.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+
+    #[test]
+    fn share_report_summaries() {
+        let empty = ShareReport { rates: vec![1.0], contended: Vec::new() };
+        assert_eq!(empty.contended_edges(), 0);
+        assert_eq!(empty.peak_occupancy(), 0.0);
+        let r = ShareReport {
+            rates: vec![0.5, 0.5],
+            contended: vec![
+                EdgeCharge { slot: 3, occupancy: 0.9, jobs: 2 },
+                EdgeCharge { slot: 7, occupancy: 1.4, jobs: 3 },
+            ],
+        };
+        assert_eq!(r.contended_edges(), 2);
+        assert_eq!(r.peak_occupancy(), 1.4);
     }
 }

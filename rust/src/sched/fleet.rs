@@ -49,8 +49,9 @@ use crate::cluster::{ClusterEvent, ClusterState, EventQueue, MtbfModel, TimedEve
 use crate::collective::{PlanCache, PlanCacheStats, PlanError, Scheme};
 use crate::coordinator::policy::{effective_throughput, CandidateCost, EventRateEstimator};
 use crate::mesh::{heal, FailedRegion, LinkRemap, Mesh, Topology};
+use crate::obs::{Registry, STEP_US};
 use crate::perfmodel::steptime;
-use crate::perfmodel::CandidatePrediction;
+use crate::perfmodel::{CandidatePrediction, RecoveryPhases};
 use crate::simnet::{simulate_plan, simulate_plan_remapped, LinkModel};
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
@@ -159,6 +160,12 @@ pub struct FleetConfig {
     /// chips newly mapped into the logical mesh copy parameters from a
     /// live data-parallel peer (no rollback — replicas survive).
     pub rewire_steps: f64,
+    /// Structured tracer sink (`--trace`). The tracer is a write-only
+    /// observer stamped with sim time: `None` (the default) costs one
+    /// branch per hook, and `Some` never perturbs the simulation —
+    /// trace-on and trace-off runs are bit-identical
+    /// (`rust/tests/obs_differential.rs`).
+    pub trace: Option<crate::obs::TraceHandle>,
 }
 
 impl FleetConfig {
@@ -190,6 +197,7 @@ impl FleetConfig {
             spare_rows: 0,
             spare_cols: 0,
             rewire_steps: 10.0,
+            trace: None,
         }
     }
 
@@ -221,6 +229,7 @@ impl FleetConfig {
             spare_rows: 0,
             spare_cols: 0,
             rewire_steps: 10.0,
+            trace: None,
         }
     }
 
@@ -434,6 +443,17 @@ struct Fleet<'a> {
     /// Per-phase wall-time accumulators (`FleetRun::profile`). Never
     /// read by the simulation, so profiling cannot perturb determinism.
     prof: FleetProfile,
+    /// Trace process track for this run (0 until the driver allocates
+    /// one; only meaningful when `cfg.trace` is `Some`).
+    pid: u32,
+    /// Typed metrics registry ([`FleetRun::metrics`]): recovery-latency
+    /// histograms, DES/contention counters, hotspot-truncation counts.
+    /// Write-only during the run, like `prof`.
+    reg: Registry,
+    /// Contended-edge count of the last fully computed link epoch,
+    /// replayed (like the dilations) on the unchanged-placement skip
+    /// path so sparse and dense runs record identical counters.
+    last_epoch_contended: u64,
 }
 
 impl<'a> Fleet<'a> {
@@ -443,6 +463,9 @@ impl<'a> Fleet<'a> {
             None => PlanCache::new(cfg.cache_cap),
         };
         cache.set_verification(cfg.verify);
+        // A seed cache cloned from an earlier run may carry that run's
+        // trace sink; each engine re-attaches under its own pid.
+        cache.set_trace(None, 0);
         let stats_base = cache.stats().clone();
         let (pnx, pny) = cfg.phys_dims();
         Self {
@@ -488,11 +511,99 @@ impl<'a> Fleet<'a> {
             events_log: Vec::new(),
             pidx: cfg.fast_placer.then(|| placer::PlacementIndex::new(cfg.nx, cfg.ny)),
             prof: FleetProfile::default(),
+            pid: 0,
+            reg: Registry::new(),
+            last_epoch_contended: 0,
         }
     }
 
+    /// Current time in fleet steps, valid under both engines: the
+    /// round-robin engine only advances `step` (leaving `now` at 0),
+    /// the wall-clock engine keeps `now >= step`.
+    fn now_steps(&self) -> f64 {
+        self.now.max(self.step as f64)
+    }
+
     fn log(&mut self, msg: String) {
+        if let Some(trace) = &self.cfg.trace {
+            trace.instant(self.pid, 0, &msg, self.now_steps() * STEP_US, &[]);
+        }
         self.events_log.push((self.step, msg));
+    }
+
+    /// Trace thread id for a job track (tid 0 is the fleet-event
+    /// track).
+    fn job_tid(job_id: usize) -> u32 {
+        job_id as u32 + 1
+    }
+
+    /// Record one recovery event: per-phase latency histograms and
+    /// per-action counters in the registry, plus (when tracing) an
+    /// async detect→resume span with phase children on the job's
+    /// track. Async (`b`/`e`) spans are used because consecutive
+    /// recoveries on one job can overlap in modelled time, which
+    /// complete (`X`) spans cannot represent.
+    fn record_recovery(&mut self, job_id: usize, action: &str, phases: RecoveryPhases) {
+        self.reg.inc("recoveries", 1);
+        self.reg.inc(&format!("recovery_{action}"), 1);
+        self.reg.observe("recovery_detect_steps", phases.detect_steps);
+        self.reg.observe("recovery_decide_steps", phases.decide_steps);
+        self.reg.observe("recovery_heal_steps", phases.heal_steps);
+        self.reg.observe("recovery_resume_steps", phases.resume_steps);
+        self.reg.observe("recovery_total_steps", phases.total_steps());
+        if let Some(trace) = &self.cfg.trace {
+            let tid = Self::job_tid(job_id);
+            let t0 = self.now_steps() * STEP_US;
+            let id = trace.alloc_id();
+            trace.begin(self.pid, tid, &format!("recover:{action}"), id, t0);
+            let mut t = t0;
+            for (phase, steps) in [
+                ("detect", phases.detect_steps),
+                ("decide", phases.decide_steps),
+                ("heal", phases.heal_steps),
+                ("resume", phases.resume_steps),
+            ] {
+                if steps > 0.0 {
+                    let pid_span = trace.alloc_id();
+                    trace.begin(self.pid, tid, phase, pid_span, t);
+                    t += steps * STEP_US;
+                    trace.end(self.pid, tid, phase, pid_span, t);
+                }
+            }
+            trace.end(self.pid, tid, &format!("recover:{action}"), id, t);
+        }
+    }
+
+    /// Emit the completed job's arrival→completion lifetime span on
+    /// its trace track (one `X` span per job, so per-track nesting is
+    /// trivially satisfied).
+    fn trace_job_span(&self, job: &Job) {
+        let Some(trace) = &self.cfg.trace else {
+            return;
+        };
+        let done = job.completed_at.expect("traced job completed") as f64;
+        let t0 = job.spec.arrival_step as f64 * STEP_US;
+        let dur = (done - job.spec.arrival_step as f64).max(0.0) * STEP_US;
+        trace.span(
+            self.pid,
+            Self::job_tid(job.spec.id),
+            &format!(
+                "job {} ({}x{} {})",
+                job.spec.id,
+                job.spec.w,
+                job.spec.h,
+                job.spec.policy.name()
+            ),
+            t0,
+            dur,
+            &[
+                ("workers", job.workers as f64),
+                ("migrations", job.migrations as f64),
+                ("shrinks", job.shrinks as f64),
+                ("ft_continues", job.ft_continues as f64),
+                ("waited_steps", job.waited as f64),
+            ],
+        );
     }
 
     fn rect(&self, i: usize) -> Rect {
@@ -540,6 +651,9 @@ impl<'a> Fleet<'a> {
         if !topo.is_connected() {
             return Ok(false);
         }
+        if self.cfg.trace.is_some() {
+            self.cache.trace_now(self.now_steps() * STEP_US);
+        }
         let got = self.cache.get_remapped(Scheme::FaultTolerant, &topo, self.cfg.payload, remap);
         match got {
             Ok(plan) => {
@@ -548,6 +662,11 @@ impl<'a> Fleet<'a> {
                     None => simulate_plan(&plan, &self.link)?,
                 };
                 let step_s = self.cfg.compute_s + report.makespan_s;
+                self.reg.inc("des_sims", 1);
+                self.reg.inc("des_links_used", report.links.links_used() as u64);
+                let busy_acc = self.reg.gauge("des_link_busy_s").unwrap_or(0.0);
+                self.reg.set_gauge("des_link_busy_s", busy_acc + report.links.total_busy_s());
+                self.reg.observe("des_makespan_ms", report.makespan_s * 1e3);
                 let busy: Vec<(usize, f64)> = report.links.busy_slots().collect();
                 self.sim_memo.insert(key.clone(), StepSim { step_s, busy });
                 Ok(true)
@@ -768,10 +887,26 @@ impl<'a> Fleet<'a> {
                 "migrates to"
             }
         };
+        let rate = self.running[i].rate;
         self.log(format!(
             "job {id} {verb} {}x{} at ({},{}) (rolled back {rb:.0} steps)",
             target.w, target.h, target.x0, target.y0
         ));
+        let action = match kind {
+            RestartKind::Shrink => "shrink",
+            RestartKind::Migrate => "migrate",
+        };
+        self.record_recovery(
+            id,
+            action,
+            RecoveryPhases {
+                heal_steps: pause,
+                // Rolled-back job steps redone at the post-recovery
+                // rate, in fleet steps.
+                resume_steps: if rate > 0.0 { rb / rate } else { 0.0 },
+                ..RecoveryPhases::default()
+            },
+        );
         Ok(true)
     }
 
@@ -797,6 +932,14 @@ impl<'a> Fleet<'a> {
                 j.ft_continues += 1;
                 let id = j.spec.id;
                 self.log(format!("job {id} continues fault-tolerant ({workers} workers)"));
+                self.record_recovery(
+                    id,
+                    "continue-ft",
+                    RecoveryPhases {
+                        heal_steps: self.cfg.rebuild_steps,
+                        ..RecoveryPhases::default()
+                    },
+                );
                 Ok(true)
             }
             Action::Shrink => match self.shrink_target(i) {
@@ -830,6 +973,7 @@ impl<'a> Fleet<'a> {
                 j.dilation = 1.0;
                 j.pause = 0.0;
                 self.queue_waits += 1;
+                self.reg.inc("recovery_queue_wait", 1);
                 self.log(format!("job {} releases its rectangle and queues", j.spec.id));
                 self.queue.push_back(j);
                 Ok(true)
@@ -898,6 +1042,7 @@ impl<'a> Fleet<'a> {
         match best {
             Some((e, a)) => {
                 let id = self.running[i].spec.id;
+                self.reg.inc("adaptive_decisions", 1);
                 self.log(format!(
                     "adaptive: job {id} -> {} (predicted effective throughput {e:.1})",
                     a.name()
@@ -1001,6 +1146,14 @@ impl<'a> Fleet<'a> {
                 j.pause += self.cfg.rebuild_steps;
                 let (id, workers) = (j.spec.id, j.workers);
                 self.log(format!("job {id} rejoins repaired chips ({workers} workers)"));
+                self.record_recovery(
+                    id,
+                    "rejoin",
+                    RecoveryPhases {
+                        heal_steps: self.cfg.rebuild_steps,
+                        ..RecoveryPhases::default()
+                    },
+                );
             } else {
                 // Other holes still make the rectangle unschedulable.
                 self.recover(i)?;
@@ -1052,6 +1205,23 @@ impl<'a> Fleet<'a> {
             self.log(format!(
                 "reconfigured: heal #{n} bypasses {bypassed} chips ({unhealed} regions unhealed)"
             ));
+            // The rewire pauses every running job at once, so it is
+            // recorded as one fleet-level recovery on the event track
+            // (tid 0) rather than per job.
+            self.reg.inc("recoveries", 1);
+            self.reg.inc("recovery_reconfigure", 1);
+            self.reg.observe("recovery_detect_steps", 0.0);
+            self.reg.observe("recovery_decide_steps", 0.0);
+            self.reg.observe("recovery_heal_steps", self.cfg.rewire_steps);
+            self.reg.observe("recovery_resume_steps", 0.0);
+            self.reg.observe("recovery_total_steps", self.cfg.rewire_steps);
+            if let Some(trace) = &self.cfg.trace {
+                let t0 = self.now_steps() * STEP_US;
+                let id = trace.alloc_id();
+                trace.begin(self.pid, 0, "recover:reconfigure", id, t0);
+                let t1 = t0 + self.cfg.rewire_steps * STEP_US;
+                trace.end(self.pid, 0, "recover:reconfigure", id, t1);
+            }
         }
         self.sync_visible()
     }
@@ -1330,6 +1500,8 @@ impl<'a> Fleet<'a> {
                 j.dilation = d;
             }
             self.contention_epochs += 1;
+            self.reg.inc("contention_epochs", 1);
+            self.reg.inc("contended_edges", self.last_epoch_contended);
             if self.last_epoch_max > 1.0 + 1e-9 {
                 let n = self.contention_epochs;
                 let (epoch_max, epoch_share) = (self.last_epoch_max, self.last_epoch_share);
@@ -1418,7 +1590,14 @@ impl<'a> Fleet<'a> {
         self.last_epoch_dil = dils;
         self.last_epoch_max = epoch_max;
         self.last_epoch_share = epoch_share;
+        self.last_epoch_contended = report.contended_edges() as u64;
         self.contention_epochs += 1;
+        self.reg.inc("contention_epochs", 1);
+        self.reg.inc("contended_edges", self.last_epoch_contended);
+        let peak = report.peak_occupancy();
+        if peak > self.reg.gauge("peak_edge_occupancy").unwrap_or(0.0) {
+            self.reg.set_gauge("peak_edge_occupancy", peak);
+        }
         if epoch_max > 1.0 + 1e-9 {
             let n = self.contention_epochs;
             self.log(format!(
@@ -1476,6 +1655,7 @@ impl<'a> Fleet<'a> {
             job.completed_at = Some(self.step + 1);
             let (id, migrations) = (job.spec.id, job.migrations);
             self.log(format!("job {id} completes ({migrations} migrations)"));
+            self.trace_job_span(&job);
             self.done.push(job);
         }
         self.prof.executor_s += t0.elapsed().as_secs_f64();
@@ -1601,6 +1781,7 @@ impl<'a> Fleet<'a> {
                 job.completed_at = Some(t1.ceil() as u64);
                 let (id, migrations) = (job.spec.id, job.migrations);
                 self.log(format!("job {id} completes ({migrations} migrations)"));
+                self.trace_job_span(&job);
                 self.done.push(job);
             }
             let resumed = continuous
@@ -1693,7 +1874,7 @@ impl<'a> Fleet<'a> {
         });
     }
 
-    fn finish(self, label: String, arrivals: usize) -> (FleetRun, PlanCache) {
+    fn finish(mut self, label: String, arrivals: usize) -> (FleetRun, PlanCache) {
         let mut jobs: Vec<JobOutcome> = self
             .done
             .iter()
@@ -1736,6 +1917,33 @@ impl<'a> Fleet<'a> {
         } else {
             1.0
         };
+        // Satellite snapshot: top-N hotspot truncation is no longer
+        // silent — the registry records how many candidates existed
+        // and how many the cap dropped.
+        self.reg.inc("hotspot_candidates", hot_idx.len() as u64);
+        self.reg.inc("hotspot_dropped", hot_idx.len().saturating_sub(8) as u64);
+        // Fold the scattered ad-hoc counters into the one snapshot:
+        // summary counters, plan-cache delta, JCT histogram, and the
+        // wall-clock profile phases as gauges.
+        let cache_delta = self.cache.stats().delta(&self.stats_base);
+        self.reg.inc("arrivals", arrivals as u64);
+        self.reg.inc("completed", jcts.len() as u64);
+        self.reg.inc("transitions", self.transitions);
+        self.reg.inc("rewires", self.rewires);
+        self.reg.inc("backfills", self.backfills);
+        self.reg.inc("segments", self.segments);
+        self.reg.inc("cache_hits", cache_delta.hits);
+        self.reg.inc("cache_misses", cache_delta.misses);
+        self.reg.inc("cache_full_compiles", cache_delta.full_compiles);
+        self.reg.inc("cache_incremental_compiles", cache_delta.incremental_compiles);
+        self.reg.inc("cache_evictions", cache_delta.evictions);
+        for jct in &jcts {
+            self.reg.observe("jct_steps", *jct);
+        }
+        self.reg.set_gauge("profile_placement_s", self.prof.placement_s);
+        self.reg.set_gauge("profile_contention_s", self.prof.contention_s);
+        self.reg.set_gauge("profile_drain_s", self.prof.drain_s);
+        self.reg.set_gauge("profile_executor_s", self.prof.executor_s);
         let run = FleetRun {
             label,
             summary: FleetSummary {
@@ -1764,7 +1972,11 @@ impl<'a> Fleet<'a> {
             hotspots,
             events: self.events_log,
             profile: self.prof,
+            metrics: self.reg,
         };
+        // The warmed cache outlives this run (persistence, seed for
+        // the next policy); don't let it keep this run's trace sink.
+        self.cache.set_trace(None, 0);
         (run, self.cache)
     }
 }
@@ -1849,6 +2061,7 @@ pub fn run_with_cache(cfg: &FleetConfig) -> Result<(FleetRun, PlanCache), FleetE
         ClockMode::WallClock => run_wall_clock(cfg, label, specs, timeline, arrivals),
     }?;
     run.profile.site_pick_s = site_pick_s;
+    run.metrics.set_gauge("profile_site_pick_s", site_pick_s);
     Ok((run, cache))
 }
 
@@ -1863,6 +2076,10 @@ fn run_round_robin(
     let mut events = EventQueue::new(timeline);
     let mut pending: VecDeque<JobSpec> = specs.into();
     let mut fleet = Fleet::new(cfg);
+    if let Some(trace) = &cfg.trace {
+        fleet.pid = trace.alloc_pid(&format!("fleet {label} {}x{} rr", cfg.nx, cfg.ny));
+        fleet.cache.set_trace(Some(trace.clone()), fleet.pid);
+    }
 
     for step in 0..cfg.horizon {
         fleet.step = step;
@@ -1941,6 +2158,10 @@ fn run_wall_clock(
     entries.sort_unstable();
 
     let mut fleet = Fleet::new(cfg);
+    if let Some(trace) = &cfg.trace {
+        fleet.pid = trace.alloc_pid(&format!("fleet {label} {}x{} wall", cfg.nx, cfg.ny));
+        fleet.cache.set_trace(Some(trace.clone()), fleet.pid);
+    }
     let horizon = cfg.horizon as f64;
     let mut it = entries.into_iter().peekable();
     loop {

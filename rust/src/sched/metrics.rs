@@ -4,6 +4,7 @@
 
 use super::JobPolicy;
 use crate::collective::PlanCacheStats;
+use crate::obs::Registry;
 use crate::util::bench::JsonReport;
 
 /// One sampled point of the fleet's utilization/goodput curve.
@@ -151,6 +152,12 @@ pub struct FleetRun {
     pub events: Vec<(u64, String)>,
     /// Wall-time breakdown (excluded from run-equivalence checks).
     pub profile: FleetProfile,
+    /// Typed metrics snapshot: recovery-latency histograms, DES and
+    /// contention counters, hotspot-truncation counts, plan-cache
+    /// counters, and the profile phases as gauges. Counters and
+    /// histograms are deterministic; gauges hold wall-clock
+    /// measurements and are excluded from run-equivalence checks.
+    pub metrics: Registry,
 }
 
 /// Mean and median of a (small) sample.
@@ -232,6 +239,10 @@ pub fn push_run(report: &mut JsonReport, run: &FleetRun) {
             ],
         );
     }
+    // The typed metrics snapshot: `fleet_<label>_metrics` plus one
+    // `fleet_<label>_hist_<name>` entry per histogram (recovery
+    // latencies, JCTs, DES makespans).
+    run.metrics.push_to(report, &format!("fleet_{}", run.label));
 }
 
 #[cfg(test)]

@@ -91,6 +91,13 @@ impl LinkStats {
         self.touched.iter().map(|&i| self.bytes[i as usize]).max().unwrap_or(0)
     }
 
+    /// Total busy seconds summed over every touched link — the
+    /// aggregate link-time one simulation charges, exported into the
+    /// fleet's metrics snapshot.
+    pub fn total_busy_s(&self) -> f64 {
+        self.touched.iter().map(|&i| self.busy_s[i as usize]).sum()
+    }
+
     /// Busiest link's busy time; with the makespan this gives the
     /// bottleneck utilisation.
     pub fn max_busy_s(&self) -> f64 {
@@ -127,6 +134,7 @@ mod tests {
         assert_eq!(s.max_bytes(), 150);
         assert_eq!(s.links_used(), 1);
         assert!((s.max_busy_s() - 1.5e-6).abs() < 1e-12);
+        assert!((s.total_busy_s() - 1.5e-6).abs() < 1e-12);
     }
 
     #[test]
