@@ -8,7 +8,14 @@
 //!     cargo run --release --bin fleet -- --mesh 16x32 --jobs 8 --horizon 2000 \
 //!         --mtbf 250 --policies continue-ft,migrate,adaptive --plan-cache fleet.plans
 //!     cargo run --release --bin fleet -- --spares 2x2 --policies reconfigure,adaptive
+//!     cargo run --release --bin fleet -- --quick --serving 2 --contention
 //!     cargo run --release --bin fleet -- --quick --trace trace_fleet.json --profile
+//!
+//! `--serving N` adds N latency-SLO serving jobs (diurnal + bursty
+//! request process, per-job p99 SLO) that preempt training when
+//! `serving_preemption` is on and heal in place across fail/repair;
+//! the summary then reports SLO attainment, serving p99 latency and
+//! the preemption count.
 //!
 //! `--trace PATH` exports a Chrome/Perfetto trace-event JSON of the
 //! run (job lifetime spans, recovery-phase spans, fleet events,
@@ -47,7 +54,7 @@
 use meshreduce::collective::PlanCache;
 use meshreduce::obs::TraceHandle;
 use meshreduce::sched::{
-    metrics, run_with_cache, ClockMode, ContentionModel, FleetConfig, JobPolicy,
+    metrics, run_with_cache, ClockMode, ContentionModel, FleetConfig, JobPolicy, ServingWorkload,
 };
 use meshreduce::util::bench::JsonReport;
 use std::path::Path;
@@ -87,6 +94,15 @@ fn main() {
     }
     if let Some(n) = get("--jobs").and_then(|s| s.parse::<usize>().ok()) {
         cfg.workload.jobs = n;
+    }
+    // `--serving N` adds N latency-SLO serving jobs on top of the
+    // training workload (own RNG stream: the training draw is
+    // untouched); they run to the horizon and heal in place on
+    // fail/repair instead of restarting.
+    if let Some(n) = get("--serving").and_then(|s| s.parse::<usize>().ok()) {
+        if n > 0 {
+            cfg.workload.serving = Some(ServingWorkload::quick(n));
+        }
     }
     if let Some(h) = get("--horizon").and_then(|s| s.parse().ok()) {
         cfg.horizon = h;
@@ -200,6 +216,12 @@ fn main() {
             s.max_dilation,
             s.cache.hit_rate(),
         );
+        if cfg.workload.serving.is_some() {
+            println!(
+                "    serving: SLO attainment {:.4}, p99 latency {:.2} ms, {} preemptions",
+                s.slo_attainment, s.serving_p99_ms, s.preemptions
+            );
+        }
         metrics::push_run(&mut report, run);
         for h in run.hotspots.iter().take(4) {
             println!(

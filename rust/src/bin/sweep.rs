@@ -6,6 +6,7 @@
 //!     cargo run --release --bin sweep -- --verify      # gate: cache hits == fresh compiles
 //!     cargo run --release --bin sweep -- --contour     # MTBF x MTTR x region-shape grid
 //!     cargo run --release --bin sweep -- --reconfig    # spare-ratio x MTBF healing sweep
+//!     cargo run --release --bin sweep -- --serving     # serving share x MTBF x preemption
 //!     cargo run --release --bin sweep -- --mesh 16x32 --seeds 8 \
 //!         --mtbf 400,200,100 --mttr 0.25,0.5,1.0 --region 2x2,4x2,2x4 \
 //!         --horizon 2000 --threads 8 --plan-cache sweep.plans
@@ -27,14 +28,20 @@
 //! regime: some spared cell must have Reconfigure beating
 //! fault-tolerant continue on mean effective throughput with Adaptive
 //! matching it (non-zero exit otherwise — the §Reconfiguration CI
-//! contract).
+//! contract). `--serving` runs the serving-tier grid instead, writes
+//! `BENCH_serving.json`, and gates on the serving-off differential
+//! (zero-share cells inert and preemption-invariant) plus the
+//! preemption frontier (preemption never lowers mean SLO attainment).
 //! With `--verify`, any cached plan that diverges from a fresh compile
 //! aborts with a non-zero exit (the CI gate for cache soundness).
 //! With `--plan-cache PATH`, points warm-start from PATH when it
 //! exists, and a primed cache (healthy mesh + one hole per region
 //! shape) is saved back for the next process.
 
-use meshreduce::cluster::{curves, prime_cache, run_sweep, SweepConfig};
+use meshreduce::cluster::{
+    curves, prime_cache, run_serving_sweep, run_sweep, ServingSweepConfig, ServingSweepPoint,
+    SweepConfig,
+};
 use meshreduce::collective::PlanCache;
 use meshreduce::coordinator::policy::RecoveryPolicy;
 use meshreduce::obs::{Registry, TraceHandle};
@@ -46,8 +53,209 @@ fn parse_mesh(s: &str) -> Option<(usize, usize)> {
     Some((a.parse().ok()?, b.parse().ok()?))
 }
 
+/// `--serving`: the serving-tier sweep (`serving share × MTBF ×
+/// preemption × seed`), written to `BENCH_serving.json`. Two gates
+/// always run (non-zero exit on failure):
+///
+/// 1. **Serving-off differential** — every zero-share cell must show
+///    no serving side effects (attainment exactly 1.0, zero
+///    preemptions) and be bit-identical across the preemption switch.
+/// 2. **Frontier sanity** — for every `(share > 0, MTBF)` cell, mean
+///    SLO attainment with preemption on must be at least the
+///    preemption-off mean (priority preemption cannot hurt serving).
+fn run_serving(args: &[String]) -> Result<(), String> {
+    let get = |key: &str| {
+        args.iter().position(|a| a == key).and_then(|i| args.get(i + 1)).map(String::as_str)
+    };
+    let has = |key: &str| args.iter().any(|a| a == key);
+    let mut cfg = ServingSweepConfig::quick();
+    if !has("--quick") && std::env::var("MESHREDUCE_BENCH_QUICK").is_err() {
+        cfg.base.horizon = 600;
+        cfg.mtbf_points = vec![40.0, 120.0, 400.0];
+        cfg.seeds = vec![1, 2, 3];
+    }
+    if let Some(h) = get("--horizon").and_then(|s| s.parse().ok()) {
+        cfg.base.horizon = h;
+    }
+    if let Some(t) = get("--threads").and_then(|s| s.parse().ok()) {
+        cfg.threads = t;
+    }
+    eprintln!(
+        "serving sweep: {}x{} mesh, horizon {} steps, {} shares x {} MTBF x {} preemption \
+         x {} seeds ({} cells)",
+        cfg.base.nx,
+        cfg.base.ny,
+        cfg.base.horizon,
+        cfg.serving_shares.len(),
+        cfg.mtbf_points.len(),
+        cfg.preemption.len(),
+        cfg.seeds.len(),
+        cfg.grid().len(),
+    );
+    let t0 = std::time::Instant::now();
+    let points = run_serving_sweep(&cfg).map_err(|e| format!("serving sweep failed: {e}"))?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut report = JsonReport::new();
+    println!(
+        "\n{:<6} {:>8} {:>8} {:>6} {:>11} {:>13} {:>11} {:>12} {:>10}",
+        "share", "mtbf", "preempt", "seed", "slo-attain", "serving-p99ms", "preemptions",
+        "goodput", "util"
+    );
+    for p in &points {
+        println!(
+            "{:<6.2} {:>8.0} {:>8} {:>6} {:>11.4} {:>13.2} {:>11} {:>12.1} {:>10.4}",
+            p.share,
+            p.mtbf_steps,
+            p.preemption,
+            p.seed,
+            p.slo_attainment,
+            p.serving_p99_ms,
+            p.preemptions,
+            p.goodput,
+            p.mean_utilization,
+        );
+        report.push(
+            &format!(
+                "serving_sh{:.2}_mtbf{:.0}_pre{}_seed{}",
+                p.share, p.mtbf_steps, p.preemption as u8, p.seed
+            ),
+            if p.goodput > 0.0 { 1.0 / p.goodput } else { 0.0 },
+            0.0,
+            &[
+                ("share", p.share),
+                ("mtbf_steps", p.mtbf_steps),
+                ("preemption", p.preemption as u8 as f64),
+                ("seed", p.seed as f64),
+                ("slo_attainment", p.slo_attainment),
+                ("serving_p99_ms", p.serving_p99_ms),
+                ("preemptions", p.preemptions as f64),
+                ("goodput", p.goodput),
+                ("mean_utilization", p.mean_utilization),
+                ("completed", p.completed as f64),
+                ("arrivals", p.arrivals as f64),
+            ],
+        );
+    }
+
+    // Seed-mean frontier curves per (share, MTBF, preemption), in
+    // grid order (floats keyed by bit pattern: shares and MTBF points
+    // come verbatim from the config, so bit equality is exact).
+    let mut keys: Vec<(u64, u64, bool)> = Vec::new();
+    for p in &points {
+        let k = (p.share.to_bits(), p.mtbf_steps.to_bits(), p.preemption);
+        if !keys.contains(&k) {
+            keys.push(k);
+        }
+    }
+    let cells = |share: u64, mtbf: u64, pre: bool| -> Vec<&ServingSweepPoint> {
+        points
+            .iter()
+            .filter(|p| {
+                p.share.to_bits() == share
+                    && p.mtbf_steps.to_bits() == mtbf
+                    && p.preemption == pre
+            })
+            .collect()
+    };
+    let mean = |sel: &[&ServingSweepPoint], f: fn(&ServingSweepPoint) -> f64| -> f64 {
+        sel.iter().map(|p| f(p)).sum::<f64>() / sel.len().max(1) as f64
+    };
+    println!("\nserving frontier (mean over seeds):");
+    for &(share_bits, mtbf_bits, pre) in &keys {
+        let sel = cells(share_bits, mtbf_bits, pre);
+        let (share, mtbf) = (f64::from_bits(share_bits), f64::from_bits(mtbf_bits));
+        let att = mean(&sel, |p| p.slo_attainment);
+        let p99 = mean(&sel, |p| p.serving_p99_ms);
+        let good = mean(&sel, |p| p.goodput);
+        let preemptions: u64 = sel.iter().map(|p| p.preemptions).sum();
+        println!(
+            "  share {share:<5.2} mtbf {mtbf:>6.0} preempt {pre:<5}: attainment {att:.4}, \
+             p99 {p99:.2} ms, goodput {good:.1}, {preemptions} preemptions"
+        );
+        report.push(
+            &format!("curve_serving_sh{share:.2}_mtbf{mtbf:.0}_pre{}", pre as u8),
+            if good > 0.0 { 1.0 / good } else { 0.0 },
+            0.0,
+            &[
+                ("share", share),
+                ("mtbf_steps", mtbf),
+                ("preemption", pre as u8 as f64),
+                ("mean_slo_attainment", att),
+                ("mean_serving_p99_ms", p99),
+                ("mean_goodput", good),
+                ("preemptions", preemptions as f64),
+                ("seeds", sel.len() as f64),
+            ],
+        );
+    }
+
+    // Gate 1: serving-off differential.
+    for p in points.iter().filter(|p| p.share == 0.0) {
+        if p.preemptions != 0 || p.slo_attainment != 1.0 || p.serving_p99_ms != 0.0 {
+            return Err(format!(
+                "serving-off gate FAILED: zero-share cell (mtbf {:.0}, seed {}, preempt {}) \
+                 shows serving side effects: attainment {}, p99 {}, {} preemptions",
+                p.mtbf_steps, p.seed, p.preemption, p.slo_attainment, p.serving_p99_ms,
+                p.preemptions
+            ));
+        }
+        let peer = points.iter().find(|o| {
+            o.share == 0.0
+                && o.mtbf_steps.to_bits() == p.mtbf_steps.to_bits()
+                && o.seed == p.seed
+                && o.preemption != p.preemption
+        });
+        if let Some(o) = peer {
+            if o.goodput.to_bits() != p.goodput.to_bits()
+                || o.mean_utilization.to_bits() != p.mean_utilization.to_bits()
+            {
+                return Err(format!(
+                    "serving-off gate FAILED: preemption switch perturbed the serving-absent \
+                     fleet (mtbf {:.0}, seed {}): goodput {} vs {}",
+                    p.mtbf_steps, p.seed, p.goodput, o.goodput
+                ));
+            }
+        }
+    }
+    eprintln!("serving-off gate passed: zero-share rows are inert and preemption-invariant");
+
+    // Gate 2: frontier sanity — preemption cannot hurt attainment.
+    for &(share_bits, mtbf_bits, pre) in &keys {
+        if pre || f64::from_bits(share_bits) == 0.0 {
+            continue;
+        }
+        let off = mean(&cells(share_bits, mtbf_bits, false), |p| p.slo_attainment);
+        let on = mean(&cells(share_bits, mtbf_bits, true), |p| p.slo_attainment);
+        if on + 1e-9 < off {
+            return Err(format!(
+                "frontier gate FAILED: share {:.2} mtbf {:.0}: attainment with preemption \
+                 {on:.6} < without {off:.6}",
+                f64::from_bits(share_bits),
+                f64::from_bits(mtbf_bits)
+            ));
+        }
+        eprintln!(
+            "frontier: share {:.2} mtbf {:.0}: attainment {on:.4} (preempt) >= {off:.4} (no)",
+            f64::from_bits(share_bits),
+            f64::from_bits(mtbf_bits)
+        );
+    }
+
+    let path = report.write("BENCH_serving.json").map_err(|e| e.to_string())?;
+    eprintln!("\nserving record written to {path} ({wall:.1}s wall)");
+    Ok(())
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--serving") {
+        if let Err(e) = run_serving(&args) {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+        return;
+    }
     let get = |key: &str| {
         args.iter().position(|a| a == key).and_then(|i| args.get(i + 1)).map(String::as_str)
     };

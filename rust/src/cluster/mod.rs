@@ -43,8 +43,9 @@ pub use mtbf::MtbfModel;
 pub use scale::{aggregate_events_per_sec, run_scale, ScaleConfig, ScaleError, ScalePoint};
 pub use scenario::{Scenario, ScenarioError};
 pub use sweep::{
-    curves, prime_cache, run_fleet_sweep, run_sweep, CurvePoint, FleetSweepCell,
-    FleetSweepConfig, FleetSweepPoint, SweepCell, SweepConfig, SweepError, SweepPoint,
+    curves, prime_cache, run_fleet_sweep, run_serving_sweep, run_sweep, CurvePoint,
+    FleetSweepCell, FleetSweepConfig, FleetSweepPoint, ServingSweepCell, ServingSweepConfig,
+    ServingSweepPoint, SweepCell, SweepConfig, SweepError, SweepPoint,
 };
 
 /// One cluster health event, timestamped by [`TimedEvent`].

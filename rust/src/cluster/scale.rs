@@ -160,6 +160,7 @@ fn cell_config(nx: usize, ny: usize, cfg: &ScaleConfig) -> FleetConfig {
         shapes: vec![(4, 4), (8, 4), (8, 8)],
         policies: vec![JobPolicy::Continue, JobPolicy::Migrate, JobPolicy::Adaptive],
         scripted: Vec::new(),
+        serving: None,
     };
     if let Some(mean) = cfg.mtbf {
         c.mtbf = Some(MtbfModel::board(cfg.seed, mean, mean * 0.5));

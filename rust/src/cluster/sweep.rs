@@ -37,7 +37,9 @@ use crate::coordinator::policy::{
 use crate::mesh::{heal, FailedRegion, LinkRemap, Topology};
 use crate::obs::STEP_US;
 use crate::perfmodel::CandidatePrediction;
-use crate::sched::{run_fleet, ClockMode, ContentionModel, FleetConfig, FleetError};
+use crate::sched::{
+    run_fleet, ClockMode, ContentionModel, FleetConfig, FleetError, ServingWorkload,
+};
 use crate::simnet::{simulate_plan, simulate_plan_remapped, LinkModel, SimError};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -984,6 +986,136 @@ pub fn run_fleet_sweep(cfg: &FleetSweepConfig) -> Result<Vec<FleetSweepPoint>, F
     par_map(cfg.threads, &grid, |cell| replay_fleet_cell(cfg, cell)).into_iter().collect()
 }
 
+/// The serving-tier sweep axis: the same seeded shared-mesh workload
+/// replayed across `(serving share × MTBF × preemption × seed)` cells,
+/// producing the SLO-attainment / goodput frontier behind
+/// `BENCH_serving.json`. The zero-share rows are the serving-absent
+/// reference the CI gate compares bit-for-bit against.
+#[derive(Debug, Clone)]
+pub struct ServingSweepConfig {
+    /// Template fleet config; each cell overrides the workload seed,
+    /// the MTBF means, the serving tier and the preemption switch.
+    pub base: FleetConfig,
+    /// Serving job count as a fraction of the training job count;
+    /// `0.0` = serving tier absent (the bit-identity control row).
+    pub serving_shares: Vec<f64>,
+    /// Mean steps between failures (repair mean is half the MTBF, as
+    /// in the fleet sweep).
+    pub mtbf_points: Vec<f64>,
+    /// Priority-preemption on/off axis
+    /// ([`FleetConfig::serving_preemption`]).
+    pub preemption: Vec<bool>,
+    pub seeds: Vec<u64>,
+    /// Worker threads; 0 = available parallelism (capped at 16).
+    pub threads: usize,
+}
+
+impl ServingSweepConfig {
+    /// Reduced grid for CI and tests: 3 shares × 2 MTBF points ×
+    /// preemption on/off × 2 seeds = 24 cells.
+    pub fn quick() -> Self {
+        let mut base = FleetConfig::quick();
+        base.horizon = 240;
+        base.payload = 1 << 12;
+        base.clock = ClockMode::WallClock;
+        base.contention = Some(ContentionModel::stressed());
+        base.backfill = true;
+        Self {
+            base,
+            serving_shares: vec![0.0, 0.25, 0.5],
+            mtbf_points: vec![40.0, 120.0],
+            preemption: vec![false, true],
+            seeds: vec![1, 2],
+            threads: 0,
+        }
+    }
+
+    /// All cells, share-major, then MTBF, preemption, seed.
+    pub fn grid(&self) -> Vec<ServingSweepCell> {
+        let mut out = Vec::new();
+        for &share in &self.serving_shares {
+            for &mtbf_steps in &self.mtbf_points {
+                for &preemption in &self.preemption {
+                    for &seed in &self.seeds {
+                        out.push(ServingSweepCell { share, mtbf_steps, preemption, seed });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One cell of the serving sweep grid.
+#[derive(Debug, Clone, Copy)]
+pub struct ServingSweepCell {
+    pub share: f64,
+    pub mtbf_steps: f64,
+    pub preemption: bool,
+    pub seed: u64,
+}
+
+/// One replayed serving-sweep cell.
+#[derive(Debug, Clone)]
+pub struct ServingSweepPoint {
+    pub share: f64,
+    pub mtbf_steps: f64,
+    pub preemption: bool,
+    pub seed: u64,
+    pub slo_attainment: f64,
+    pub serving_p99_ms: f64,
+    pub preemptions: u64,
+    pub goodput: f64,
+    pub mean_utilization: f64,
+    pub completed: usize,
+    pub arrivals: usize,
+}
+
+/// Replay one serving-sweep cell (deterministic per cell). A zero
+/// share leaves `workload.serving` at `None`; a positive share adds
+/// `max(1, round(share × training jobs))` serving jobs via
+/// [`ServingWorkload::quick`].
+pub fn replay_serving_cell(
+    cfg: &ServingSweepConfig,
+    cell: ServingSweepCell,
+) -> Result<ServingSweepPoint, FleetError> {
+    let mut fc = cfg.base.clone();
+    fc.workload.seed = cell.seed;
+    fc.serving_preemption = cell.preemption;
+    fc.mtbf = Some(MtbfModel::board(
+        cell.seed.wrapping_add(17),
+        cell.mtbf_steps,
+        cell.mtbf_steps * 0.5,
+    ));
+    if cell.share > 0.0 {
+        let n = ((cell.share * fc.workload.jobs as f64).round() as usize).max(1);
+        fc.workload.serving = Some(ServingWorkload::quick(n));
+    }
+    let run = run_fleet(&fc)?;
+    Ok(ServingSweepPoint {
+        share: cell.share,
+        mtbf_steps: cell.mtbf_steps,
+        preemption: cell.preemption,
+        seed: cell.seed,
+        slo_attainment: run.summary.slo_attainment,
+        serving_p99_ms: run.summary.serving_p99_ms,
+        preemptions: run.summary.preemptions,
+        goodput: run.summary.goodput,
+        mean_utilization: run.summary.mean_utilization,
+        completed: run.summary.completed,
+        arrivals: run.summary.arrivals,
+    })
+}
+
+/// Run the serving sweep grid across scoped worker threads (the same
+/// [`par_map`] harness as the other sweeps). Cells are independent, so
+/// the output is deterministic regardless of scheduling; results come
+/// back in grid order.
+pub fn run_serving_sweep(cfg: &ServingSweepConfig) -> Result<Vec<ServingSweepPoint>, FleetError> {
+    let grid = cfg.grid();
+    par_map(cfg.threads, &grid, |cell| replay_serving_cell(cfg, cell)).into_iter().collect()
+}
+
 /// Build a warm-start cache containing the sweep's recurring
 /// fingerprints: the healthy mesh plus one interior hole per region
 /// shape. Persist it with `PlanCache::save` and load it back into
@@ -1141,6 +1273,45 @@ mod tests {
             assert!(p.mean_dilation >= 1.0 - 1e-12);
             assert!(p.max_dilation >= p.mean_dilation - 1e-9);
             assert!(p.goodput.is_finite());
+        }
+    }
+
+    #[test]
+    fn serving_sweep_zero_share_rows_match_the_serving_absent_fleet() {
+        let mut cfg = ServingSweepConfig::quick();
+        cfg.base.horizon = 120;
+        cfg.base.payload = 1 << 10;
+        cfg.serving_shares = vec![0.0, 0.5];
+        cfg.mtbf_points = vec![40.0];
+        cfg.seeds = vec![1];
+        let points = run_serving_sweep(&cfg).unwrap();
+        assert_eq!(points.len(), 4);
+        // Zero-share rows: no serving traffic, attainment is the
+        // vacuous 1.0, no preemptions, and the preemption switch is
+        // inert (bit-identical goodput/utilization).
+        let z: Vec<_> = points.iter().filter(|p| p.share == 0.0).collect();
+        assert_eq!(z.len(), 2);
+        for p in &z {
+            assert_eq!(p.slo_attainment.to_bits(), 1.0f64.to_bits());
+            assert_eq!(p.serving_p99_ms.to_bits(), 0.0f64.to_bits());
+            assert_eq!(p.preemptions, 0);
+        }
+        assert_eq!(z[0].goodput.to_bits(), z[1].goodput.to_bits());
+        assert_eq!(z[0].mean_utilization.to_bits(), z[1].mean_utilization.to_bits());
+        // Positive-share rows carry serving traffic: attainment lands
+        // in [0, 1] and the serving jobs show up as extra arrivals.
+        for p in points.iter().filter(|p| p.share > 0.0) {
+            assert!((0.0..=1.0).contains(&p.slo_attainment), "{}", p.slo_attainment);
+            assert!(p.serving_p99_ms >= 0.0);
+            assert!(p.arrivals > z[0].arrivals, "serving jobs must arrive");
+        }
+        // Grid replay is deterministic across thread counts.
+        cfg.threads = 1;
+        let again = run_serving_sweep(&cfg).unwrap();
+        for (a, b) in points.iter().zip(&again) {
+            assert_eq!(a.goodput.to_bits(), b.goodput.to_bits());
+            assert_eq!(a.slo_attainment.to_bits(), b.slo_attainment.to_bits());
+            assert_eq!(a.preemptions, b.preemptions);
         }
     }
 

@@ -534,20 +534,38 @@ impl PlanCache {
     }
 
     /// Serialise the `max_entries` most recently used entries to
-    /// `path` (atomically: write a temp file, then rename). Returns
-    /// the number of entries written. The on-disk identity is the
-    /// topology fingerprint ([`PlanKey`]), so a different process —
-    /// a restarted job, the sweep driver, the fleet driver — can
-    /// [`load`](Self::load) the file and turn its first visit to each
-    /// persisted topology into a cache hit.
+    /// `path` (atomically: write a unique sibling temp file, fsync it,
+    /// then rename over `path`). Returns the number of entries
+    /// written. The on-disk identity is the topology fingerprint
+    /// ([`PlanKey`]), so a different process — a restarted job, the
+    /// sweep driver, the fleet driver — can [`load`](Self::load) the
+    /// file and turn its first visit to each persisted topology into a
+    /// cache hit.
+    ///
+    /// The temp name appends to the full file name (`cache.bin` →
+    /// `cache.bin.tmp.<pid>`) instead of swapping the extension, so
+    /// two caches differing only by extension never share a temp file,
+    /// and concurrent writers in different processes never clobber
+    /// each other's half-written staging file. `sync_all` runs before
+    /// the rename: a crash between the two leaves either the old file
+    /// or the new one, never a reordered torso. A failed write removes
+    /// the temp file rather than leaking it.
     pub fn save(&self, path: &Path, max_entries: usize) -> io::Result<usize> {
         let mut entries: Vec<(&PlanKey, &Slot)> = self.slots.iter().collect();
         // Most recently used first; `last_used` ticks are unique, so
         // the output is deterministic despite HashMap iteration.
         entries.sort_by(|a, b| b.1.last_used.cmp(&a.1.last_used));
         entries.truncate(max_entries.min(MAX_ENTRIES as usize));
-        let tmp = path.with_extension("tmp");
-        {
+        let Some(name) = path.file_name() else {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "plan cache path has no file name",
+            ));
+        };
+        let mut tmp_name = name.to_os_string();
+        tmp_name.push(format!(".tmp.{}", std::process::id()));
+        let tmp = path.with_file_name(tmp_name);
+        let write = || -> io::Result<()> {
             let mut f = io::BufWriter::new(fs::File::create(&tmp)?);
             w_u64(&mut f, MAGIC)?;
             w_u32(&mut f, VERSION)?;
@@ -557,8 +575,13 @@ impl PlanCache {
                 write_plan(&mut f, &slot.plan)?;
             }
             f.flush()?;
+            f.get_ref().sync_all()?;
+            Ok(())
+        };
+        if let Err(e) = write().and_then(|()| fs::rename(&tmp, path)) {
+            let _ = fs::remove_file(&tmp);
+            return Err(e);
         }
-        fs::rename(&tmp, path)?;
         Ok(entries.len())
     }
 

@@ -170,6 +170,15 @@ impl Registry {
 
     /// Merge another registry into this one: counters add, gauges
     /// overwrite, histograms with matching grids merge bucket-wise.
+    ///
+    /// A same-named histogram with a **different** bucket grid cannot
+    /// be merged meaningfully — element-wise addition would land
+    /// counts in the wrong buckets, and the pre-fix behaviour
+    /// (replacing the existing histogram) silently discarded the
+    /// already-accumulated counts. Such pairs are now skipped: the
+    /// existing histogram is kept intact and the collision is tallied
+    /// in the `hist_merge_bounds_mismatch` counter so the drop is
+    /// never silent.
     pub fn merge(&mut self, other: &Registry) {
         for (k, v) in &other.counters {
             *self.counters.entry(k.clone()).or_insert(0) += v;
@@ -177,6 +186,7 @@ impl Registry {
         for (k, v) in &other.gauges {
             self.gauges.insert(k.clone(), *v);
         }
+        let mut mismatches = 0u64;
         for (k, h) in &other.hists {
             match self.hists.get_mut(k) {
                 Some(mine) if mine.bounds == h.bounds => {
@@ -188,10 +198,14 @@ impl Registry {
                     mine.min = mine.min.min(h.min);
                     mine.max = mine.max.max(h.max);
                 }
-                Some(_) | None => {
+                Some(_) => mismatches += 1,
+                None => {
                     self.hists.insert(k.clone(), h.clone());
                 }
             }
+        }
+        if mismatches > 0 {
+            self.inc("hist_merge_bounds_mismatch", mismatches);
         }
     }
 
@@ -325,6 +339,24 @@ mod tests {
         let h = a.histogram("h").unwrap();
         assert_eq!(h.count(), 2);
         assert_eq!(h.max(), 1000.0);
+    }
+
+    #[test]
+    fn merge_with_mismatched_bounds_skips_and_counts() {
+        let mut a = Registry::new();
+        a.register_hist("h", Histogram::log_buckets(1.0, 2.0, 8));
+        a.observe("h", 3.0);
+        let mut b = Registry::new();
+        b.register_hist("h", Histogram::log_buckets(0.5, 3.0, 4));
+        b.observe("h", 100.0);
+        let before = a.histogram("h").unwrap().clone();
+        a.merge(&b);
+        assert_eq!(a.histogram("h").unwrap(), &before, "mismatched grid must not corrupt counts");
+        assert_eq!(a.counter("hist_merge_bounds_mismatch"), 1, "skip must be tallied");
+        // A second mismatching merge keeps counting.
+        a.merge(&b);
+        assert_eq!(a.counter("hist_merge_bounds_mismatch"), 2);
+        assert_eq!(a.histogram("h").unwrap(), &before);
     }
 
     #[test]

@@ -64,6 +64,11 @@ struct Tracer {
     next_id: u64,
     total: u64,
     dropped: u64,
+    /// Orphaned async halves (a `b` whose `e` is gone, or vice versa)
+    /// suppressed by the last export. Recomputed — not accumulated —
+    /// on every [`TraceHandle::render_json`] call, so repeated exports
+    /// of the same ring report the same figure.
+    orphans: u64,
 }
 
 impl Tracer {
@@ -217,6 +222,14 @@ impl TraceHandle {
         self.0.lock().expect("tracer lock").dropped
     }
 
+    /// Orphaned async halves suppressed by the last
+    /// [`Self::render_json`] export (0 before any export). These are
+    /// `b`/`e` records whose partner was evicted from the ring; they
+    /// are part of the drop accounting, not silently exported.
+    pub fn orphans_dropped(&self) -> u64 {
+        self.0.lock().expect("tracer lock").orphans
+    }
+
     /// Total records ever pushed (held + evicted).
     pub fn total(&self) -> u64 {
         self.0.lock().expect("tracer lock").total
@@ -229,9 +242,35 @@ impl TraceHandle {
     /// out of order; Perfetto tolerates that but our CI validator and
     /// `chrome://tracing`'s importer are happier sorted). `M` metadata
     /// comes first at ts 0.
+    ///
+    /// Ring eviction can strand one half of an async `b`/`e` pair —
+    /// e.g. the `b` of a long recovery scrolls out while its `e` is
+    /// still held. An unmatched `e` makes Perfetto reject the whole
+    /// stream, so orphaned halves are dropped from the export and
+    /// counted in [`Self::orphans_dropped`] instead.
     pub fn render_json(&self) -> String {
-        let t = self.0.lock().expect("tracer lock");
-        let mut recs: Vec<&Record> = t.ring.iter().collect();
+        let mut t = self.0.lock().expect("tracer lock");
+        let mut begun = std::collections::BTreeSet::new();
+        let mut ended = std::collections::BTreeSet::new();
+        for r in t.ring.iter() {
+            match r.ph {
+                'b' => {
+                    begun.insert((r.pid, r.id));
+                }
+                'e' => {
+                    ended.insert((r.pid, r.id));
+                }
+                _ => {}
+            }
+        }
+        let matched = |r: &Record| match r.ph {
+            'b' => ended.contains(&(r.pid, r.id)),
+            'e' => begun.contains(&(r.pid, r.id)),
+            _ => true,
+        };
+        t.orphans = t.ring.iter().filter(|r| !matched(r)).count() as u64;
+        let t = &*t;
+        let mut recs: Vec<&Record> = t.ring.iter().filter(|r| matched(r)).collect();
         recs.sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us));
         let mut out = String::with_capacity(128 + recs.len() * 96);
         out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
@@ -350,13 +389,19 @@ impl TraceHandle {
                             r.name, r.ts_us, begin_ts
                         ));
                     }
+                    // Eviction legitimately strands an `e` whose `b`
+                    // scrolled out; only a non-evicting ring makes an
+                    // unmatched end a structural error.
+                    None if t.dropped > 0 => {}
                     None => return Err(format!("async id {} ended without begin", r.id)),
                 },
                 _ => {}
             }
         }
-        if let Some(((_, id), _)) = open.into_iter().next() {
-            return Err(format!("async id {id} begun but never ended"));
+        if t.dropped == 0 {
+            if let Some(((_, id), _)) = open.into_iter().next() {
+                return Err(format!("async id {id} begun but never ended"));
+            }
         }
         Ok(())
     }
@@ -441,6 +486,38 @@ mod tests {
         let id2 = t.alloc_id();
         t.begin(1, 2, "recover", id2, 50.0);
         assert!(t.check_wellformed().is_err()); // never ended
+    }
+
+    #[test]
+    fn evicted_async_halves_are_dropped_from_export() {
+        let t = TraceHandle::with_capacity(4);
+        let id = t.alloc_id();
+        t.begin(1, 1, "recover", id, 0.0);
+        for i in 0..4 {
+            t.instant(1, 0, &format!("e{i}"), 10.0 + i as f64, &[]);
+        }
+        // The begin scrolled out of the ring; its end is an orphan.
+        t.end(1, 1, "recover", id, 50.0);
+        assert_eq!(t.dropped(), 2);
+        let json = t.render_json();
+        assert!(!json.contains("\"ph\":\"e\""), "orphan end leaked into export: {json}");
+        assert_eq!(t.orphans_dropped(), 1, "orphan must enter the drop accounting");
+        // Idempotent: re-rendering the same ring reports the same count.
+        t.render_json();
+        assert_eq!(t.orphans_dropped(), 1);
+        // Eviction makes the stranded half tolerable, not an error.
+        t.check_wellformed().expect("orphans are expected once the ring evicted");
+    }
+
+    #[test]
+    fn matched_async_pairs_survive_export_unscathed() {
+        let t = TraceHandle::with_capacity(8);
+        let id = t.alloc_id();
+        t.begin(1, 1, "recover", id, 0.0);
+        t.end(1, 1, "recover", id, 40.0);
+        let json = t.render_json();
+        assert!(json.contains("\"ph\":\"b\"") && json.contains("\"ph\":\"e\""));
+        assert_eq!(t.orphans_dropped(), 0);
     }
 
     #[test]

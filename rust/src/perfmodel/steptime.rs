@@ -257,6 +257,22 @@ pub fn contention_dilation(compute_s: f64, allreduce_s: f64, share: f64) -> f64 
     (contended_step_s(compute_s, allreduce_s, share) / isolated).max(1.0)
 }
 
+/// Modelled per-request serving latency, milliseconds: the contended
+/// inference step (isolated step time × cross-job dilation) plus an
+/// M/D/1-style queueing wait under offered utilization `rho`
+/// (requests per fleet step × dilated service steps per request).
+/// Overload saturates deterministically at `rho = 0.995` — a ~100×
+/// service-time queue, a certain SLO miss — instead of diverging, so
+/// the figure stays finite and monotone in every argument. Always at
+/// least the isolated step time (`step_s * 1e3` ms), the property
+/// `rust/tests/serving_differential.rs` checks.
+pub fn serving_latency_ms(step_s: f64, dilation: f64, rho: f64) -> f64 {
+    let svc_s = step_s.max(0.0) * dilation.max(1.0);
+    let r = rho.clamp(0.0, 0.995);
+    let wait = r / (2.0 * (1.0 - r));
+    svc_s * (1.0 + wait) * 1e3
+}
+
 /// Build the full prediction for one paper row.
 pub fn predict_row(row: &PaperRow, link: &LinkModel) -> Result<RowPrediction, ModelError> {
     let wl = workload_by_name(row.benchmark)

@@ -44,7 +44,7 @@ use super::metrics::{
 };
 use super::placer::{self, Rect};
 use super::workload::WorkloadModel;
-use super::{FleetError, JobPolicy, JobSpec};
+use super::{FleetError, JobClass, JobPolicy, JobSpec};
 use crate::cluster::{ClusterEvent, ClusterState, EventQueue, MtbfModel, TimedEvent};
 use crate::collective::{PlanCache, PlanCacheStats, PlanError, Scheme};
 use crate::coordinator::policy::{effective_throughput, CandidateCost, EventRateEstimator};
@@ -166,6 +166,12 @@ pub struct FleetConfig {
     /// trace-on and trace-off runs are bit-identical
     /// (`rust/tests/obs_differential.rs`).
     pub trace: Option<crate::obs::TraceHandle>,
+    /// Let queued serving jobs preempt training placements
+    /// (checkpoint, evict, re-place via the migrate path) when no
+    /// rectangle is clear. `false` leaves serving jobs queueing like
+    /// everyone else. Irrelevant — and bit-invisible — without serving
+    /// jobs in the workload.
+    pub serving_preemption: bool,
 }
 
 impl FleetConfig {
@@ -198,6 +204,7 @@ impl FleetConfig {
             spare_cols: 0,
             rewire_steps: 10.0,
             trace: None,
+            serving_preemption: true,
         }
     }
 
@@ -230,6 +237,7 @@ impl FleetConfig {
             spare_cols: 0,
             rewire_steps: 10.0,
             trace: None,
+            serving_preemption: true,
         }
     }
 
@@ -272,6 +280,130 @@ enum RestartKind {
     Migrate,
 }
 
+/// Sentinel latency (ms) charged to serving requests that arrive while
+/// their job holds no rectangle: the request waits the outage out, far
+/// past any plausible SLO threshold. Keeping evicted serving jobs
+/// accountable for their offered load is what makes the
+/// preemption-on-vs-off SLO comparison meaningful.
+const SERVING_DOWN_MS: f64 = 1e6;
+
+/// Request intensity (requests per fleet step) at integer step `t`;
+/// 0.0 when no request process is configured.
+fn intensity_at(intensity: &[f64], t: u64) -> f64 {
+    if intensity.is_empty() {
+        return 0.0;
+    }
+    intensity[(t as usize).min(intensity.len() - 1)]
+}
+
+/// Serving-latency accounting for one integration segment of a
+/// *placed* serving job. The `dt`-long segment offers `lam * dt`
+/// requests: the active fraction `frac` is served at the M/D/1 queue
+/// latency of the job's current (possibly contention-dilated) step
+/// time, and the paused remainder additionally waits the transition
+/// pause out. Parcels are `(request weight, latency ms)`; identical
+/// arithmetic under both clock engines (`dt == 1.0`, dilation 1.0
+/// reproduces the round-robin figures bit for bit).
+fn serve_segment(
+    j: &mut Job,
+    compute_s: f64,
+    lam: f64,
+    dt: f64,
+    frac: f64,
+    pause_before: f64,
+    parcels: &mut Vec<(f64, f64)>,
+) {
+    if lam <= 0.0 {
+        return;
+    }
+    let thr = j.spec.slo.map(|s| s.threshold_ms).unwrap_or(f64::INFINITY);
+    let lat_ms = if j.rate > 0.0 {
+        let step_s = compute_s / j.rate;
+        let rho = lam * j.dilation / j.rate;
+        steptime::serving_latency_ms(step_s, j.dilation, rho)
+    } else {
+        SERVING_DOWN_MS
+    };
+    let active = lam * frac;
+    if active > 0.0 {
+        j.requests += active;
+        if lat_ms <= thr {
+            j.slo_met += active;
+        }
+        parcels.push((active, lat_ms));
+    }
+    let paused = lam * (dt - frac);
+    if paused > 0.0 {
+        // One fleet step spans `compute_s` seconds of wall time (a
+        // healthy job completes `rate` steps of `step_s` seconds
+        // each), so the pause converts at that scale.
+        let wait_ms = pause_before * compute_s * 1e3 + lat_ms;
+        j.requests += paused;
+        if wait_ms <= thr {
+            j.slo_met += paused;
+        }
+        parcels.push((paused, wait_ms));
+    }
+}
+
+/// A queued serving job (evicted, or not yet placeable) still receives
+/// its offered load; every request waits the outage out at the
+/// [`SERVING_DOWN_MS`] sentinel and misses any finite SLO.
+fn queued_segment(j: &mut Job, lam: f64, dt: f64, parcels: &mut Vec<(f64, f64)>) {
+    let offered = lam * dt;
+    if offered > 0.0 {
+        j.requests += offered;
+        parcels.push((offered, SERVING_DOWN_MS));
+    }
+}
+
+/// Request-weighted percentile over `(weight, latency ms)` parcels;
+/// 0.0 with no traffic. Sorts by latency and walks the cumulative
+/// weight to `q` of the total — exact for the piecewise-constant
+/// parcel distribution, and deterministic (`total_cmp`).
+fn weighted_latency_percentile(parcels: &mut [(f64, f64)], q: f64) -> f64 {
+    if parcels.is_empty() {
+        return 0.0;
+    }
+    parcels.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.total_cmp(&b.0)));
+    let total: f64 = parcels.iter().map(|p| p.0).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let target = q * total;
+    let mut acc = 0.0;
+    for &(w, lat) in parcels.iter() {
+        acc += w;
+        if acc >= target {
+            return lat;
+        }
+    }
+    parcels.last().map(|p| p.1).unwrap_or(0.0)
+}
+
+/// One arrival's event-log line. Serving jobs have no finite duration
+/// to print (they run to the horizon); training keeps the exact
+/// pre-serving wording, so serving-free event logs are unchanged.
+fn arrival_message(spec: &JobSpec) -> String {
+    match spec.class {
+        JobClass::Training => format!(
+            "job {} arrives: {}x{} for {} steps ({})",
+            spec.id,
+            spec.w,
+            spec.h,
+            spec.duration_steps,
+            spec.policy.name()
+        ),
+        JobClass::Serving => format!(
+            "serving job {} arrives: {}x{} ({})",
+            spec.id,
+            spec.w,
+            spec.h,
+            spec.policy.name()
+        ),
+    }
+}
+
 #[derive(Debug, Clone)]
 struct Job {
     spec: JobSpec,
@@ -295,6 +427,11 @@ struct Job {
     migrations: u64,
     shrinks: u64,
     ft_continues: u64,
+    /// Offered serving requests integrated over the run (0.0 for
+    /// training jobs).
+    requests: f64,
+    /// Offered requests answered within the job's SLO threshold.
+    slo_met: f64,
 }
 
 impl Job {
@@ -314,6 +451,8 @@ impl Job {
             migrations: 0,
             shrinks: 0,
             ft_continues: 0,
+            requests: 0.0,
+            slo_met: 0.0,
         }
     }
 
@@ -323,12 +462,15 @@ impl Job {
             w: self.spec.w,
             h: self.spec.h,
             policy: self.spec.policy,
+            class: self.spec.class,
             arrival_step: self.spec.arrival_step,
             completed_at: self.completed_at,
             migrations: self.migrations,
             shrinks: self.shrinks,
             ft_continues: self.ft_continues,
             waited_steps: self.waited,
+            requests: self.requests,
+            slo_met: self.slo_met,
         }
     }
 }
@@ -454,6 +596,20 @@ struct Fleet<'a> {
     /// replayed (like the dilations) on the unchanged-placement skip
     /// path so sparse and dense runs record identical counters.
     last_epoch_contended: u64,
+    /// Does the generated workload contain serving jobs? Set by the
+    /// engines before the first event; every serving-only code path is
+    /// gated on it (or on per-job class checks that cannot fire
+    /// without serving jobs), so a serving-free fleet is bit-identical
+    /// to the pre-serving engine.
+    has_serving: bool,
+    /// Rendered request intensity per fleet step (empty without a
+    /// configured [`super::workload::RequestProcess`]).
+    serving_intensity: Vec<f64>,
+    /// Request-weighted latency parcels `(requests, latency ms)`, in
+    /// deterministic emission order — the summary p99 source.
+    serving_lat: Vec<(f64, f64)>,
+    /// Training placements evicted for serving rectangles.
+    preemptions: u64,
 }
 
 impl<'a> Fleet<'a> {
@@ -514,6 +670,15 @@ impl<'a> Fleet<'a> {
             pid: 0,
             reg: Registry::new(),
             last_epoch_contended: 0,
+            has_serving: false,
+            serving_intensity: cfg
+                .workload
+                .serving
+                .as_ref()
+                .map(|sv| sv.arrival.intensities(cfg.workload.seed, cfg.horizon))
+                .unwrap_or_default(),
+            serving_lat: Vec::new(),
+            preemptions: 0,
         }
     }
 
@@ -783,11 +948,129 @@ impl<'a> Fleet<'a> {
         Ok(())
     }
 
+    /// Priority admission for the serving tier: serving jobs anywhere
+    /// in the queue place immediately when a rectangle is clear and,
+    /// with [`FleetConfig::serving_preemption`], evict training
+    /// placements when not. Runs before FIFO admission, so serving
+    /// never queues behind training.
+    fn admit_serving(&mut self) -> Result<(), FleetError> {
+        if !self.has_serving {
+            return Ok(());
+        }
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].spec.class != JobClass::Serving {
+                i += 1;
+                continue;
+            }
+            let (w, h) = {
+                let s = &self.queue[i].spec;
+                (s.w, s.h)
+            };
+            if let Some(rect) = self.place_excluding(usize::MAX, w, h) {
+                let mut job = self.queue.remove(i).expect("index checked");
+                self.start_job(&mut job, rect)?;
+                self.running.push(job);
+                continue;
+            }
+            if !self.cfg.serving_preemption {
+                i += 1;
+                continue;
+            }
+            let mut job = self.queue.remove(i).expect("index checked");
+            match self.preempt_for_serving(w, h) {
+                Some(rect) => {
+                    self.start_job(&mut job, rect)?;
+                    self.running.push(job);
+                    // Evicted training jobs were pushed to the queue
+                    // front; rescan from the top so any serving job
+                    // behind them is still reached.
+                    i = 0;
+                }
+                None => {
+                    self.queue.insert(i, job);
+                    i += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Find a rectangle for a `w x h` serving job by treating training
+    /// placements as preemptible: plan against failed regions plus
+    /// running *serving* rectangles only, then checkpoint-evict every
+    /// training job overlapping the chosen target. Dense scan on
+    /// purpose — the probe ignores most live obstacles, so the
+    /// incremental index does not apply (and fast/dense runs stay
+    /// bit-identical).
+    fn preempt_for_serving(&mut self, w: usize, h: usize) -> Option<Rect> {
+        let t0 = Instant::now();
+        let mut obs: Vec<Rect> = self.cluster.failed_regions().to_vec();
+        for j in &self.running {
+            if j.spec.class == JobClass::Serving {
+                obs.push(j.rect.expect("running job has a rectangle"));
+            }
+        }
+        let got = placer::place_oriented(self.cfg.nx, self.cfg.ny, &obs, w, h);
+        self.prof.placement_s += t0.elapsed().as_secs_f64();
+        let target = got?;
+        // Descending index order keeps lower indices valid while jobs
+        // are removed; the push_front reversal restores ascending
+        // order at the queue head.
+        for i in (0..self.running.len()).rev() {
+            if self.running[i].spec.class == JobClass::Training
+                && self.rect(i).overlaps(&target)
+            {
+                self.preempt_training(i);
+            }
+        }
+        Some(target)
+    }
+
+    /// Checkpoint-evict training job `i` for a serving placement: roll
+    /// back to the last checkpoint, release the rectangle, and requeue
+    /// it at the front — it re-places through the normal admission
+    /// path, paying the same restart pause a migration would.
+    fn preempt_training(&mut self, i: usize) {
+        let mut j = self.running.remove(i);
+        if let Some(idx) = self.pidx.as_mut() {
+            let old = j.rect.expect("running job has a rectangle");
+            let _removed = idx.remove(&old);
+            debug_assert!(_removed, "preemption releases an indexed rectangle");
+        }
+        let rb = self.rollback_of(j.progress);
+        self.goodput_sum -= j.workers as f64 * rb;
+        let old_rate = j.rate;
+        j.progress -= rb;
+        j.rect = None;
+        j.holes.clear();
+        j.workers = 0;
+        j.rate = 0.0;
+        j.dilation = 1.0;
+        j.pause = 0.0;
+        self.preemptions += 1;
+        self.reg.inc("preemptions", 1);
+        let id = j.spec.id;
+        self.log(format!("job {id} preempted for serving (rolled back {rb:.0} steps)"));
+        self.record_recovery(
+            id,
+            "preempt",
+            RecoveryPhases {
+                heal_steps: self.cfg.restart_steps,
+                resume_steps: if old_rate > 0.0 { rb / old_rate } else { 0.0 },
+                ..RecoveryPhases::default()
+            },
+        );
+        self.queue.push_front(j);
+    }
+
     /// Admit queued jobs FIFO while the head fits; with
     /// [`FleetConfig::backfill`], admit later jobs around a blocked
     /// head (the head stays unplaceable throughout — obstacles only
     /// grow — so backfill never steals a feasible head placement).
+    /// Serving jobs are admitted first ([`Self::admit_serving`]).
     fn try_admit(&mut self) -> Result<(), FleetError> {
+        self.admit_serving()?;
         loop {
             let Some((w, h)) = self.queue.front().map(|j| (j.spec.w, j.spec.h)) else {
                 return Ok(());
@@ -849,14 +1132,18 @@ impl<'a> Fleet<'a> {
         let Some(s) = self.step_time(&target, &[])? else {
             return Ok(false);
         };
-        let (progress, old_workers) = {
+        let (progress, old_workers, class) = {
             let j = &self.running[i];
-            (j.progress, j.workers)
+            (j.progress, j.workers, j.spec.class)
         };
         let rb = self.rollback_of(progress);
         // Rolled-back work must be redone: debit it from the net
-        // goodput at the pre-transition worker count.
-        self.goodput_sum -= old_workers as f64 * rb;
+        // goodput at the pre-transition worker count. Goodput is a
+        // training-progress figure, so serving jobs neither credit nor
+        // debit it.
+        if class == JobClass::Training {
+            self.goodput_sum -= old_workers as f64 * rb;
+        }
         let pause = match kind {
             RestartKind::Shrink => self.cfg.restart_steps,
             RestartKind::Migrate => self.cfg.restart_steps + self.cfg.migrate_steps,
@@ -964,7 +1251,9 @@ impl<'a> Fleet<'a> {
                     debug_assert!(_removed, "wait releases an indexed rectangle");
                 }
                 let rb = self.rollback_of(j.progress);
-                self.goodput_sum -= j.workers as f64 * rb;
+                if j.spec.class == JobClass::Training {
+                    self.goodput_sum -= j.workers as f64 * rb;
+                }
                 j.progress -= rb;
                 j.rect = None;
                 j.holes.clear();
@@ -1364,13 +1653,25 @@ impl<'a> Fleet<'a> {
             return Ok(());
         };
         let t0 = Instant::now();
-        let mut order: Vec<usize> = (0..self.running.len()).collect();
+        // Serving rectangles are pinned: repacking them would restart
+        // a latency-SLO tier to tidy a batch one. Only training jobs
+        // move (with no serving jobs this filter keeps everything —
+        // the pre-serving behaviour, bit for bit).
+        let mut order: Vec<usize> = (0..self.running.len())
+            .filter(|&i| self.running[i].spec.class == JobClass::Training)
+            .collect();
         order.sort_by_key(|&i| std::cmp::Reverse(self.rect(i).num_chips()));
-        // Trial layout: failed regions plus progressively committed
-        // trial rectangles. The fast path plans on a scratch index (the
-        // live one still describes the current layout until the commit
-        // below goes through restart_on/start_job).
+        // Trial layout: failed regions plus pinned serving rectangles
+        // plus progressively committed trial rectangles. The fast path
+        // plans on a scratch index (the live one still describes the
+        // current layout until the commit below goes through
+        // restart_on/start_job).
         let mut obs: Vec<Rect> = self.cluster.failed_regions().to_vec();
+        for j in &self.running {
+            if j.spec.class == JobClass::Serving {
+                obs.push(j.rect.expect("running job has a rectangle"));
+            }
+        }
         let mut scratch = self.cfg.fast_placer.then(|| {
             let mut idx = placer::PlacementIndex::new(self.cfg.nx, self.cfg.ny);
             for r in &obs {
@@ -1615,11 +1916,14 @@ impl<'a> Fleet<'a> {
         let t0 = Instant::now();
         self.segments += 1;
         let live = self.cluster.live_chips() as f64;
+        let lam = intensity_at(&self.serving_intensity, self.step);
+        let mut parcels: Vec<(f64, f64)> = Vec::new();
         let mut util = 0.0f64;
         let mut good = 0.0f64;
         let mut finished: Vec<usize> = Vec::new();
         for (i, j) in self.running.iter_mut().enumerate() {
             util += j.workers as f64;
+            let pause_before = j.pause;
             let frac = if j.pause >= 1.0 {
                 j.pause -= 1.0;
                 0.0
@@ -1631,15 +1935,27 @@ impl<'a> Fleet<'a> {
             if frac > 0.0 {
                 let gained = j.rate * frac;
                 j.progress += gained;
-                good += j.workers as f64 * gained;
+                if j.spec.class == JobClass::Training {
+                    good += j.workers as f64 * gained;
+                }
                 if j.progress + 1e-9 >= j.spec.duration_steps as f64 {
                     finished.push(i);
                 }
             }
+            if j.spec.class == JobClass::Serving {
+                serve_segment(j, self.cfg.compute_s, lam, 1.0, frac, pause_before, &mut parcels);
+            }
         }
         for j in self.queue.iter_mut() {
             j.waited += 1;
+            if j.spec.class == JobClass::Serving {
+                queued_segment(j, lam, 1.0, &mut parcels);
+            }
         }
+        for &(_, lat) in &parcels {
+            self.reg.observe("serving_latency_ms", lat);
+        }
+        self.serving_lat.extend(parcels);
         self.last_util = if live > 0.0 { util / live } else { 0.0 };
         self.last_good = good;
         self.util_sum += self.last_util;
@@ -1671,6 +1987,11 @@ impl<'a> Fleet<'a> {
         let t0 = Instant::now();
         self.segments += 1;
         let live = self.cluster.live_chips() as f64;
+        // `now` is the segment start here (the caller moves it to the
+        // segment end afterwards), so truncation lands on the same
+        // integer step the round-robin engine would read.
+        let lam = intensity_at(&self.serving_intensity, self.now as u64);
+        let mut parcels: Vec<(f64, f64)> = Vec::new();
         let mut util = 0.0f64;
         let mut good = 0.0f64;
         let mut dil_time = 0.0f64;
@@ -1680,6 +2001,7 @@ impl<'a> Fleet<'a> {
             util += j.workers as f64;
             dil_time += j.dilation * dt;
             dil_weight += dt;
+            let pause_before = j.pause;
             let frac = if j.pause >= dt {
                 j.pause -= dt;
                 0.0
@@ -1691,12 +2013,26 @@ impl<'a> Fleet<'a> {
             if frac > 0.0 {
                 let gained = (j.rate / j.dilation) * frac;
                 j.progress += gained;
-                good += j.workers as f64 * gained;
+                if j.spec.class == JobClass::Training {
+                    good += j.workers as f64 * gained;
+                }
                 if j.progress + 1e-9 >= j.spec.duration_steps as f64 {
                     finished.push(i);
                 }
             }
+            if j.spec.class == JobClass::Serving {
+                serve_segment(j, self.cfg.compute_s, lam, dt, frac, pause_before, &mut parcels);
+            }
         }
+        for j in self.queue.iter_mut() {
+            if j.spec.class == JobClass::Serving {
+                queued_segment(j, lam, dt, &mut parcels);
+            }
+        }
+        for &(_, lat) in &parcels {
+            self.reg.observe("serving_latency_ms", lat);
+        }
+        self.serving_lat.extend(parcels);
         let u = if live > 0.0 { util / live } else { 0.0 };
         self.step_util_acc += u * dt;
         self.step_good_acc += good;
@@ -1940,6 +2276,53 @@ impl<'a> Fleet<'a> {
         for jct in &jcts {
             self.reg.observe("jct_steps", *jct);
         }
+        // Serving aggregation. Every branch below is empty or gated on
+        // `has_serving`, so a serving-free fleet reports the trivial
+        // figures (attainment 1.0, p99 0.0) through untouched state.
+        let (mut offered, mut met) = (0.0f64, 0.0f64);
+        for j in &jobs {
+            if j.class == JobClass::Serving {
+                offered += j.requests;
+                met += j.slo_met;
+            }
+        }
+        let slo_attainment = if offered > 0.0 { (met / offered).clamp(0.0, 1.0) } else { 1.0 };
+        let mut lat = std::mem::take(&mut self.serving_lat);
+        let serving_p99_ms = weighted_latency_percentile(&mut lat, 0.99);
+        if self.has_serving {
+            // Per-class JCT: serving jobs never complete (horizon
+            // lifetime), so the completed set is the training set.
+            for jct in &jcts {
+                self.reg.observe("jct_training_steps", *jct);
+            }
+            let n_serving = jobs.iter().filter(|j| j.class == JobClass::Serving).count();
+            self.reg.inc("serving_jobs", n_serving as u64);
+            // Serving jobs get their lifetime span at the horizon (they
+            // have no completion to emit it from).
+            if let Some(trace) = &self.cfg.trace {
+                for j in &self.running {
+                    if j.spec.class != JobClass::Serving {
+                        continue;
+                    }
+                    let t0 = j.spec.arrival_step as f64 * STEP_US;
+                    let dur = (self.cfg.horizon as f64 - j.spec.arrival_step as f64).max(0.0)
+                        * STEP_US;
+                    trace.span(
+                        self.pid,
+                        Self::job_tid(j.spec.id),
+                        &format!("serving job {} ({}x{})", j.spec.id, j.spec.w, j.spec.h),
+                        t0,
+                        dur,
+                        &[
+                            ("requests", j.requests),
+                            ("slo_met", j.slo_met),
+                            ("migrations", j.migrations as f64),
+                            ("ft_continues", j.ft_continues as f64),
+                        ],
+                    );
+                }
+            }
+        }
         self.reg.set_gauge("profile_placement_s", self.prof.placement_s);
         self.reg.set_gauge("profile_contention_s", self.prof.contention_s);
         self.reg.set_gauge("profile_drain_s", self.prof.drain_s);
@@ -1966,6 +2349,9 @@ impl<'a> Fleet<'a> {
                 contention_epochs: self.contention_epochs,
                 segments: self.segments,
                 cache: self.cache.stats().delta(&self.stats_base),
+                slo_attainment,
+                serving_p99_ms,
+                preemptions: self.preemptions,
             },
             jobs,
             samples: self.samples,
@@ -2076,6 +2462,7 @@ fn run_round_robin(
     let mut events = EventQueue::new(timeline);
     let mut pending: VecDeque<JobSpec> = specs.into();
     let mut fleet = Fleet::new(cfg);
+    fleet.has_serving = pending.iter().any(|s| s.class == JobClass::Serving);
     if let Some(trace) = &cfg.trace {
         fleet.pid = trace.alloc_pid(&format!("fleet {label} {}x{} rr", cfg.nx, cfg.ny));
         fleet.cache.set_trace(Some(trace.clone()), fleet.pid);
@@ -2088,14 +2475,7 @@ fn run_round_robin(
         }
         while pending.front().is_some_and(|s| s.arrival_step <= step) {
             let spec = pending.pop_front().expect("front checked");
-            fleet.log(format!(
-                "job {} arrives: {}x{} for {} steps ({})",
-                spec.id,
-                spec.w,
-                spec.h,
-                spec.duration_steps,
-                spec.policy.name()
-            ));
+            fleet.log(arrival_message(&spec));
             fleet.queue.push_back(Job::new(spec));
         }
         fleet.try_admit()?;
@@ -2128,6 +2508,9 @@ fn run_wall_clock(
 ) -> Result<(FleetRun, PlanCache), FleetError> {
     let mut entries: Vec<WallEntry> = Vec::new();
     let mut seq = 0u64;
+    // From the full spec list (not the horizon-filtered entries), so
+    // both engines agree even on degenerate beyond-horizon arrivals.
+    let has_serving = specs.iter().any(|s| s.class == JobClass::Serving);
     // Drain through EventQueue so equal-time cluster events keep the
     // exact stable order the round-robin loop replays.
     let mut events = EventQueue::new(timeline);
@@ -2158,6 +2541,7 @@ fn run_wall_clock(
     entries.sort_unstable();
 
     let mut fleet = Fleet::new(cfg);
+    fleet.has_serving = has_serving;
     if let Some(trace) = &cfg.trace {
         fleet.pid = trace.alloc_pid(&format!("fleet {label} {}x{} wall", cfg.nx, cfg.ny));
         fleet.cache.set_trace(Some(trace.clone()), fleet.pid);
@@ -2195,14 +2579,7 @@ fn apply_entry(fleet: &mut Fleet<'_>, entry: WallEntry) -> Result<(), FleetError
             fleet.handle_event(TimedEvent { at_step: entry.time as u64, event })
         }
         WallKind::Arrival(spec) => {
-            fleet.log(format!(
-                "job {} arrives: {}x{} for {} steps ({})",
-                spec.id,
-                spec.w,
-                spec.h,
-                spec.duration_steps,
-                spec.policy.name()
-            ));
+            fleet.log(arrival_message(&spec));
             fleet.queue.push_back(Job::new(spec));
             Ok(())
         }
@@ -2246,6 +2623,7 @@ mod tests {
             shapes: vec![(4, 4)],
             policies: vec![JobPolicy::Continue],
             scripted: Vec::new(),
+            serving: None,
         };
         cfg
     }

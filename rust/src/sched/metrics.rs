@@ -2,7 +2,7 @@
 //! migration counts, contention dilation / link hotspots — and the
 //! `BENCH_fleet.json` rows.
 
-use super::JobPolicy;
+use super::{JobClass, JobPolicy};
 use crate::collective::PlanCacheStats;
 use crate::obs::Registry;
 use crate::util::bench::JsonReport;
@@ -30,9 +30,10 @@ pub struct JobOutcome {
     pub w: usize,
     pub h: usize,
     pub policy: JobPolicy,
+    pub class: JobClass,
     pub arrival_step: u64,
     /// Fleet step the job finished its work, `None` if the horizon
-    /// ended first.
+    /// ended first (the normal outcome for serving jobs).
     pub completed_at: Option<u64>,
     pub migrations: u64,
     pub shrinks: u64,
@@ -40,6 +41,11 @@ pub struct JobOutcome {
     /// Fleet steps spent in the queue (arrival wait + queue-wait
     /// evictions).
     pub waited_steps: u64,
+    /// Offered requests over the job's lifetime (serving jobs; 0.0
+    /// for training).
+    pub requests: f64,
+    /// Requests served within the job's SLO threshold.
+    pub slo_met: f64,
 }
 
 impl JobOutcome {
@@ -111,6 +117,18 @@ pub struct FleetSummary {
     /// runs sharing one `SharedPlanCache` report only their own
     /// traffic.
     pub cache: PlanCacheStats,
+    /// Fraction of offered serving requests answered within their SLO
+    /// threshold (1.0 when the run has no serving traffic — a missing
+    /// tier attains trivially).
+    pub slo_attainment: f64,
+    /// Request-weighted 99th-percentile serving latency,
+    /// milliseconds (0.0 without serving traffic). Requests arriving
+    /// while a serving job is queued or paused wait the outage out,
+    /// so recovery time flows into this figure.
+    pub serving_p99_ms: f64,
+    /// Training placements evicted to make room for a serving
+    /// rectangle (checkpoint, evict, re-place via the migrate path).
+    pub preemptions: u64,
 }
 
 /// Per-phase wall-time breakdown of one fleet run (`bin/scale.rs
@@ -209,6 +227,9 @@ pub fn push_run(report: &mut JsonReport, run: &FleetRun) {
             ("incremental_compiles", s.cache.incremental_compiles as f64),
             ("step_splice_rate", s.cache.step_splice_rate()),
             ("persist_loaded", s.cache.persist_loaded as f64),
+            ("slo_attainment", s.slo_attainment),
+            ("serving_p99_ms", s.serving_p99_ms),
+            ("preemptions", s.preemptions as f64),
         ],
     );
     for p in &run.samples {
@@ -256,12 +277,15 @@ mod tests {
             w: 4,
             h: 4,
             policy: JobPolicy::Adaptive,
+            class: JobClass::Training,
             arrival_step: 10,
             completed_at: Some(250),
             migrations: 1,
             shrinks: 0,
             ft_continues: 2,
             waited_steps: 3,
+            requests: 0.0,
+            slo_met: 0.0,
         };
         assert_eq!(j.jct(), Some(240));
         let unfinished = JobOutcome { completed_at: None, ..j };

@@ -82,7 +82,7 @@ pub use metrics::{FleetProfile, FleetRun, FleetSummary, JobOutcome, LinkHotspot,
 pub use placer::{
     largest_clear_rect, largest_clear_rect_scan, place, place_oriented, PlacementIndex, Rect,
 };
-pub use workload::WorkloadModel;
+pub use workload::{RequestProcess, ServingWorkload, WorkloadModel};
 
 #[derive(Debug, Error)]
 pub enum FleetError {
@@ -155,6 +155,39 @@ impl JobPolicy {
     }
 }
 
+/// Workload class of a job: throughput-oriented training or
+/// latency-sensitive serving (arXiv 2512.25059: one FT-collective /
+/// plan-cache substrate shared by both classes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobClass {
+    /// Batch training: progress measured in completed steps; goodput
+    /// accounting, checkpoint/rollback recovery.
+    Training,
+    /// Online inference: runs until the horizon, serves a seeded
+    /// request process, and is judged by a latency SLO instead of
+    /// job-completion time.
+    Serving,
+}
+
+impl JobClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobClass::Training => "training",
+            JobClass::Serving => "serving",
+        }
+    }
+}
+
+/// Per-job latency SLO for serving jobs: the request-latency
+/// percentile that must land under `threshold_ms`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// Target percentile in (0, 1], e.g. 0.99.
+    pub percentile: f64,
+    /// Latency threshold in milliseconds at that percentile.
+    pub threshold_ms: f64,
+}
+
 /// One job of a fleet workload.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
@@ -164,9 +197,30 @@ pub struct JobSpec {
     /// Requested sub-mesh shape (even dims; the placer may rotate).
     pub w: usize,
     pub h: usize,
-    /// Training steps of work the job must complete.
+    /// Training steps of work the job must complete. Serving jobs use
+    /// `u64::MAX`: they run until the horizon.
     pub duration_steps: u64,
     pub policy: JobPolicy,
+    /// Workload class; [`JobClass::Training`] preserves the pre-serving
+    /// engine bit-for-bit.
+    pub class: JobClass,
+    /// Latency SLO; only meaningful for serving jobs.
+    pub slo: Option<SloSpec>,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            id: 0,
+            arrival_step: 0,
+            w: 2,
+            h: 2,
+            duration_steps: 1,
+            policy: JobPolicy::Continue,
+            class: JobClass::Training,
+            slo: None,
+        }
+    }
 }
 
 impl JobSpec {

@@ -7,9 +7,106 @@
 //! durations are exponential (the standard open-arrival cluster
 //! model); shapes are drawn uniformly from a board/host-aligned set.
 
-use super::{JobPolicy, JobSpec};
+use super::{JobClass, JobPolicy, JobSpec, SloSpec};
 use crate::cluster::mtbf::exp_steps;
 use crate::util::rng::SplitMix64;
+
+/// Seeded request-arrival intensity for the serving tier: a diurnal
+/// sinusoid (the daily traffic swell) multiplied by a two-state
+/// Markov-modulated Poisson overlay (calm/burst regime switches with
+/// exponential sojourns) — the standard stand-in for bursty user
+/// traffic. [`intensities`](Self::intensities) renders the process
+/// into one λ value per fleet step, a pure function of the seed.
+#[derive(Debug, Clone)]
+pub struct RequestProcess {
+    /// Mean requests per fleet step in the calm state, before the
+    /// diurnal factor.
+    pub base_rps: f64,
+    /// Diurnal sinusoid period, fleet steps.
+    pub period_steps: f64,
+    /// Diurnal amplitude in `[0, 1)`: intensity swings between
+    /// `base * (1 - a)` and `base * (1 + a)`.
+    pub amplitude: f64,
+    /// Arrival-rate multiplier while the MMPP is in its burst state.
+    pub burst_mult: f64,
+    /// Mean sojourn in the calm state, fleet steps (exponential).
+    pub calm_mean_steps: f64,
+    /// Mean sojourn in the burst state, fleet steps (exponential).
+    pub burst_mean_steps: f64,
+}
+
+impl RequestProcess {
+    /// A diurnal + bursty default scaled so a healthy placement sits
+    /// well under saturation in the calm state and brushes overload
+    /// during bursts at the diurnal peak.
+    pub fn diurnal(base_rps: f64) -> Self {
+        Self {
+            base_rps,
+            period_steps: 120.0,
+            amplitude: 0.4,
+            burst_mult: 3.0,
+            calm_mean_steps: 40.0,
+            burst_mean_steps: 8.0,
+        }
+    }
+
+    /// Render the process into one mean arrival intensity (requests
+    /// per fleet step) per step of the horizon. Pure function of
+    /// `(self, seed, horizon)`.
+    pub fn intensities(&self, seed: u64, horizon: u64) -> Vec<f64> {
+        let mut rng = SplitMix64::new(seed ^ 0x4d4d_5050_5251_0000); // "MMPPRQ"
+        let mut out = Vec::with_capacity(horizon as usize);
+        let mut burst = false;
+        let mut remaining = exp_steps(&mut rng, self.calm_mean_steps).max(1);
+        for t in 0..horizon {
+            let phase = 2.0 * std::f64::consts::PI * t as f64 / self.period_steps.max(1.0);
+            let diurnal = 1.0 + self.amplitude * phase.sin();
+            let mult = if burst { self.burst_mult } else { 1.0 };
+            out.push((self.base_rps * diurnal * mult).max(0.0));
+            remaining -= 1;
+            if remaining == 0 {
+                burst = !burst;
+                let mean = if burst { self.burst_mean_steps } else { self.calm_mean_steps };
+                remaining = exp_steps(&mut rng, mean).max(1);
+            }
+        }
+        out
+    }
+}
+
+/// The serving tier of a workload: latency-SLO inference jobs that run
+/// to the horizon and serve the [`RequestProcess`] traffic. `None` on
+/// [`WorkloadModel::serving`] disables the tier entirely — the
+/// generated specs, and therefore the whole fleet, are bit-identical
+/// to a pre-serving engine (`rust/tests/serving_differential.rs`).
+#[derive(Debug, Clone)]
+pub struct ServingWorkload {
+    /// Number of serving jobs (0 also disables the tier).
+    pub jobs: usize,
+    /// Candidate sub-mesh shapes, drawn uniformly (even dims).
+    pub shapes: Vec<(usize, usize)>,
+    /// Latency SLO applied to every serving job.
+    pub slo: SloSpec,
+    /// Mean fleet steps between serving-job arrivals (exponential;
+    /// the first serving job arrives at step 0).
+    pub mean_interarrival_steps: f64,
+    /// The request-arrival intensity all serving jobs share.
+    pub arrival: RequestProcess,
+}
+
+impl ServingWorkload {
+    /// A quick serving tier: `jobs` replicas, board-aligned shapes,
+    /// p99 <= 60 ms.
+    pub fn quick(jobs: usize) -> Self {
+        Self {
+            jobs,
+            shapes: vec![(4, 4), (4, 2)],
+            slo: SloSpec { percentile: 0.99, threshold_ms: 60.0 },
+            mean_interarrival_steps: 20.0,
+            arrival: RequestProcess::diurnal(0.25),
+        }
+    }
+}
 
 /// Parameters of the job arrival process.
 #[derive(Debug, Clone)]
@@ -33,9 +130,17 @@ pub struct WorkloadModel {
     /// Explicitly scripted jobs: when non-empty, [`generate`]
     /// returns exactly these specs (sorted by arrival) instead of
     /// sampling — the hook targeted contention/backfill scenarios use.
+    /// Scripted specs may carry serving jobs; [`Self::serving`] then
+    /// supplies only the shared request process.
     ///
     /// [`generate`]: WorkloadModel::generate
     pub scripted: Vec<JobSpec>,
+    /// Latency-SLO serving tier; `None` (the default everywhere)
+    /// keeps the workload — and the fleet engine — bit-identical to
+    /// the training-only model. Serving jobs are drawn from an
+    /// independent RNG stream, so enabling the tier never perturbs
+    /// the training draw.
+    pub serving: Option<ServingWorkload>,
 }
 
 impl WorkloadModel {
@@ -50,6 +155,7 @@ impl WorkloadModel {
             shapes: vec![(8, 8), (8, 4), (4, 4), (4, 2)],
             policies: vec![JobPolicy::Adaptive],
             scripted: Vec::new(),
+            serving: None,
         }
     }
 
@@ -65,6 +171,7 @@ impl WorkloadModel {
             shapes: vec![(8, 8), (8, 4), (4, 4)],
             policies: vec![JobPolicy::Adaptive],
             scripted: Vec::new(),
+            serving: None,
         }
     }
 
@@ -80,6 +187,7 @@ impl WorkloadModel {
             shapes: Vec::new(),
             policies: Vec::new(),
             scripted: specs,
+            serving: None,
         }
     }
 
@@ -105,7 +213,47 @@ impl WorkloadModel {
             let duration_steps =
                 self.min_duration_steps + exp_steps(&mut rng, self.mean_duration_steps);
             let policy = *rng.choose(&self.policies);
-            out.push(JobSpec { id, arrival_step: t, w, h, duration_steps, policy });
+            out.push(JobSpec {
+                id,
+                arrival_step: t,
+                w,
+                h,
+                duration_steps,
+                policy,
+                class: JobClass::Training,
+                slo: None,
+            });
+        }
+        // The serving tier draws from its own RNG stream, so enabling
+        // it leaves the training draw above byte-identical. Serving
+        // jobs run to the horizon (duration `u64::MAX`) under
+        // `JobPolicy::Continue`: on fail/repair their collective plan
+        // heals in place through the shared cache's incremental
+        // recompile instead of a full restart.
+        if let Some(sv) = &self.serving {
+            if sv.jobs > 0 && !sv.shapes.is_empty() {
+                let mut srng = SplitMix64::new(self.seed ^ 0x5345_5256_4500_0000); // "SERVE"
+                let mut st = 0u64;
+                for k in 0..sv.jobs {
+                    if k > 0 {
+                        st = st.saturating_add(exp_steps(&mut srng, sv.mean_interarrival_steps));
+                    }
+                    let (w, h) = *srng.choose(&sv.shapes);
+                    out.push(JobSpec {
+                        id: self.jobs + k,
+                        arrival_step: st,
+                        w,
+                        h,
+                        duration_steps: u64::MAX,
+                        policy: JobPolicy::Continue,
+                        class: JobClass::Serving,
+                        slo: Some(sv.slo),
+                    });
+                }
+                // Stable: equal arrivals keep training-before-serving
+                // and id order within each tier.
+                out.sort_by_key(|s| s.arrival_step);
+            }
         }
         out
     }
@@ -142,7 +290,7 @@ mod tests {
     }
 
     fn spec(id: usize, arrival_step: u64, policy: JobPolicy) -> JobSpec {
-        JobSpec { id, arrival_step, w: 4, h: 4, duration_steps: 50, policy }
+        JobSpec { id, arrival_step, w: 4, h: 4, duration_steps: 50, policy, ..JobSpec::default() }
     }
 
     #[test]
@@ -155,6 +303,54 @@ mod tests {
         assert_eq!(out[1].arrival_step, 5);
         // Generation is stable.
         assert_eq!(m.generate().len(), 2);
+    }
+
+    #[test]
+    fn serving_tier_never_perturbs_training_draw() {
+        let base = WorkloadModel::quick(7);
+        let mut with = WorkloadModel::quick(7);
+        with.serving = Some(ServingWorkload::quick(3));
+        let a = base.generate();
+        let b = with.generate();
+        assert_eq!(b.len(), a.len() + 3);
+        let train: Vec<&JobSpec> =
+            b.iter().filter(|s| s.class == JobClass::Training).collect();
+        assert_eq!(train.len(), a.len());
+        for (x, y) in a.iter().zip(train) {
+            assert_eq!(
+                (x.id, x.arrival_step, x.w, x.h, x.duration_steps, x.policy),
+                (y.id, y.arrival_step, y.w, y.h, y.duration_steps, y.policy)
+            );
+        }
+        for s in b.iter().filter(|s| s.class == JobClass::Serving) {
+            assert_eq!(s.duration_steps, u64::MAX, "serving runs to the horizon");
+            assert_eq!(s.policy, JobPolicy::Continue, "serving heals in place");
+            assert!(s.slo.is_some());
+            assert!(s.id >= a.len(), "serving ids continue after training ids");
+        }
+        for w in b.windows(2) {
+            assert!(w[0].arrival_step <= w[1].arrival_step, "arrivals sorted");
+        }
+    }
+
+    #[test]
+    fn request_process_is_seeded_and_nonnegative() {
+        let p = RequestProcess::diurnal(0.25);
+        let a = p.intensities(5, 300);
+        let b = p.intensities(5, 300);
+        assert_eq!(a.len(), 300);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "equal seeds, equal traffic");
+        }
+        assert!(a.iter().all(|&l| l >= 0.0));
+        let c = p.intensities(6, 300);
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.to_bits() != y.to_bits()),
+            "different seeds switch regimes at different times"
+        );
+        let mx = a.iter().cloned().fold(0.0f64, f64::max);
+        let mn = a.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(mx > mn, "diurnal + burst overlay must vary");
     }
 
     #[test]

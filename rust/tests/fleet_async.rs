@@ -43,6 +43,7 @@ fn small_cfg(seed: u64) -> FleetConfig {
         shapes: vec![(4, 4), (4, 2), (2, 2)],
         policies: JobPolicy::ALL.to_vec(),
         scripted: Vec::new(),
+        serving: None,
     };
     cfg.policy = None; // mixed per-job policies
     cfg.mtbf = Some(MtbfModel::board(seed.wrapping_mul(31).wrapping_add(7), 30.0, 15.0));
@@ -178,8 +179,8 @@ fn prop_fair_shares_never_overcharge_links() {
 }
 
 fn spec(id: usize, arrival: u64, w: usize, h: usize, duration: u64) -> JobSpec {
-    let policy = JobPolicy::Continue;
-    JobSpec { id, arrival_step: arrival, w, h, duration_steps: duration, policy }
+    let (policy, duration_steps) = (JobPolicy::Continue, duration);
+    JobSpec { id, arrival_step: arrival, w, h, duration_steps, policy, ..JobSpec::default() }
 }
 
 fn contended_cfg(jobs: Vec<JobSpec>) -> FleetConfig {

@@ -37,6 +37,7 @@ fn prop_random_fleets_never_violate_placement_invariants() {
             shapes: vec![(2, 2), (4, 2), (4, 4)],
             policies: JobPolicy::ALL.to_vec(),
             scripted: Vec::new(),
+            serving: None,
         };
         cfg.policy = None; // mixed per-job policies
         let mtbf = 10.0 + 30.0 * rng.next_f64();
@@ -153,7 +154,7 @@ fn have_artifacts() -> bool {
 }
 
 fn spec(id: usize, w: usize, h: usize, policy: JobPolicy) -> JobSpec {
-    JobSpec { id, arrival_step: 0, w, h, duration_steps: 100, policy }
+    JobSpec { id, arrival_step: 0, w, h, duration_steps: 100, policy, ..JobSpec::default() }
 }
 
 #[test]

@@ -17,7 +17,7 @@
 
 use meshreduce::cluster::{ClusterEvent, MtbfModel, TimedEvent};
 use meshreduce::mesh::FailedRegion;
-use meshreduce::obs::{Histogram, TraceHandle};
+use meshreduce::obs::{Histogram, Registry, TraceHandle};
 use meshreduce::sched::{
     run_fleet, ClockMode, ContentionModel, FleetConfig, FleetRun, JobPolicy, WorkloadModel,
 };
@@ -44,6 +44,7 @@ fn contended_cfg(seed: u64) -> FleetConfig {
         shapes: vec![(4, 4), (4, 2), (2, 2)],
         policies: JobPolicy::ALL.to_vec(),
         scripted: Vec::new(),
+        serving: None,
     };
     cfg.policy = None; // mixed per-job policies
     cfg.mtbf = Some(MtbfModel::board(seed.wrapping_mul(31).wrapping_add(7), 30.0, 15.0));
@@ -172,6 +173,91 @@ fn bounded_ring_drops_oldest_without_perturbing_results() {
     assert_runs_bit_identical(&traced, &plain);
     assert!(handle.dropped() > 0, "capacity 16 should have evicted");
     assert_eq!(handle.total(), handle.len() as u64 + handle.dropped());
+}
+
+/// Correlation ids of every exported async record with phase `ph`.
+/// Async records render as `..,"cat":"recovery","id":"N"}`, and only
+/// `b`/`e` phases carry an `"id"` key, so the first `"id":"` after the
+/// phase tag belongs to the same record.
+fn async_ids(json: &str, ph: char) -> Vec<String> {
+    let needle = format!("\"ph\":\"{ph}\"");
+    json.match_indices(&needle)
+        .map(|(i, _)| {
+            let rest = &json[i..];
+            let idpos = rest.find("\"id\":\"").expect("async record must carry an id");
+            let tail = &rest[idpos + 6..];
+            tail[..tail.find('"').expect("id terminates")].to_string()
+        })
+        .collect()
+}
+
+#[test]
+fn evicting_ring_export_drops_orphaned_async_halves() {
+    // Regression: ring eviction can strand one half of an async
+    // recovery span; an unmatched `e` makes the exported stream
+    // unimportable. The export must carry only matched pairs, count
+    // the suppressed halves, and the well-formedness check must
+    // tolerate stranded halves exactly because the ring evicted.
+    let mut cfg = contended_cfg(37);
+    let handle = TraceHandle::with_capacity(16);
+    cfg.trace = Some(handle.clone());
+    run_fleet(&cfg).expect("traced run");
+    assert!(handle.dropped() > 0, "capacity 16 must evict");
+    // Strand an end whose begin is long gone from the ring.
+    let id = handle.alloc_id();
+    handle.end(1, 0, "stranded recovery", id, 1.0);
+    let json = handle.render_json();
+    let mut begins = async_ids(&json, 'b');
+    let mut ends = async_ids(&json, 'e');
+    begins.sort();
+    ends.sort();
+    assert_eq!(begins, ends, "export must carry only matched async pairs");
+    assert!(!json.contains("stranded recovery"), "orphan end leaked into the export");
+    assert!(handle.orphans_dropped() >= 1, "orphans must enter the drop accounting");
+    handle.check_wellformed().expect("stranded halves are tolerated once the ring evicted");
+    assert_eq!(handle.total(), handle.len() as u64 + handle.dropped());
+}
+
+#[test]
+fn prop_histogram_merge_skips_mismatched_grids_losslessly() {
+    // Merging a registry whose histogram shares a name but not a
+    // bucket grid must never corrupt the target: mismatched grids are
+    // skipped intact and tallied, matching grids add bucket-wise.
+    let config = Config { cases: 64, seed: 0x4D15_4A7C };
+    prop_check("histogram merge mismatch", config, |rng: &mut SplitMix64| {
+        let first = 0.5 + rng.next_f64() * 4.0;
+        let factor = 1.3 + rng.next_f64();
+        let n = 2 + rng.next_below(16) as usize;
+        let mut a = Registry::new();
+        a.register_hist("h", Histogram::log_buckets(first, factor, n));
+        for _ in 0..rng.next_below(64) {
+            a.observe("h", rng.next_f64() * first * 100.0);
+        }
+        let matching = rng.next_below(2) == 0;
+        let mut b = Registry::new();
+        let grid = if matching {
+            Histogram::log_buckets(first, factor, n)
+        } else {
+            Histogram::log_buckets(first * 0.5, factor + 0.25, n + 1)
+        };
+        b.register_hist("h", grid);
+        for _ in 0..1 + rng.next_below(64) {
+            b.observe("h", rng.next_f64() * first * 100.0);
+        }
+        let before = a.histogram("h").unwrap().clone();
+        a.merge(&b);
+        let after = a.histogram("h").unwrap();
+        let other = b.histogram("h").unwrap();
+        if matching {
+            assert_eq!(after.count(), before.count() + other.count(), "matched merge adds");
+            let total: u64 = after.counts().iter().sum();
+            assert_eq!(total, after.count(), "bucket counts conserved through merge");
+            assert_eq!(a.counter("hist_merge_bounds_mismatch"), 0);
+        } else {
+            assert_eq!(after, &before, "mismatched merge must leave the target intact");
+            assert_eq!(a.counter("hist_merge_bounds_mismatch"), 1, "skip must be tallied");
+        }
+    });
 }
 
 #[test]

@@ -142,6 +142,34 @@ fn corrupted_route_bytes_error_without_panicking() {
 }
 
 #[test]
+fn interrupted_save_never_corrupts_the_published_file() {
+    // Regression: a crash mid-save leaves only the staging file — the
+    // published path must still hold the last complete snapshot, and a
+    // later save must stage over the leftover and publish atomically.
+    let (path, bytes) = saved_cache_bytes("atomic");
+    // Simulated partial write: a half-written staging file from a
+    // dead writer, at the exact name save() stages to.
+    let mut tmp_name = path.file_name().unwrap().to_os_string();
+    tmp_name.push(format!(".tmp.{}", std::process::id()));
+    let tmp = path.with_file_name(tmp_name);
+    fs::write(&tmp, &bytes[..bytes.len() / 2]).unwrap();
+    // The torn bytes never reached the published file.
+    let loaded = PlanCache::load(&path, 4).expect("published snapshot intact");
+    assert_eq!(loaded.stats().persist_loaded, 1);
+    // A fresh save overwrites the leftover staging file and renames it
+    // into place; nothing half-written survives at either name.
+    let mut cache = PlanCache::new(4);
+    cache.get(Scheme::FaultTolerant, &Topology::full(8, 8), 1 << 10).unwrap();
+    assert_eq!(cache.save(&path, 1).unwrap(), 1);
+    assert!(!tmp.exists(), "staging file must be renamed away, not left behind");
+    assert_eq!(fs::read(&path).unwrap(), bytes, "published snapshot must be byte-complete");
+    // A path with no file name cannot be staged and must error cleanly.
+    let err = cache.save(std::path::Path::new("/"), 1).expect_err("no file name");
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+    let _ = fs::remove_file(&path);
+}
+
+#[test]
 fn paper_scale_sweep_grid_completes_with_cache_hits() {
     // The acceptance shape: a 16x32 sweep, 8 seeds x 3 policies,
     // through the parallel driver. Payload and horizon are reduced to

@@ -48,6 +48,7 @@ fn contended_cfg(seed: u64) -> FleetConfig {
         shapes: vec![(4, 4), (4, 2), (2, 2)],
         policies: JobPolicy::ALL.to_vec(),
         scripted: Vec::new(),
+        serving: None,
     };
     cfg.policy = None; // mixed per-job policies
     cfg.mtbf = Some(MtbfModel::board(seed.wrapping_mul(31).wrapping_add(7), 30.0, 15.0));

@@ -1,0 +1,392 @@
+//! Differential/property suite for the serving tier (ISSUE 10):
+//!
+//! - **Differential (serving absent)**: a fleet with no serving tier —
+//!   `serving: None`, an empty tier (`jobs: 0`), or the preemption
+//!   flag toggled — is bit-identical to the pre-serving engine across
+//!   >= 3 seeds and both clock engines: event trace, per-job outcomes,
+//!   goodput/utilization bits, sampled curves, and the deterministic
+//!   metrics registry all reproduce exactly, and the serving summary
+//!   figures stay at their trivial values (attainment 1.0, p99 0.0,
+//!   zero preemptions).
+//! - **Differential (serving present)**: with the tier on, the
+//!   wall-clock engine (contention off) reproduces the round-robin
+//!   reference bit for bit, including request/SLO accounting.
+//! - **Scenario**: a scripted full-mesh workload where the serving job
+//!   can only place by evicting training — preemption fires, the
+//!   evicted job checkpoint-restores and still completes, and the
+//!   preemption-off control places the same serving job late with a
+//!   strictly worse SLO attainment.
+//! - **Property**: SLO attainment lands in [0, 1] with live traffic,
+//!   and the M/D/1 serving latency never beats the isolated
+//!   (dilation-free, queue-free) step time.
+
+use meshreduce::cluster::{ClusterEvent, MtbfModel, TimedEvent};
+use meshreduce::mesh::FailedRegion;
+use meshreduce::perfmodel::steptime::serving_latency_ms;
+use meshreduce::sched::{
+    run_fleet, ClockMode, ContentionModel, FleetConfig, FleetRun, JobClass, JobPolicy, JobSpec,
+    RequestProcess, ServingWorkload, SloSpec, WorkloadModel,
+};
+use meshreduce::util::prop::{prop_check, Config};
+use meshreduce::util::rng::SplitMix64;
+
+/// Wall-clock fleet with contention, backfill, mixed policies, a live
+/// MTBF timeline, and a scripted half-mesh outage — the same stressed
+/// scenario the observability differential uses, so every recovery
+/// path the serving tier must not perturb gets traffic.
+fn contended_cfg(seed: u64) -> FleetConfig {
+    let mut cfg = FleetConfig::quick();
+    cfg.nx = 8;
+    cfg.ny = 8;
+    cfg.horizon = 160;
+    cfg.payload = 1 << 14;
+    cfg.compute_s = 1e-3;
+    cfg.workload = WorkloadModel {
+        seed,
+        jobs: 4,
+        mean_interarrival_steps: 12.0,
+        mean_duration_steps: 60.0,
+        min_duration_steps: 30,
+        shapes: vec![(4, 4), (4, 2), (2, 2)],
+        policies: JobPolicy::ALL.to_vec(),
+        scripted: Vec::new(),
+        serving: None,
+    };
+    cfg.policy = None; // mixed per-job policies
+    cfg.mtbf = Some(MtbfModel::board(seed.wrapping_mul(31).wrapping_add(7), 30.0, 15.0));
+    let region = FailedRegion::new(0, 0, 8, 4);
+    cfg.events = vec![
+        TimedEvent { at_step: 30, event: ClusterEvent::Fail(region) },
+        TimedEvent { at_step: 70, event: ClusterEvent::Repair(region) },
+    ];
+    cfg.clock = ClockMode::WallClock;
+    cfg.contention = Some(ContentionModel::stressed());
+    cfg.backfill = true;
+    cfg
+}
+
+/// Full bit-identity between two runs of the *same* engine: everything
+/// the engine reports, down to float bits, plus the deterministic half
+/// of the metrics registry.
+fn assert_same_engine_identical(a: &FleetRun, b: &FleetRun) {
+    assert_eq!(a.events, b.events, "event trace diverged");
+    assert_eq!(a.jobs.len(), b.jobs.len());
+    for (x, y) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.class, y.class, "job {} class", x.id);
+        assert_eq!(x.completed_at, y.completed_at, "job {} completion", x.id);
+        assert_eq!(x.migrations, y.migrations);
+        assert_eq!(x.shrinks, y.shrinks);
+        assert_eq!(x.ft_continues, y.ft_continues);
+        assert_eq!(x.waited_steps, y.waited_steps, "job {} waited", x.id);
+        assert_eq!(x.requests.to_bits(), y.requests.to_bits(), "job {} requests", x.id);
+        assert_eq!(x.slo_met.to_bits(), y.slo_met.to_bits(), "job {} slo_met", x.id);
+    }
+    let (s, d) = (&a.summary, &b.summary);
+    assert_eq!(s.goodput.to_bits(), d.goodput.to_bits());
+    assert_eq!(s.mean_utilization.to_bits(), d.mean_utilization.to_bits());
+    assert_eq!(s.mean_dilation.to_bits(), d.mean_dilation.to_bits());
+    assert_eq!(s.max_dilation.to_bits(), d.max_dilation.to_bits());
+    assert_eq!(s.slo_attainment.to_bits(), d.slo_attainment.to_bits(), "attainment diverged");
+    assert_eq!(s.serving_p99_ms.to_bits(), d.serving_p99_ms.to_bits(), "p99 diverged");
+    assert_eq!(s.preemptions, d.preemptions, "preemption count diverged");
+    assert_eq!(s.contention_epochs, d.contention_epochs, "epoch count diverged");
+    assert_eq!(s.segments, d.segments, "segment count diverged");
+    assert_eq!(s.queue_waits, d.queue_waits);
+    assert_eq!(s.backfills, d.backfills);
+    assert_eq!(s.transitions, d.transitions);
+    assert_eq!(s.rewires, d.rewires);
+    assert_eq!(a.samples.len(), b.samples.len());
+    for (x, y) in a.samples.iter().zip(&b.samples) {
+        assert_eq!(x.step, y.step);
+        assert_eq!(x.utilization.to_bits(), y.utilization.to_bits());
+        assert_eq!(x.goodput.to_bits(), y.goodput.to_bits());
+        assert_eq!(x.max_dilation.to_bits(), y.max_dilation.to_bits());
+        assert_eq!((x.running, x.queued), (y.running, y.queued));
+    }
+    assert!(a.metrics.deterministic_eq(&b.metrics), "deterministic metrics diverged");
+}
+
+/// Cross-engine bit-identity (round-robin vs contention-free
+/// wall-clock): the outputs both engines contractually share, now
+/// including the serving request/SLO accounting. Engine-local figures
+/// (segment counts, engine-specific histograms) are out of scope, as
+/// in the training differential.
+fn assert_cross_engine_identical(rr: &FleetRun, wall: &FleetRun) {
+    assert_eq!(rr.events, wall.events, "placement/event trace diverged");
+    assert_eq!(rr.jobs.len(), wall.jobs.len());
+    for (a, b) in rr.jobs.iter().zip(&wall.jobs) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.class, b.class, "job {} class", a.id);
+        assert_eq!(a.completed_at, b.completed_at, "job {} completion", a.id);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.shrinks, b.shrinks);
+        assert_eq!(a.ft_continues, b.ft_continues);
+        assert_eq!(a.waited_steps, b.waited_steps, "job {} waited", a.id);
+        assert_eq!(a.requests.to_bits(), b.requests.to_bits(), "job {} requests", a.id);
+        assert_eq!(a.slo_met.to_bits(), b.slo_met.to_bits(), "job {} slo_met", a.id);
+    }
+    let (s, d) = (&rr.summary, &wall.summary);
+    assert_eq!(s.goodput.to_bits(), d.goodput.to_bits());
+    assert_eq!(s.mean_utilization.to_bits(), d.mean_utilization.to_bits());
+    assert_eq!(s.queue_waits, d.queue_waits);
+    assert_eq!(s.transitions, d.transitions);
+    assert_eq!(s.slo_attainment.to_bits(), d.slo_attainment.to_bits(), "attainment diverged");
+    assert_eq!(s.serving_p99_ms.to_bits(), d.serving_p99_ms.to_bits(), "p99 diverged");
+    assert_eq!(s.preemptions, d.preemptions, "preemption count diverged");
+    assert_eq!(rr.samples.len(), wall.samples.len());
+    for (a, b) in rr.samples.iter().zip(&wall.samples) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+        assert_eq!(a.goodput.to_bits(), b.goodput.to_bits());
+        assert_eq!((a.running, a.queued), (b.running, b.queued));
+    }
+}
+
+#[test]
+fn serving_absent_is_bit_identical_across_seeds_and_clocks() {
+    // Three ways of not having a serving tier — no tier configured, an
+    // empty tier, and the preemption flag toggled with no tier — must
+    // all reproduce the reference run exactly, under both engines.
+    for seed in [11u64, 23, 37] {
+        for clock in [ClockMode::RoundRobin, ClockMode::WallClock] {
+            let mut base = contended_cfg(seed);
+            base.clock = clock;
+            let reference = run_fleet(&base).expect("serving-free reference");
+
+            let mut empty_tier = contended_cfg(seed);
+            empty_tier.clock = clock;
+            empty_tier.workload.serving =
+                Some(ServingWorkload { jobs: 0, ..ServingWorkload::quick(2) });
+            let run = run_fleet(&empty_tier).expect("empty-tier run");
+            assert_same_engine_identical(&reference, &run);
+
+            let mut flag_off = contended_cfg(seed);
+            flag_off.clock = clock;
+            flag_off.serving_preemption = !flag_off.serving_preemption;
+            let run = run_fleet(&flag_off).expect("preemption-flag run");
+            assert_same_engine_identical(&reference, &run);
+
+            // The serving summary stays at its trivial values and no
+            // serving-only metrics family appears.
+            let s = &reference.summary;
+            assert_eq!(s.slo_attainment.to_bits(), 1.0f64.to_bits(), "vacuous attainment");
+            assert_eq!(s.serving_p99_ms.to_bits(), 0.0f64.to_bits(), "vacuous p99");
+            assert_eq!(s.preemptions, 0);
+            assert_eq!(reference.metrics.counter("serving_jobs"), 0);
+            assert_eq!(reference.metrics.counter("preemptions"), 0);
+            assert!(
+                !reference.events.iter().any(|(_, e)| e.contains("preempted for serving")),
+                "seed {seed}: serving-free run logged a preemption"
+            );
+        }
+    }
+}
+
+#[test]
+fn serving_slo_metrics_stay_in_range_across_seeds() {
+    // With the tier on: attainment is a fraction of offered requests,
+    // p99 is a positive finite latency, serving jobs run to the
+    // horizon (never complete), and the whole run is deterministic.
+    for seed in [1u64, 5, 9, 13] {
+        let mut cfg = contended_cfg(seed);
+        cfg.workload.serving = Some(ServingWorkload::quick(2));
+        let run = run_fleet(&cfg).expect("serving fleet run");
+        let again = run_fleet(&cfg).expect("identical rerun");
+        assert_same_engine_identical(&run, &again);
+
+        let s = &run.summary;
+        assert!(
+            (0.0..=1.0).contains(&s.slo_attainment),
+            "seed {seed}: attainment {} outside [0, 1]",
+            s.slo_attainment
+        );
+        let serving: Vec<_> = run.jobs.iter().filter(|j| j.class == JobClass::Serving).collect();
+        assert_eq!(serving.len(), 2, "seed {seed}: serving jobs lost in generation");
+        let mut offered = 0.0f64;
+        for j in &serving {
+            assert!(j.completed_at.is_none(), "seed {seed}: serving job {} completed", j.id);
+            assert!(j.slo_met >= 0.0, "seed {seed}: job {} negative slo_met", j.id);
+            assert!(
+                j.slo_met <= j.requests + 1e-9,
+                "seed {seed}: job {} met {} of only {} requests",
+                j.id,
+                j.slo_met,
+                j.requests
+            );
+            offered += j.requests;
+        }
+        assert!(offered > 0.0, "seed {seed}: the request process offered no traffic");
+        assert!(
+            s.serving_p99_ms > 0.0 && s.serving_p99_ms.is_finite(),
+            "seed {seed}: p99 {} with live traffic",
+            s.serving_p99_ms
+        );
+        assert_eq!(run.metrics.counter("serving_jobs"), 2);
+        assert_eq!(
+            run.jobs.iter().filter(|j| j.class == JobClass::Training).count(),
+            4,
+            "seed {seed}: training workload perturbed by the serving tier"
+        );
+    }
+}
+
+/// Four 4x4 training jobs fill the 8x8 mesh; a 4x4 serving job arrives
+/// at step 10 and can only place by evicting one of them. No failures
+/// — preemption is the only recovery-like path that can fire.
+fn scripted_serving_cfg(preemption: bool) -> FleetConfig {
+    let mut cfg = FleetConfig::quick();
+    cfg.nx = 8;
+    cfg.ny = 8;
+    cfg.horizon = 400;
+    cfg.payload = 1 << 10;
+    cfg.compute_s = 1e-3;
+    cfg.checkpoint_every = 10;
+    cfg.mtbf = None;
+    cfg.events = Vec::new();
+    cfg.clock = ClockMode::WallClock;
+    cfg.contention = None;
+    cfg.backfill = false;
+    cfg.serving_preemption = preemption;
+    let slo = SloSpec { percentile: 0.99, threshold_ms: 60.0 };
+    let mut specs: Vec<JobSpec> = (0..4)
+        .map(|id| JobSpec {
+            id,
+            arrival_step: 0,
+            w: 4,
+            h: 4,
+            duration_steps: 60,
+            policy: JobPolicy::Migrate,
+            ..JobSpec::default()
+        })
+        .collect();
+    specs.push(JobSpec {
+        id: 4,
+        arrival_step: 10,
+        w: 4,
+        h: 4,
+        duration_steps: u64::MAX,
+        policy: JobPolicy::Continue,
+        class: JobClass::Serving,
+        slo: Some(slo),
+    });
+    cfg.workload = WorkloadModel::from_specs(specs);
+    // `from_specs` carries no serving tier; re-attach the request
+    // process (jobs: 0 adds no generated serving jobs on top of the
+    // scripted one) so the scripted serving job sees traffic.
+    cfg.workload.serving = Some(ServingWorkload {
+        jobs: 0,
+        shapes: Vec::new(),
+        slo,
+        mean_interarrival_steps: 20.0,
+        arrival: RequestProcess::diurnal(0.25),
+    });
+    cfg.policy = None;
+    cfg
+}
+
+#[test]
+fn preemption_evicts_training_which_checkpoint_restores_and_completes() {
+    let on = run_fleet(&scripted_serving_cfg(true)).expect("preemption-on run");
+    let again = run_fleet(&scripted_serving_cfg(true)).expect("rerun");
+    assert_same_engine_identical(&on, &again);
+
+    // The serving job could only place by evicting training.
+    assert!(on.summary.preemptions >= 1, "full mesh must force a preemption");
+    assert!(
+        on.events.iter().any(|(_, e)| e.contains("preempted for serving")),
+        "preemption must be logged"
+    );
+    let placed_at = |run: &FleetRun| {
+        run.events
+            .iter()
+            .find(|(_, e)| e.starts_with("job 4 placed"))
+            .map(|(t, _)| *t)
+            .expect("serving job placed")
+    };
+    assert_eq!(placed_at(&on), 10, "priority admission must place serving on arrival");
+
+    // The evicted training job checkpoint-restored and still finished.
+    for j in on.jobs.iter().filter(|j| j.class == JobClass::Training) {
+        assert!(j.completed_at.is_some(), "training job {} never completed", j.id);
+    }
+    let serving = on.jobs.iter().find(|j| j.class == JobClass::Serving).expect("serving outcome");
+    assert!(serving.completed_at.is_none(), "serving runs to the horizon");
+    assert!(serving.requests > 0.0 && serving.slo_met > 0.0, "serving saw and met traffic");
+
+    // Control: preemption off parks the serving job behind training.
+    let off = run_fleet(&scripted_serving_cfg(false)).expect("preemption-off run");
+    assert_eq!(off.summary.preemptions, 0);
+    assert!(!off.events.iter().any(|(_, e)| e.contains("preempted for serving")));
+    assert!(placed_at(&off) > placed_at(&on), "without preemption serving queues");
+    for j in off.jobs.iter().filter(|j| j.class == JobClass::Training) {
+        assert!(j.completed_at.is_some(), "training job {} never completed", j.id);
+    }
+    // Queued requests miss the SLO at the outage sentinel, so priority
+    // admission strictly improves attainment — the figure the
+    // preemption knob exists to buy.
+    assert!(
+        on.summary.slo_attainment > off.summary.slo_attainment,
+        "preemption must improve attainment: on {} vs off {}",
+        on.summary.slo_attainment,
+        off.summary.slo_attainment
+    );
+}
+
+#[test]
+fn wall_clock_reproduces_round_robin_with_serving_on() {
+    // Scripted preemption scenario: both engines walk the same
+    // admission/preemption/accounting sequence.
+    let mut rr_cfg = scripted_serving_cfg(true);
+    rr_cfg.clock = ClockMode::RoundRobin;
+    let rr = run_fleet(&rr_cfg).expect("round-robin reference");
+    let wall = run_fleet(&scripted_serving_cfg(true)).expect("wall-clock engine");
+    assert!(rr.summary.preemptions >= 1, "scenario must exercise preemption");
+    assert_cross_engine_identical(&rr, &wall);
+
+    // Randomized tier over a live MTBF timeline (contention off): the
+    // serving request/SLO accounting agrees bit for bit too.
+    for seed in [11u64, 23, 37] {
+        let mut rr_cfg = contended_cfg(seed);
+        rr_cfg.clock = ClockMode::RoundRobin;
+        rr_cfg.contention = None;
+        rr_cfg.workload.serving = Some(ServingWorkload::quick(2));
+        let mut wall_cfg = contended_cfg(seed);
+        wall_cfg.contention = None;
+        wall_cfg.workload.serving = Some(ServingWorkload::quick(2));
+        let rr = run_fleet(&rr_cfg).expect("round-robin reference");
+        let wall = run_fleet(&wall_cfg).expect("wall-clock engine");
+        assert_cross_engine_identical(&rr, &wall);
+        assert!(
+            rr.jobs.iter().any(|j| j.class == JobClass::Serving && j.requests > 0.0),
+            "seed {seed}: differential must cover live serving traffic"
+        );
+    }
+}
+
+#[test]
+fn prop_serving_latency_never_beats_the_isolated_step() {
+    // The M/D/1 figure is service plus a non-negative queue wait on a
+    // dilation-scaled service time, so it can never undercut the
+    // isolated (dilation-free, queue-free) step time; it is monotone
+    // in utilization and finite even past the clamp.
+    let config = Config { cases: 128, seed: 0x5E1E_C7ED };
+    prop_check("serving latency lower bound", config, |rng: &mut SplitMix64| {
+        let step_s = 1e-4 + rng.next_f64() * 0.1;
+        let dilation = 1.0 + rng.next_f64() * 3.0;
+        let rho = rng.next_f64() * 1.5; // deliberately spans past the clamp
+        let lat = serving_latency_ms(step_s, dilation, rho);
+        let isolated_ms = step_s * 1e3;
+        assert!(lat.is_finite(), "latency must stay finite (rho {rho})");
+        assert!(
+            lat >= isolated_ms - 1e-12,
+            "latency {lat} ms beats the isolated step {isolated_ms} ms"
+        );
+        assert!(
+            lat >= step_s * dilation * 1e3 - 1e-12,
+            "latency {lat} ms beats the dilated service time"
+        );
+        let busier = serving_latency_ms(step_s, dilation, (rho + 0.1).min(2.0));
+        assert!(busier + 1e-12 >= lat, "latency must be monotone in utilization");
+    });
+}
